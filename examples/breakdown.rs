@@ -1,0 +1,77 @@
+//! Reproduce Fig. 16 + Table 4: iteration time breakdown for the
+//! optimization ablations (Base / OSC / SP) on the paper's six cases.
+//!
+//! Run with: `cargo run --release --example breakdown`
+
+use anyhow::Result;
+use patrickstar::config::{ClusterPreset, TrainTask};
+use patrickstar::engine::{Engine, OptimizationPlan};
+use patrickstar::model::GptSpec;
+use patrickstar::sim::Phase;
+use patrickstar::util::Table;
+
+fn main() -> Result<()> {
+    // Paper's six cases: SuperPod 10B & 50B, YARD 12B, each on 1 & 8 GPU.
+    let cases = [
+        (ClusterPreset::superpod(), "10B", 1u32),
+        (ClusterPreset::superpod(), "10B", 8),
+        (ClusterPreset::superpod(), "50B", 1),
+        (ClusterPreset::superpod(), "50B", 8),
+        (ClusterPreset::yard(), "12B", 1),
+        (ClusterPreset::yard(), "12B", 8),
+    ];
+    let plans = [
+        ("Base", OptimizationPlan::default()),
+        ("OSC", OptimizationPlan::os_on_cpu()),
+        ("SP", OptimizationPlan::static_partition()),
+    ];
+    let mut table4 = Table::new(&["case", "margin(+)/spill(-)"]);
+    for (cluster, model, gpus) in cases {
+        let m = GptSpec::by_name(model).unwrap();
+        let task = TrainTask::new(m, 8, gpus);
+        println!("\n=== {} {} {}g (batch 8) ===", cluster.name, model, gpus);
+        let mut t = Table::new(&["plan", "total", "fwd+bwd", "adam",
+                                 "allgather", "reduce-sc", "cpu->gpu",
+                                 "gpu->cpu", "adam-move"]);
+        for (label, opt) in plans {
+            match Engine::new(cluster, task).with_opt(opt).run() {
+                Ok(r) => {
+                    let g = |p| format!("{:.2}", r.breakdown.get(p));
+                    t.row(vec![
+                        format!("{gpus}g{label}"),
+                        format!("{:.2}s", r.iter_time_s),
+                        g(Phase::FwdBwd),
+                        g(Phase::Adam),
+                        g(Phase::AllGather),
+                        g(Phase::ReduceScatter),
+                        g(Phase::CpuToGpu),
+                        g(Phase::GpuToCpu),
+                        g(Phase::AdamMove),
+                    ]);
+                    if label == "Base" {
+                        table4.row(vec![
+                            format!("{} {} {}g", cluster.name, model, gpus),
+                            format!("{:+}", r.placement.margin_or_spill()),
+                        ]);
+                    }
+                }
+                Err(e) => {
+                    t.row(vec![
+                        format!("{gpus}g{label}"),
+                        format!("infeasible: {e}"),
+                        "-".into(), "-".into(), "-".into(), "-".into(),
+                        "-".into(), "-".into(), "-".into(),
+                    ]);
+                }
+            }
+        }
+        print!("{}", t.render());
+    }
+    println!("\n=== Table 4: margin space / spilling (Base plan) ===");
+    print!("{}", table4.render());
+    println!(
+        "paper Table 4: SPod 10B 1g:+2 8g:+6 | SPod 50B 1g:-20 8g:+1 | \
+         YARD 12B 1g:-1 8g:+5"
+    );
+    Ok(())
+}

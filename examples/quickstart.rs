@@ -1,0 +1,51 @@
+//! Quickstart: the PatrickStar public API in ~60 lines.
+//!
+//! 1. Pick a paper model and cluster preset.
+//! 2. Run the chunk-size search (Sec. 9.1).
+//! 3. Simulate one training iteration and print the Fig. 16-style
+//!    breakdown.
+//! 4. Compare against the DeepSpeed baseline on the same task.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use patrickstar::baselines::run_system;
+use patrickstar::chunk::search_chunk_size;
+use patrickstar::config::{ClusterPreset, SystemKind, TrainTask};
+use patrickstar::model::GptSpec;
+
+fn main() -> Result<()> {
+    let cluster = ClusterPreset::yard(); // 8x V100-32GB, 240 GB DRAM
+    let model = GptSpec::by_name("10B").expect("model in Table 2");
+
+    // --- chunk size search (paper Table 3) -----------------------------
+    let budget = cluster.cpu_mem + cluster.n_gpus as u64 * cluster.gpu_mem;
+    let search = search_chunk_size(&model.tensor_specs(), budget)
+        .expect("feasible chunk size");
+    println!(
+        "chunk search: best {} elems, utilization {:.1}%",
+        search.best.chunk_elems,
+        100.0 * search.best.utilization
+    );
+
+    // --- one PatrickStar iteration on 8 GPUs ---------------------------
+    let task = TrainTask::new(model, 16, 8);
+    let ps = run_system(SystemKind::PatrickStar, cluster, task)?;
+    println!("\n--- PatrickStar ---\n{}", ps.render());
+
+    // --- DeepSpeed on the same task ------------------------------------
+    match run_system(SystemKind::DeepSpeedDp, cluster, task) {
+        Ok(ds) => {
+            println!("--- DeepSpeed-DP ---\n{}", ds.render());
+            println!(
+                "speedup: {:.2}x (paper reports 1.08-1.47x on YARD)",
+                ds.iter_time_s / ps.iter_time_s
+            );
+        }
+        Err(e) => println!(
+            "--- DeepSpeed-DP ---\ninfeasible on this task: {e}\n\
+             (PatrickStar trains it anyway — the paper's Fig. 10 story)"
+        ),
+    }
+    Ok(())
+}

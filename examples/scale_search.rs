@@ -1,0 +1,85 @@
+//! Reproduce Fig. 13 + Fig. 19: max model scale per system per GPU count
+//! on all cluster presets, plus the 700$-PC experiment (Sec. 9.2.5).
+//!
+//! Run with: `cargo run --release --example scale_search`
+
+use anyhow::Result;
+use patrickstar::config::{ClusterPreset, SystemKind};
+use patrickstar::scale::max_model_scale;
+use patrickstar::util::Table;
+
+fn scale_row(
+    t: &mut Table,
+    system: SystemKind,
+    cluster: ClusterPreset,
+    gpus: u32,
+) {
+    match max_model_scale(system, cluster, gpus) {
+        Some(p) => {
+            let r = p.best.unwrap();
+            t.row(vec![
+                cluster.name.into(),
+                format!("{gpus}g"),
+                system.name(),
+                p.model.into(),
+                format!("{:.1}", r.tflops_per_gpu),
+            ]);
+        }
+        None => {
+            t.row(vec![
+                cluster.name.into(),
+                format!("{gpus}g"),
+                system.name(),
+                "-".into(),
+                "-".into(),
+            ]);
+        }
+    }
+}
+
+fn main() -> Result<()> {
+    println!("=== Fig. 13: max model scale (bar: 30/50 Tflops) ===");
+    let mut t = Table::new(&["cluster", "gpus", "system", "max model",
+                             "tflops/GPU"]);
+    for cluster in [ClusterPreset::yard(), ClusterPreset::superpod()] {
+        for gpus in [1u32, 2, 4, 8] {
+            for system in [
+                SystemKind::PyTorchDdp,
+                SystemKind::DeepSpeedDp,
+                SystemKind::DeepSpeedMp(gpus.min(8)),
+                SystemKind::PatrickStar,
+            ] {
+                if matches!(system, SystemKind::DeepSpeedMp(1)) {
+                    continue;
+                }
+                scale_row(&mut t, system, cluster, gpus);
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "paper: YARD 8g — PyTorch 1B, DeepSpeed-DP 4B, DeepSpeed-MP 8B, \
+         PatrickStar 18B; SuperPod 8g — DeepSpeed 30B, PatrickStar 68B"
+    );
+
+    println!("\n=== Fig. 19: 120 GB CPU memory, 8x V100 ===");
+    let mut t = Table::new(&["cluster", "gpus", "system", "max model",
+                             "tflops/GPU"]);
+    for system in [SystemKind::DeepSpeedDp, SystemKind::DeepSpeedMp(8),
+                   SystemKind::PatrickStar] {
+        scale_row(&mut t, system, ClusterPreset::yard_120gb(), 8);
+    }
+    print!("{}", t.render());
+    println!("paper: PatrickStar 8B @ 48.78 Tflops, DeepSpeed-MP 4B");
+
+    println!("\n=== Sec. 9.2.5: the 700$ PC (RTX 2060 8GB + 16GB DRAM) ===");
+    let mut t = Table::new(&["cluster", "gpus", "system", "max model",
+                             "tflops/GPU"]);
+    for system in [SystemKind::PyTorchDdp, SystemKind::DeepSpeedDp,
+                   SystemKind::PatrickStar] {
+        scale_row(&mut t, system, ClusterPreset::pc(), 1);
+    }
+    print!("{}", t.render());
+    println!("paper: PatrickStar 0.7B @ 18.46 Tflops; baselines 0.11B");
+    Ok(())
+}

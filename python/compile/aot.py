@@ -1,0 +1,168 @@
+"""AOT compile path: lower the L2 model + L1 kernels to HLO text artifacts.
+
+Python runs exactly once, here.  Outputs (under artifacts/):
+
+    train_step.hlo.txt   (tokens, targets, *params) -> (loss, *grads)
+    eval_loss.hlo.txt    (tokens, targets, *params) -> (loss,)
+    adam_step.hlo.txt    (hp[8], p[c], m[c], v[c], g[c]) -> (p', m', v')
+                         c = chunk_elems; body is the Pallas chunk_adam kernel
+    manifest.json        model config, param order/shapes, chunk size,
+                         artifact inventory — the rust<->python contract
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+behind the rust `xla` crate) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import math
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import adam as K
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_train_step(cfg: M.GptConfig, with_grads: bool = True) -> str:
+    tok = jax.ShapeDtypeStruct((cfg.batch, cfg.seq), jnp.int32)
+    params = [
+        jax.ShapeDtypeStruct(shape, jnp.float32)
+        for _, shape in M.param_order(cfg)
+    ]
+    if with_grads:
+        fn = M.train_step_flat(cfg)
+    else:
+        order = [n for n, _ in M.param_order(cfg)]
+
+        def fn(tokens, targets, *flat):
+            return (M.loss_fn(cfg, dict(zip(order, flat)), tokens, targets),)
+
+    return to_hlo_text(jax.jit(fn).lower(tok, tok, *params))
+
+
+def lower_adam_step(chunk_elems: int, block: int) -> str:
+    hp = jax.ShapeDtypeStruct((K.HP_LEN,), jnp.float32)
+    buf = jax.ShapeDtypeStruct((chunk_elems,), jnp.float32)
+
+    def fn(hp, p, m, v, g):
+        return K.chunk_adam(hp, p, m, v, g, block=block)
+
+    return to_hlo_text(jax.jit(fn).lower(hp, buf, buf, buf, buf))
+
+
+def is_embedding(name: str) -> bool:
+    """Embedding parameters are CPU-pinned and not chunk-orchestrated
+    (paper Sec. 8.2: 'embedding parameters are not managed by chunk')."""
+    return name in ("wte", "wpe")
+
+
+def pick_chunk_elems(cfg: M.GptConfig, target: int) -> int:
+    """Round target up so the largest chunk-managed tensor fits in one chunk.
+
+    Mirrors the constraint of the paper's mapping schema (Sec. 6.1): a
+    tensor never spans two chunks, so chunk size >= max tensor size.
+    Embedding tensors are excluded — they are CPU-pinned (Sec. 8.2).  The
+    rust side performs the full fragmentation-minimizing search (paper
+    Table 3); at AOT time we only need a feasible, 64-aligned size for the
+    e2e model because the kernel signature bakes it in.
+    """
+    biggest = max(
+        int(math.prod(shape))
+        for name, shape in M.param_order(cfg)
+        if not is_embedding(name)
+    )
+    elems = max(target, biggest)
+    return ((elems + 63) // 64) * 64
+
+
+def write(path: str, text: str) -> dict:
+    with open(path, "w") as f:
+        f.write(text)
+    digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+    print(f"wrote {path}  ({len(text)} chars, sha256:{digest})")
+    return {"path": os.path.basename(path), "bytes": len(text),
+            "sha256_16": digest}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output dir "
+                    "(or a single .hlo.txt path for --only)")
+    ap.add_argument("--vocab", type=int, default=4096)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--heads", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--chunk-elems", type=int, default=1 << 16,
+                    help="target chunk size in f32 elements (rounded up to "
+                    "fit the largest tensor, 64-aligned)")
+    ap.add_argument("--adam-block", type=int, default=K.DEFAULT_BLOCK)
+    ap.add_argument("--no-pallas", action="store_true",
+                    help="lower the pure-jnp reference model instead")
+    args = ap.parse_args(argv)
+
+    cfg = M.GptConfig(
+        vocab=args.vocab, seq=args.seq, hidden=args.hidden,
+        layers=args.layers, heads=args.heads, batch=args.batch,
+        use_pallas=not args.no_pallas,
+    )
+    out = args.out
+    if out.endswith(".txt"):
+        out = os.path.dirname(out) or "."
+    os.makedirs(out, exist_ok=True)
+
+    chunk_elems = pick_chunk_elems(cfg, args.chunk_elems)
+    arts = {}
+    print(f"model: {cfg.n_params()/1e6:.2f}M params, "
+          f"chunk_elems={chunk_elems}", file=sys.stderr)
+    arts["train_step"] = write(
+        os.path.join(out, "train_step.hlo.txt"), lower_train_step(cfg))
+    arts["eval_loss"] = write(
+        os.path.join(out, "eval_loss.hlo.txt"),
+        lower_train_step(cfg, with_grads=False))
+    arts["adam_step"] = write(
+        os.path.join(out, "adam_step.hlo.txt"),
+        lower_adam_step(chunk_elems, args.adam_block))
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab, "seq": cfg.seq, "hidden": cfg.hidden,
+            "layers": cfg.layers, "heads": cfg.heads, "batch": cfg.batch,
+            "use_pallas": cfg.use_pallas, "n_params": cfg.n_params(),
+        },
+        "params": [
+            {"name": n, "shape": list(s), "numel": int(math.prod(s)),
+             "embedding": is_embedding(n)}
+            for n, s in M.param_order(cfg)
+        ],
+        "chunk_elems": chunk_elems,
+        "adam_hp_len": K.HP_LEN,
+        "artifacts": arts,
+    }
+    mpath = os.path.join(out, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

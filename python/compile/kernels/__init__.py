@@ -1,0 +1,6 @@
+# L1: Pallas kernels for the paper's compute hot-spots.
+#  - adam.chunk_adam    : chunk-granular fused ADAM (PatrickStar Sec. 6.2/8.2)
+#  - layers.layernorm   : memory-bound elementwise norm (custom-VJP Pallas)
+#  - layers.attention_core : MXU-oriented attention core (custom-VJP Pallas)
+#  - ref                : pure-jnp oracles for all of the above
+from . import adam, layers, ref  # noqa: F401

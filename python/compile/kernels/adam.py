@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: chunk-granular fused ADAM update.
+
+This is PatrickStar's parameter-updating hot-spot expressed as a Pallas
+kernel.  In the paper (Sec. 6.2, Sec. 8.2) the ADAM stage operates on whole
+chunks: the param fp32 / momentum / variance chunk lists share offsets, and
+grad fp16 chunks are converted to fp32 on the fly.  Here the chunk *is* the
+kernel's input buffer, and BlockSpec tiles it into VMEM-sized slabs — the
+HBM<->VMEM schedule mirrors, one level down the memory hierarchy, the
+CPU<->GPU chunk schedule the paper performs with its chunk manager.
+
+TPU adaptation note (DESIGN.md §2): on a real TPU this is a memory-bound
+elementwise kernel; with the default block of 16384 f32 elements the VMEM
+working set is 5 slabs x 64 KiB = 320 KiB, far under the ~16 MiB VMEM
+budget, leaving room for double buffering.  On this testbed it is lowered
+with interpret=True so the same code runs on the CPU PJRT client.
+
+Hyper-parameters travel in a single f32[8] scalar vector so the lowered HLO
+has a stable, chunk-size-independent signature:
+
+    hp = [lr, beta1, beta2, eps, weight_decay, step, _, _]
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Layout of the hyper-parameter vector (kept in sync with rust/src/train/).
+HP_LEN = 8
+HP_LR, HP_BETA1, HP_BETA2, HP_EPS, HP_WD, HP_STEP = 0, 1, 2, 3, 4, 5
+
+DEFAULT_BLOCK = 16384
+
+
+def _adam_block_kernel(hp_ref, p_ref, m_ref, v_ref, g_ref,
+                       po_ref, mo_ref, vo_ref):
+    """Pallas body: fused ADAM on one VMEM block of a chunk."""
+    lr = hp_ref[HP_LR]
+    beta1 = hp_ref[HP_BETA1]
+    beta2 = hp_ref[HP_BETA2]
+    eps = hp_ref[HP_EPS]
+    wd = hp_ref[HP_WD]
+    step = hp_ref[HP_STEP]
+
+    p = p_ref[...]
+    g = g_ref[...] + wd * p
+    m = beta1 * m_ref[...] + (1.0 - beta1) * g
+    v = beta2 * v_ref[...] + (1.0 - beta2) * g * g
+    # Bias correction: step >= 1.  Computed per block; scalar math only.
+    bc1 = 1.0 - jnp.power(beta1, step)
+    bc2 = 1.0 - jnp.power(beta2, step)
+    m_hat = m / bc1
+    v_hat = v / bc2
+    po_ref[...] = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    mo_ref[...] = m
+    vo_ref[...] = v
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def chunk_adam(hp, p, m, v, g, *, block=DEFAULT_BLOCK):
+    """Fused ADAM over a flat f32 chunk.
+
+    Args:
+        hp: f32[HP_LEN] hyper-parameter vector (see module docstring).
+        p, m, v, g: f32[n] param fp32 / momentum / variance / grad chunks.
+        block: VMEM tile size; the chunk is processed in ceil(n/block)
+            grid steps.  n must be a multiple of block unless n < block,
+            in which case a single whole-chunk block is used (chunk sizes
+            produced by the rust chunk-size search are always multiples
+            of 64, so the alignment precondition holds in practice).
+
+    Returns:
+        (p_new, m_new, v_new), each f32[n].
+    """
+    n = p.shape[0]
+    if n <= block or n % block != 0:
+        block = n
+    grid = (n // block,)
+    spec = pl.BlockSpec((block,), lambda i: (i,))
+    hp_spec = pl.BlockSpec((HP_LEN,), lambda i: (0,))
+    out_shape = [jax.ShapeDtypeStruct((n,), jnp.float32)] * 3
+    return tuple(
+        pl.pallas_call(
+            _adam_block_kernel,
+            grid=grid,
+            in_specs=[hp_spec, spec, spec, spec, spec],
+            out_specs=[spec, spec, spec],
+            out_shape=out_shape,
+            interpret=True,
+        )(hp, p, m, v, g)
+    )
+
+
+def make_hp(lr, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0, step=1):
+    """Pack ADAM hyper-parameters into the f32[HP_LEN] vector."""
+    vec = [lr, beta1, beta2, eps, weight_decay, float(step)] + [0.0] * (
+        HP_LEN - 6
+    )
+    return jnp.asarray(vec, dtype=jnp.float32)

@@ -1,0 +1,198 @@
+"""L1 Pallas kernels for the transformer blocks: LayerNorm + attention core.
+
+The paper's FWD/BWD compute is a GPT-2 stack; its hot spots on the
+accelerator are the attention core (GEMM + softmax, MXU-bound) and the
+pervasive LayerNorms (memory-bound).  Both are written as Pallas kernels so
+that they lower into the same HLO module as the surrounding jnp graph and
+are exercised by the rust PJRT runtime on every training step.
+
+Reverse mode: interpret-mode pallas_call is not linearizable by JAX's
+autodiff in this environment, so both ops carry `jax.custom_vjp` whose
+*backward passes are themselves Pallas kernels*.  The attention backward
+recomputes the softmax from Q/K/V instead of saving the probability matrix
+(flash-attention-style rematerialization) — the same memory/compute trade
+the paper applies at chunk level with activation checkpointing (Sec. 3.3).
+
+TPU adaptation (DESIGN.md §2): each grid step holds one (batch*head)
+[seq, head_dim] Q/K/V tile plus one [seq, seq] logits tile in VMEM; the
+matmuls in the bodies target the MXU.  interpret=True makes the same code
+run on CPU PJRT here.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG_INF = -1e30
+_LN_EPS = 1e-5
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+def _ln_fwd_kernel(x_ref, g_ref, b_ref, o_ref, xhat_ref, rstd_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    rstd = 1.0 / jnp.sqrt(var + eps)
+    xhat = (x - mu) * rstd
+    o_ref[...] = xhat * g_ref[...] + b_ref[...]
+    xhat_ref[...] = xhat
+    rstd_ref[...] = rstd
+
+
+def _ln_bwd_kernel(dy_ref, xhat_ref, rstd_ref, g_ref, dx_ref):
+    dy = dy_ref[...]
+    xhat = xhat_ref[...]
+    rstd = rstd_ref[...]
+    wdy = dy * g_ref[...]
+    m1 = jnp.mean(wdy, axis=-1, keepdims=True)
+    m2 = jnp.mean(wdy * xhat, axis=-1, keepdims=True)
+    dx_ref[...] = (wdy - m1 - xhat * m2) * rstd
+
+
+# Rows per grid step.  PERF (EXPERIMENTS.md §Perf L1): one row per step
+# lowers interpret-mode pallas to a `rows`-iteration XLA while loop —
+# 512 iterations of tiny work per layernorm call dominated the e2e step
+# time.  Tiling LN_BLOCK_ROWS rows per step keeps the VMEM tile small
+# (128 x hidden x 4 B = 256 KB at hidden 512) while cutting the loop
+# trip count 128x.
+LN_BLOCK_ROWS = 128
+
+
+def _ln_rows_block(rows: int) -> int:
+    if rows % LN_BLOCK_ROWS == 0:
+        return LN_BLOCK_ROWS
+    return rows  # fall back to a single whole-input block
+
+
+def _ln_fwd(x, gamma, beta):
+    rows, hidden = x.shape
+    br = _ln_rows_block(rows)
+    grid = (rows // br,)
+    row = pl.BlockSpec((br, hidden), lambda i: (i, 0))
+    vec = pl.BlockSpec((hidden,), lambda i: (0,))
+    scal = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    y, xhat, rstd = pl.pallas_call(
+        functools.partial(_ln_fwd_kernel, eps=_LN_EPS),
+        grid=grid,
+        in_specs=[row, vec, vec],
+        out_specs=[row, row, scal],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, hidden), x.dtype),
+            jax.ShapeDtypeStruct((rows, hidden), x.dtype),
+            jax.ShapeDtypeStruct((rows, 1), x.dtype),
+        ],
+        interpret=True,
+    )(x, gamma, beta)
+    return y, (xhat, rstd, gamma)
+
+
+def _ln_bwd(res, dy):
+    xhat, rstd, gamma = res
+    rows, hidden = dy.shape
+    br = _ln_rows_block(rows)
+    grid = (rows // br,)
+    row = pl.BlockSpec((br, hidden), lambda i: (i, 0))
+    vec = pl.BlockSpec((hidden,), lambda i: (0,))
+    scal = pl.BlockSpec((br, 1), lambda i: (i, 0))
+    dx = pl.pallas_call(
+        _ln_bwd_kernel,
+        grid=grid,
+        in_specs=[row, row, scal, vec],
+        out_specs=row,
+        out_shape=jax.ShapeDtypeStruct((rows, hidden), dy.dtype),
+        interpret=True,
+    )(dy, xhat, rstd, gamma)
+    # Parameter grads are plain cross-row reductions; XLA fuses these.
+    dgamma = jnp.sum(dy * xhat, axis=0)
+    dbeta = jnp.sum(dy, axis=0)
+    return dx, dgamma, dbeta
+
+
+@jax.custom_vjp
+def layernorm(x, gamma, beta):
+    """Pallas LayerNorm over the last axis of x: f32[rows, hidden]."""
+    return _ln_fwd(x, gamma, beta)[0]
+
+
+layernorm.defvjp(_ln_fwd, _ln_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Attention core
+# ---------------------------------------------------------------------------
+
+def _softmax_qk(q, k, *, scale, causal):
+    """[seq, seq] probabilities for one head; MXU matmul + masked softmax."""
+    logits = jnp.dot(q, k.T) * scale
+    if causal:
+        s = logits.shape[0]
+        rows = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+        cols = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+        logits = jnp.where(rows >= cols, logits, _NEG_INF)
+    logits = logits - jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits)
+    return p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def _attn_fwd_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal):
+    p = _softmax_qk(q_ref[0], k_ref[0], scale=scale, causal=causal)
+    o_ref[0] = jnp.dot(p, v_ref[0])
+
+
+def _attn_bwd_kernel(q_ref, k_ref, v_ref, do_ref, dq_ref, dk_ref, dv_ref,
+                     *, scale, causal):
+    """Recompute-probabilities backward for one head (flash-style)."""
+    q, k, v, do = q_ref[0], k_ref[0], v_ref[0], do_ref[0]
+    p = _softmax_qk(q, k, scale=scale, causal=causal)
+    dv_ref[0] = jnp.dot(p.T, do)
+    dp = jnp.dot(do, v.T)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq_ref[0] = jnp.dot(ds, k) * scale
+    dk_ref[0] = jnp.dot(ds.T, q) * scale
+
+
+def _attn_call(kernel, n_out, q, k, v, *extra, causal):
+    heads, seq, hd = q.shape
+    scale = 1.0 / float(hd) ** 0.5
+    spec = pl.BlockSpec((1, seq, hd), lambda h: (h, 0, 0))
+    shape = jax.ShapeDtypeStruct((heads, seq, hd), q.dtype)
+    out_specs = [spec] * n_out if n_out > 1 else spec
+    out_shape = [shape] * n_out if n_out > 1 else shape
+    return pl.pallas_call(
+        functools.partial(kernel, scale=scale, causal=causal),
+        grid=(heads,),
+        in_specs=[spec] * (3 + len(extra)),
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=True,
+    )(q, k, v, *extra)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def attention_core(q, k, v, causal=True):
+    """Pallas attention core: softmax(scale * Q K^T + mask) V.
+
+    q, k, v: f32[heads, seq, head_dim] (batch folded into heads).
+    """
+    return _attn_call(_attn_fwd_kernel, 1, q, k, v, causal=causal)
+
+
+def _attn_fwd(q, k, v, causal):
+    return attention_core(q, k, v, causal), (q, k, v)
+
+
+def _attn_bwd(causal, res, do):
+    q, k, v = res
+    dq, dk, dv = _attn_call(
+        _attn_bwd_kernel, 3, q, k, v, do, causal=causal)
+    return dq, dk, dv
+
+
+attention_core.defvjp(_attn_fwd, _attn_bwd)

@@ -1,0 +1,183 @@
+"""L2: GPT-2-like transformer fwd/bwd in JAX, calling the L1 Pallas kernels.
+
+This is the compute graph that PatrickStar trains.  The model mirrors the
+paper's workload (Sec. 9.1: GPT-2-like stacks, varied by hidden dim and
+layer count) at a scale the CPU PJRT backend can actually train end to end.
+
+The module is build-time only: aot.py lowers `train_step` (fwd + bwd) and
+the chunk ADAM kernel to HLO text; the rust L3 coordinator loads those
+artifacts and never touches python again.
+
+Parameter naming convention (must stay in sync with rust/src/train/):
+parameters are emitted in model-definition order, exactly the order the
+paper's chunk layout algorithm consumes them (Sec. 6.1 "in the order of
+model initialization").  `param_order(cfg)` is the single source of truth
+and is serialized into artifacts/manifest.json.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import layers as pk
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class GptConfig:
+    """Model-related configuration (paper Table 2 analogue, scaled down)."""
+
+    vocab: int = 4096
+    seq: int = 128
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 4
+    batch: int = 4
+    use_pallas: bool = True  # False -> pure-jnp reference path (oracle)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.hidden % self.heads == 0
+        return self.hidden // self.heads
+
+    def n_params(self) -> int:
+        return sum(int(math.prod(s)) for _, s in param_order(self))
+
+
+def param_order(cfg: GptConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """(name, shape) for every parameter, in model-definition order."""
+    h, v, s = cfg.hidden, cfg.vocab, cfg.seq
+    out: List[Tuple[str, Tuple[int, ...]]] = [
+        ("wte", (v, h)),
+        ("wpe", (s, h)),
+    ]
+    for i in range(cfg.layers):
+        p = f"h{i}."
+        out += [
+            (p + "ln1.g", (h,)),
+            (p + "ln1.b", (h,)),
+            (p + "attn.wqkv", (h, 3 * h)),
+            (p + "attn.bqkv", (3 * h,)),
+            (p + "attn.wo", (h, h)),
+            (p + "attn.bo", (h,)),
+            (p + "ln2.g", (h,)),
+            (p + "ln2.b", (h,)),
+            (p + "mlp.wi", (h, 4 * h)),
+            (p + "mlp.bi", (4 * h,)),
+            (p + "mlp.wo", (4 * h, h)),
+            (p + "mlp.bo", (h,)),
+        ]
+    out += [("lnf.g", (h,)), ("lnf.b", (h,))]
+    # lm head is tied to wte (GPT-2 convention) -> no extra parameter.
+    return out
+
+
+def init_params(cfg: GptConfig, key) -> Dict[str, jax.Array]:
+    """GPT-2 style init: N(0, 0.02), residual projections scaled by depth."""
+    params: Dict[str, jax.Array] = {}
+    for i, (name, shape) in enumerate(param_order(cfg)):
+        key, sub = jax.random.split(key)
+        if name.endswith((".b", ".bqkv", ".bi", ".bo")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(".g"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            std = 0.02
+            if name.endswith(("attn.wo", "mlp.wo")):
+                std = 0.02 / math.sqrt(2 * cfg.layers)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def _layernorm(cfg: GptConfig, x2d, g, b):
+    if cfg.use_pallas:
+        return pk.layernorm(x2d, g, b)
+    return kref.layernorm_ref(x2d, g, b)
+
+
+def _attention(cfg: GptConfig, q, k, v):
+    if cfg.use_pallas:
+        return pk.attention_core(q, k, v, causal=True)
+    return kref.attention_core_ref(q, k, v, causal=True)
+
+
+def _block(cfg: GptConfig, params: Dict[str, jax.Array], i: int, x):
+    """One pre-LN transformer block.  x: [B, S, H]."""
+    b, s, h = x.shape
+    p = f"h{i}."
+    y = _layernorm(cfg, x.reshape(b * s, h), params[p + "ln1.g"],
+                   params[p + "ln1.b"]).reshape(b, s, h)
+    qkv = y @ params[p + "attn.wqkv"] + params[p + "attn.bqkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+
+    def heads(t):  # [B,S,H] -> [B*nh, S, hd]
+        return (t.reshape(b, s, cfg.heads, cfg.head_dim)
+                 .transpose(0, 2, 1, 3)
+                 .reshape(b * cfg.heads, s, cfg.head_dim))
+
+    att = _attention(cfg, heads(q), heads(k), heads(v))
+    att = (att.reshape(b, cfg.heads, s, cfg.head_dim)
+              .transpose(0, 2, 1, 3)
+              .reshape(b, s, h))
+    x = x + att @ params[p + "attn.wo"] + params[p + "attn.bo"]
+
+    y = _layernorm(cfg, x.reshape(b * s, h), params[p + "ln2.g"],
+                   params[p + "ln2.b"]).reshape(b, s, h)
+    y = jax.nn.gelu(y @ params[p + "mlp.wi"] + params[p + "mlp.bi"])
+    return x + y @ params[p + "mlp.wo"] + params[p + "mlp.bo"]
+
+
+def forward(cfg: GptConfig, params: Dict[str, jax.Array], tokens):
+    """Logits for tokens i32[B, S] -> f32[B, S, vocab]."""
+    b, s = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][jnp.arange(s)]
+    for i in range(cfg.layers):
+        x = _block(cfg, params, i, x)
+    x = _layernorm(cfg, x.reshape(b * s, cfg.hidden), params["lnf.g"],
+                   params["lnf.b"]).reshape(b, s, cfg.hidden)
+    return x @ params["wte"].T  # tied lm head
+
+
+def loss_fn(cfg: GptConfig, params: Dict[str, jax.Array], tokens, targets):
+    """Mean next-token cross-entropy.  tokens/targets: i32[B, S]."""
+    logits = forward(cfg, params, tokens)
+    n = cfg.batch * cfg.seq
+    return kref.softmax_xent_ref(
+        logits.reshape(n, cfg.vocab), targets.reshape(n)
+    )
+
+
+def train_step(cfg: GptConfig):
+    """Returns f(params_dict, tokens, targets) -> (loss, grads_dict)."""
+
+    def step(params, tokens, targets):
+        return jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(
+            params
+        )
+
+    return step
+
+
+def train_step_flat(cfg: GptConfig):
+    """Flat-signature step for AOT lowering.
+
+    f(tokens i32[B,S], targets i32[B,S], *params in param_order)
+      -> (loss f32[], *grads in param_order)
+
+    The flat order is the contract with the rust runtime: rust feeds chunk
+    slices as PJRT literals positionally and reads grads back positionally.
+    """
+    order = param_order(cfg)
+    names = [n for n, _ in order]
+
+    def step(tokens, targets, *flat):
+        params = dict(zip(names, flat))
+        loss, grads = train_step(cfg)(params, tokens, targets)
+        return (loss, *[grads[n] for n in names])
+
+    return step

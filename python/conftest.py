@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests import the build-time package as `compile.*`; make that work no
+# matter which directory pytest is launched from.
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

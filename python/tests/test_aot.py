@@ -1,0 +1,83 @@
+"""pytest: AOT pipeline — HLO text validity and manifest contract."""
+
+import json
+import math
+import os
+
+import pytest
+
+from compile import aot
+from compile import model as M
+
+TINY = M.GptConfig(vocab=64, seq=8, hidden=16, layers=1, heads=2, batch=1)
+
+
+class TestPickChunkElems:
+    def test_fits_largest_nonembedding_tensor(self):
+        c = aot.pick_chunk_elems(TINY, 1)
+        biggest = max(
+            math.prod(s) for n, s in M.param_order(TINY)
+            if not aot.is_embedding(n))
+        assert c >= biggest
+
+    def test_alignment(self):
+        for target in (1, 100, 4097, 1 << 16):
+            assert aot.pick_chunk_elems(TINY, target) % 64 == 0
+
+    def test_monotone_in_target(self):
+        assert (aot.pick_chunk_elems(TINY, 1 << 20)
+                >= aot.pick_chunk_elems(TINY, 1))
+
+    def test_embeddings_are_flagged(self):
+        assert aot.is_embedding("wte") and aot.is_embedding("wpe")
+        assert not aot.is_embedding("h0.attn.wqkv")
+
+
+def entry_params(text: str) -> int:
+    """Count parameter() instructions in the ENTRY computation only
+    (nested while/grid computations also contain parameter() lines)."""
+    entry = text[text.index("ENTRY"):]
+    return entry.count("parameter(")
+
+
+class TestLowering:
+    def test_adam_step_hlo(self):
+        text = aot.lower_adam_step(256, 128)
+        assert "ENTRY" in text
+        # 5 inputs: hp + 4 chunk buffers.
+        assert entry_params(text) == 5
+
+    def test_train_step_hlo_has_all_params(self):
+        text = aot.lower_train_step(TINY)
+        n_inputs = 2 + len(M.param_order(TINY))  # tokens, targets, params
+        assert "ENTRY" in text
+        assert entry_params(text) == n_inputs
+
+    def test_eval_loss_hlo(self):
+        text = aot.lower_train_step(TINY, with_grads=False)
+        assert "ENTRY" in text
+        assert entry_params(text) == 2 + len(M.param_order(TINY))
+
+
+class TestEndToEndEmit(object):
+    def test_main_writes_artifacts(self, tmp_path):
+        out = str(tmp_path)
+        aot.main([
+            "--out", out, "--vocab", "64", "--seq", "8", "--hidden", "16",
+            "--layers", "1", "--heads", "2", "--batch", "1",
+            "--chunk-elems", "256",
+        ])
+        names = {"train_step.hlo.txt", "eval_loss.hlo.txt",
+                 "adam_step.hlo.txt", "manifest.json"}
+        assert names <= set(os.listdir(out))
+        man = json.load(open(os.path.join(out, "manifest.json")))
+        assert man["model"]["n_params"] == TINY.n_params()
+        assert man["chunk_elems"] % 64 == 0
+        numels = [p["numel"] for p in man["params"]]
+        assert sum(numels) == TINY.n_params()
+        # Parameter order in the manifest is the rust<->python contract.
+        assert [p["name"] for p in man["params"]] == [
+            n for n, _ in M.param_order(TINY)]
+        # Embeddings flagged for CPU pinning.
+        emb = {p["name"] for p in man["params"] if p["embedding"]}
+        assert emb == {"wte", "wpe"}

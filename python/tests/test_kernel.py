@@ -1,0 +1,196 @@
+"""pytest: Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+
+hypothesis sweeps shapes/dtypes/hyper-parameters; every property asserts
+allclose(kernel, ref) with tolerances appropriate for f32 accumulation.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import adam as K
+from compile.kernels import layers as pk
+from compile.kernels import ref
+
+SET = settings(
+    max_examples=25,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def arr(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape,
+                                     jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# chunk ADAM
+# ---------------------------------------------------------------------------
+
+class TestChunkAdam:
+    @SET
+    @given(
+        n=st.sampled_from([64, 192, 1024, 4096, 16384]),
+        block=st.sampled_from([64, 256, 1024, 16384]),
+        lr=st.floats(1e-5, 1e-1),
+        wd=st.sampled_from([0.0, 0.01, 0.1]),
+        step=st.integers(1, 1000),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, n, block, lr, wd, step, seed):
+        keys = [seed * 4 + i for i in range(4)]
+        p, g = arr(keys[0], (n,)), arr(keys[3], (n,))
+        m, v = arr(keys[1], (n,), 0.1), jnp.abs(arr(keys[2], (n,), 0.1))
+        hp = K.make_hp(lr, weight_decay=wd, step=step)
+        pn, mn, vn = K.chunk_adam(hp, p, m, v, g, block=block)
+        pr, mr, vr = ref.adam_ref(p, m, v, g, lr=lr, beta1=0.9, beta2=0.999,
+                                  eps=1e-8, weight_decay=wd, step=step)
+        np.testing.assert_allclose(mn, mr, rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(vn, vr, rtol=1e-5, atol=1e-6)
+        # p tolerance is looser: the kernel computes beta**step in f32
+        # (the ref uses python f64), and sqrt(v_hat) near zero amplifies
+        # that rounding.
+        np.testing.assert_allclose(pn, pr, rtol=2e-3, atol=1e-5)
+
+    def test_zero_grad_moves_little(self):
+        """With g=0, wd=0: m,v decay; p only moves by the decayed-moment
+        term, which is 0 when m=v=0."""
+        n = 256
+        p = arr(0, (n,))
+        z = jnp.zeros((n,))
+        hp = K.make_hp(1e-3, step=1)
+        pn, mn, vn = K.chunk_adam(hp, p, z, z, z)
+        np.testing.assert_allclose(pn, p, atol=1e-7)
+        np.testing.assert_allclose(mn, z)
+        np.testing.assert_allclose(vn, z)
+
+    def test_variance_nonnegative(self):
+        n = 512
+        p, m, g = arr(1, (n,)), arr(2, (n,)), arr(3, (n,), 5.0)
+        v = jnp.abs(arr(4, (n,)))
+        hp = K.make_hp(1e-2, step=7)
+        _, _, vn = K.chunk_adam(hp, p, m, v, g)
+        assert bool(jnp.all(vn >= 0))
+
+    def test_non_multiple_block_falls_back_to_whole_chunk(self):
+        n = 100  # not a multiple of any default block
+        p, m, v, g = (arr(i, (n,)) for i in range(4))
+        v = jnp.abs(v)
+        hp = K.make_hp(1e-3, step=2)
+        pn, _, _ = K.chunk_adam(hp, p, m, v, g, block=64)
+        pr, _, _ = ref.adam_ref(p, m, v, g, lr=1e-3, beta1=0.9, beta2=0.999,
+                                eps=1e-8, weight_decay=0.0, step=2)
+        np.testing.assert_allclose(pn, pr, rtol=1e-4, atol=1e-6)
+
+    def test_descends_on_quadratic(self):
+        """End-to-end sanity: ADAM on f(p)=||p||^2/2 decreases the loss."""
+        n = 128
+        p = arr(9, (n,), 2.0)
+        m = jnp.zeros((n,))
+        v = jnp.zeros((n,))
+        losses = []
+        for step in range(1, 30):
+            g = p  # grad of ||p||^2 / 2
+            hp = K.make_hp(5e-2, step=step)
+            p, m, v = K.chunk_adam(hp, p, m, v, g)
+            losses.append(float(jnp.sum(p * p)) / 2)
+        assert losses[-1] < losses[0] * 0.5
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm
+# ---------------------------------------------------------------------------
+
+class TestLayerNorm:
+    @SET
+    @given(
+        rows=st.integers(1, 64),
+        hidden=st.sampled_from([8, 32, 64, 256]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, rows, hidden, seed):
+        x = arr(seed, (rows, hidden), 3.0)
+        g = arr(seed + 1, (hidden,))
+        b = arr(seed + 2, (hidden,))
+        np.testing.assert_allclose(
+            pk.layernorm(x, g, b), ref.layernorm_ref(x, g, b),
+            rtol=1e-4, atol=1e-5)
+
+    def test_normalizes(self):
+        x = arr(3, (16, 128), 10.0)
+        y = pk.layernorm(x, jnp.ones(128), jnp.zeros(128))
+        np.testing.assert_allclose(jnp.mean(y, axis=-1), 0.0, atol=1e-5)
+        np.testing.assert_allclose(jnp.std(y, axis=-1), 1.0, atol=1e-3)
+
+    @SET
+    @given(rows=st.integers(2, 16), hidden=st.sampled_from([16, 64]),
+           seed=st.integers(0, 2**31 - 1))
+    def test_vjp_matches_ref(self, rows, hidden, seed):
+        x = arr(seed, (rows, hidden))
+        g = arr(seed + 1, (hidden,))
+        b = arr(seed + 2, (hidden,))
+        f = lambda *a: jnp.sum(jnp.sin(pk.layernorm(*a)))
+        fr = lambda *a: jnp.sum(jnp.sin(ref.layernorm_ref(*a)))
+        for got, want in zip(jax.grad(f, (0, 1, 2))(x, g, b),
+                             jax.grad(fr, (0, 1, 2))(x, g, b)):
+            np.testing.assert_allclose(got, want, rtol=5e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Attention core
+# ---------------------------------------------------------------------------
+
+class TestAttention:
+    @SET
+    @given(
+        heads=st.integers(1, 8),
+        seq=st.sampled_from([4, 16, 33, 64]),
+        hd=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, heads, seq, hd, causal, seed):
+        q = arr(seed, (heads, seq, hd))
+        k = arr(seed + 1, (heads, seq, hd))
+        v = arr(seed + 2, (heads, seq, hd))
+        np.testing.assert_allclose(
+            pk.attention_core(q, k, v, causal),
+            ref.attention_core_ref(q, k, v, causal=causal),
+            rtol=1e-4, atol=1e-5)
+
+    def test_causality(self):
+        """Output at position t must not depend on inputs at positions > t."""
+        q = arr(0, (2, 16, 8))
+        k = arr(1, (2, 16, 8))
+        v = arr(2, (2, 16, 8))
+        out = pk.attention_core(q, k, v, True)
+        k2 = k.at[:, 8:, :].set(99.0)
+        v2 = v.at[:, 8:, :].set(-99.0)
+        out2 = pk.attention_core(q, k2, v2, True)
+        np.testing.assert_allclose(out[:, :8], out2[:, :8], rtol=1e-5)
+
+    def test_rows_are_convex_combinations(self):
+        """Non-causal attention output lies in the convex hull of V rows."""
+        q = arr(5, (1, 8, 4), 0.5)
+        k = arr(6, (1, 8, 4), 0.5)
+        v = arr(7, (1, 8, 4))
+        out = pk.attention_core(q, k, v, False)
+        assert bool(jnp.all(out <= jnp.max(v, axis=1, keepdims=True) + 1e-5))
+        assert bool(jnp.all(out >= jnp.min(v, axis=1, keepdims=True) - 1e-5))
+
+    @SET
+    @given(seq=st.sampled_from([8, 32]), seed=st.integers(0, 2**31 - 1))
+    def test_vjp_matches_ref(self, seq, seed):
+        q = arr(seed, (2, seq, 8))
+        k = arr(seed + 1, (2, seq, 8))
+        v = arr(seed + 2, (2, seq, 8))
+        f = lambda *a: jnp.sum(jnp.cos(pk.attention_core(*a, True)))
+        fr = lambda *a: jnp.sum(jnp.cos(
+            ref.attention_core_ref(*a, causal=True)))
+        for got, want in zip(jax.grad(f, (0, 1, 2))(q, k, v),
+                             jax.grad(fr, (0, 1, 2))(q, k, v)):
+            np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)

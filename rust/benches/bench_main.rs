@@ -1,0 +1,677 @@
+//! Bench harness: regenerates every table and figure of the paper's
+//! evaluation (Sec. 9) plus micro-benchmarks of the L3 hot paths.
+//!
+//! criterion is not in the offline crate cache (DESIGN.md §6.6), so this
+//! is a `harness = false` binary: `cargo bench` runs everything;
+//! `cargo bench -- fig13 table5` runs a subset.  Output is the text
+//! analogue of each paper exhibit, with the paper's reported values
+//! quoted for comparison.  Results are summarized in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use patrickstar::baselines::run_system;
+use patrickstar::chunk::{search_chunk_size, ChunkKind, ChunkManager,
+                         ChunkRegistry, TensorSpec};
+use patrickstar::config::{ClusterPreset, SystemKind, TrainTask};
+use patrickstar::engine::{Engine, EvictKind, OptimizationPlan};
+use patrickstar::evict::{EvictionPolicy, LruPolicy, OptPolicy};
+use patrickstar::mem::{Device, HeterogeneousSpace};
+use patrickstar::model::{ActivationPlan, FootprintTimeline, GptSpec};
+use patrickstar::scale::{best_over_batches, max_model_scale,
+                         max_model_scale_ladder};
+use patrickstar::sim::Phase;
+use patrickstar::tracer::MemTracer;
+use patrickstar::util::{human_bytes, Rng, Table};
+
+fn main() {
+    let filters: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with('-'))
+        .collect();
+    let want = |name: &str| {
+        filters.is_empty() || filters.iter().any(|f| name.contains(f))
+    };
+    let benches: &[(&str, fn())] = &[
+        ("table2", table2),
+        ("fig2", fig2),
+        ("table3", table3),
+        ("fig12", fig12),
+        ("fig13", fig13),
+        ("fig14", fig14),
+        ("fig15", fig15),
+        ("fig16_table4", fig16_table4),
+        ("table5", table5),
+        ("fig17", fig17),
+        ("fig18", fig18),
+        ("fig19_pc", fig19_pc),
+        ("ablation_eviction", ablation_eviction),
+        ("micro_hotpaths", micro_hotpaths),
+    ];
+    for (name, f) in benches {
+        if want(name) {
+            println!("\n################ {name} ################");
+            let t0 = Instant::now();
+            f();
+            println!("[{name} took {:.2}s]", t0.elapsed().as_secs_f64());
+        }
+    }
+}
+
+// =====================================================================
+// Table 2 — model configurations
+// =====================================================================
+fn table2() {
+    let mut t = Table::new(&["model", "layers", "hidden", "analytic params"]);
+    for m in GptSpec::table2() {
+        t.row(vec![
+            m.name.into(),
+            m.layers.to_string(),
+            m.hidden.to_string(),
+            format!("{:.2}B", m.n_params() as f64 / 1e9),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("paper: head 16, seq 1024, hidden dims as listed.");
+}
+
+// =====================================================================
+// Fig. 2 — non-model footprint of a 6B model, batch 16, 4 iterations
+// =====================================================================
+fn fig2() {
+    let m = GptSpec::by_name("6B").unwrap();
+    let mut t =
+        Table::new(&["plan", "peak", "mean", "min", "samples/iter"]);
+    for plan in ActivationPlan::ALL {
+        let tl = FootprintTimeline::generate(&m, 16, plan, 4);
+        let peak = tl.peak();
+        let mean =
+            tl.samples.iter().sum::<u64>() / tl.samples.len() as u64;
+        let min = *tl.samples.iter().min().unwrap();
+        t.row(vec![
+            plan.name().into(),
+            human_bytes(peak),
+            human_bytes(mean),
+            human_bytes(min),
+            (tl.samples.len() / 4).to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "paper Fig. 2: ckpt+offload still peaks close to 5 GB on this \
+         task; plans order none > ckpt > ckpt+offload."
+    );
+}
+
+// =====================================================================
+// Table 3 — chunk size search results
+// =====================================================================
+fn table3() {
+    let cases = [
+        ("YARD", ClusterPreset::yard(), vec!["10B", "15B", "18B"]),
+        ("SuperPod", ClusterPreset::superpod(),
+         vec!["20B", "40B", "60B", "68B"]),
+    ];
+    let mut t = Table::new(&["cluster", "model", "chunk (Mi elems)",
+                             "util %"]);
+    for (name, cluster, models) in cases {
+        let budget =
+            cluster.cpu_mem + cluster.n_gpus as u64 * cluster.gpu_mem;
+        for model in models {
+            let m = GptSpec::by_name(model).unwrap();
+            match search_chunk_size(&m.tensor_specs(), budget) {
+                Some(res) => {
+                    t.row(vec![
+                        name.into(),
+                        model.into(),
+                        (res.best.chunk_elems >> 20).to_string(),
+                        format!("{:.2}", 100.0 * res.best.utilization),
+                    ]);
+                }
+                None => {
+                    t.row(vec![name.into(), model.into(), "-".into(),
+                               "-".into()]);
+                }
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "paper Table 3: chunk sizes 288-480, util 90.5-97.4%, \
+         fragmentation < 10%."
+    );
+}
+
+// =====================================================================
+// Fig. 12 — chunk size vs utilization and throughput
+// =====================================================================
+fn fig12() {
+    let cases = [
+        (ClusterPreset::yard(), "15B"),
+        (ClusterPreset::superpod(), "50B"),
+    ];
+    for (cluster, model) in cases {
+        let m = GptSpec::by_name(model).unwrap();
+        println!("--- {} {model}, 8 GPU, batch 8 ---", cluster.name);
+        let mut t = Table::new(&["chunk (Mi elems)", "util %",
+                                 "tflops/GPU"]);
+        for q in (128..=512u64).step_by(64) {
+            let chunk = q << 20;
+            let task = TrainTask::new(m, 8, 8).with_chunk_elems(chunk);
+            let util = patrickstar::chunk::search::evaluate(
+                &m.tensor_specs(), chunk, 0)
+                .map(|c| c.utilization)
+                .unwrap_or(0.0);
+            match Engine::new(cluster, task).run() {
+                Ok(r) => t.row(vec![
+                    q.to_string(),
+                    format!("{:.1}", 100.0 * util),
+                    format!("{:.1}", r.tflops_per_gpu),
+                ]),
+                Err(_) => t.row(vec![q.to_string(),
+                                     format!("{:.1}", 100.0 * util),
+                                     "infeasible".into()]),
+            };
+        }
+        print!("{}", t.render());
+    }
+    println!(
+        "paper Fig. 12: feasible sizes have util > 80% and similar \
+         throughput; some sizes infeasible on 50B (search is necessary)."
+    );
+}
+
+// =====================================================================
+// Fig. 13 — max model scale
+// =====================================================================
+fn fig13() {
+    let mut t = Table::new(&["cluster", "gpus", "system", "max model",
+                             "tflops/GPU"]);
+    for cluster in [ClusterPreset::yard(), ClusterPreset::superpod()] {
+        for gpus in [1u32, 2, 4, 8] {
+            for system in [
+                SystemKind::PyTorchDdp,
+                SystemKind::DeepSpeedDp,
+                SystemKind::DeepSpeedMp(gpus),
+                SystemKind::PatrickStar,
+            ] {
+                if matches!(system, SystemKind::DeepSpeedMp(1)) {
+                    continue;
+                }
+                match max_model_scale(system, cluster, gpus) {
+                    Some(p) => {
+                        let r = p.best.unwrap();
+                        t.row(vec![
+                            cluster.name.into(),
+                            gpus.to_string(),
+                            system.name(),
+                            p.model.into(),
+                            format!("{:.1}", r.tflops_per_gpu),
+                        ]);
+                    }
+                    None => {
+                        t.row(vec![
+                            cluster.name.into(),
+                            gpus.to_string(),
+                            system.name(),
+                            "-".into(),
+                            "-".into(),
+                        ]);
+                    }
+                };
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "paper Fig. 13: YARD 8g — PyTorch 1B / DeepSpeed-DP 4B / \
+         DeepSpeed-MP 8B / PatrickStar 18B (2.25x MP); SuperPod 8g — \
+         DeepSpeed 30B / PatrickStar 68B (2.27x).  Known deviation: our \
+         honest per-GPU flops accounting keeps deeps-mp below the \
+         throughput bar (see EXPERIMENTS.md)."
+    );
+}
+
+// =====================================================================
+// Fig. 14 — single-GPU throughput vs model and batch size
+// =====================================================================
+fn fig14() {
+    for cluster in [ClusterPreset::yard(), ClusterPreset::superpod()] {
+        println!("--- {} (1 GPU) ---", cluster.name);
+        let models: &[&str] = if cluster.name == "YARD" {
+            &["1B", "2B", "4B", "6B", "8B"]
+        } else {
+            &["1B", "4B", "6B", "10B", "15B"]
+        };
+        let mut t = Table::new(&["model", "batch", "pytorch", "deepspeed",
+                                 "patrickstar"]);
+        for model in models {
+            let m = GptSpec::by_name(model).unwrap();
+            for batch in [4u64, 16, 32, 64] {
+                let cell = |system| {
+                    let task = TrainTask::new(m, batch, 1);
+                    match run_system(system, cluster, task) {
+                        Ok(r) => format!("{:.1}", r.tflops_per_gpu),
+                        Err(_) => "x".into(),
+                    }
+                };
+                t.row(vec![
+                    model.to_string(),
+                    batch.to_string(),
+                    cell(SystemKind::PyTorchDdp),
+                    cell(SystemKind::DeepSpeedDp),
+                    cell(SystemKind::PatrickStar),
+                ]);
+            }
+        }
+        print!("{}", t.render());
+    }
+    println!(
+        "paper Fig. 14: PatrickStar >= DeepSpeed everywhere; PyTorch \
+         fastest where it fits (1B) but OOMs beyond; PatrickStar \
+         supports larger batches at every size."
+    );
+}
+
+// =====================================================================
+// Fig. 15 — multi-GPU throughput on YARD
+// =====================================================================
+fn fig15() {
+    multi_gpu_throughput(ClusterPreset::yard(),
+                         &["1B", "2B", "4B", "8B", "12B", "18B"]);
+    println!(
+        "paper Fig. 15: PatrickStar 1.08-1.47x (avg 1.23x) over \
+         DeepSpeed-DP; only PatrickStar trains 8B-18B with DP alone; \
+         419 Tflops on 18B/8g = 94% of the 1B 444 Tflops."
+    );
+}
+
+// =====================================================================
+// Fig. 17 — multi-GPU throughput on SuperPod
+// =====================================================================
+fn fig17() {
+    multi_gpu_throughput(ClusterPreset::superpod(),
+                         &["6B", "10B", "20B", "30B", "50B", "68B"]);
+    println!(
+        "paper Fig. 17: speedup over DeepSpeed 1.07-2.43x (avg 1.53x); \
+         857 Tflops on 68B/8g = 73% of the 6B 1180 Tflops."
+    );
+}
+
+fn multi_gpu_throughput(cluster: ClusterPreset, models: &[&str]) {
+    println!("--- {} best-batch total Tflops ---", cluster.name);
+    let mut t = Table::new(&["model", "gpus", "pytorch", "deeps-dp",
+                             "deeps-mp", "patrickstar", "ps/deeps"]);
+    for model in models {
+        let m = GptSpec::by_name(model).unwrap();
+        for gpus in [1u32, 2, 4, 8] {
+            let probe = |system| {
+                best_over_batches(system, cluster, m, gpus)
+                    .best
+                    .map(|r| r.total_tflops())
+            };
+            let fmt = |x: Option<f64>| {
+                x.map(|v| format!("{v:.0}")).unwrap_or_else(|| "x".into())
+            };
+            let ps = probe(SystemKind::PatrickStar);
+            let ds = probe(SystemKind::DeepSpeedDp);
+            let ratio = match (ps, ds) {
+                (Some(a), Some(b)) if b > 0.0 => format!("{:.2}", a / b),
+                _ => "-".into(),
+            };
+            t.row(vec![
+                model.to_string(),
+                gpus.to_string(),
+                fmt(probe(SystemKind::PyTorchDdp)),
+                fmt(ds),
+                fmt(if gpus > 1 {
+                    probe(SystemKind::DeepSpeedMp(gpus))
+                } else {
+                    None
+                }),
+                fmt(ps),
+                ratio,
+            ]);
+        }
+    }
+    print!("{}", t.render());
+}
+
+// =====================================================================
+// Fig. 16 + Table 4 — optimization ablation breakdown
+// =====================================================================
+fn fig16_table4() {
+    let cases = [
+        (ClusterPreset::superpod(), "10B", 1u32),
+        (ClusterPreset::superpod(), "10B", 8),
+        (ClusterPreset::superpod(), "50B", 1),
+        (ClusterPreset::superpod(), "50B", 8),
+        (ClusterPreset::yard(), "12B", 1),
+        (ClusterPreset::yard(), "12B", 8),
+    ];
+    let mut t4 = Table::new(&["case", "margin(+)/spill(-)"]);
+    for (cluster, model, gpus) in cases {
+        let m = GptSpec::by_name(model).unwrap();
+        let task = TrainTask::new(m, 8, gpus);
+        println!("--- {} {model} {gpus}g ---", cluster.name);
+        let mut t = Table::new(&["plan", "total s", "fwd+bwd", "adam",
+                                 "collectives", "chunk-moves",
+                                 "adam-moves"]);
+        let mut base_total = None;
+        for (label, opt) in [
+            ("Base", OptimizationPlan::default()),
+            ("OSC", OptimizationPlan::os_on_cpu()),
+            ("SP", OptimizationPlan::static_partition()),
+        ] {
+            match Engine::new(cluster, task).with_opt(opt).run() {
+                Ok(r) => {
+                    if label == "Base" {
+                        base_total = Some(r.iter_time_s);
+                        t4.row(vec![
+                            format!("{} {model} {gpus}g", cluster.name),
+                            format!("{:+}", r.placement.margin_or_spill()),
+                        ]);
+                    }
+                    let rel = base_total
+                        .map(|b| format!(" ({:.1}x)", r.iter_time_s / b))
+                        .unwrap_or_default();
+                    t.row(vec![
+                        format!("{gpus}g{label}"),
+                        format!("{:.2}{rel}", r.iter_time_s),
+                        format!("{:.2}", r.breakdown.get(Phase::FwdBwd)),
+                        format!("{:.2}", r.breakdown.get(Phase::Adam)),
+                        format!(
+                            "{:.2}",
+                            r.breakdown.get(Phase::AllGather)
+                                + r.breakdown.get(Phase::ReduceScatter)
+                        ),
+                        format!(
+                            "{:.2}",
+                            r.breakdown.get(Phase::CpuToGpu)
+                                + r.breakdown.get(Phase::GpuToCpu)
+                        ),
+                        format!("{:.2}", r.breakdown.get(Phase::AdamMove)),
+                    ]);
+                }
+                Err(e) => {
+                    t.row(vec![format!("{gpus}g{label}"),
+                               format!("infeasible: {e}"), "-".into(),
+                               "-".into(), "-".into(), "-".into(),
+                               "-".into()]);
+                }
+            }
+        }
+        print!("{}", t.render());
+    }
+    println!("=== Table 4 ===");
+    print!("{}", t4.render());
+    println!(
+        "paper: 8gBase 6.9x faster than 8gSP (10B SuperPod); 8gBase 1.3x \
+         faster than 8gOSC (12B YARD); Table 4 margins +2/+6/-20/+1/-1/+5."
+    );
+}
+
+// =====================================================================
+// Table 5 — achieved collective bandwidth
+// =====================================================================
+fn table5() {
+    let cases = [
+        (ClusterPreset::superpod(), "10B"),
+        (ClusterPreset::superpod(), "50B"),
+        (ClusterPreset::yard(), "12B"),
+    ];
+    let mut t = Table::new(&["cluster", "model", "allgather GB/s",
+                             "reduce-scatter GB/s", "saturated GB/s",
+                             "ratio"]);
+    for (cluster, model) in cases {
+        let m = GptSpec::by_name(model).unwrap();
+        let task = TrainTask::new(m, 8, 8);
+        match Engine::new(cluster, task).run() {
+            Ok(r) => {
+                let sat = cluster.net.nvlink.peak_bps / 1e9;
+                t.row(vec![
+                    cluster.name.into(),
+                    model.into(),
+                    format!("{:.1}", r.allgather_bw / 1e9),
+                    format!("{:.1}", r.reduce_scatter_bw / 1e9),
+                    format!("{sat:.1}"),
+                    format!("{:.0}%", 100.0 * r.allgather_bw / 1e9 / sat),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![cluster.name.into(), model.into(),
+                           format!("err: {e}"), "-".into(), "-".into(),
+                           "-".into()]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "paper Table 5: achieved >= 75% of saturated bandwidth on both \
+         clusters (chunked transfers are inherently bucketized)."
+    );
+}
+
+// =====================================================================
+// Fig. 18 — scalability
+// =====================================================================
+fn fig18() {
+    for (cluster, models) in [
+        (ClusterPreset::yard(), ["1B", "4B", "12B"]),
+        (ClusterPreset::superpod(), ["6B", "20B", "50B"]),
+    ] {
+        println!("--- {} speedup vs 1 GPU ---", cluster.name);
+        let mut t = Table::new(&["model", "1g", "2g", "4g", "8g",
+                                 "8g speedup"]);
+        for model in models {
+            let m = GptSpec::by_name(model).unwrap();
+            let tput = |gpus| {
+                best_over_batches(SystemKind::PatrickStar, cluster, m, gpus)
+                    .best
+                    .map(|r| r.total_tflops())
+            };
+            let t1 = tput(1);
+            let ts: Vec<Option<f64>> =
+                [1u32, 2, 4, 8].iter().map(|&g| tput(g)).collect();
+            let fmt = |x: &Option<f64>| {
+                x.map(|v| format!("{v:.0}")).unwrap_or_else(|| "x".into())
+            };
+            let speedup = match (t1, ts[3]) {
+                (Some(a), Some(b)) if a > 0.0 => format!("{:.2}x", b / a),
+                _ => "-".into(),
+            };
+            t.row(vec![
+                model.to_string(),
+                fmt(&ts[0]),
+                fmt(&ts[1]),
+                fmt(&ts[2]),
+                fmt(&ts[3]),
+                speedup,
+            ]);
+        }
+        print!("{}", t.render());
+    }
+    println!(
+        "paper Fig. 18: superlinear scaling for large models (more \
+         aggregate GPU memory => fewer CPU round trips)."
+    );
+}
+
+// =====================================================================
+// Fig. 19 + 700$-PC — lower hardware requirements
+// =====================================================================
+fn fig19_pc() {
+    println!("--- Fig 19: 8x V100, CPU memory reduced to 120 GB ---");
+    let mut t = Table::new(&["system", "max model", "tflops/GPU"]);
+    for system in [SystemKind::DeepSpeedDp, SystemKind::DeepSpeedMp(8),
+                   SystemKind::PatrickStar] {
+        match max_model_scale(system, ClusterPreset::yard_120gb(), 8) {
+            Some(p) => {
+                let r = p.best.unwrap();
+                t.row(vec![system.name(), p.model.into(),
+                           format!("{:.1}", r.tflops_per_gpu)]);
+            }
+            None => {
+                t.row(vec![system.name(), "-".into(), "-".into()]);
+            }
+        };
+    }
+    print!("{}", t.render());
+    println!("paper: PatrickStar 8B @ 48.78; DeepSpeed-MP 4B @ 32.32.");
+
+    println!("--- Sec 9.2.5: 700$ PC (RTX 2060 8 GB + 16 GB DRAM) ---");
+    let ladder = GptSpec::pc_models();
+    let mut t = Table::new(&["system", "max model", "tflops"]);
+    for system in [SystemKind::PyTorchDdp, SystemKind::DeepSpeedDp,
+                   SystemKind::PatrickStar] {
+        match max_model_scale_ladder(system, ClusterPreset::pc(), 1,
+                                     &ladder) {
+            Some(p) => {
+                let r = p.best.unwrap();
+                t.row(vec![system.name(), p.model.into(),
+                           format!("{:.1}", r.tflops_per_gpu)]);
+            }
+            None => {
+                t.row(vec![system.name(), "-".into(), "-".into()]);
+            }
+        };
+    }
+    print!("{}", t.render());
+    println!(
+        "paper: PatrickStar trains 0.7B @ 18.46 Tflops; PyTorch/DeepSpeed \
+         cap at 0.11B."
+    );
+}
+
+// =====================================================================
+// Ablation: eviction policies (DESIGN.md §5 ablation benches)
+// =====================================================================
+fn ablation_eviction() {
+    let cluster = ClusterPreset::yard();
+    let m = GptSpec::by_name("12B").unwrap();
+    let task = TrainTask::new(m, 8, 1);
+    let mut t = Table::new(&["policy", "iter s", "c2g moved", "g2c moved",
+                             "evictions"]);
+    for evict in [EvictKind::Opt, EvictKind::Lru, EvictKind::Fifo,
+                  EvictKind::Lfu] {
+        let opt = OptimizationPlan { eviction: evict, ..Default::default() };
+        match Engine::new(cluster, task).with_opt(opt).run() {
+            Ok(r) => {
+                t.row(vec![
+                    format!("{evict:?}"),
+                    format!("{:.2}", r.iter_time_s),
+                    human_bytes(r.move_stats.cpu_to_gpu_bytes),
+                    human_bytes(r.move_stats.gpu_to_cpu_bytes),
+                    r.move_stats.evictions.to_string(),
+                ]);
+            }
+            Err(e) => {
+                t.row(vec![format!("{evict:?}"), format!("err {e}"),
+                           "-".into(), "-".into(), "-".into()]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    println!(
+        "paper Sec. 8.3: the OPT (Belady) policy using warm-up moment \
+         lists should move no more bytes than any history-based policy."
+    );
+}
+
+// =====================================================================
+// Micro-benchmarks of L3 hot paths (perf pass, EXPERIMENTS.md §Perf)
+// =====================================================================
+fn micro_hotpaths() {
+    // chunk manager: ensure_on with eviction pressure.
+    let n_tensors = 512usize;
+    let specs: Vec<TensorSpec> = (0..n_tensors)
+        .map(|i| TensorSpec {
+            name: format!("t{i}"),
+            numel: 1000,
+            embedding: false,
+        })
+        .collect();
+    let reg = ChunkRegistry::build(&specs, 4000).unwrap();
+    let n_chunks = reg.chunks.len();
+    let fp16: Vec<_> = reg.list(ChunkKind::ParamFp16);
+    // GPU fits 1/4 of the fp16 list -> heavy eviction churn.
+    let space = HeterogeneousSpace::new(
+        (fp16.len() as u64 / 4) * 8000,
+        1 << 30,
+    );
+    let mut mgr = ChunkManager::new(reg, space);
+    let mut lru = LruPolicy::default();
+    let t0 = Instant::now();
+    let rounds = 200;
+    for round in 0..rounds {
+        for (i, &c) in fp16.iter().enumerate() {
+            mgr.ensure_on(c, Device::Gpu(0), &mut lru,
+                          (round * fp16.len() + i) as u32)
+                .unwrap();
+        }
+        mgr.drain_events();
+    }
+    let per_op =
+        t0.elapsed().as_secs_f64() / (rounds * fp16.len()) as f64;
+    println!(
+        "ensure_on (LRU, churn): {:.2} us/op over {} ops, {} evictions",
+        per_op * 1e6,
+        rounds * fp16.len(),
+        mgr.stats.evictions
+    );
+
+    // tracer next_use binary search.
+    let mut tracer = MemTracer::new(n_chunks);
+    let mut rng = Rng::new(1);
+    for c in 0..n_chunks {
+        let mut ms: Vec<u32> =
+            (0..64).map(|_| rng.range(0, 4000) as u32).collect();
+        ms.sort_unstable();
+        for m in ms {
+            tracer.record_chunk_use(
+                patrickstar::chunk::ChunkId(c as u32), m);
+        }
+    }
+    tracer.finish_warmup();
+    let t0 = Instant::now();
+    let mut acc = 0u64;
+    let queries = 2_000_000u64;
+    for i in 0..queries {
+        let c = patrickstar::chunk::ChunkId((i % n_chunks as u64) as u32);
+        if let Some(m) = tracer.next_use(c, (i % 4000) as u32) {
+            acc = acc.wrapping_add(m as u64);
+        }
+    }
+    println!(
+        "tracer.next_use: {:.1} ns/query ({} queries, checksum {acc})",
+        t0.elapsed().as_secs_f64() / queries as f64 * 1e9,
+        queries
+    );
+
+    // OPT policy victim scan.
+    let candidates: Vec<_> =
+        (0..n_chunks as u32).map(patrickstar::chunk::ChunkId).collect();
+    let mut opt = OptPolicy { tracer: &tracer };
+    let t0 = Instant::now();
+    let picks = 20_000u64;
+    let mut sum = 0u32;
+    for i in 0..picks {
+        if let Some(c) = opt.pick(&candidates, &[], (i % 4000) as u32) {
+            sum = sum.wrapping_add(c.0);
+        }
+    }
+    println!(
+        "OptPolicy.pick over {} candidates: {:.1} us/pick (checksum {sum})",
+        candidates.len(),
+        t0.elapsed().as_secs_f64() / picks as f64 * 1e6
+    );
+
+    // Engine end-to-end (simulated iteration wall time).
+    let t0 = Instant::now();
+    let task = TrainTask::new(GptSpec::by_name("12B").unwrap(), 8, 8);
+    let r = Engine::new(ClusterPreset::yard(), task).run().unwrap();
+    println!(
+        "engine.run (12B, 8 GPU sim): {:.2}s wall for {:.2}s simulated",
+        t0.elapsed().as_secs_f64(),
+        r.iter_time_s
+    );
+}

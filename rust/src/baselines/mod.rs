@@ -1,0 +1,32 @@
+//! Baseline system simulators (paper Sec. 9.1): DeepSpeed
+//! ZeRO-Offload/Infinity (+ Megatron MP) and PyTorch DDP, on the same
+//! calibrated cost model as the PatrickStar engine so comparisons are
+//! apples-to-apples.
+
+pub mod deepspeed;
+pub mod pytorch;
+
+pub use deepspeed::DeepSpeedSim;
+pub use pytorch::PyTorchDdpSim;
+
+use crate::config::{ClusterPreset, SystemKind, TrainTask};
+use crate::engine::{Engine, EngineReport};
+use anyhow::Result;
+
+/// Run any system on a (cluster, task) pair.
+pub fn run_system(
+    system: SystemKind,
+    cluster: ClusterPreset,
+    task: TrainTask,
+) -> Result<EngineReport> {
+    match system {
+        SystemKind::PatrickStar => Engine::new(cluster, task).run(),
+        SystemKind::DeepSpeedDp => {
+            DeepSpeedSim { cluster, task, mp_degree: 1 }.run()
+        }
+        SystemKind::DeepSpeedMp(d) => {
+            DeepSpeedSim { cluster, task, mp_degree: d }.run()
+        }
+        SystemKind::PyTorchDdp => PyTorchDdpSim { cluster, task }.run(),
+    }
+}

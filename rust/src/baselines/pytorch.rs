@@ -1,0 +1,135 @@
+//! PyTorch DistributedDataParallel baseline (paper Sec. 9.1).
+//!
+//! All model data stays on the GPU: 18M bytes per parameter (param fp16 +
+//! grad fp16 + 12M optimizer states + the fp32 master copy is inside the
+//! 12M per Sec. 2) plus non-model data.  Gradients all-reduce with the
+//! bucketized ring (2(p-1)/p · 2M wire bytes).
+
+use anyhow::{bail, Result};
+
+use crate::config::{ClusterPreset, TrainTask};
+use crate::dp::CollectiveCost;
+use crate::engine::{EngineReport, IterBreakdown};
+use crate::model::activation::non_model_bytes;
+use crate::model::{OpGraph, OpKind};
+use crate::placement::PlacementPlan;
+use crate::sim::{Phase, SimClock};
+
+pub struct PyTorchDdpSim {
+    pub cluster: ClusterPreset,
+    pub task: TrainTask,
+}
+
+impl PyTorchDdpSim {
+    pub fn run(&self) -> Result<EngineReport> {
+        let m = &self.task.model;
+        let batch = self.task.batch_per_gpu;
+        let params = m.n_params();
+
+        let peak_nm = (0..=m.layers)
+            .map(|l| non_model_bytes(m, batch, self.task.plan, l))
+            .max()
+            .unwrap_or(0);
+        let gpu_need = 18 * params + peak_nm;
+        if gpu_need > self.cluster.gpu_mem {
+            bail!(
+                "PyTorch OOM: 18M model data + non-model = {} B of {} B GPU",
+                gpu_need,
+                self.cluster.gpu_mem
+            );
+        }
+
+        let mut clock = SimClock::new();
+        let graph = OpGraph::build(*m, batch);
+        let gpu = self.cluster.gpu;
+        let bwd_mult = 2.0 + self.task.plan.recompute_factor();
+        for op in &graph.ops {
+            let kind = if op.kind == OpKind::Embedding {
+                OpKind::ComputeIntensive
+            } else {
+                op.kind
+            };
+            clock.add(
+                Phase::FwdBwd,
+                gpu.op_time(kind, (1.0 + bwd_mult) * op.fwd_flops),
+            );
+        }
+        // ADAM on GPU (fast, bandwidth-bound over 18M bytes).
+        clock.add(Phase::Adam, gpu.adam_time(18 * params));
+        // Grad all-reduce (ring = allgather + reduce-scatter volume),
+        // bucketized at 25 MB (DDP default).
+        let p = self.task.n_gpus as usize;
+        if p > 1 {
+            let cc = CollectiveCost::new(self.cluster.net.nvlink, p);
+            let bucket = 25u64 << 20;
+            let n_buckets = (2 * params).div_ceil(bucket).max(1);
+            let per = 2 * params / n_buckets;
+            clock.add(
+                Phase::ReduceScatter,
+                2.0 * cc.allgather_time(per) * n_buckets as f64,
+            );
+        }
+
+        let breakdown = IterBreakdown::from_clock(&clock);
+        let total = breakdown.total();
+        Ok(EngineReport {
+            system: "pytorch-ddp".into(),
+            model: m.name.into(),
+            n_gpus: self.task.n_gpus,
+            batch_per_gpu: batch,
+            chunk_elems: 0,
+            breakdown,
+            iter_time_s: total,
+            tflops_per_gpu: m.iter_flops(batch) / total / 1e12,
+            placement: PlacementPlan {
+                os_groups_on_gpu: 0,
+                spilled_fp16_chunks: 0,
+                total_fp16_chunks: 0,
+                embedding_on_cpu: false,
+            },
+            move_stats: Default::default(),
+            allgather_bytes: 0,
+            reduce_scatter_bytes: 0,
+            allgather_bw: 0.0,
+            reduce_scatter_bw: 0.0,
+            gpu_peak: gpu_need,
+            cpu_peak: 0,
+            non_model_peak: peak_nm,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::GptSpec;
+
+    fn sim(model: &str, batch: u64, gpus: u32) -> PyTorchDdpSim {
+        PyTorchDdpSim {
+            cluster: ClusterPreset::yard(),
+            task: TrainTask::new(GptSpec::by_name(model).unwrap(), batch,
+                                 gpus),
+        }
+    }
+
+    #[test]
+    fn one_b_fits_and_is_fast() {
+        let r = sim("1B", 4, 1).run().unwrap();
+        // PyTorch is compute-only: highest tflops of the three systems
+        // when it fits (paper Fig. 14: ~60 Tflops on V100 1B).
+        assert!(r.tflops_per_gpu > 40.0, "tflops {}", r.tflops_per_gpu);
+    }
+
+    #[test]
+    fn two_b_ooms_on_v100() {
+        // Paper Sec. 2: 2B x 18 bytes = 36 GB > 32 GB.
+        assert!(sim("2B", 4, 1).run().is_err());
+    }
+
+    #[test]
+    fn ddp_adds_allreduce_cost() {
+        let r1 = sim("1B", 4, 1).run().unwrap();
+        let r8 = sim("1B", 4, 8).run().unwrap();
+        assert!(r8.iter_time_s > r1.iter_time_s);
+    }
+}

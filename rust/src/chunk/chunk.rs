@@ -1,0 +1,116 @@
+//! The chunk: a fixed-size block of contiguous memory holding model-data
+//! tensors of one kind (paper Sec. 5).
+
+use crate::mem::Device;
+use crate::tensor::TensorId;
+
+/// Dense chunk id, global across all four chunk lists.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ChunkId(pub u32);
+
+/// The four model-data chunk lists (paper Sec. 6.1).  There is *no* grad
+/// fp16 list: gradients reuse the param fp16 chunks (Fig. 6), which is why
+/// PatrickStar's model-data footprint is 14M bytes vs ZeRO-Offload's 18M.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ChunkKind {
+    ParamFp16,
+    ParamFp32,
+    Momentum,
+    Variance,
+}
+
+impl ChunkKind {
+    pub const ALL: [ChunkKind; 4] =
+        [ChunkKind::ParamFp16, ChunkKind::ParamFp32, ChunkKind::Momentum,
+         ChunkKind::Variance];
+
+    /// Bytes per element in this list (fp16 vs fp32) — used for *memory
+    /// accounting*.  The e2e trainer stores all payloads as f32 because
+    /// the CPU PJRT backend has no f16 compute; accounting still charges
+    /// 2 bytes for the fp16 list so placement decisions match a true-fp16
+    /// deployment (DESIGN.md §1).
+    pub fn bytes_per_elem(&self) -> u64 {
+        match self {
+            ChunkKind::ParamFp16 => 2,
+            _ => 4,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ChunkKind::ParamFp16 => "param_fp16",
+            ChunkKind::ParamFp32 => "param_fp32",
+            ChunkKind::Momentum => "momentum",
+            ChunkKind::Variance => "variance",
+        }
+    }
+}
+
+/// A chunk: metadata only; payload lives in the manager's payload store.
+#[derive(Clone, Debug)]
+pub struct Chunk {
+    pub id: ChunkId,
+    pub kind: ChunkKind,
+    /// Capacity in elements (equal for all chunks — required both for
+    /// memory reuse and for collective communication, Sec. 6.1).
+    pub capacity: u64,
+    /// Elements actually occupied by tensors.
+    pub used: u64,
+    /// Tensors mapped into this chunk, in offset order.
+    pub tensors: Vec<TensorId>,
+    /// Current device (None = no payload anywhere, i.e. all-FREE and
+    /// released).
+    pub device: Option<Device>,
+    /// Pinned chunks may not be evicted (during collectives, Sec. 7, or
+    /// embedding chunks, Sec. 8.2).
+    pub pinned: bool,
+    /// Position of this chunk within its kind's chunk list (communication
+    /// groups are formed from equal list positions, Sec. 7).
+    pub list_pos: u32,
+    /// True for embedding chunks: CPU-resident, not orchestrated
+    /// (Sec. 8.2).
+    pub embedding: bool,
+}
+
+impl Chunk {
+    pub fn bytes(&self) -> u64 {
+        self.capacity * self.kind.bytes_per_elem()
+    }
+
+    /// Unused tail of the chunk, in elements (fragmentation).
+    pub fn waste(&self) -> u64 {
+        self.capacity - self.used
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accounting_bytes_fp16_vs_fp32() {
+        let mk = |kind| Chunk {
+            id: ChunkId(0),
+            kind,
+            capacity: 100,
+            used: 80,
+            tensors: vec![],
+            device: None,
+            pinned: false,
+            list_pos: 0,
+            embedding: false,
+        };
+        assert_eq!(mk(ChunkKind::ParamFp16).bytes(), 200);
+        assert_eq!(mk(ChunkKind::ParamFp32).bytes(), 400);
+        assert_eq!(mk(ChunkKind::Momentum).waste(), 20);
+    }
+
+    #[test]
+    fn model_data_is_14m_bytes_per_param() {
+        // Paper Sec. 6.1: 2 (p16) + 4 (p32) + 4 (mom) + 4 (var) = 14 bytes
+        // per parameter — no grad list.
+        let total: u64 =
+            ChunkKind::ALL.iter().map(|k| k.bytes_per_elem()).sum();
+        assert_eq!(total, 14);
+    }
+}

@@ -1,0 +1,341 @@
+//! Preprocessing stage: the tensor→chunk mapping schema (paper Sec. 6.1).
+//!
+//! Chunks are built per kind by appending tensors in model-definition
+//! order (N-ary storage model locality); a tensor that does not fit the
+//! remaining space of the current chunk opens a new chunk.  The four
+//! lists (param fp16 / param fp32 / momentum / variance) share offsets, so
+//! the chunks used by ADAM for one parameter sit at the same list position
+//! — the property that makes ZeRO-style partitioning communication-free in
+//! the ADAM stage (Sec. 7).
+
+use anyhow::{bail, Result};
+
+use super::chunk::{Chunk, ChunkId, ChunkKind};
+use crate::tensor::{TensorId, TensorInfo, TensorState};
+
+/// Input to the layout: one model-data tensor.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub numel: u64,
+    /// Embedding tensors get dedicated CPU-pinned chunks (Sec. 8.2).
+    pub embedding: bool,
+}
+
+/// Fragmentation statistics of a layout (paper reports < 10%, Table 3).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LayoutStats {
+    pub n_chunks: usize,
+    pub capacity_elems: u64,
+    pub used_elems: u64,
+}
+
+impl LayoutStats {
+    /// Fraction of chunk space wasted by fragmentation.
+    pub fn fragmentation(&self) -> f64 {
+        if self.capacity_elems == 0 {
+            return 0.0;
+        }
+        1.0 - self.used_elems as f64 / self.capacity_elems as f64
+    }
+
+    /// Paper Table 3's UTIL column.
+    pub fn utilization(&self) -> f64 {
+        1.0 - self.fragmentation()
+    }
+}
+
+/// The complete preprocessing output: chunks + per-tensor placements for
+/// all four kinds.
+#[derive(Clone, Debug)]
+pub struct ChunkRegistry {
+    pub chunk_elems: u64,
+    pub chunks: Vec<Chunk>,
+    /// One `TensorInfo` per (kind, tensor) pair; indexed by
+    /// `tensor_index(kind, i)`.
+    pub tensors: Vec<TensorInfo>,
+    /// Number of model tensors (per kind).
+    pub n_model_tensors: usize,
+    /// Chunks per kind list (embedding chunks excluded).
+    pub list_len: usize,
+}
+
+impl ChunkRegistry {
+    /// Build the mapping schema.  `chunk_elems` must fit every
+    /// non-embedding tensor.
+    pub fn build(specs: &[TensorSpec], chunk_elems: u64) -> Result<Self> {
+        for s in specs {
+            if !s.embedding && s.numel > chunk_elems {
+                bail!(
+                    "tensor {} ({} elems) exceeds chunk size {}",
+                    s.name,
+                    s.numel,
+                    chunk_elems
+                );
+            }
+        }
+        let mut chunks: Vec<Chunk> = Vec::new();
+        let mut tensors: Vec<TensorInfo> = Vec::new();
+
+        // First pass: param fp16 list layout (non-embedding tensors).
+        // (chunk index within list, offset) per spec; embeddings get
+        // (usize::MAX, 0) placeholders replaced by dedicated chunks below.
+        let mut placement: Vec<(usize, u64)> = Vec::with_capacity(specs.len());
+        let mut list_len = 0usize;
+        let mut cursor = 0u64; // offset within current chunk
+        for s in specs {
+            if s.embedding {
+                placement.push((usize::MAX, 0));
+                continue;
+            }
+            if list_len == 0 || cursor + s.numel > chunk_elems {
+                list_len += 1;
+                cursor = 0;
+            }
+            placement.push((list_len - 1, cursor));
+            cursor += s.numel;
+        }
+
+        // Second pass: materialize the four aligned lists.
+        for kind in ChunkKind::ALL {
+            let kind_base = chunks.len();
+            for pos in 0..list_len {
+                chunks.push(Chunk {
+                    id: ChunkId(chunks.len() as u32),
+                    kind,
+                    capacity: chunk_elems,
+                    used: 0,
+                    tensors: Vec::new(),
+                    device: None,
+                    pinned: false,
+                    list_pos: pos as u32,
+                    embedding: false,
+                });
+            }
+            for (i, s) in specs.iter().enumerate() {
+                if s.embedding {
+                    continue;
+                }
+                let (list_idx, offset) = placement[i];
+                let chunk_idx = kind_base + list_idx;
+                let tid = TensorId(tensors.len() as u32);
+                chunks[chunk_idx].tensors.push(tid);
+                chunks[chunk_idx].used += s.numel;
+                tensors.push(TensorInfo {
+                    id: tid,
+                    name: format!("{}/{}", kind.name(), s.name),
+                    numel: s.numel,
+                    chunk: chunk_idx,
+                    offset,
+                    state: TensorState::Free,
+                    ref_count: 0,
+                });
+            }
+        }
+
+        // Third pass: embedding tensors — dedicated CPU-pinned chunks,
+        // fp16+fp32+momentum+variance folded into one accounting unit per
+        // embedding (they never move, so list alignment is irrelevant).
+        for (i, s) in specs.iter().enumerate() {
+            if !s.embedding {
+                continue;
+            }
+            debug_assert_eq!(placement[i].0, usize::MAX);
+            let n_chunks = s.numel.div_ceil(chunk_elems);
+            for c in 0..n_chunks {
+                let this = (s.numel - c * chunk_elems).min(chunk_elems);
+                let tid = TensorId(tensors.len() as u32);
+                let cid = ChunkId(chunks.len() as u32);
+                chunks.push(Chunk {
+                    id: cid,
+                    kind: ChunkKind::ParamFp32,
+                    capacity: chunk_elems,
+                    used: this,
+                    tensors: vec![tid],
+                    device: None,
+                    pinned: true,
+                    list_pos: 0,
+                    embedding: true,
+                });
+                tensors.push(TensorInfo {
+                    id: tid,
+                    name: format!("emb/{}#{}", s.name, c),
+                    numel: this,
+                    chunk: chunks.len() - 1,
+                    offset: 0,
+                    state: TensorState::Free,
+                    ref_count: 0,
+                });
+            }
+        }
+
+        Ok(ChunkRegistry {
+            chunk_elems,
+            chunks,
+            tensors,
+            n_model_tensors: specs.iter().filter(|s| !s.embedding).count(),
+            list_len,
+        })
+    }
+
+    /// Index of tensor `i` (model-definition order among non-embedding
+    /// tensors) in list `kind`.
+    pub fn tensor_index(&self, kind: ChunkKind, i: usize) -> usize {
+        let k = ChunkKind::ALL.iter().position(|x| *x == kind).unwrap();
+        k * self.n_model_tensors + i
+    }
+
+    pub fn tensor(&self, kind: ChunkKind, i: usize) -> &TensorInfo {
+        &self.tensors[self.tensor_index(kind, i)]
+    }
+
+    /// Layout statistics over the orchestrated (non-embedding) chunks.
+    pub fn stats(&self) -> LayoutStats {
+        let mut s = LayoutStats::default();
+        for c in self.chunks.iter().filter(|c| !c.embedding) {
+            s.n_chunks += 1;
+            s.capacity_elems += c.capacity;
+            s.used_elems += c.used;
+        }
+        s
+    }
+
+    /// Total model-data bytes under management (paper: 14M for M params).
+    pub fn model_data_bytes(&self) -> u64 {
+        self.chunks
+            .iter()
+            .filter(|c| !c.embedding)
+            .map(|c| c.bytes())
+            .sum()
+    }
+
+    /// All non-embedding chunks of a kind, in list order.
+    pub fn list(&self, kind: ChunkKind) -> Vec<ChunkId> {
+        let mut v: Vec<&Chunk> = self
+            .chunks
+            .iter()
+            .filter(|c| c.kind == kind && !c.embedding)
+            .collect();
+        v.sort_by_key(|c| c.list_pos);
+        v.iter().map(|c| c.id).collect()
+    }
+
+    /// The aligned (fp32, momentum, variance) chunk ids for a param fp16
+    /// chunk — the ADAM working set of that chunk (Sec. 6.2).
+    pub fn os_chunks_for(&self, param_fp16: ChunkId) -> [ChunkId; 3] {
+        let pos = self.chunks[param_fp16.0 as usize].list_pos;
+        debug_assert_eq!(
+            self.chunks[param_fp16.0 as usize].kind,
+            ChunkKind::ParamFp16
+        );
+        let find = |kind: ChunkKind| {
+            self.chunks
+                .iter()
+                .find(|c| c.kind == kind && c.list_pos == pos && !c.embedding)
+                .map(|c| c.id)
+                .expect("aligned chunk missing")
+        };
+        [
+            find(ChunkKind::ParamFp32),
+            find(ChunkKind::Momentum),
+            find(ChunkKind::Variance),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec(name: &str, numel: u64) -> TensorSpec {
+        TensorSpec { name: name.into(), numel, embedding: false }
+    }
+
+    #[test]
+    fn append_first_fit() {
+        let specs =
+            vec![spec("a", 60), spec("b", 50), spec("c", 40), spec("d", 10)];
+        let reg = ChunkRegistry::build(&specs, 100).unwrap();
+        // a opens chunk0 (60); b doesn't fit -> chunk1 (50); c fits after b
+        // (90); d doesn't fit (90+10=100 fits exactly!) -> stays in chunk1.
+        let p16 = reg.list(ChunkKind::ParamFp16);
+        assert_eq!(p16.len(), 2);
+        let t = |i: usize| reg.tensor(ChunkKind::ParamFp16, i);
+        assert_eq!((t(0).chunk, t(0).offset), (0, 0));
+        assert_eq!((t(1).chunk, t(1).offset), (1, 0));
+        assert_eq!((t(2).chunk, t(2).offset), (1, 50));
+        assert_eq!((t(3).chunk, t(3).offset), (1, 90));
+    }
+
+    #[test]
+    fn four_lists_share_offsets() {
+        let specs = vec![spec("a", 30), spec("b", 80), spec("c", 20)];
+        let reg = ChunkRegistry::build(&specs, 100).unwrap();
+        for i in 0..3 {
+            let base = reg.tensor(ChunkKind::ParamFp16, i);
+            for kind in
+                [ChunkKind::ParamFp32, ChunkKind::Momentum, ChunkKind::Variance]
+            {
+                let t = reg.tensor(kind, i);
+                assert_eq!(t.offset, base.offset, "offset alignment");
+                assert_eq!(
+                    reg.chunks[t.chunk].list_pos,
+                    reg.chunks[base.chunk].list_pos,
+                    "list position alignment"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn model_data_is_14_bytes_per_param() {
+        let specs = vec![spec("a", 100), spec("b", 100)];
+        let reg = ChunkRegistry::build(&specs, 200).unwrap();
+        // Exactly one chunk per list, all full: 200 elems * (2+4+4+4).
+        assert_eq!(reg.model_data_bytes(), 200 * 14);
+    }
+
+    #[test]
+    fn oversized_tensor_rejected() {
+        let specs = vec![spec("big", 1000)];
+        assert!(ChunkRegistry::build(&specs, 100).is_err());
+    }
+
+    #[test]
+    fn embedding_gets_pinned_chunks() {
+        let specs = vec![
+            TensorSpec { name: "wte".into(), numel: 250, embedding: true },
+            spec("w", 80),
+        ];
+        let reg = ChunkRegistry::build(&specs, 100).unwrap();
+        let emb: Vec<&Chunk> =
+            reg.chunks.iter().filter(|c| c.embedding).collect();
+        assert_eq!(emb.len(), 3); // ceil(250/100)
+        assert!(emb.iter().all(|c| c.pinned));
+        // Embedding chunks are excluded from orchestration stats.
+        assert_eq!(reg.stats().n_chunks, 4); // 1 chunk x 4 lists
+    }
+
+    #[test]
+    fn fragmentation_math() {
+        let specs = vec![spec("a", 60), spec("b", 60)];
+        let reg = ChunkRegistry::build(&specs, 100).unwrap();
+        // Two chunks/list, 120/200 used -> 40% waste.
+        let s = reg.stats();
+        assert!((s.fragmentation() - 0.4).abs() < 1e-9);
+        assert!((s.utilization() - 0.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn os_chunks_aligned() {
+        let specs = vec![spec("a", 60), spec("b", 60), spec("c", 30)];
+        let reg = ChunkRegistry::build(&specs, 100).unwrap();
+        let p16 = reg.list(ChunkKind::ParamFp16);
+        for &cid in &p16 {
+            let pos = reg.chunks[cid.0 as usize].list_pos;
+            for os in reg.os_chunks_for(cid) {
+                assert_eq!(reg.chunks[os.0 as usize].list_pos, pos);
+            }
+        }
+    }
+}

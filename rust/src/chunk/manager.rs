@@ -1,0 +1,543 @@
+//! Runtime chunk orchestration (paper Sec. 6.2, 8.3).
+//!
+//! The manager owns the registry, the heterogeneous space accounting and
+//! (in real mode) the chunk payloads.  It implements the single-process
+//! parts of the paper's Algorithm 1 (Access) and Algorithm 2 (Release);
+//! the distributed parts (FetchRemoteChunks / ReleaseRemoteChunk) live in
+//! `dp::` and call back into these primitives.
+//!
+//! Every payload movement is emitted as a `MoveEvent`; the simulator
+//! charges interconnect time for them, the e2e trainer uses them for
+//! telemetry.  This keeps one orchestration code path for both backends
+//! (DESIGN.md §6.1).
+
+use anyhow::{anyhow, bail, Result};
+
+use super::chunk::{Chunk, ChunkId, ChunkKind};
+use super::layout::ChunkRegistry;
+use crate::evict::EvictionPolicy;
+use crate::mem::{Device, HeterogeneousSpace};
+use crate::tensor::TensorState;
+use crate::tracer::Moment;
+
+/// What happened to a chunk payload.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum MoveKind {
+    /// Fresh payload materialized on a device (no transfer).
+    Alloc,
+    /// Payload copied between devices on the requester's critical path.
+    Transfer,
+    /// Payload pushed off a device to make room (also a transfer, but
+    /// attributed to eviction in the breakdown).
+    Evict,
+    /// Payload dropped entirely.
+    Release,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct MoveEvent {
+    pub chunk: ChunkId,
+    pub from: Option<Device>,
+    pub to: Option<Device>,
+    pub bytes: u64,
+    pub kind: MoveKind,
+}
+
+/// Aggregate movement statistics (paper Fig. 16's chunk-moving bars).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct MoveStats {
+    pub cpu_to_gpu_bytes: u64,
+    pub gpu_to_cpu_bytes: u64,
+    pub cpu_to_gpu_moves: u64,
+    pub gpu_to_cpu_moves: u64,
+    pub evictions: u64,
+    pub allocs: u64,
+}
+
+/// The chunk manager.
+pub struct ChunkManager {
+    pub reg: ChunkRegistry,
+    pub space: HeterogeneousSpace,
+    pub stats: MoveStats,
+    /// Undrained movement events (consumed by the engine per operator).
+    events: Vec<MoveEvent>,
+    /// Real payloads (e2e mode): one optional f32 buffer per chunk.
+    payloads: Vec<Option<Vec<f32>>>,
+    real_mode: bool,
+}
+
+impl ChunkManager {
+    pub fn new(reg: ChunkRegistry, space: HeterogeneousSpace) -> Self {
+        let n = reg.chunks.len();
+        ChunkManager {
+            reg,
+            space,
+            stats: MoveStats::default(),
+            events: Vec::new(),
+            payloads: vec![None; n],
+            real_mode: false,
+        }
+    }
+
+    /// Enable real payload storage (e2e trainer).
+    pub fn with_real_payloads(mut self) -> Self {
+        self.real_mode = true;
+        self
+    }
+
+    // ------------------------------------------------------------ queries
+
+    pub fn chunk(&self, id: ChunkId) -> &Chunk {
+        &self.reg.chunks[id.0 as usize]
+    }
+
+    fn chunk_mut(&mut self, id: ChunkId) -> &mut Chunk {
+        &mut self.reg.chunks[id.0 as usize]
+    }
+
+    /// Derived chunk mobility (paper Sec. 6.2): a chunk is movable iff no
+    /// tensor is COMPUTE and it is not pinned.
+    pub fn movable(&self, id: ChunkId) -> bool {
+        let c = self.chunk(id);
+        !c.pinned
+            && c.device.is_some()
+            && c.tensors.iter().all(|t| {
+                self.reg.tensors[t.0 as usize].state != TensorState::Compute
+            })
+    }
+
+    /// All tensors FREE -> payload reusable/releasable.
+    pub fn all_free(&self, id: ChunkId) -> bool {
+        let c = self.chunk(id);
+        c.tensors
+            .iter()
+            .all(|t| self.reg.tensors[t.0 as usize].state == TensorState::Free)
+    }
+
+    /// Chunks currently resident on `device` that could be evicted.
+    pub fn eviction_candidates(&self, device: Device) -> Vec<ChunkId> {
+        self.reg
+            .chunks
+            .iter()
+            .filter(|c| c.device == Some(device))
+            .map(|c| c.id)
+            .filter(|&id| self.movable(id))
+            .collect()
+    }
+
+    pub fn drain_events(&mut self) -> Vec<MoveEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    pub fn payload(&self, id: ChunkId) -> Option<&[f32]> {
+        self.payloads[id.0 as usize].as_deref()
+    }
+
+    pub fn payload_mut(&mut self, id: ChunkId) -> Option<&mut [f32]> {
+        self.payloads[id.0 as usize].as_deref_mut()
+    }
+
+    // --------------------------------------------------------- primitives
+
+    fn record(&mut self, ev: MoveEvent) {
+        match (ev.kind, ev.from, ev.to) {
+            (MoveKind::Alloc, _, _) => self.stats.allocs += 1,
+            (_, Some(Device::Cpu), Some(Device::Gpu(_))) => {
+                self.stats.cpu_to_gpu_bytes += ev.bytes;
+                self.stats.cpu_to_gpu_moves += 1;
+            }
+            (_, Some(Device::Gpu(_)), Some(Device::Cpu)) => {
+                self.stats.gpu_to_cpu_bytes += ev.bytes;
+                self.stats.gpu_to_cpu_moves += 1;
+            }
+            _ => {}
+        }
+        if ev.kind == MoveKind::Evict {
+            self.stats.evictions += 1;
+        }
+        self.events.push(ev);
+    }
+
+    /// Materialize a payload for `id` on `device` (paper: "prepare payload
+    /// on comp_dev").  Fails if the device cannot fit it; eviction is the
+    /// caller's job (`ensure_on`).
+    pub fn alloc_payload(&mut self, id: ChunkId, device: Device) -> Result<()> {
+        let bytes = self.chunk(id).bytes();
+        if self.chunk(id).device.is_some() {
+            bail!("chunk {id:?} already has a payload");
+        }
+        self.space.alloc(device, bytes)?;
+        self.chunk_mut(id).device = Some(device);
+        if self.real_mode {
+            let cap = self.chunk(id).capacity as usize;
+            self.payloads[id.0 as usize] = Some(vec![0.0; cap]);
+        }
+        self.record(MoveEvent {
+            chunk: id,
+            from: None,
+            to: Some(device),
+            bytes,
+            kind: MoveKind::Alloc,
+        });
+        Ok(())
+    }
+
+    /// Drop a payload (paper: release remote chunk / FREE reuse).
+    pub fn release_payload(&mut self, id: ChunkId) -> Result<()> {
+        let c = self.chunk(id);
+        let (bytes, dev) = (c.bytes(), c.device);
+        let dev = dev.ok_or_else(|| anyhow!("chunk {id:?} has no payload"))?;
+        self.space.dealloc(dev, bytes)?;
+        self.chunk_mut(id).device = None;
+        if self.real_mode {
+            self.payloads[id.0 as usize] = None;
+        }
+        self.record(MoveEvent {
+            chunk: id,
+            from: Some(dev),
+            to: None,
+            bytes,
+            kind: MoveKind::Release,
+        });
+        Ok(())
+    }
+
+    fn move_payload(
+        &mut self,
+        id: ChunkId,
+        to: Device,
+        kind: MoveKind,
+    ) -> Result<()> {
+        let c = self.chunk(id);
+        let (bytes, from) = (c.bytes(), c.device);
+        let from =
+            from.ok_or_else(|| anyhow!("chunk {id:?} has no payload"))?;
+        if from == to {
+            return Ok(());
+        }
+        self.space.alloc(to, bytes)?;
+        self.space.dealloc(from, bytes)?;
+        self.chunk_mut(id).device = Some(to);
+        // Real payloads live in host RAM either way; the accounting move
+        // above is the honest analogue of cudaMemcpy on this testbed.
+        self.record(MoveEvent { chunk: id, from: Some(from), to: Some(to),
+                                bytes, kind });
+        Ok(())
+    }
+
+    /// Make `id` resident on `device`, evicting other chunks if needed
+    /// (paper Sec. 8.3).  `policy` picks victims among HOLD-like resident
+    /// chunks; victims go to the *other* device.
+    pub fn ensure_on(
+        &mut self,
+        id: ChunkId,
+        device: Device,
+        policy: &mut dyn EvictionPolicy,
+        now: Moment,
+    ) -> Result<()> {
+        if self.chunk(id).device == Some(device) {
+            policy.on_access(id, now);
+            return Ok(());
+        }
+        let bytes = self.chunk(id).bytes();
+        // Evict until the target device can host the chunk.
+        while !self.space.dev(device).can_fit(bytes) {
+            let mut candidates = self.eviction_candidates(device);
+            candidates.retain(|&c| c != id);
+            let victim = policy
+                .pick(&candidates, &self.reg.chunks, now)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "cannot place chunk {id:?} on {}: no evictable \
+                         chunk (need {bytes} B, free {} B)",
+                        device.name(),
+                        self.space.dev(device).free()
+                    )
+                })?;
+            let other = match device {
+                Device::Cpu => Device::Gpu(0),
+                Device::Gpu(_) => Device::Cpu,
+            };
+            if self.all_free(victim) {
+                // FREE chunks are dropped, not moved (paper: reuse/release).
+                self.release_payload(victim)?;
+            } else {
+                self.move_payload(victim, other, MoveKind::Evict)?;
+            }
+        }
+        if self.chunk(id).device.is_none() {
+            self.alloc_payload(id, device)?;
+        } else {
+            self.move_payload(id, device, MoveKind::Transfer)?;
+        }
+        policy.on_access(id, now);
+        Ok(())
+    }
+
+    /// Evict chunks from `device` until usage fits its (possibly just
+    /// shrunk) capacity — invoked after the tracer lowers the chunkable
+    /// GPU cap at a moment boundary (Sec. 8.1).
+    pub fn evict_to_fit(
+        &mut self,
+        device: Device,
+        policy: &mut dyn EvictionPolicy,
+        now: Moment,
+    ) -> Result<()> {
+        while self.space.dev(device).over_capacity() {
+            let candidates = self.eviction_candidates(device);
+            let victim = policy
+                .pick(&candidates, &self.reg.chunks, now)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "cannot shrink {} to {} B: no evictable chunk \
+                         (used {} B)",
+                        device.name(),
+                        self.space.dev(device).capacity,
+                        self.space.dev(device).used()
+                    )
+                })?;
+            let other = match device {
+                Device::Cpu => Device::Gpu(0),
+                Device::Gpu(_) => Device::Cpu,
+            };
+            if self.all_free(victim) {
+                self.release_payload(victim)?;
+            } else {
+                self.move_payload(victim, other, MoveKind::Evict)?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn pin(&mut self, id: ChunkId) {
+        self.chunk_mut(id).pinned = true;
+    }
+
+    pub fn unpin(&mut self, id: ChunkId) {
+        self.chunk_mut(id).pinned = false;
+    }
+
+    // ----------------------------------------------- Algorithm 1 (Access)
+
+    /// Access one tensor for computing on `device` (Algorithm 1, lines
+    /// 21–35, single-process portion).  Returns true if the tensor was
+    /// FREE and its payload slot must be zero-filled.
+    pub fn access_tensor(
+        &mut self,
+        kind: ChunkKind,
+        idx: usize,
+        device: Device,
+        policy: &mut dyn EvictionPolicy,
+        now: Moment,
+    ) -> Result<bool> {
+        let ti = self.reg.tensor_index(kind, idx);
+        let chunk = ChunkId(self.reg.tensors[ti].chunk as u32);
+        self.ensure_on(chunk, device, policy, now)?;
+        let was_free = self.reg.tensors[ti].state == TensorState::Free;
+        if was_free && self.real_mode {
+            // Zero the tensor's slot (Algorithm 1 line 31).
+            let (off, n) =
+                (self.reg.tensors[ti].offset, self.reg.tensors[ti].numel);
+            if let Some(buf) = self.payload_mut(chunk) {
+                buf[off as usize..(off + n) as usize].fill(0.0);
+            }
+        }
+        self.reg.tensors[ti]
+            .set_state(TensorState::Compute)
+            .map_err(|e| anyhow!(e))?;
+        self.reg.tensors[ti].ref_count += 1;
+        Ok(was_free)
+    }
+
+    // ---------------------------------------------- Algorithm 2 (Release)
+
+    /// Release one tensor to `target` (Algorithm 2, lines 31–39,
+    /// single-process portion).  With shared parameters the state only
+    /// changes when the access refcount drains.
+    pub fn release_tensor(
+        &mut self,
+        kind: ChunkKind,
+        idx: usize,
+        target: TensorState,
+    ) -> Result<()> {
+        let ti = self.reg.tensor_index(kind, idx);
+        let t = &mut self.reg.tensors[ti];
+        if t.ref_count == 0 {
+            bail!("release of unaccessed tensor {}", t.name);
+        }
+        t.ref_count -= 1;
+        if t.ref_count == 0 {
+            t.set_state(target).map_err(|e| anyhow!(e))?;
+        }
+        Ok(())
+    }
+
+    /// Reset all tensors of a kind from HOLD_AFTER_FWD to HOLD (paper:
+    /// end of FWD, required for checkpoint-recompute disambiguation).
+    pub fn reset_after_fwd(&mut self, kind: ChunkKind) -> Result<()> {
+        for i in 0..self.reg.n_model_tensors {
+            let ti = self.reg.tensor_index(kind, i);
+            if self.reg.tensors[ti].state == TensorState::HoldAfterFwd {
+                self.reg.tensors[ti]
+                    .set_state(TensorState::Hold)
+                    .map_err(|e| anyhow!(e))?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::layout::TensorSpec;
+    use crate::evict::FifoPolicy;
+
+    fn mk(n_tensors: usize, numel: u64, chunk_elems: u64,
+          gpu: u64, cpu: u64) -> ChunkManager {
+        let specs: Vec<TensorSpec> = (0..n_tensors)
+            .map(|i| TensorSpec {
+                name: format!("t{i}"),
+                numel,
+                embedding: false,
+            })
+            .collect();
+        let reg = ChunkRegistry::build(&specs, chunk_elems).unwrap();
+        ChunkManager::new(reg, HeterogeneousSpace::new(gpu, cpu))
+    }
+
+    #[test]
+    fn alloc_then_release_roundtrip() {
+        let mut m = mk(2, 50, 100, 10_000, 10_000);
+        let id = m.reg.list(ChunkKind::ParamFp16)[0];
+        m.alloc_payload(id, Device::Gpu(0)).unwrap();
+        assert_eq!(m.chunk(id).device, Some(Device::Gpu(0)));
+        assert_eq!(m.space.dev(Device::Gpu(0)).used(), 200); // 100 elem fp16
+        m.release_payload(id).unwrap();
+        assert_eq!(m.chunk(id).device, None);
+        assert_eq!(m.space.dev(Device::Gpu(0)).used(), 0);
+    }
+
+    #[test]
+    fn ensure_on_evicts_hold_chunks() {
+        // GPU fits exactly one fp16 chunk (200 B); placing the second must
+        // evict the first to CPU.
+        let mut m = mk(4, 50, 100, 200, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let (a, b) = (list[0], list[1]);
+        let mut pol = FifoPolicy::default();
+        m.ensure_on(a, Device::Gpu(0), &mut pol, 0).unwrap();
+        // Mark a's tensors HOLD so it is evictable but not droppable.
+        for i in [0usize, 1] {
+            let ti = m.reg.tensor_index(ChunkKind::ParamFp16, i);
+            m.reg.tensors[ti].set_state(TensorState::Hold).unwrap();
+        }
+        m.ensure_on(b, Device::Gpu(0), &mut pol, 1).unwrap();
+        assert_eq!(m.chunk(a).device, Some(Device::Cpu), "a evicted");
+        assert_eq!(m.chunk(b).device, Some(Device::Gpu(0)));
+        assert_eq!(m.stats.evictions, 1);
+        assert_eq!(m.stats.gpu_to_cpu_bytes, 200);
+    }
+
+    #[test]
+    fn free_chunks_are_dropped_not_moved() {
+        let mut m = mk(4, 50, 100, 200, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let mut pol = FifoPolicy::default();
+        m.ensure_on(list[0], Device::Gpu(0), &mut pol, 0).unwrap();
+        // Tensors stay FREE -> chunk 0's payload is reusable.
+        m.ensure_on(list[1], Device::Gpu(0), &mut pol, 1).unwrap();
+        assert_eq!(m.chunk(list[0]).device, None, "dropped");
+        assert_eq!(m.stats.gpu_to_cpu_bytes, 0, "no transfer for FREE");
+    }
+
+    #[test]
+    fn compute_chunks_never_evicted() {
+        let mut m = mk(4, 50, 100, 200, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let mut pol = FifoPolicy::default();
+        // Access both tensors of chunk0 -> COMPUTE.
+        m.access_tensor(ChunkKind::ParamFp16, 0, Device::Gpu(0), &mut pol, 0)
+            .unwrap();
+        m.access_tensor(ChunkKind::ParamFp16, 1, Device::Gpu(0), &mut pol, 0)
+            .unwrap();
+        // No evictable chunk -> placing chunk1 on GPU must fail.
+        let err =
+            m.ensure_on(list[1], Device::Gpu(0), &mut pol, 1).unwrap_err();
+        assert!(err.to_string().contains("no evictable"), "{err}");
+    }
+
+    #[test]
+    fn pinned_chunks_never_evicted() {
+        let mut m = mk(4, 50, 100, 200, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let mut pol = FifoPolicy::default();
+        m.ensure_on(list[0], Device::Gpu(0), &mut pol, 0).unwrap();
+        m.pin(list[0]);
+        assert!(m.ensure_on(list[1], Device::Gpu(0), &mut pol, 1).is_err());
+        m.unpin(list[0]);
+        assert!(m.ensure_on(list[1], Device::Gpu(0), &mut pol, 1).is_ok());
+    }
+
+    #[test]
+    fn refcount_gates_release() {
+        // A parameter shared by two operators only leaves COMPUTE when
+        // both release it (paper Sec. 6.2).
+        let mut m = mk(2, 50, 100, 10_000, 10_000);
+        let mut pol = FifoPolicy::default();
+        m.access_tensor(ChunkKind::ParamFp16, 0, Device::Gpu(0), &mut pol, 0)
+            .unwrap();
+        m.access_tensor(ChunkKind::ParamFp16, 0, Device::Gpu(0), &mut pol, 0)
+            .unwrap();
+        m.release_tensor(ChunkKind::ParamFp16, 0, TensorState::HoldAfterFwd)
+            .unwrap();
+        let ti = m.reg.tensor_index(ChunkKind::ParamFp16, 0);
+        assert_eq!(m.reg.tensors[ti].state, TensorState::Compute);
+        m.release_tensor(ChunkKind::ParamFp16, 0, TensorState::HoldAfterFwd)
+            .unwrap();
+        assert_eq!(m.reg.tensors[ti].state, TensorState::HoldAfterFwd);
+    }
+
+    #[test]
+    fn access_zeroes_free_tensor_in_real_mode() {
+        let mut m = mk(2, 50, 100, 10_000, 10_000).with_real_payloads();
+        let mut pol = FifoPolicy::default();
+        let was_free = m
+            .access_tensor(ChunkKind::ParamFp16, 0, Device::Gpu(0), &mut pol, 0)
+            .unwrap();
+        assert!(was_free);
+        let id = m.reg.list(ChunkKind::ParamFp16)[0];
+        assert!(m.payload(id).unwrap().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn reset_after_fwd() {
+        let mut m = mk(2, 50, 100, 10_000, 10_000);
+        let mut pol = FifoPolicy::default();
+        for i in 0..2 {
+            m.access_tensor(ChunkKind::ParamFp16, i, Device::Gpu(0),
+                            &mut pol, 0).unwrap();
+            m.release_tensor(ChunkKind::ParamFp16, i,
+                             TensorState::HoldAfterFwd).unwrap();
+        }
+        m.reset_after_fwd(ChunkKind::ParamFp16).unwrap();
+        for i in 0..2 {
+            let ti = m.reg.tensor_index(ChunkKind::ParamFp16, i);
+            assert_eq!(m.reg.tensors[ti].state, TensorState::Hold);
+        }
+    }
+
+    #[test]
+    fn move_events_drained() {
+        let mut m = mk(2, 50, 100, 10_000, 10_000);
+        let id = m.reg.list(ChunkKind::ParamFp16)[0];
+        m.alloc_payload(id, Device::Cpu).unwrap();
+        let mut pol = FifoPolicy::default();
+        m.ensure_on(id, Device::Gpu(0), &mut pol, 0).unwrap();
+        let ev = m.drain_events();
+        assert_eq!(ev.len(), 2);
+        assert_eq!(ev[0].kind, MoveKind::Alloc);
+        assert_eq!(ev[1].kind, MoveKind::Transfer);
+        assert!(m.drain_events().is_empty());
+    }
+}

@@ -1,0 +1,19 @@
+//! Chunk-based memory management — the paper's core contribution (Sec. 5–6).
+//!
+//! * [`chunk`]   — `Chunk` and the derived chunk location rules.
+//! * [`layout`]  — the preprocessing-stage tensor→chunk mapping schema
+//!                 (Sec. 6.1): four aligned chunk lists, append-first-fit.
+//! * [`search`]  — offline chunk-size search minimizing fragmentation
+//!                 (Sec. 9.1, Table 3).
+//! * [`manager`] — runtime chunk orchestration: prepare/move/pin/evict
+//!                 (Sec. 6.2, 8.3).
+
+pub mod chunk;
+pub mod layout;
+pub mod manager;
+pub mod search;
+
+pub use chunk::{Chunk, ChunkId, ChunkKind};
+pub use layout::{ChunkRegistry, LayoutStats, TensorSpec};
+pub use manager::{ChunkManager, MoveStats};
+pub use search::{search_chunk_size, SearchResult};

@@ -1,0 +1,242 @@
+//! Configuration: cluster presets, training tasks, system selection.
+//!
+//! Presets mirror the paper's testbeds (Sec. 9.1): **YARD** (8x V100-32GB,
+//! 240 GB DRAM, 12 cores), **SuperPod** (8x A100-40GB, 1 TB DRAM, 192
+//! cores), the reduced **YARD-120GB** (Sec. 9.2.5) and the **700$ PC**
+//! (RTX 2060 8GB + 16 GB DRAM).  Tasks and overrides can also be loaded
+//! from a JSON config file (`examples/configs/*.json`).
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::mem::Interconnect;
+use crate::model::{ActivationPlan, GptSpec};
+use crate::sim::DeviceProfile;
+use crate::util::Json;
+
+pub const GB: u64 = 1 << 30;
+
+/// A physical node configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterPreset {
+    pub name: &'static str,
+    pub n_gpus: u32,
+    pub gpu_mem: u64,
+    pub cpu_mem: u64,
+    pub gpu: DeviceProfile,
+    pub cpu: DeviceProfile,
+    pub net: Interconnect,
+    /// Throughput bar for "max model scale" (paper Sec. 9.2.1: 30 Tflops
+    /// on YARD, 50 on SuperPod).
+    pub scale_bar_tflops: f64,
+}
+
+impl ClusterPreset {
+    pub fn yard() -> Self {
+        ClusterPreset {
+            name: "YARD",
+            n_gpus: 8,
+            gpu_mem: 32 * GB,
+            cpu_mem: 240 * GB,
+            gpu: DeviceProfile::v100(),
+            cpu: DeviceProfile::cpu_yard(),
+            net: Interconnect::v100_node(),
+            scale_bar_tflops: 30.0,
+        }
+    }
+
+    pub fn superpod() -> Self {
+        ClusterPreset {
+            name: "SuperPod",
+            n_gpus: 8,
+            gpu_mem: 40 * GB,
+            cpu_mem: 1024 * GB,
+            gpu: DeviceProfile::a100(),
+            cpu: DeviceProfile::cpu_superpod(),
+            net: Interconnect::a100_node(),
+            scale_bar_tflops: 50.0,
+        }
+    }
+
+    /// Sec. 9.2.5: YARD with host memory halved to 120 GB.
+    pub fn yard_120gb() -> Self {
+        ClusterPreset { name: "YARD-120GB", cpu_mem: 120 * GB, ..Self::yard() }
+    }
+
+    /// Sec. 9.2.5: the 700$ personal computer.
+    pub fn pc() -> Self {
+        ClusterPreset {
+            name: "PC-700USD",
+            n_gpus: 1,
+            gpu_mem: 8 * GB,
+            cpu_mem: 16 * GB,
+            gpu: DeviceProfile::rtx2060(),
+            cpu: DeviceProfile::cpu_pc(),
+            net: Interconnect::pc(),
+            scale_bar_tflops: 5.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Result<ClusterPreset> {
+        match name.to_ascii_lowercase().as_str() {
+            "yard" => Ok(Self::yard()),
+            "superpod" | "spod" => Ok(Self::superpod()),
+            "yard120" | "yard-120gb" => Ok(Self::yard_120gb()),
+            "pc" => Ok(Self::pc()),
+            other => bail!(
+                "unknown cluster '{other}' (yard|superpod|yard120|pc)"
+            ),
+        }
+    }
+}
+
+/// Which training system to simulate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SystemKind {
+    PatrickStar,
+    /// DeepSpeed ZeRO-Offload/Infinity with ZeRO-DP (static partition).
+    DeepSpeedDp,
+    /// DeepSpeed + Megatron model parallelism of the given degree.
+    DeepSpeedMp(u32),
+    /// PyTorch DistributedDataParallel (all model data on GPU).
+    PyTorchDdp,
+}
+
+impl SystemKind {
+    pub fn name(&self) -> String {
+        match self {
+            SystemKind::PatrickStar => "patrickstar".into(),
+            SystemKind::DeepSpeedDp => "deepspeed-dp".into(),
+            SystemKind::DeepSpeedMp(d) => format!("deepspeed-mp{d}"),
+            SystemKind::PyTorchDdp => "pytorch-ddp".into(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SystemKind> {
+        let s = s.to_ascii_lowercase();
+        if s == "patrickstar" || s == "ps" {
+            return Ok(SystemKind::PatrickStar);
+        }
+        if s == "deepspeed" || s == "deepspeed-dp" || s == "deeps" {
+            return Ok(SystemKind::DeepSpeedDp);
+        }
+        if s == "pytorch" || s == "ddp" || s == "pytorch-ddp" {
+            return Ok(SystemKind::PyTorchDdp);
+        }
+        if let Some(d) = s.strip_prefix("deepspeed-mp") {
+            return Ok(SystemKind::DeepSpeedMp(d.parse()?));
+        }
+        bail!("unknown system '{s}'")
+    }
+}
+
+/// One training task (model x batch x activation plan x parallelism).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainTask {
+    pub model: GptSpec,
+    pub batch_per_gpu: u64,
+    pub n_gpus: u32,
+    pub plan: ActivationPlan,
+    /// Chunk size in elements (0 = run the chunk-size search).
+    pub chunk_elems: u64,
+}
+
+impl TrainTask {
+    pub fn new(model: GptSpec, batch: u64, n_gpus: u32) -> Self {
+        TrainTask {
+            model,
+            batch_per_gpu: batch,
+            n_gpus,
+            plan: ActivationPlan::Checkpointing,
+            chunk_elems: 0,
+        }
+    }
+
+    pub fn with_plan(mut self, plan: ActivationPlan) -> Self {
+        self.plan = plan;
+        self
+    }
+
+    pub fn with_chunk_elems(mut self, c: u64) -> Self {
+        self.chunk_elems = c;
+        self
+    }
+
+    /// Parse from a JSON object:
+    /// `{"model": "10B", "batch": 16, "gpus": 8, "plan": "ckpt"}`.
+    pub fn from_json(j: &Json) -> Result<TrainTask> {
+        let model_name = j
+            .req("model")?
+            .as_str()
+            .ok_or_else(|| anyhow!("model must be a string"))?;
+        let model = GptSpec::by_name(model_name)
+            .ok_or_else(|| anyhow!("unknown model '{model_name}'"))?;
+        let batch = j.req("batch")?.as_usize().unwrap_or(8) as u64;
+        let gpus = j.get("gpus").and_then(|g| g.as_usize()).unwrap_or(1) as u32;
+        let plan = match j.get("plan").and_then(|p| p.as_str()) {
+            None | Some("ckpt") => ActivationPlan::Checkpointing,
+            Some("none") => ActivationPlan::None,
+            Some("ckpt+offload") | Some("offload") => {
+                ActivationPlan::CheckpointingOffload
+            }
+            Some(other) => bail!("unknown activation plan '{other}'"),
+        };
+        let chunk = j
+            .get("chunk_elems")
+            .and_then(|c| c.as_usize())
+            .unwrap_or(0) as u64;
+        Ok(TrainTask::new(model, batch, gpus)
+            .with_plan(plan)
+            .with_chunk_elems(chunk))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper() {
+        let y = ClusterPreset::yard();
+        assert_eq!(y.n_gpus, 8);
+        assert_eq!(y.gpu_mem, 32 * GB);
+        assert_eq!(y.cpu_mem, 240 * GB);
+        let s = ClusterPreset::superpod();
+        assert_eq!(s.gpu_mem, 40 * GB);
+        assert_eq!(s.cpu_mem, 1024 * GB);
+        assert_eq!(ClusterPreset::yard_120gb().cpu_mem, 120 * GB);
+        assert_eq!(ClusterPreset::pc().n_gpus, 1);
+    }
+
+    #[test]
+    fn system_parse_roundtrip() {
+        for s in [
+            SystemKind::PatrickStar,
+            SystemKind::DeepSpeedDp,
+            SystemKind::DeepSpeedMp(4),
+            SystemKind::PyTorchDdp,
+        ] {
+            assert_eq!(SystemKind::parse(&s.name()).unwrap(), s);
+        }
+        assert!(SystemKind::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn task_from_json() {
+        let j = Json::parse(
+            r#"{"model": "10B", "batch": 16, "gpus": 8,
+                "plan": "ckpt+offload"}"#,
+        )
+        .unwrap();
+        let t = TrainTask::from_json(&j).unwrap();
+        assert_eq!(t.model.name, "10B");
+        assert_eq!(t.batch_per_gpu, 16);
+        assert_eq!(t.n_gpus, 8);
+        assert_eq!(t.plan, ActivationPlan::CheckpointingOffload);
+    }
+
+    #[test]
+    fn task_json_missing_model_fails() {
+        let j = Json::parse(r#"{"batch": 4}"#).unwrap();
+        assert!(TrainTask::from_json(&j).is_err());
+    }
+}

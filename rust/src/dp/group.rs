@@ -1,0 +1,125 @@
+//! Communication groups (paper Sec. 7, Fig. 8).
+//!
+//! A chunk list of length `n` trained on `nproc` processes is cut into
+//! groups of `nproc` consecutive chunks; chunk `g*nproc + r` is the
+//! *local chunk* of rank `r` in group `g`.  The aligned layout (Sec. 6.1)
+//! guarantees the ADAM working set of a local chunk is also local, so the
+//! optimizer never communicates.
+
+/// Group/rank arithmetic over one chunk list.
+#[derive(Clone, Copy, Debug)]
+pub struct CommGroups {
+    pub list_len: usize,
+    pub nproc: usize,
+}
+
+impl CommGroups {
+    pub fn new(list_len: usize, nproc: usize) -> Self {
+        assert!(nproc >= 1);
+        CommGroups { list_len, nproc }
+    }
+
+    /// Number of groups (the last may be ragged).
+    pub fn n_groups(&self) -> usize {
+        self.list_len.div_ceil(self.nproc)
+    }
+
+    /// Chunk-list positions of group `g` (paper: `get_comm_grp`).
+    pub fn members(&self, g: usize) -> std::ops::Range<usize> {
+        let lo = g * self.nproc;
+        lo..((g + 1) * self.nproc).min(self.list_len)
+    }
+
+    /// The group containing list position `pos`.
+    pub fn group_of(&self, pos: usize) -> usize {
+        pos / self.nproc
+    }
+
+    /// The rank owning list position `pos`.
+    pub fn owner_of(&self, pos: usize) -> usize {
+        pos % self.nproc
+    }
+
+    /// Local chunk of rank `r` in group `g`, if the ragged tail has one.
+    pub fn local_chunk(&self, g: usize, r: usize) -> Option<usize> {
+        let pos = g * self.nproc + r;
+        (pos < self.list_len).some(pos)
+    }
+
+    /// All list positions owned by rank `r`.
+    pub fn owned_by(&self, r: usize) -> Vec<usize> {
+        (0..self.list_len).filter(|&p| self.owner_of(p) == r).collect()
+    }
+}
+
+trait BoolSome {
+    fn some<T>(self, v: T) -> Option<T>;
+}
+
+impl BoolSome for bool {
+    fn some<T>(self, v: T) -> Option<T> {
+        if self {
+            Some(v)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn fig8_three_gpus() {
+        // Paper Fig. 8: chunk list on 3 GPUs; group 0 = chunks 0,1,2 with
+        // chunk r local to rank r.
+        let g = CommGroups::new(7, 3);
+        assert_eq!(g.n_groups(), 3);
+        assert_eq!(g.members(0), 0..3);
+        assert_eq!(g.members(2), 6..7); // ragged tail
+        assert_eq!(g.owner_of(4), 1);
+        assert_eq!(g.local_chunk(1, 2), Some(5));
+        assert_eq!(g.local_chunk(2, 2), None);
+    }
+
+    #[test]
+    fn ownership_partition() {
+        let g = CommGroups::new(10, 4);
+        let mut seen = vec![false; 10];
+        for r in 0..4 {
+            for p in g.owned_by(r) {
+                assert!(!seen[p], "position {p} owned twice");
+                seen[p] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn property_group_membership_consistent() {
+        forall(
+            100,
+            |rng| (rng.range(1, 200), rng.range(1, 17)),
+            |&(len, nproc)| {
+                let g = CommGroups::new(len, nproc);
+                for pos in 0..len {
+                    let grp = g.group_of(pos);
+                    if !g.members(grp).contains(&pos) {
+                        return Err(format!(
+                            "pos {pos} not in its group {grp}"
+                        ));
+                    }
+                    let r = g.owner_of(pos);
+                    if g.local_chunk(grp, r) != Some(pos) {
+                        return Err(format!(
+                            "local_chunk({grp},{r}) != {pos}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

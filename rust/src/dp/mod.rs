@@ -1,0 +1,14 @@
+//! ZeRO-symbiotic data parallelism over chunks (paper Sec. 7).
+//!
+//! * [`group`]       — communication groups: `nproc` consecutive chunks of
+//!                     a chunk list, one per process (Fig. 8).
+//! * [`collectives`] — cost model for chunk all-gather / reduce-scatter
+//!                     and the broadcast baseline (Thakur et al. [49]),
+//!                     plus a *real* in-process collective implementation
+//!                     used by the multi-rank tests and the e2e trainer.
+
+pub mod collectives;
+pub mod group;
+
+pub use collectives::{CollectiveCost, RealCollectives};
+pub use group::CommGroups;

@@ -1,0 +1,841 @@
+//! The PatrickStar training engine (simulation backend).
+//!
+//! Drives one training process (rank 0's view) through warm-up and
+//! steady-state iterations over the operator graph, using the *real*
+//! chunk manager, tensor state machine, tracer, eviction and placement
+//! code — only operator execution and data transfer are replaced by the
+//! calibrated cost model.  The multi-GPU behaviour follows Sec. 7: chunks
+//! at list position `p` belong to rank `p mod nproc`; remote chunks are
+//! all-gathered per communication group and released after use;
+//! reduce-scatter averages gradients; ADAM is rank-local.
+//!
+//! Ablation switches (paper Fig. 16): `use_tracer=false` reproduces the
+//! "SP" static-partition plan (20% of GPU for chunks, forever);
+//! `device_aware_os=false` reproduces "OSC" (optimizer states pinned to
+//! CPU).
+
+pub mod report;
+
+use std::collections::HashSet;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::chunk::{ChunkId, ChunkKind, ChunkManager, ChunkRegistry};
+use crate::config::{ClusterPreset, TrainTask};
+use crate::dp::{CollectiveCost, CommGroups};
+use crate::evict::{EvictionPolicy, FifoPolicy, LfuPolicy, LruPolicy,
+                   OptPolicy};
+use crate::mem::{Device, HeterogeneousSpace};
+use crate::model::activation::{non_model_bytes, BASE_OVERHEAD};
+use crate::model::{ActivationPlan, OpGraph, OpKind};
+use crate::placement::{plan as placement_plan, PlacementPlan};
+use crate::sim::{Phase, SimClock};
+use crate::tensor::TensorState;
+use crate::tracer::{MemTracer, Moment, WARMUP_GPU_FRAC};
+
+pub use report::{EngineReport, IterBreakdown};
+
+/// Eviction policy selection (paper Sec. 8.3 + DBMS baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvictKind {
+    Opt,
+    Lru,
+    Fifo,
+    Lfu,
+}
+
+/// The optimization toggles of the Fig. 16 ablation.
+#[derive(Clone, Copy, Debug)]
+pub struct OptimizationPlan {
+    /// Use warm-up tracer statistics for chunkable memory (false = "SP").
+    pub use_tracer: bool,
+    /// Device-aware OS placement in GPU margin space (false = "OSC").
+    pub device_aware_os: bool,
+    pub eviction: EvictKind,
+}
+
+impl Default for OptimizationPlan {
+    fn default() -> Self {
+        OptimizationPlan {
+            use_tracer: true,
+            device_aware_os: true,
+            eviction: EvictKind::Opt,
+        }
+    }
+}
+
+impl OptimizationPlan {
+    /// The "SP" ablation plan of Fig. 16.
+    pub fn static_partition() -> Self {
+        OptimizationPlan { use_tracer: false, ..Default::default() }
+    }
+
+    /// The "OSC" ablation plan of Fig. 16.
+    pub fn os_on_cpu() -> Self {
+        OptimizationPlan { device_aware_os: false, ..Default::default() }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Stage {
+    Fwd,
+    Bwd,
+    Adam,
+}
+
+enum PolicySel {
+    Opt,
+    Lru(LruPolicy),
+    Fifo(FifoPolicy),
+    Lfu(LfuPolicy),
+}
+
+struct RunState {
+    mgr: ChunkManager,
+    tracer: MemTracer,
+    clock: SimClock,
+    groups: CommGroups,
+    fp16_list: Vec<ChunkId>,
+    policy: PolicySel,
+    warmup: bool,
+    moment: Moment,
+    placement: PlacementPlan,
+    stage: Stage,
+    /// Groups already gathered in the current phase.
+    gathered: HashSet<usize>,
+    /// Wire-volume accounting (Table 5).
+    allgather_bytes: u64,
+    reduce_scatter_bytes: u64,
+    allgather_time: f64,
+    reduce_scatter_time: f64,
+}
+
+/// The engine: one (cluster, task, optimization plan) triple.
+pub struct Engine {
+    pub cluster: ClusterPreset,
+    pub task: TrainTask,
+    pub opt: OptimizationPlan,
+}
+
+impl Engine {
+    pub fn new(cluster: ClusterPreset, task: TrainTask) -> Self {
+        Engine { cluster, task, opt: OptimizationPlan::default() }
+    }
+
+    pub fn with_opt(mut self, opt: OptimizationPlan) -> Self {
+        self.opt = opt;
+        self
+    }
+
+    fn nproc(&self) -> usize {
+        self.task.n_gpus as usize
+    }
+
+    /// Pick the chunk size: task override or the paper-grid search
+    /// against the per-process heterogeneous budget.
+    ///
+    /// Besides the paper's host-capacity constraint, a whole
+    /// communication group (`nproc` fp16 chunks) must fit the warm-up
+    /// GPU grant (20% of GPU memory, Sec. 8.1) — all group members are
+    /// pinned simultaneously during an all-gather.
+    pub fn chunk_elems(&self) -> Result<u64> {
+        if self.task.chunk_elems > 0 {
+            return Ok(self.task.chunk_elems);
+        }
+        let specs = self.task.model.tensor_specs();
+        let budget = self.cluster.cpu_mem
+            + self.cluster.n_gpus as u64 * self.cluster.gpu_mem;
+        let warmup_gpu =
+            (self.cluster.gpu_mem as f64 * WARMUP_GPU_FRAC) as u64;
+        // fp16 group bytes = 2 * chunk_elems * nproc; leave one chunk of
+        // headroom for the working set.
+        let max_chunk_elems =
+            warmup_gpu / (2 * (self.nproc() as u64 + 1));
+        let grid: Vec<u64> = (128..=512u64)
+            .step_by(32)
+            .map(|q| q << 20)
+            .filter(|&c| c <= max_chunk_elems)
+            .collect();
+        if grid.is_empty() {
+            bail!(
+                "no chunk size candidate fits a {}-chunk group in the \
+                 warm-up GPU grant ({} B)",
+                self.nproc(),
+                warmup_gpu
+            );
+        }
+        let res = crate::chunk::search::search_grid(&specs, &grid, budget)
+            .ok_or_else(|| {
+                anyhow!(
+                    "no feasible chunk size for {} within {} bytes",
+                    self.task.model.name,
+                    budget
+                )
+            })?;
+        Ok(res.best.chunk_elems)
+    }
+
+    /// Run warm-up + 2 steady iterations; report the final iteration.
+    pub fn run(&self) -> Result<EngineReport> {
+        let m = &self.task.model;
+        let nproc = self.nproc();
+        let chunk_elems = self.chunk_elems()?;
+        let specs = m.tensor_specs();
+        let reg = ChunkRegistry::build(&specs, chunk_elems)
+            .context("chunk layout")?;
+
+        // Per-process CPU share, minus this process's slice of the
+        // CPU-pinned embedding data (p32+m+v+p16 ≈ 14 B/param).
+        let emb_bytes = 14 * m.embedding_params();
+        let cpu_total = self.cluster.cpu_mem;
+        let cpu_share = (cpu_total / nproc as u64)
+            .checked_sub(emb_bytes / nproc as u64)
+            .ok_or_else(|| {
+                anyhow!(
+                    "CPU memory cannot hold embeddings: {} < {}",
+                    cpu_total / nproc as u64,
+                    emb_bytes / nproc as u64
+                )
+            })?;
+        let space =
+            HeterogeneousSpace::new(self.cluster.gpu_mem, cpu_share);
+        let mgr = ChunkManager::new(reg, space);
+        let fp16_list = mgr.reg.list(ChunkKind::ParamFp16);
+        let n_chunks = mgr.reg.chunks.len();
+        let list_len = fp16_list.len();
+
+        let mut st = RunState {
+            mgr,
+            tracer: MemTracer::new(n_chunks),
+            clock: SimClock::new(),
+            groups: CommGroups::new(list_len, nproc),
+            fp16_list,
+            policy: match self.opt.eviction {
+                EvictKind::Opt => PolicySel::Opt,
+                EvictKind::Lru => PolicySel::Lru(LruPolicy::default()),
+                EvictKind::Fifo => PolicySel::Fifo(FifoPolicy::default()),
+                EvictKind::Lfu => PolicySel::Lfu(LfuPolicy::default()),
+            },
+            warmup: true,
+            moment: 0,
+            placement: PlacementPlan {
+                os_groups_on_gpu: 0,
+                spilled_fp16_chunks: 0,
+                total_fp16_chunks: list_len,
+                embedding_on_cpu: true,
+            },
+            stage: Stage::Fwd,
+            gathered: HashSet::new(),
+            allgather_bytes: 0,
+            reduce_scatter_bytes: 0,
+            allgather_time: 0.0,
+            reduce_scatter_time: 0.0,
+        };
+
+        let graph = OpGraph::build(*m, self.task.batch_per_gpu);
+
+        // ---- warm-up iteration (conservative 20% GPU, FIFO eviction).
+        self.iteration(&mut st, &graph).context("warm-up iteration")?;
+        st.tracer.finish_warmup();
+        st.warmup = false;
+
+        // ---- placement from warm-up statistics.
+        // Without the tracer ("SP" plan) the chunkable space stays at
+        // the 20% warm-up grant forever, so the margin is computed
+        // against that grant — and eviction must fall back to chunk-list
+        // order (OPT's future-use moment lists ARE the tracer
+        // statistics, paper Sec. 8.1/8.3).
+        let (plan_gpu, plan_nm) = if self.opt.use_tracer {
+            (self.cluster.gpu_mem, st.tracer.peak_non_model())
+        } else {
+            st.policy = PolicySel::Fifo(FifoPolicy::default());
+            (
+                (self.cluster.gpu_mem as f64 * WARMUP_GPU_FRAC) as u64,
+                0,
+            )
+        };
+        st.placement = placement_plan(
+            plan_gpu,
+            plan_nm,
+            chunk_elems,
+            // Only the local share of fp16 chunks competes for this
+            // rank's GPU during FWD/BWD residency planning.
+            st.groups.owned_by(0).len(),
+            self.opt.device_aware_os,
+        );
+
+        // ---- steady state: 2 iterations, measure the last.
+        let mut breakdown = IterBreakdown::default();
+        for it in 0..2 {
+            st.clock.reset();
+            st.mgr.stats = Default::default();
+            st.allgather_bytes = 0;
+            st.reduce_scatter_bytes = 0;
+            st.allgather_time = 0.0;
+            st.reduce_scatter_time = 0.0;
+            self.iteration(&mut st, &graph)
+                .with_context(|| format!("steady iteration {it}"))?;
+            breakdown = IterBreakdown::from_clock(&st.clock);
+        }
+
+        let iter_flops = m.iter_flops(self.task.batch_per_gpu);
+        let total = breakdown.total();
+        Ok(EngineReport {
+            system: "patrickstar".into(),
+            model: m.name.into(),
+            n_gpus: self.task.n_gpus,
+            batch_per_gpu: self.task.batch_per_gpu,
+            chunk_elems,
+            breakdown,
+            iter_time_s: total,
+            tflops_per_gpu: iter_flops / total / 1e12,
+            placement: st.placement,
+            move_stats: st.mgr.stats,
+            allgather_bytes: st.allgather_bytes,
+            reduce_scatter_bytes: st.reduce_scatter_bytes,
+            allgather_bw: if st.allgather_time > 0.0 {
+                st.allgather_bytes as f64 / st.allgather_time
+            } else {
+                0.0
+            },
+            reduce_scatter_bw: if st.reduce_scatter_time > 0.0 {
+                st.reduce_scatter_bytes as f64 / st.reduce_scatter_time
+            } else {
+                0.0
+            },
+            gpu_peak: st.mgr.space.dev(Device::Gpu(0)).peak(),
+            cpu_peak: st.mgr.space.dev(Device::Cpu).peak(),
+            non_model_peak: st.tracer.peak_non_model(),
+        })
+    }
+
+    // ------------------------------------------------------------------
+    // One iteration: FWD -> BWD -> ADAM.
+    // ------------------------------------------------------------------
+
+    fn iteration(&self, st: &mut RunState, graph: &OpGraph) -> Result<()> {
+        st.moment = 0;
+        let n_layer_ops = 7usize;
+        let layer_of = |op_idx: usize| -> u32 {
+            // ops: embed, L x 7, lnf, lm_head
+            if op_idx == 0 {
+                0
+            } else {
+                (((op_idx - 1) / n_layer_ops) as u32).min(
+                    graph.spec.layers.saturating_sub(1),
+                )
+            }
+        };
+
+        // ---- FWD
+        st.stage = Stage::Fwd;
+        st.gathered.clear();
+        for (i, op) in graph.ops.iter().enumerate() {
+            let live = layer_of(i) + 1;
+            self.moment_tick(st, live)?;
+            self.exec_op(st, graph, i, op.params.clone())?;
+        }
+        st.mgr.reset_after_fwd(ChunkKind::ParamFp16)?;
+
+        // ---- BWD (reverse op order)
+        st.stage = Stage::Bwd;
+        st.gathered.clear();
+        for (i, op) in graph.ops.iter().enumerate().rev() {
+            let live = layer_of(i) + 1;
+            self.moment_tick(st, live)?;
+            self.exec_op(st, graph, i, op.params.clone())?;
+        }
+
+        // ---- ADAM (rank-local chunk groups)
+        st.stage = Stage::Adam;
+        let local = st.groups.owned_by(0);
+        for (li, pos) in local.iter().enumerate() {
+            self.moment_tick(st, 0)?;
+            self.exec_adam(st, *pos, li)?;
+        }
+        // Embedding ADAM runs on CPU over its own (unmanaged) buffers.
+        let emb_os_bytes = 16 * graph.spec.embedding_params()
+            / self.nproc() as u64;
+        if !st.warmup {
+            let cpu = self.shared_cpu();
+            st.clock.add(Phase::Adam, cpu.adam_time(emb_os_bytes));
+        }
+        Ok(())
+    }
+
+    /// Advance one moment: record/evaluate non-model footprint, re-cap the
+    /// chunkable GPU space, evict to fit.
+    fn moment_tick(&self, st: &mut RunState, live_layers: u32) -> Result<()> {
+        let nm = if live_layers == 0 {
+            BASE_OVERHEAD
+        } else {
+            non_model_bytes(
+                &self.task.model,
+                self.task.batch_per_gpu,
+                self.task.plan,
+                live_layers,
+            )
+        };
+        let cap = if st.warmup || !self.opt.use_tracer {
+            (self.cluster.gpu_mem as f64 * WARMUP_GPU_FRAC) as u64
+        } else {
+            self.cluster.gpu_mem.saturating_sub(nm)
+        };
+        if st.warmup {
+            let m = st.tracer.record_moment(nm);
+            debug_assert_eq!(m, st.moment);
+        }
+        st.mgr.space.dev_mut(Device::Gpu(0)).set_capacity(cap);
+        let RunState { mgr, tracer, policy, moment, .. } = st;
+        with_policy(policy, tracer, |pol| {
+            mgr.evict_to_fit(Device::Gpu(0), pol, *moment)
+        })?;
+        self.charge_moves(st)?;
+        st.moment += 1;
+        Ok(())
+    }
+
+    /// Execute one operator at the current moment (stage-dependent).
+    fn exec_op(
+        &self,
+        st: &mut RunState,
+        graph: &OpGraph,
+        op_idx: usize,
+        params: Vec<usize>,
+    ) -> Result<()> {
+        let op = &graph.ops[op_idx];
+        let now = st.moment.saturating_sub(1);
+
+        // Embedding ops: CPU lookup + activation traffic; LM head GEMM on
+        // GPU with the fp16 embedding streamed up (Sec. 8.2).
+        if op.kind == OpKind::Embedding {
+            if !st.warmup {
+                let cpu = self.shared_cpu();
+                let m = &graph.spec;
+                let act_bytes = 2 * self.task.batch_per_gpu * m.seq * m.hidden;
+                let pcie = self.cluster.net.pcie;
+                if op.name == "embed" {
+                    st.clock.add(
+                        Phase::FwdBwd,
+                        cpu.op_time(OpKind::Embedding, op.fwd_flops),
+                    );
+                    let phase = if st.stage == Stage::Fwd {
+                        Phase::CpuToGpu
+                    } else {
+                        Phase::GpuToCpu
+                    };
+                    st.clock.add(phase, pcie.transfer_time(act_bytes));
+                } else {
+                    // lm_head: GEMM on GPU; wte fp16 up in FWD, its grad
+                    // down in BWD.
+                    let gpu = self.cluster.gpu;
+                    let mult = self.bwd_mult(st.stage);
+                    st.clock.add(
+                        Phase::FwdBwd,
+                        gpu.op_time(OpKind::ComputeIntensive,
+                                    mult * op.fwd_flops),
+                    );
+                    let wte_bytes = 2 * m.vocab * m.hidden;
+                    let phase = if st.stage == Stage::Fwd {
+                        Phase::CpuToGpu
+                    } else {
+                        Phase::GpuToCpu
+                    };
+                    st.clock.add(phase, pcie.transfer_time(wte_bytes));
+                }
+            }
+            return Ok(());
+        }
+
+        // Distributed: fetch the communication groups of every param.
+        if self.nproc() > 1 {
+            let positions: HashSet<usize> = params
+                .iter()
+                .map(|&t| {
+                    let ti = st.mgr.reg.tensor_index(ChunkKind::ParamFp16, t);
+                    st.mgr.reg.chunks[st.mgr.reg.tensors[ti].chunk]
+                        .list_pos as usize
+                })
+                .collect();
+            let groups: HashSet<usize> =
+                positions.iter().map(|&p| st.groups.group_of(p)).collect();
+            for g in groups {
+                self.fetch_group(st, g, now)?;
+            }
+        }
+
+        // Access parameters (Algorithm 1), run the op, release
+        // (Algorithm 2).
+        for &t in &params {
+            let RunState { mgr, tracer, policy, .. } = st;
+            with_policy(policy, tracer, |pol| {
+                mgr.access_tensor(ChunkKind::ParamFp16, t, Device::Gpu(0),
+                                  pol, now)
+            })?;
+            if st.warmup {
+                let ti = st.mgr.reg.tensor_index(ChunkKind::ParamFp16, t);
+                let c = ChunkId(st.mgr.reg.tensors[ti].chunk as u32);
+                st.tracer.record_chunk_use(c, now);
+            }
+        }
+        self.charge_moves(st)?;
+
+        if !st.warmup {
+            let gpu = self.cluster.gpu;
+            let mult = self.bwd_mult(st.stage);
+            st.clock.add(Phase::FwdBwd, gpu.op_time(op.kind,
+                                                    mult * op.fwd_flops));
+            // Activation offload traffic (ckpt+offload): one boundary per
+            // layer crosses PCIe each way; charge at the layer's last op.
+            if self.task.plan == ActivationPlan::CheckpointingOffload
+                && op.name.ends_with(".fc2")
+            {
+                let m = &graph.spec;
+                let bytes = 2 * self.task.batch_per_gpu * m.seq * m.hidden;
+                st.clock.add(
+                    Phase::ActOffload,
+                    self.cluster.net.pcie.transfer_time(bytes),
+                );
+            }
+        }
+
+        let target = if st.stage == Stage::Fwd {
+            TensorState::HoldAfterFwd
+        } else {
+            TensorState::HoldAfterBwd
+        };
+        for &t in &params {
+            st.mgr.release_tensor(ChunkKind::ParamFp16, t, target)?;
+        }
+
+        // Distributed: release/reduce groups that completed this stage.
+        if self.nproc() > 1 {
+            let positions: HashSet<usize> = params
+                .iter()
+                .map(|&t| {
+                    let ti = st.mgr.reg.tensor_index(ChunkKind::ParamFp16, t);
+                    st.mgr.reg.chunks[st.mgr.reg.tensors[ti].chunk]
+                        .list_pos as usize
+                })
+                .collect();
+            let groups: HashSet<usize> =
+                positions.iter().map(|&p| st.groups.group_of(p)).collect();
+            for g in groups {
+                self.release_group(st, g, target)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// FetchRemoteChunks (Algorithm 1, lines 1–20): all-gather the group
+    /// if any member tensor is FREE.
+    fn fetch_group(&self, st: &mut RunState, g: usize, now: Moment)
+        -> Result<()> {
+        if st.gathered.contains(&g) {
+            return Ok(());
+        }
+        let members: Vec<usize> = st.groups.members(g).collect();
+        // Trigger only when some member chunk is absent (paper line 5:
+        // a FREE tensor exists).
+        let any_free = members.iter().any(|&p| {
+            let c = st.fp16_list[p];
+            st.mgr.chunk(c).device.is_none()
+        });
+        if !any_free {
+            st.gathered.insert(g);
+            return Ok(());
+        }
+        let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
+        for &p in &members {
+            let c = st.fp16_list[p];
+            let RunState { mgr, tracer, policy, .. } = st;
+            with_policy(policy, tracer, |pol| {
+                mgr.ensure_on(c, Device::Gpu(0), pol, now)
+            })?;
+            st.mgr.pin(c);
+            // Remote payloads arrive in HOLD.
+            let chunk_tensors = st.mgr.chunk(c).tensors.clone();
+            for t in chunk_tensors {
+                let ti = &mut st.mgr.reg.tensors[t.0 as usize];
+                if ti.state == TensorState::Free {
+                    ti.set_state(TensorState::Hold).map_err(|e| anyhow!(e))?;
+                }
+            }
+            if st.warmup {
+                st.tracer.record_chunk_use(c, now);
+            }
+        }
+        if !st.warmup {
+            let cc = CollectiveCost::new(self.cluster.net.nvlink,
+                                         self.nproc());
+            let t = cc.allgather_time(chunk_bytes);
+            st.clock.add(Phase::AllGather, t);
+            st.allgather_time += t;
+            st.allgather_bytes += cc.allgather_bytes(chunk_bytes) as u64;
+        }
+        for &p in &members {
+            st.mgr.unpin(st.fp16_list[p]);
+        }
+        self.charge_moves(st)?;
+        st.gathered.insert(g);
+        Ok(())
+    }
+
+    /// ReleaseRemoteChunk (Algorithm 2, lines 1–30).
+    fn release_group(
+        &self,
+        st: &mut RunState,
+        g: usize,
+        target: TensorState,
+    ) -> Result<()> {
+        let members: Vec<usize> = st.groups.members(g).collect();
+        // All tensors of all member chunks must have reached `target`.
+        let done = members.iter().all(|&p| {
+            let c = st.fp16_list[p];
+            st.mgr.chunk(c).tensors.iter().all(|t| {
+                st.mgr.reg.tensors[t.0 as usize].state == target
+            })
+        });
+        if !done {
+            return Ok(());
+        }
+        if target == TensorState::HoldAfterBwd && !st.warmup {
+            // Reduce-scatter of the group's grad chunks (is_allreduce).
+            let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
+            let cc =
+                CollectiveCost::new(self.cluster.net.nvlink, self.nproc());
+            let t = cc.reduce_scatter_time(chunk_bytes);
+            st.clock.add(Phase::ReduceScatter, t);
+            st.reduce_scatter_time += t;
+            st.reduce_scatter_bytes +=
+                cc.reduce_scatter_bytes(chunk_bytes) as u64;
+        }
+        // Release remote payloads; tensors -> FREE.
+        for &p in &members {
+            if st.groups.owner_of(p) == 0 {
+                continue; // local chunk keeps its payload
+            }
+            let c = st.fp16_list[p];
+            let chunk_tensors = st.mgr.chunk(c).tensors.clone();
+            for t in chunk_tensors {
+                st.mgr.reg.tensors[t.0 as usize]
+                    .set_state(TensorState::Free)
+                    .map_err(|e| anyhow!(e))?;
+            }
+            if st.mgr.chunk(c).device.is_some() {
+                st.mgr.release_payload(c)?;
+            }
+        }
+        st.gathered.remove(&g);
+        Ok(())
+    }
+
+    /// ADAM over one local chunk group (Sec. 6.2 last paragraph + 8.2).
+    fn exec_adam(
+        &self,
+        st: &mut RunState,
+        pos: usize,
+        local_index: usize,
+    ) -> Result<()> {
+        let now = st.moment.saturating_sub(1);
+        let fp16 = st.fp16_list[pos];
+        let os = st.mgr.reg.os_chunks_for(fp16);
+        let on_gpu = !st.warmup
+            && self.opt.device_aware_os
+            && local_index < st.placement.os_groups_on_gpu;
+        let device = if on_gpu { Device::Gpu(0) } else { Device::Cpu };
+
+        // Bring the grad (fp16 chunk) and the OS chunks to the ADAM device.
+        for c in std::iter::once(fp16).chain(os) {
+            let RunState { mgr, tracer, policy, .. } = st;
+            with_policy(policy, tracer, |pol| {
+                mgr.ensure_on(c, device, pol, now)
+            })?;
+            if st.warmup {
+                st.tracer.record_chunk_use(c, now);
+            }
+        }
+        // OS tensors -> COMPUTE -> HOLD; fp16 tensors -> HOLD (updated
+        // params overwrite the grads in place, Fig. 6 reversed).
+        let n_tensors = st.mgr.chunk(fp16).tensors.len();
+        for kind in [ChunkKind::ParamFp32, ChunkKind::Momentum,
+                     ChunkKind::Variance] {
+            for i in 0..n_tensors {
+                let t = st.mgr.chunk(fp16).tensors[i];
+                let idx = t.0 as usize % st.mgr.reg.n_model_tensors;
+                let RunState { mgr, tracer, policy, .. } = st;
+                with_policy(policy, tracer, |pol| {
+                    mgr.access_tensor(kind, idx, device, pol, now)
+                })?;
+                st.mgr.release_tensor(kind, idx, TensorState::Hold)?;
+            }
+        }
+        for i in 0..n_tensors {
+            let t = st.mgr.chunk(fp16).tensors[i];
+            let idx = t.0 as usize % st.mgr.reg.n_model_tensors;
+            let ti = st.mgr.reg.tensor_index(ChunkKind::ParamFp16, idx);
+            let s = st.mgr.reg.tensors[ti].state;
+            if s.is_hold_like() {
+                st.mgr.reg.tensors[ti]
+                    .set_state(TensorState::Hold)
+                    .map_err(|e| anyhow!(e))?;
+            }
+        }
+
+        if !st.warmup {
+            let chunk_elems = st.mgr.reg.chunk_elems;
+            let prof = if on_gpu { self.cluster.gpu } else {
+                self.shared_cpu()
+            };
+            // grad fp16 -> fp32 conversion + fused update over
+            // p32/m/v (+p16 writeback): ~16 B/elem of traffic.
+            st.clock.add(Phase::Adam, prof.cast_time(2 * chunk_elems));
+            st.clock.add(Phase::Adam, prof.adam_time(16 * chunk_elems));
+        }
+        self.charge_adam_moves(st)?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ helpers
+
+    /// BWD ops cost 2x FWD plus checkpoint recompute.
+    fn bwd_mult(&self, stage: Stage) -> f64 {
+        match stage {
+            Stage::Fwd => 1.0,
+            Stage::Bwd => 2.0 + self.task.plan.recompute_factor(),
+            Stage::Adam => 0.0,
+        }
+    }
+
+    /// CPU profile with bandwidth shared across the node's nproc ranks.
+    fn shared_cpu(&self) -> crate::sim::DeviceProfile {
+        let mut p = self.cluster.cpu;
+        p.mem_bw /= self.nproc() as f64;
+        p.gemm_flops /= self.nproc() as f64;
+        p
+    }
+
+    /// Drain chunk-move events and charge PCIe time (FWD/BWD phases).
+    fn charge_moves(&self, st: &mut RunState) -> Result<()> {
+        let events = st.mgr.drain_events();
+        if st.warmup {
+            return Ok(());
+        }
+        let pcie = self.cluster.net.pcie;
+        for ev in events {
+            let t = pcie.transfer_time(ev.bytes);
+            match (ev.from, ev.to) {
+                (Some(Device::Cpu), Some(Device::Gpu(_))) => {
+                    st.clock.add(Phase::CpuToGpu, t)
+                }
+                (Some(Device::Gpu(_)), Some(Device::Cpu)) => {
+                    st.clock.add(Phase::GpuToCpu, t)
+                }
+                _ => {} // allocs and releases are free
+            }
+        }
+        Ok(())
+    }
+
+    /// Same, but attribute to the ADAM-move bar of Fig. 16.
+    fn charge_adam_moves(&self, st: &mut RunState) -> Result<()> {
+        let events = st.mgr.drain_events();
+        if st.warmup {
+            return Ok(());
+        }
+        let pcie = self.cluster.net.pcie;
+        for ev in events {
+            if matches!(
+                (ev.from, ev.to),
+                (Some(Device::Cpu), Some(Device::Gpu(_)))
+                    | (Some(Device::Gpu(_)), Some(Device::Cpu))
+            ) {
+                st.clock.add(Phase::AdamMove, pcie.transfer_time(ev.bytes));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Construct the selected eviction policy (OPT borrows the tracer) and
+/// run `f` with it.
+fn with_policy<R>(
+    sel: &mut PolicySel,
+    tracer: &MemTracer,
+    f: impl FnOnce(&mut dyn EvictionPolicy) -> R,
+) -> R {
+    match sel {
+        PolicySel::Opt => {
+            let mut p = OptPolicy { tracer };
+            f(&mut p)
+        }
+        PolicySel::Lru(p) => f(p),
+        PolicySel::Fifo(p) => f(p),
+        PolicySel::Lfu(p) => f(p),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterPreset;
+    use crate::model::GptSpec;
+
+    fn run(model: &str, batch: u64, gpus: u32) -> EngineReport {
+        let task =
+            TrainTask::new(GptSpec::by_name(model).unwrap(), batch, gpus);
+        Engine::new(ClusterPreset::yard(), task).run().unwrap()
+    }
+
+    #[test]
+    fn one_gpu_1b_runs_and_is_plausible() {
+        let r = run("1B", 16, 1);
+        assert!(r.iter_time_s > 0.1 && r.iter_time_s < 120.0,
+                "iter {}", r.iter_time_s);
+        // Paper band: tens of Tflops on V100.
+        assert!(r.tflops_per_gpu > 20.0 && r.tflops_per_gpu < 80.0,
+                "tflops {}", r.tflops_per_gpu);
+    }
+
+    #[test]
+    fn eight_gpu_has_collectives() {
+        let r = run("4B", 8, 8);
+        assert!(r.breakdown.get(Phase::AllGather) > 0.0);
+        assert!(r.breakdown.get(Phase::ReduceScatter) > 0.0);
+        assert!(r.allgather_bytes > 0);
+    }
+
+    #[test]
+    fn single_gpu_has_no_collectives() {
+        let r = run("1B", 16, 1);
+        assert_eq!(r.breakdown.get(Phase::AllGather), 0.0);
+        assert_eq!(r.allgather_bytes, 0);
+    }
+
+    #[test]
+    fn tracer_beats_static_partition() {
+        // Fig. 16: Base vs SP — the tracer must cut chunk traffic.
+        let task =
+            TrainTask::new(GptSpec::by_name("4B").unwrap(), 8, 1);
+        let base = Engine::new(ClusterPreset::yard(), task).run().unwrap();
+        let sp = Engine::new(ClusterPreset::yard(), task)
+            .with_opt(OptimizationPlan::static_partition())
+            .run()
+            .unwrap();
+        assert!(
+            base.iter_time_s < sp.iter_time_s,
+            "base {} !< sp {}",
+            base.iter_time_s,
+            sp.iter_time_s
+        );
+    }
+
+    #[test]
+    fn infeasible_when_model_too_big_for_node() {
+        // 68B on YARD-120GB single GPU cannot hold OS in 120 GB.
+        let task =
+            TrainTask::new(GptSpec::by_name("68B").unwrap(), 8, 1);
+        let r = Engine::new(ClusterPreset::yard_120gb(), task).run();
+        assert!(r.is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Engine output: the per-iteration breakdown and summary report.
+
+use crate::chunk::MoveStats;
+use crate::placement::PlacementPlan;
+use crate::sim::{Phase, SimClock};
+use crate::util::fmt::human_time;
+use crate::util::{human_bytes, Table};
+
+/// Per-phase seconds of one measured iteration (paper Fig. 16 bars).
+#[derive(Clone, Debug, Default)]
+pub struct IterBreakdown {
+    secs: Vec<(Phase, f64)>,
+}
+
+impl IterBreakdown {
+    pub fn from_clock(clock: &SimClock) -> Self {
+        IterBreakdown {
+            secs: Phase::ALL
+                .iter()
+                .map(|&p| (p, clock.get(p)))
+                .collect(),
+        }
+    }
+
+    pub fn get(&self, phase: Phase) -> f64 {
+        self.secs
+            .iter()
+            .find(|(p, _)| *p == phase)
+            .map(|(_, t)| *t)
+            .unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.secs.iter().map(|(_, t)| t).sum()
+    }
+
+    pub fn rows(&self) -> Vec<(Phase, f64)> {
+        self.secs.iter().copied().filter(|&(_, t)| t > 0.0).collect()
+    }
+}
+
+/// Everything one engine run reports.
+#[derive(Clone, Debug)]
+pub struct EngineReport {
+    pub system: String,
+    pub model: String,
+    pub n_gpus: u32,
+    pub batch_per_gpu: u64,
+    pub chunk_elems: u64,
+    pub breakdown: IterBreakdown,
+    pub iter_time_s: f64,
+    pub tflops_per_gpu: f64,
+    pub placement: PlacementPlan,
+    pub move_stats: MoveStats,
+    pub allgather_bytes: u64,
+    pub reduce_scatter_bytes: u64,
+    /// Achieved collective bandwidths (Table 5).
+    pub allgather_bw: f64,
+    pub reduce_scatter_bw: f64,
+    pub gpu_peak: u64,
+    pub cpu_peak: u64,
+    pub non_model_peak: u64,
+}
+
+impl EngineReport {
+    pub fn total_tflops(&self) -> f64 {
+        self.tflops_per_gpu * self.n_gpus as f64
+    }
+
+    /// Human-readable dump (used by the CLI `breakdown` subcommand).
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{} | model {} | {} GPU(s) x batch {} | chunk {} elems\n\
+             iter {} | {:.1} Tflops/GPU ({:.1} total)\n",
+            self.system,
+            self.model,
+            self.n_gpus,
+            self.batch_per_gpu,
+            self.chunk_elems,
+            human_time(self.iter_time_s),
+            self.tflops_per_gpu,
+            self.total_tflops(),
+        );
+        let mut t = Table::new(&["phase", "time", "share"]);
+        for (p, secs) in self.breakdown.rows() {
+            t.row(vec![
+                p.name().into(),
+                human_time(secs),
+                format!("{:.1}%", 100.0 * secs / self.iter_time_s),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push_str(&format!(
+            "margin/spill {:+} | moved c2g {} g2c {} | \
+             allgather {} @ {:.1} GB/s | reduce-scatter {} @ {:.1} GB/s\n\
+             peaks: gpu-chunk {} cpu-chunk {} non-model {}\n",
+            self.placement.margin_or_spill(),
+            human_bytes(self.move_stats.cpu_to_gpu_bytes),
+            human_bytes(self.move_stats.gpu_to_cpu_bytes),
+            human_bytes(self.allgather_bytes),
+            self.allgather_bw / 1e9,
+            human_bytes(self.reduce_scatter_bytes),
+            self.reduce_scatter_bw / 1e9,
+            human_bytes(self.gpu_peak),
+            human_bytes(self.cpu_peak),
+            human_bytes(self.non_model_peak),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_total_is_sum() {
+        let mut c = SimClock::new();
+        c.add(Phase::FwdBwd, 1.0);
+        c.add(Phase::Adam, 0.5);
+        let b = IterBreakdown::from_clock(&c);
+        assert!((b.total() - 1.5).abs() < 1e-12);
+        assert_eq!(b.get(Phase::Adam), 0.5);
+        assert_eq!(b.rows().len(), 2);
+    }
+}

@@ -1,0 +1,238 @@
+//! Chunk eviction strategies (paper Sec. 8.3).
+//!
+//! The paper's policy is Belady's OPT adapted to training's regular access
+//! pattern: evict the resident chunk whose *next* use (known from the
+//! warm-up moment lists) is farthest in the future.  History-based
+//! policies from the DBMS literature (FIFO / LRU / LFU) are implemented
+//! as baselines for the ablation benches.
+
+use std::collections::HashMap;
+
+use crate::chunk::{Chunk, ChunkId};
+use crate::tracer::{MemTracer, Moment};
+
+/// Victim selection among HOLD-like resident chunks.
+pub trait EvictionPolicy {
+    /// Pick a victim among `candidates` (all movable, resident on the
+    /// pressured device).  `chunks` gives metadata access.
+    fn pick(
+        &mut self,
+        candidates: &[ChunkId],
+        chunks: &[Chunk],
+        now: Moment,
+    ) -> Option<ChunkId>;
+
+    /// Bookkeeping hook, called whenever a chunk is accessed/placed.
+    fn on_access(&mut self, _chunk: ChunkId, _now: Moment) {}
+
+    fn name(&self) -> &'static str;
+}
+
+impl<P: EvictionPolicy + ?Sized> EvictionPolicy for &mut P {
+    fn pick(
+        &mut self,
+        candidates: &[ChunkId],
+        chunks: &[Chunk],
+        now: Moment,
+    ) -> Option<ChunkId> {
+        (**self).pick(candidates, chunks, now)
+    }
+
+    fn on_access(&mut self, chunk: ChunkId, now: Moment) {
+        (**self).on_access(chunk, now)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+// ---------------------------------------------------------------- OPT
+
+/// Belady's OPT on the warm-up moment lists: evict the candidate with the
+/// farthest next use; candidates never used again win outright.
+/// O(C log T) per decision via binary search (paper Sec. 8.3).
+pub struct OptPolicy<'a> {
+    pub tracer: &'a MemTracer,
+}
+
+impl<'a> EvictionPolicy for OptPolicy<'a> {
+    fn pick(
+        &mut self,
+        candidates: &[ChunkId],
+        _chunks: &[Chunk],
+        now: Moment,
+    ) -> Option<ChunkId> {
+        candidates.iter().copied().max_by_key(|&c| {
+            match self.tracer.next_use(c, now) {
+                None => u64::MAX, // never used again: perfect victim
+                Some(m) => m as u64,
+            }
+        })
+    }
+
+    fn name(&self) -> &'static str {
+        "opt"
+    }
+}
+
+// --------------------------------------------------------------- FIFO
+
+/// Evict in chunk-list order (also the paper's warm-up fallback).
+#[derive(Default)]
+pub struct FifoPolicy {
+    arrival: HashMap<ChunkId, u64>,
+    clock: u64,
+}
+
+impl EvictionPolicy for FifoPolicy {
+    fn pick(
+        &mut self,
+        candidates: &[ChunkId],
+        _chunks: &[Chunk],
+        _now: Moment,
+    ) -> Option<ChunkId> {
+        candidates
+            .iter()
+            .copied()
+            .min_by_key(|c| (self.arrival.get(c).copied().unwrap_or(0), c.0))
+    }
+
+    fn on_access(&mut self, chunk: ChunkId, _now: Moment) {
+        self.clock += 1;
+        self.arrival.entry(chunk).or_insert(self.clock);
+    }
+
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+}
+
+// ---------------------------------------------------------------- LRU
+
+#[derive(Default)]
+pub struct LruPolicy {
+    last_use: HashMap<ChunkId, u64>,
+    clock: u64,
+}
+
+impl EvictionPolicy for LruPolicy {
+    fn pick(
+        &mut self,
+        candidates: &[ChunkId],
+        _chunks: &[Chunk],
+        _now: Moment,
+    ) -> Option<ChunkId> {
+        candidates
+            .iter()
+            .copied()
+            .min_by_key(|c| (self.last_use.get(c).copied().unwrap_or(0), c.0))
+    }
+
+    fn on_access(&mut self, chunk: ChunkId, _now: Moment) {
+        self.clock += 1;
+        self.last_use.insert(chunk, self.clock);
+    }
+
+    fn name(&self) -> &'static str {
+        "lru"
+    }
+}
+
+// ---------------------------------------------------------------- LFU
+
+#[derive(Default)]
+pub struct LfuPolicy {
+    uses: HashMap<ChunkId, u64>,
+}
+
+impl EvictionPolicy for LfuPolicy {
+    fn pick(
+        &mut self,
+        candidates: &[ChunkId],
+        _chunks: &[Chunk],
+        _now: Moment,
+    ) -> Option<ChunkId> {
+        candidates
+            .iter()
+            .copied()
+            .min_by_key(|c| (self.uses.get(c).copied().unwrap_or(0), c.0))
+    }
+
+    fn on_access(&mut self, chunk: ChunkId, _now: Moment) {
+        *self.uses.entry(chunk).or_insert(0) += 1;
+    }
+
+    fn name(&self) -> &'static str {
+        "lfu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(v: &[u32]) -> Vec<ChunkId> {
+        v.iter().map(|&i| ChunkId(i)).collect()
+    }
+
+    #[test]
+    fn opt_picks_farthest_next_use() {
+        let mut t = MemTracer::new(3);
+        t.record_chunk_use(ChunkId(0), 5);
+        t.record_chunk_use(ChunkId(1), 20);
+        t.record_chunk_use(ChunkId(2), 10);
+        t.finish_warmup();
+        let mut p = OptPolicy { tracer: &t };
+        assert_eq!(p.pick(&ids(&[0, 1, 2]), &[], 0), Some(ChunkId(1)));
+        // Past their uses, all have None -> any is fine; max_by_key picks
+        // deterministically but all are u64::MAX; ensure Some is returned.
+        assert!(p.pick(&ids(&[0, 2]), &[], 50).is_some());
+    }
+
+    #[test]
+    fn opt_prefers_never_used_again() {
+        let mut t = MemTracer::new(2);
+        t.record_chunk_use(ChunkId(0), 100);
+        // chunk 1 never recorded -> never used again.
+        t.finish_warmup();
+        let mut p = OptPolicy { tracer: &t };
+        assert_eq!(p.pick(&ids(&[0, 1]), &[], 0), Some(ChunkId(1)));
+    }
+
+    #[test]
+    fn lru_picks_least_recent() {
+        let mut p = LruPolicy::default();
+        p.on_access(ChunkId(0), 0);
+        p.on_access(ChunkId(1), 1);
+        p.on_access(ChunkId(0), 2);
+        assert_eq!(p.pick(&ids(&[0, 1]), &[], 3), Some(ChunkId(1)));
+    }
+
+    #[test]
+    fn fifo_ignores_reaccess() {
+        let mut p = FifoPolicy::default();
+        p.on_access(ChunkId(0), 0);
+        p.on_access(ChunkId(1), 1);
+        p.on_access(ChunkId(0), 2); // re-access must not refresh arrival
+        assert_eq!(p.pick(&ids(&[0, 1]), &[], 3), Some(ChunkId(0)));
+    }
+
+    #[test]
+    fn lfu_picks_least_frequent() {
+        let mut p = LfuPolicy::default();
+        for _ in 0..3 {
+            p.on_access(ChunkId(0), 0);
+        }
+        p.on_access(ChunkId(1), 0);
+        assert_eq!(p.pick(&ids(&[0, 1]), &[], 1), Some(ChunkId(1)));
+    }
+
+    #[test]
+    fn empty_candidates_yield_none() {
+        let t = MemTracer::new(0);
+        let mut p = OptPolicy { tracer: &t };
+        assert_eq!(p.pick(&[], &[], 0), None);
+        assert_eq!(FifoPolicy::default().pick(&[], &[], 0), None);
+    }
+}

@@ -1,0 +1,49 @@
+//! PatrickStar: parallel training of pre-trained models via chunk-based
+//! memory management — a full-system reproduction of Fang et al. (TPDS
+//! 2022) as a three-layer Rust + JAX + Pallas stack.
+//!
+//! * The **coordinator** (this crate) implements the paper's contribution:
+//!   chunk-based heterogeneous memory management (Sec. 5–6), the runtime
+//!   memory tracer (Sec. 8.1), device-aware operator placement (Sec. 8.2),
+//!   OPT chunk eviction (Sec. 8.3) and ZeRO-symbiotic chunk collectives
+//!   (Sec. 7), plus the DeepSpeed/PyTorch baselines and the calibrated
+//!   cluster simulator that regenerates every table and figure of the
+//!   paper's evaluation (DESIGN.md §5).
+//! * The **compute** comes from JAX/Pallas, AOT-lowered to HLO text at
+//!   build time and executed through the PJRT C API (`runtime::`); python
+//!   is never on the training path.
+//!
+//! Start with [`train`] for the real end-to-end path or [`engine`] for
+//! the simulator.
+
+pub mod baselines;
+pub mod chunk;
+pub mod config;
+pub mod dp;
+pub mod engine;
+pub mod evict;
+pub mod mem;
+pub mod model;
+pub mod placement;
+pub mod runtime;
+pub mod scale;
+pub mod sim;
+pub mod tensor;
+pub mod tracer;
+pub mod train;
+pub mod util;
+
+/// Convenience prelude for examples and benches.
+pub mod prelude {
+    pub use crate::chunk::{Chunk, ChunkId, ChunkKind, ChunkManager,
+                           ChunkRegistry, TensorSpec};
+    pub use crate::config::{ClusterPreset, SystemKind, TrainTask};
+    pub use crate::engine::{Engine, IterBreakdown, OptimizationPlan};
+    pub use crate::evict::{EvictionPolicy, FifoPolicy, LfuPolicy, LruPolicy,
+                           OptPolicy};
+    pub use crate::mem::{Device, HeterogeneousSpace, Interconnect};
+    pub use crate::model::{ActivationPlan, GptSpec};
+    pub use crate::tensor::{TensorId, TensorState};
+    pub use crate::tracer::MemTracer;
+    pub use crate::util::{human_bytes, Json, Rng, Table};
+}

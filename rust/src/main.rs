@@ -1,0 +1,251 @@
+//! PatrickStar CLI — the L3 coordinator entry point.
+//!
+//! Subcommands:
+//!   models                          print the Table 2 model ladder
+//!   chunk-search --model 15B        chunk size search (Table 3 / Fig 12)
+//!   simulate --system patrickstar --model 10B --gpus 8 --batch 16
+//!                                   one simulated iteration + breakdown
+//!   breakdown --cluster superpod --model 10B --gpus 8
+//!                                   Base vs OSC vs SP ablation (Fig 16)
+//!   scale --cluster yard            max model scale per system (Fig 13)
+//!   train --artifacts artifacts --steps 50
+//!                                   REAL chunk-managed training via PJRT
+//!
+//! Flags use `--key value`; defaults match the paper's setups.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use patrickstar::baselines::run_system;
+use patrickstar::chunk::search_chunk_size;
+use patrickstar::config::{ClusterPreset, SystemKind, TrainTask};
+use patrickstar::engine::{Engine, OptimizationPlan};
+use patrickstar::model::GptSpec;
+use patrickstar::scale::max_model_scale;
+use patrickstar::train::{Trainer, TrainerConfig};
+use patrickstar::util::{human_bytes, Table};
+
+struct Args {
+    cmd: String,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Result<Args> {
+        let mut it = std::env::args().skip(1);
+        let cmd = it.next().unwrap_or_else(|| "help".into());
+        let mut flags = HashMap::new();
+        while let Some(k) = it.next() {
+            let key = k
+                .strip_prefix("--")
+                .ok_or_else(|| anyhow!("expected --flag, got '{k}'"))?
+                .to_string();
+            let v = it.next().ok_or_else(|| anyhow!("--{key} needs a value"))?;
+            flags.insert(key, v);
+        }
+        Ok(Args { cmd, flags })
+    }
+
+    fn get(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.into())
+    }
+
+    fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad number")),
+        }
+    }
+
+    fn cluster(&self) -> Result<ClusterPreset> {
+        ClusterPreset::by_name(&self.get("cluster", "yard"))
+    }
+
+    fn model(&self, default: &str) -> Result<GptSpec> {
+        let name = self.get("model", default);
+        GptSpec::by_name(&name).ok_or_else(|| anyhow!("unknown model {name}"))
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::parse()?;
+    match args.cmd.as_str() {
+        "models" => cmd_models(),
+        "chunk-search" => cmd_chunk_search(&args),
+        "simulate" => cmd_simulate(&args),
+        "breakdown" => cmd_breakdown(&args),
+        "scale" => cmd_scale(&args),
+        "train" => cmd_train(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}'\n{HELP}"),
+    }
+}
+
+const HELP: &str = "\
+patrickstar — chunk-based heterogeneous training (paper reproduction)
+
+USAGE:
+  patrickstar models
+  patrickstar chunk-search --model 15B [--cluster yard]
+  patrickstar simulate --system patrickstar|deepspeed-dp|deepspeed-mpN|\
+pytorch-ddp
+                       [--cluster yard] [--model 10B] [--gpus 8] [--batch 16]
+  patrickstar breakdown [--cluster superpod] [--model 10B] [--gpus 8] \
+[--batch 16]
+  patrickstar scale [--cluster yard] [--gpus 8]
+  patrickstar train [--artifacts artifacts] [--steps 50] [--gpu-mb 6] \
+[--lr 0.001] [--log-every 10]
+";
+
+fn cmd_models() -> Result<()> {
+    let mut t = Table::new(&["model", "layers", "hidden", "params",
+                             "chunked bytes (14M)"]);
+    for m in GptSpec::table2() {
+        t.row(vec![
+            m.name.into(),
+            m.layers.to_string(),
+            m.hidden.to_string(),
+            format!("{:.2}B", m.n_params() as f64 / 1e9),
+            human_bytes(m.chunked_model_bytes()),
+        ]);
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_chunk_search(args: &Args) -> Result<()> {
+    let model = args.model("15B")?;
+    let cluster = args.cluster()?;
+    let budget =
+        cluster.cpu_mem + cluster.n_gpus as u64 * cluster.gpu_mem;
+    let specs = model.tensor_specs();
+    let res = search_chunk_size(&specs, budget)
+        .ok_or_else(|| anyhow!("no feasible chunk size"))?;
+    let mut t = Table::new(&["chunk elems", "chunk bytes (fp16)", "chunks",
+                             "util %", "feasible"]);
+    for c in &res.all {
+        t.row(vec![
+            c.chunk_elems.to_string(),
+            human_bytes(2 * c.chunk_elems),
+            c.n_chunks.to_string(),
+            format!("{:.2}", 100.0 * c.utilization),
+            c.feasible.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "best: {} elems, util {:.2}% (paper Table 3 reports >90% with <10% \
+         fragmentation)",
+        res.best.chunk_elems,
+        100.0 * res.best.utilization
+    );
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let system = SystemKind::parse(&args.get("system", "patrickstar"))?;
+    let cluster = args.cluster()?;
+    let model = args.model("10B")?;
+    let gpus = args.get_u64("gpus", 8)? as u32;
+    let batch = args.get_u64("batch", 16)?;
+    let task = TrainTask::new(model, batch, gpus);
+    let report = run_system(system, cluster, task)?;
+    print!("{}", report.render());
+    Ok(())
+}
+
+fn cmd_breakdown(args: &Args) -> Result<()> {
+    let cluster = args.cluster()?;
+    let model = args.model("10B")?;
+    let gpus = args.get_u64("gpus", 8)? as u32;
+    let batch = args.get_u64("batch", 16)?;
+    let task = TrainTask::new(model, batch, gpus);
+    for (label, opt) in [
+        ("Base", OptimizationPlan::default()),
+        ("OSC", OptimizationPlan::os_on_cpu()),
+        ("SP", OptimizationPlan::static_partition()),
+    ] {
+        println!("=== {label} ===");
+        match Engine::new(cluster, task).with_opt(opt).run() {
+            Ok(r) => print!("{}", r.render()),
+            Err(e) => println!("infeasible: {e:#}"),
+        }
+    }
+    Ok(())
+}
+
+fn cmd_scale(args: &Args) -> Result<()> {
+    let cluster = args.cluster()?;
+    let gpus = args.get_u64("gpus", 8)? as u32;
+    let mut t = Table::new(&["system", "max model", "tflops/GPU", "batch"]);
+    for system in [
+        SystemKind::PyTorchDdp,
+        SystemKind::DeepSpeedDp,
+        SystemKind::DeepSpeedMp(gpus.min(8)),
+        SystemKind::PatrickStar,
+    ] {
+        match max_model_scale(system, cluster, gpus) {
+            Some(p) => {
+                let r = p.best.unwrap();
+                t.row(vec![
+                    system.name(),
+                    p.model.into(),
+                    format!("{:.1}", r.tflops_per_gpu),
+                    r.batch_per_gpu.to_string(),
+                ]);
+            }
+            None => {
+                t.row(vec![system.name(), "-".into(), "-".into(),
+                           "-".into()]);
+            }
+        }
+    }
+    print!("{}", t.render());
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = TrainerConfig {
+        artifacts_dir: args.get("artifacts", "artifacts"),
+        gpu_bytes: args.get_u64("gpu-mb", 6)? << 20,
+        cpu_bytes: args.get_u64("cpu-mb", 2048)? << 20,
+        lr: args.get("lr", "0.001").parse()?,
+        weight_decay: args.get("wd", "0.01").parse()?,
+        seed: args.get_u64("seed", 0)?,
+    };
+    let steps = args.get_u64("steps", 50)? as usize;
+    let log_every = args.get_u64("log-every", 10)? as usize;
+    let mut trainer = Trainer::new(cfg)?;
+    let man = trainer.manifest().clone();
+    eprintln!(
+        "model: {} params, chunk {} elems, {} layers x hidden {}",
+        man.n_params, man.chunk_elems, man.layers, man.hidden
+    );
+    let report = trainer.train(steps, log_every)?;
+    let first = report.losses.first().copied().unwrap_or(0.0);
+    let last = report.losses.last().copied().unwrap_or(0.0);
+    println!(
+        "steps {} | loss {:.4} -> {:.4} | mean step {:.2}s | evictions {} \
+         | c2g {} g2c {}",
+        steps,
+        first,
+        last,
+        report.step_secs.iter().sum::<f64>()
+            / report.step_secs.len().max(1) as f64,
+        report.evictions,
+        human_bytes(report.cpu_to_gpu_bytes),
+        human_bytes(report.gpu_to_cpu_bytes),
+    );
+    Ok(())
+}

@@ -1,0 +1,164 @@
+//! Per-device memory accounting.
+
+use thiserror::Error;
+
+/// A compute/memory device in the heterogeneous space.
+///
+/// `Gpu(i)` is rank-local GPU *i*; in the single-process engine only
+/// `Gpu(0)` and `Cpu` exist (the paper's per-process view: each process
+/// owns one GPU and shares the CPU, Sec. 7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Device {
+    Gpu(u32),
+    Cpu,
+}
+
+impl Device {
+    pub fn is_gpu(&self) -> bool {
+        matches!(self, Device::Gpu(_))
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Device::Gpu(i) => format!("gpu{i}"),
+            Device::Cpu => "cpu".to_string(),
+        }
+    }
+}
+
+#[derive(Error, Debug, PartialEq)]
+pub enum MemError {
+    #[error(
+        "out of memory on {device}: requested {requested} B, used {used} B \
+         of {capacity} B"
+    )]
+    OutOfMemory {
+        device: String,
+        requested: u64,
+        used: u64,
+        capacity: u64,
+    },
+    #[error("double free of {0} B on {1}")]
+    DoubleFree(u64, String),
+}
+
+/// Byte-accurate capacity accounting for one device.
+#[derive(Clone, Debug)]
+pub struct DeviceMem {
+    pub device: Device,
+    pub capacity: u64,
+    used: u64,
+    peak: u64,
+}
+
+impl DeviceMem {
+    pub fn new(device: Device, capacity: u64) -> Self {
+        DeviceMem { device, capacity, used: 0, peak: 0 }
+    }
+
+    pub fn used(&self) -> u64 {
+        self.used
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak
+    }
+
+    pub fn free(&self) -> u64 {
+        self.capacity.saturating_sub(self.used)
+    }
+
+    pub fn can_fit(&self, bytes: u64) -> bool {
+        self.used + bytes <= self.capacity
+    }
+
+    pub fn alloc(&mut self, bytes: u64) -> Result<(), MemError> {
+        if !self.can_fit(bytes) {
+            return Err(MemError::OutOfMemory {
+                device: self.device.name(),
+                requested: bytes,
+                used: self.used,
+                capacity: self.capacity,
+            });
+        }
+        self.used += bytes;
+        self.peak = self.peak.max(self.used);
+        Ok(())
+    }
+
+    pub fn dealloc(&mut self, bytes: u64) -> Result<(), MemError> {
+        if bytes > self.used {
+            return Err(MemError::DoubleFree(bytes, self.device.name()));
+        }
+        self.used -= bytes;
+        Ok(())
+    }
+
+    /// Reset usage but keep peak statistics (between iterations).
+    pub fn reset_used(&mut self) {
+        self.used = 0;
+    }
+
+    /// Re-cap the device (the tracer shrinks/grows the chunkable GPU
+    /// capacity per moment as non-model data ebbs and flows, Sec. 8.1).
+    /// `used > capacity` is allowed transiently; the chunk manager's
+    /// `evict_to_fit` restores the invariant.
+    pub fn set_capacity(&mut self, capacity: u64) {
+        self.capacity = capacity;
+    }
+
+    /// True when usage exceeds the (possibly just lowered) capacity.
+    pub fn over_capacity(&self) -> bool {
+        self.used > self.capacity
+    }
+
+    pub fn reset_peak(&mut self) {
+        self.peak = self.used;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_cycle() {
+        let mut m = DeviceMem::new(Device::Gpu(0), 1000);
+        m.alloc(400).unwrap();
+        m.alloc(600).unwrap();
+        assert_eq!(m.free(), 0);
+        assert_eq!(m.peak(), 1000);
+        m.dealloc(600).unwrap();
+        assert_eq!(m.used(), 400);
+        assert_eq!(m.peak(), 1000);
+    }
+
+    #[test]
+    fn oom_is_reported_with_context() {
+        let mut m = DeviceMem::new(Device::Cpu, 100);
+        m.alloc(80).unwrap();
+        let err = m.alloc(21).unwrap_err();
+        match err {
+            MemError::OutOfMemory { requested, used, capacity, .. } => {
+                assert_eq!((requested, used, capacity), (21, 80, 100));
+            }
+            _ => panic!("wrong error"),
+        }
+        // Failed alloc must not change accounting.
+        assert_eq!(m.used(), 80);
+    }
+
+    #[test]
+    fn double_free_detected() {
+        let mut m = DeviceMem::new(Device::Gpu(1), 100);
+        m.alloc(10).unwrap();
+        assert!(m.dealloc(11).is_err());
+    }
+
+    #[test]
+    fn device_names() {
+        assert_eq!(Device::Gpu(3).name(), "gpu3");
+        assert_eq!(Device::Cpu.name(), "cpu");
+        assert!(Device::Gpu(0).is_gpu() && !Device::Cpu.is_gpu());
+    }
+}

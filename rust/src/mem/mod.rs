@@ -1,0 +1,18 @@
+//! Heterogeneous memory substrate.
+//!
+//! The paper's chunks live in a CPU+GPU heterogeneous memory space
+//! (Sec. 5).  On this testbed there is no GPU; `DeviceMem` provides
+//! byte-accurate capacity accounting per simulated device and
+//! `HeterogeneousSpace` the per-process composite view (whole GPU +
+//! 1/nproc of CPU, paper Sec. 7).  The *same* accounting drives both the
+//! discrete-event simulator and the real PJRT-backed trainer, so eviction
+//! and placement decisions are identical to a physical deployment with
+//! these capacities (DESIGN.md §1).
+
+pub mod bandwidth;
+pub mod device;
+pub mod space;
+
+pub use bandwidth::{Interconnect, Link};
+pub use device::{Device, DeviceMem, MemError};
+pub use space::HeterogeneousSpace;

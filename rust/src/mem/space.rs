@@ -1,0 +1,97 @@
+//! The per-process heterogeneous memory space: one GPU + a 1/nproc share
+//! of host CPU memory (paper Sec. 7).
+
+use std::collections::BTreeMap;
+
+use super::device::{Device, DeviceMem, MemError};
+
+/// Composite memory space a single training process sees.
+#[derive(Clone, Debug)]
+pub struct HeterogeneousSpace {
+    devices: BTreeMap<Device, DeviceMem>,
+}
+
+impl HeterogeneousSpace {
+    /// `gpu_bytes` of device memory + `cpu_bytes` host share.
+    pub fn new(gpu_bytes: u64, cpu_bytes: u64) -> Self {
+        let mut devices = BTreeMap::new();
+        devices.insert(
+            Device::Gpu(0),
+            DeviceMem::new(Device::Gpu(0), gpu_bytes),
+        );
+        devices.insert(Device::Cpu, DeviceMem::new(Device::Cpu, cpu_bytes));
+        HeterogeneousSpace { devices }
+    }
+
+    /// Build the per-process view of a node: the whole of one GPU and
+    /// cpu_total/nproc of the host (paper Sec. 7).
+    pub fn per_process(gpu_bytes: u64, cpu_total: u64, nproc: u32) -> Self {
+        Self::new(gpu_bytes, cpu_total / nproc as u64)
+    }
+
+    pub fn dev(&self, d: Device) -> &DeviceMem {
+        self.devices.get(&d).expect("unknown device")
+    }
+
+    pub fn dev_mut(&mut self, d: Device) -> &mut DeviceMem {
+        self.devices.get_mut(&d).expect("unknown device")
+    }
+
+    pub fn alloc(&mut self, d: Device, bytes: u64) -> Result<(), MemError> {
+        self.dev_mut(d).alloc(bytes)
+    }
+
+    pub fn dealloc(&mut self, d: Device, bytes: u64) -> Result<(), MemError> {
+        self.dev_mut(d).dealloc(bytes)
+    }
+
+    pub fn total_capacity(&self) -> u64 {
+        self.devices.values().map(|m| m.capacity).sum()
+    }
+
+    pub fn total_used(&self) -> u64 {
+        self.devices.values().map(|m| m.used()).sum()
+    }
+
+    /// Overall utilization in [0,1] — the paper reports 86–87.5%
+    /// heterogeneous-space utilization at max model scale (Sec. 9.2.1).
+    pub fn utilization(&self) -> f64 {
+        self.total_used() as f64 / self.total_capacity() as f64
+    }
+
+    pub fn devices(&self) -> impl Iterator<Item = &DeviceMem> {
+        self.devices.values()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: u64 = 1 << 30;
+
+    #[test]
+    fn per_process_splits_cpu() {
+        let s = HeterogeneousSpace::per_process(32 * GB, 240 * GB, 8);
+        assert_eq!(s.dev(Device::Gpu(0)).capacity, 32 * GB);
+        assert_eq!(s.dev(Device::Cpu).capacity, 30 * GB);
+        assert_eq!(s.total_capacity(), 62 * GB);
+    }
+
+    #[test]
+    fn utilization_tracks_allocs() {
+        let mut s = HeterogeneousSpace::new(100, 300);
+        s.alloc(Device::Gpu(0), 50).unwrap();
+        s.alloc(Device::Cpu, 150).unwrap();
+        assert!((s.utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn oom_on_one_device_even_if_other_has_room() {
+        // This is exactly the failure mode the paper ascribes to static
+        // partitioning (Sec. 4): per-device capacity is hard.
+        let mut s = HeterogeneousSpace::new(100, 1000);
+        assert!(s.alloc(Device::Gpu(0), 101).is_err());
+        assert!(s.alloc(Device::Cpu, 101).is_ok());
+    }
+}

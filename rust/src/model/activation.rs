@@ -1,0 +1,186 @@
+//! Activation (non-model data) memory plans and the Fig. 2 footprint
+//! timeline.
+//!
+//! Non-model data = activations + temporary buffers + CUDA context.  The
+//! paper's key observation (Sec. 4, Fig. 2) is that this footprint depends
+//! on *task*-related configuration (batch size, activation plan) and
+//! cannot be ignored when partitioning model data.
+
+use super::zoo::GptSpec;
+
+/// How activations are kept during training (paper Sec. 3.3, Fig. 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActivationPlan {
+    /// Keep everything on GPU.
+    None,
+    /// Gradient checkpointing: one boundary activation per layer stays;
+    /// intra-layer activations are recomputed in BWD (~1/3 extra flops).
+    Checkpointing,
+    /// Checkpointing + offload the boundary activations to CPU (extra
+    /// PCIe traffic, minimal GPU residency).
+    CheckpointingOffload,
+}
+
+impl ActivationPlan {
+    pub const ALL: [ActivationPlan; 3] = [
+        ActivationPlan::None,
+        ActivationPlan::Checkpointing,
+        ActivationPlan::CheckpointingOffload,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ActivationPlan::None => "none",
+            ActivationPlan::Checkpointing => "ckpt",
+            ActivationPlan::CheckpointingOffload => "ckpt+offload",
+        }
+    }
+
+    /// Extra FWD recompute factor applied to BWD time.
+    pub fn recompute_factor(&self) -> f64 {
+        match self {
+            ActivationPlan::None => 0.0,
+            _ => 1.0, // re-run FWD once between checkpoints
+        }
+    }
+}
+
+/// CUDA context + framework overhead (paper Sec. 8.1 counts it into
+/// non-model data; ~0.75 GB on V100-class nodes).
+pub const BASE_OVERHEAD: u64 = 3 * (1 << 28); // 0.75 GB
+
+/// Activation byte model for one transformer layer, batch `b` (fp16).
+///
+/// Working set while a layer computes: qkv/proj/mlp intermediates
+/// (~16 B·S·H bytes at 2 bytes/elem) + attention score matrices
+/// (2 B·heads·S² bytes).  Boundary (checkpoint) activation: 2 B·S·H.
+pub fn layer_working_bytes(m: &GptSpec, b: u64) -> u64 {
+    let bsh = b * m.seq * m.hidden;
+    let scores = 2 * b * m.heads as u64 * m.seq * m.seq;
+    16 * bsh + scores
+}
+
+pub fn layer_boundary_bytes(m: &GptSpec, b: u64) -> u64 {
+    2 * b * m.seq * m.hidden
+}
+
+/// GPU-resident non-model bytes at a given position of the iteration.
+///
+/// `layer_progress` ∈ [0, L] counts layers whose activations are live
+/// (FWD accumulates, BWD drains).
+pub fn non_model_bytes(
+    m: &GptSpec,
+    b: u64,
+    plan: ActivationPlan,
+    layers_live: u32,
+) -> u64 {
+    let boundary = layer_boundary_bytes(m, b);
+    let working = layer_working_bytes(m, b);
+    let resident = match plan {
+        // All intra-layer activations of every live layer stay.
+        ActivationPlan::None => layers_live as u64 * (working + boundary),
+        // Only boundaries stay; one layer's working set is transient.
+        ActivationPlan::Checkpointing => {
+            layers_live as u64 * boundary + working
+        }
+        // Boundaries live on CPU; GPU holds one working set + the
+        // boundary in flight.
+        ActivationPlan::CheckpointingOffload => working + boundary,
+    };
+    BASE_OVERHEAD + resident
+}
+
+/// The Fig. 2 series: non-model GPU footprint sampled at each operator
+/// moment over `iters` iterations.
+#[derive(Clone, Debug)]
+pub struct FootprintTimeline {
+    pub plan: ActivationPlan,
+    /// One sample per moment (2 per layer per phase).
+    pub samples: Vec<u64>,
+}
+
+impl FootprintTimeline {
+    pub fn generate(
+        m: &GptSpec,
+        batch: u64,
+        plan: ActivationPlan,
+        iters: u32,
+    ) -> Self {
+        let mut samples = Vec::new();
+        for _ in 0..iters {
+            // FWD: live layers grow 0..L.
+            for l in 0..=m.layers {
+                samples.push(non_model_bytes(m, batch, plan, l));
+            }
+            // BWD: live layers shrink L..0.
+            for l in (0..=m.layers).rev() {
+                samples.push(non_model_bytes(m, batch, plan, l));
+            }
+            // ADAM: activations freed, only the base overhead remains.
+            samples.push(BASE_OVERHEAD);
+        }
+        FootprintTimeline { plan, samples }
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.samples.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model6b() -> GptSpec {
+        GptSpec::by_name("6B").unwrap()
+    }
+
+    #[test]
+    fn plans_order_by_peak() {
+        // Fig. 2: none > checkpointing > checkpointing+offload.
+        let m = model6b();
+        let peak = |p| {
+            FootprintTimeline::generate(&m, 16, p, 1).peak()
+        };
+        let none = peak(ActivationPlan::None);
+        let ckpt = peak(ActivationPlan::Checkpointing);
+        let off = peak(ActivationPlan::CheckpointingOffload);
+        assert!(none > ckpt && ckpt > off, "{none} {ckpt} {off}");
+    }
+
+    #[test]
+    fn fig2_ckpt_offload_peak_is_gigabytes() {
+        // Paper Fig. 2: 6B model, batch 16 — peak close to 5 GB even with
+        // checkpointing + offload.  Accept 2–8 GB for the shape check.
+        let m = model6b();
+        let p = FootprintTimeline::generate(
+            &m, 16, ActivationPlan::CheckpointingOffload, 1)
+        .peak();
+        let gb = p as f64 / (1u64 << 30) as f64;
+        assert!((2.0..8.0).contains(&gb), "peak {gb} GB");
+    }
+
+    #[test]
+    fn timeline_is_periodic_across_iters() {
+        let m = model6b();
+        let t1 = FootprintTimeline::generate(
+            &m, 16, ActivationPlan::Checkpointing, 1);
+        let t2 = FootprintTimeline::generate(
+            &m, 16, ActivationPlan::Checkpointing, 2);
+        assert_eq!(t2.samples.len(), 2 * t1.samples.len());
+        assert_eq!(&t2.samples[..t1.samples.len()], &t1.samples[..]);
+    }
+
+    #[test]
+    fn batch_scales_footprint() {
+        let m = model6b();
+        let at = |b| {
+            non_model_bytes(&m, b, ActivationPlan::Checkpointing, m.layers)
+        };
+        assert!(at(32) > at(16));
+        // Activation part (minus base) scales linearly in batch.
+        let lin =
+            (at(32) - BASE_OVERHEAD) as f64 / (at(16) - BASE_OVERHEAD) as f64;
+        assert!((lin - 2.0).abs() < 1e-9);
+    }
+}

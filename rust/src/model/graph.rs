@@ -1,0 +1,184 @@
+//! Operator graph for the simulation engine.
+//!
+//! Each op names the parameter tensors it touches (indices into the
+//! model's non-embedding `tensor_specs()` order), its forward flops and
+//! whether it is compute- or memory-intensive (drives device-aware
+//! placement, Sec. 8.2).  The engine walks this graph FWD then reversed
+//! for BWD, issuing Access/Release around every op exactly as the paper's
+//! PyTorch hooks do.
+
+use super::zoo::GptSpec;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpKind {
+    /// GEMM-heavy — must run on GPU (paper Sec. 8.2).
+    ComputeIntensive,
+    /// Elementwise/normalization — can run on either device.
+    MemoryIntensive,
+    /// Embedding lookup — candidate for CPU placement (Sec. 8.2).
+    Embedding,
+}
+
+/// One operator of the training graph.
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub name: String,
+    pub kind: OpKind,
+    /// Indices into the *non-embedding* tensor list (layout order).
+    pub params: Vec<usize>,
+    /// Forward flops at batch size 1 token count `seq` — scaled by the
+    /// engine with the task batch.
+    pub fwd_flops: f64,
+}
+
+/// The whole-model op schedule (forward order).
+#[derive(Clone, Debug)]
+pub struct OpGraph {
+    pub ops: Vec<Op>,
+    pub spec: GptSpec,
+    pub batch: u64,
+}
+
+impl OpGraph {
+    /// Build the GPT op graph for `spec` at batch size `batch`.
+    pub fn build(spec: GptSpec, batch: u64) -> Self {
+        let h = spec.hidden as f64;
+        let s = spec.seq as f64;
+        let b = batch as f64;
+        let bs = b * s;
+        let mut ops = Vec::new();
+        // Embedding lookup (params live outside chunk management).
+        ops.push(Op {
+            name: "embed".into(),
+            kind: OpKind::Embedding,
+            params: vec![],
+            fwd_flops: 2.0 * bs * h,
+        });
+        // Non-embedding tensors, in layout order: 12 per layer then lnf.
+        let mut t = 0usize;
+        for i in 0..spec.layers {
+            let base = t;
+            t += 12;
+            let p = |k: usize| base + k;
+            ops.push(Op {
+                name: format!("h{i}.ln1"),
+                kind: OpKind::MemoryIntensive,
+                params: vec![p(0), p(1)],
+                fwd_flops: 5.0 * bs * h,
+            });
+            ops.push(Op {
+                name: format!("h{i}.qkv"),
+                kind: OpKind::ComputeIntensive,
+                params: vec![p(2), p(3)],
+                fwd_flops: 6.0 * bs * h * h,
+            });
+            ops.push(Op {
+                name: format!("h{i}.attn"),
+                kind: OpKind::ComputeIntensive,
+                params: vec![],
+                fwd_flops: 4.0 * b * s * s * h,
+            });
+            ops.push(Op {
+                name: format!("h{i}.proj"),
+                kind: OpKind::ComputeIntensive,
+                params: vec![p(4), p(5)],
+                fwd_flops: 2.0 * bs * h * h,
+            });
+            ops.push(Op {
+                name: format!("h{i}.ln2"),
+                kind: OpKind::MemoryIntensive,
+                params: vec![p(6), p(7)],
+                fwd_flops: 5.0 * bs * h,
+            });
+            ops.push(Op {
+                name: format!("h{i}.fc1"),
+                kind: OpKind::ComputeIntensive,
+                params: vec![p(8), p(9)],
+                fwd_flops: 8.0 * bs * h * h,
+            });
+            ops.push(Op {
+                name: format!("h{i}.fc2"),
+                kind: OpKind::ComputeIntensive,
+                params: vec![p(10), p(11)],
+                fwd_flops: 8.0 * bs * h * h,
+            });
+        }
+        ops.push(Op {
+            name: "lnf".into(),
+            kind: OpKind::MemoryIntensive,
+            params: vec![t, t + 1],
+            fwd_flops: 5.0 * bs * h,
+        });
+        // Tied LM head: a big GEMM against wte (embedding, CPU-pinned
+        // params in PatrickStar; DeepSpeed moves it).
+        ops.push(Op {
+            name: "lm_head".into(),
+            kind: OpKind::Embedding,
+            params: vec![],
+            fwd_flops: 2.0 * bs * h * spec.vocab as f64,
+        });
+        OpGraph { ops, spec, batch }
+    }
+
+    pub fn n_nonembedding_tensors(&self) -> usize {
+        self.spec.layers as usize * 12 + 2
+    }
+
+    /// Total forward flops of one iteration.
+    pub fn fwd_flops(&self) -> f64 {
+        self.ops.iter().map(|o| o.fwd_flops).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_indices_cover_all_tensors_once() {
+        let g = OpGraph::build(GptSpec::new("1B", 20, 2048), 8);
+        let mut seen = vec![0u32; g.n_nonembedding_tensors()];
+        for op in &g.ops {
+            for &p in &op.params {
+                seen[p] += 1;
+            }
+        }
+        assert!(
+            seen.iter().all(|&c| c == 1),
+            "every tensor owned by exactly one op"
+        );
+    }
+
+    #[test]
+    fn fwd_flops_close_to_analytic() {
+        let m = GptSpec::new("1B", 20, 2048);
+        let g = OpGraph::build(m, 8);
+        // fwd ≈ 1/3 of the 6*N*T + attention total.
+        let total = m.iter_flops(8);
+        let ratio = 3.0 * g.fwd_flops() / total;
+        assert!(
+            (0.8..1.25).contains(&ratio),
+            "3*fwd/total = {ratio}"
+        );
+    }
+
+    #[test]
+    fn op_count() {
+        let m = GptSpec::new("x", 4, 256);
+        let g = OpGraph::build(m, 1);
+        // embed + 7 per layer + lnf + lm_head
+        assert_eq!(g.ops.len(), 1 + 7 * 4 + 2);
+    }
+
+    #[test]
+    fn gemm_ops_dominate_flops() {
+        let g = OpGraph::build(GptSpec::new("1B", 20, 2048), 8);
+        let gemm: f64 = g
+            .ops
+            .iter()
+            .filter(|o| o.kind == OpKind::ComputeIntensive)
+            .map(|o| o.fwd_flops)
+            .sum();
+        assert!(gemm / g.fwd_flops() > 0.7);
+    }
+}

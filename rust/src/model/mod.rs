@@ -1,0 +1,16 @@
+//! The workload: GPT-2-like transformer stacks (paper Sec. 9.1, Table 2).
+//!
+//! * [`zoo`]        — the paper's model ladder (1B–68B) + analytic sizes.
+//! * [`graph`]      — operator graph with per-op params/flops/activations,
+//!                    consumed by the simulation engine.
+//! * [`activation`] — activation memory plans (none / checkpointing /
+//!                    checkpointing+offload) and the Fig. 2 footprint
+//!                    timeline.
+
+pub mod activation;
+pub mod graph;
+pub mod zoo;
+
+pub use activation::{ActivationPlan, FootprintTimeline};
+pub use graph::{Op, OpGraph, OpKind};
+pub use zoo::GptSpec;

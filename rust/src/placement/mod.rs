@@ -1,0 +1,142 @@
+//! Device-aware operator placement (paper Sec. 8.2, Table 4).
+//!
+//! After the warm-up iteration, the **GPU margin space** is what remains
+//! of GPU memory after the peak non-model footprint and the resident
+//! param fp16 working set.  As many OS chunk groups (param fp32 +
+//! momentum + variance, 12 bytes/elem) as fit are placed in the margin:
+//! their ADAM runs on GPU with no PCIe round trip.  Conversely, if param
+//! fp16 chunks themselves do not fit, the overflow *spills* to CPU and is
+//! streamed in per iteration.  Embedding operators are pinned to the CPU:
+//! moving O(V·H) parameters costs more than moving O(B·S·H) activations.
+
+use crate::model::zoo::GptSpec;
+
+/// Placement decision for one training task (paper Table 4's
+/// margin(+)/spilling(-) row is `os_chunks_on_gpu` / `-spilled_fp16_chunks`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PlacementPlan {
+    /// OS chunk groups resident in GPU margin space.
+    pub os_groups_on_gpu: usize,
+    /// Param fp16 chunks that do NOT fit on GPU during FWD/BWD.
+    pub spilled_fp16_chunks: usize,
+    /// Total fp16 chunks / OS groups, for context.
+    pub total_fp16_chunks: usize,
+    /// Embedding FWD/BWD pinned to CPU.
+    pub embedding_on_cpu: bool,
+}
+
+impl PlacementPlan {
+    /// Paper Table 4 convention: positive = OS groups in margin,
+    /// negative = spilled fp16 chunks.
+    pub fn margin_or_spill(&self) -> i64 {
+        if self.spilled_fp16_chunks > 0 {
+            -(self.spilled_fp16_chunks as i64)
+        } else {
+            self.os_groups_on_gpu as i64
+        }
+    }
+}
+
+/// Compute the placement from warm-up statistics.
+///
+/// * `gpu_capacity`     — total GPU bytes.
+/// * `peak_non_model`   — tracer's peak non-model footprint (Sec. 8.1).
+/// * `chunk_elems`      — chunk size in elements.
+/// * `n_fp16_chunks`    — length of the param fp16 chunk list.
+pub fn plan(
+    gpu_capacity: u64,
+    peak_non_model: u64,
+    chunk_elems: u64,
+    n_fp16_chunks: usize,
+    device_aware: bool,
+) -> PlacementPlan {
+    let fp16_chunk_bytes = 2 * chunk_elems;
+    let os_group_bytes = 12 * chunk_elems; // p32 + momentum + variance
+    let avail = gpu_capacity.saturating_sub(peak_non_model);
+    let fp16_total = fp16_chunk_bytes * n_fp16_chunks as u64;
+    if avail < fp16_total {
+        // Not all param fp16 fits: some chunks stream from CPU each
+        // iteration, and no margin exists for OS.
+        let deficit = fp16_total - avail;
+        let spilled = deficit.div_ceil(fp16_chunk_bytes) as usize;
+        return PlacementPlan {
+            os_groups_on_gpu: 0,
+            spilled_fp16_chunks: spilled.min(n_fp16_chunks),
+            total_fp16_chunks: n_fp16_chunks,
+            embedding_on_cpu: true,
+        };
+    }
+    let margin = avail - fp16_total;
+    let os_groups = if device_aware {
+        ((margin / os_group_bytes) as usize).min(n_fp16_chunks)
+    } else {
+        0 // OSC ablation: OS fixed on CPU
+    };
+    PlacementPlan {
+        os_groups_on_gpu: os_groups,
+        spilled_fp16_chunks: 0,
+        total_fp16_chunks: n_fp16_chunks,
+        embedding_on_cpu: true,
+    }
+}
+
+/// Embedding placement trade-off (paper Sec. 8.2): moving O(V·H) params
+/// vs O(B·S·H) activations.  Returns true when CPU placement moves fewer
+/// bytes.
+pub fn embedding_prefers_cpu(m: &GptSpec, batch: u64) -> bool {
+    let param_bytes = 2 * m.embedding_params();
+    // fwd activation out + bwd grad in, fp16.
+    let act_bytes = 2 * 2 * batch * m.seq * m.hidden;
+    act_bytes < param_bytes
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: u64 = 1 << 30;
+
+    #[test]
+    fn margin_positive_when_room() {
+        // 32 GB GPU, 5 GB non-model, 10 fp16 chunks of 64 MB: margin
+        // hosts (32-5-0.625)GB / 384MB ≈ 70 groups, capped at 10.
+        let p = plan(32 * GB, 5 * GB, 32 << 20, 10, true);
+        assert_eq!(p.spilled_fp16_chunks, 0);
+        assert_eq!(p.os_groups_on_gpu, 10);
+        assert_eq!(p.margin_or_spill(), 10);
+    }
+
+    #[test]
+    fn spilling_when_fp16_exceeds_gpu() {
+        // 8 GB GPU, 6 GB non-model: only 2 GB for fp16; 100 chunks of
+        // 64 MB (6.25 GB) -> 68 spilled.
+        let p = plan(8 * GB, 6 * GB, 32 << 20, 100, true);
+        assert!(p.spilled_fp16_chunks > 0);
+        assert_eq!(p.os_groups_on_gpu, 0);
+        assert_eq!(p.margin_or_spill(), -(p.spilled_fp16_chunks as i64));
+        // Deficit math: need 6400 MB, have 2048 MB -> 4352/64 = 68 chunks.
+        assert_eq!(p.spilled_fp16_chunks, 68);
+    }
+
+    #[test]
+    fn osc_ablation_disables_margin() {
+        let p = plan(32 * GB, 5 * GB, 32 << 20, 10, false);
+        assert_eq!(p.os_groups_on_gpu, 0);
+        assert_eq!(p.spilled_fp16_chunks, 0);
+    }
+
+    #[test]
+    fn embedding_cpu_wins_for_big_vocab() {
+        let m = GptSpec::new("10B", 78, 4096);
+        // V*H = 50257*4096 ≈ 206M params vs B*S*H = 16*1024*4096 ≈ 67M.
+        assert!(embedding_prefers_cpu(&m, 16));
+        // A huge batch flips the trade.
+        assert!(!embedding_prefers_cpu(&m, 16 * 1024));
+    }
+
+    #[test]
+    fn margin_scales_with_non_model() {
+        let at = |nm| plan(32 * GB, nm, 32 << 20, 200, true).os_groups_on_gpu;
+        assert!(at(2 * GB) > at(20 * GB));
+    }
+}

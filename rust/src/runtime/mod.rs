@@ -1,0 +1,259 @@
+//! PJRT runtime: load the AOT artifacts and execute them from rust.
+//!
+//! The bridge follows /opt/xla-example/load_hlo: HLO **text** (emitted by
+//! `python/compile/aot.py`) is parsed by `HloModuleProto::from_text_file`
+//! (which reassigns the 64-bit instruction ids jax >= 0.5 emits and
+//! xla_extension 0.5.1 rejects in proto form), compiled once on the PJRT
+//! CPU client, then executed with `Literal` arguments.  Python never runs
+//! at training time.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::Json;
+
+/// One parameter tensor of the AOT model, from manifest.json.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+    pub embedding: bool,
+}
+
+/// The rust<->python contract emitted next to the artifacts.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub vocab: usize,
+    pub seq: usize,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub batch: usize,
+    pub n_params: usize,
+    pub chunk_elems: usize,
+    pub adam_hp_len: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))
+            .context("parsing manifest.json")?;
+        let model = j.req("model")?;
+        let g = |k: &str| -> Result<usize> {
+            model
+                .req(k)?
+                .as_usize()
+                .ok_or_else(|| anyhow!("model.{k} not a number"))
+        };
+        let params = j
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params not an array"))?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p
+                        .req("name")?
+                        .as_str()
+                        .ok_or_else(|| anyhow!("param name"))?
+                        .to_string(),
+                    shape: p
+                        .req("shape")?
+                        .as_arr()
+                        .ok_or_else(|| anyhow!("param shape"))?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                    numel: p
+                        .req("numel")?
+                        .as_usize()
+                        .ok_or_else(|| anyhow!("param numel"))?,
+                    embedding: p
+                        .get("embedding")
+                        .and_then(|b| b.as_bool())
+                        .unwrap_or(false),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let m = Manifest {
+            vocab: g("vocab")?,
+            seq: g("seq")?,
+            hidden: g("hidden")?,
+            layers: g("layers")?,
+            heads: g("heads")?,
+            batch: g("batch")?,
+            n_params: g("n_params")?,
+            chunk_elems: j
+                .req("chunk_elems")?
+                .as_usize()
+                .ok_or_else(|| anyhow!("chunk_elems"))?,
+            adam_hp_len: j
+                .req("adam_hp_len")?
+                .as_usize()
+                .unwrap_or(8),
+            params,
+        };
+        let total: usize = m.params.iter().map(|p| p.numel).sum();
+        if total != m.n_params {
+            bail!("manifest inconsistent: params sum {total} != n_params {}",
+                  m.n_params);
+        }
+        Ok(m)
+    }
+}
+
+/// Compiled-executable cache over one PJRT CPU client.
+pub struct PjrtRuntime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl PjrtRuntime {
+    /// Load the artifact directory; compiles nothing until first use.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu: {e}"))?;
+        Ok(PjrtRuntime { client, dir, manifest, executables: HashMap::new() })
+    }
+
+    /// Compile (once) and return the named executable, e.g. "train_step".
+    pub fn executable(
+        &mut self,
+        name: &str,
+    ) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.executables.contains_key(name) {
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+            )
+            .map_err(|e| anyhow!("loading {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e}"))?;
+            self.executables.insert(name.to_string(), exe);
+        }
+        Ok(&self.executables[name])
+    }
+
+    /// Execute `name` with literal args; returns the flattened tuple
+    /// elements (aot.py lowers everything with return_tuple=True).
+    ///
+    /// NOTE: we deliberately avoid `PjRtLoadedExecutable::execute`, whose
+    /// C++ shim leaks every input device buffer (`buffer.release()` with
+    /// no matching free — ~1 GB/step on the e2e model, OOM after ~30
+    /// steps).  Instead the input buffers are materialized as rust-owned
+    /// `PjRtBuffer`s (freed on Drop) and passed through `execute_b`.
+    pub fn run(
+        &mut self,
+        name: &str,
+        args: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let mut bufs = Vec::with_capacity(args.len());
+        for lit in args {
+            bufs.push(
+                self.client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("uploading arg for {name}: {e}"))?,
+            );
+        }
+        let exe = self.executable(name)?;
+        let out = exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        drop(bufs); // release input device buffers eagerly
+        let lit = out[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e}"))
+    }
+}
+
+/// f32 slice -> 1-D literal.
+pub fn lit_f32(data: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(data)
+}
+
+/// f32 slice -> literal with shape.
+pub fn lit_f32_shaped(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// i32 slice -> literal with shape.
+pub fn lit_i32_shaped(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e}"))
+}
+
+/// Literal -> Vec<f32>.
+pub fn to_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e}"))
+}
+
+/// Scalar f32 from a literal.
+pub fn scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    let v = to_f32(lit)?;
+    v.first().copied().ok_or_else(|| anyhow!("empty literal"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Manifest parsing against a synthetic manifest (no PJRT needed).
+    #[test]
+    fn manifest_roundtrip() {
+        let dir = std::env::temp_dir().join("ps_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"model": {"vocab": 64, "seq": 8, "hidden": 16,
+                 "layers": 1, "heads": 2, "batch": 1, "use_pallas": true,
+                 "n_params": 30},
+                "params": [
+                 {"name": "wte", "shape": [2, 10], "numel": 20,
+                  "embedding": true},
+                 {"name": "w", "shape": [10], "numel": 10,
+                  "embedding": false}],
+                "chunk_elems": 64, "adam_hp_len": 8,
+                "artifacts": {}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.vocab, 64);
+        assert_eq!(m.params.len(), 2);
+        assert!(m.params[0].embedding);
+        assert_eq!(m.params[1].shape, vec![10]);
+        assert_eq!(m.chunk_elems, 64);
+    }
+
+    #[test]
+    fn manifest_rejects_inconsistent_totals() {
+        let dir = std::env::temp_dir().join("ps_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"model": {"vocab": 1, "seq": 1, "hidden": 1, "layers": 1,
+                 "heads": 1, "batch": 1, "n_params": 999},
+                "params": [{"name": "w", "shape": [10], "numel": 10,
+                            "embedding": false}],
+                "chunk_elems": 64, "adam_hp_len": 8, "artifacts": {}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

@@ -1,0 +1,123 @@
+//! Simulated wall clock with per-phase attribution (paper Fig. 16's time
+//! breakdown categories).
+
+use std::collections::BTreeMap;
+
+/// Where simulated time is spent.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Phase {
+    /// FWD+BWD operator compute.
+    FwdBwd,
+    /// ADAM parameter update compute.
+    Adam,
+    /// Inter-GPU all-gather of param fp16 chunks.
+    AllGather,
+    /// Inter-GPU reduce-scatter of grad fp16 chunks.
+    ReduceScatter,
+    /// CPU->GPU chunk movement during FWD+BWD.
+    CpuToGpu,
+    /// GPU->CPU chunk movement during FWD+BWD (evictions).
+    GpuToCpu,
+    /// CPU<->GPU movement + fp precision conversion around ADAM
+    /// (paper's "gpufp16->cpufp32" / "cpufp32->gpufp16" bars).
+    AdamMove,
+    /// Activation offload traffic (ckpt+offload plan).
+    ActOffload,
+}
+
+impl Phase {
+    pub const ALL: [Phase; 8] = [
+        Phase::FwdBwd,
+        Phase::Adam,
+        Phase::AllGather,
+        Phase::ReduceScatter,
+        Phase::CpuToGpu,
+        Phase::GpuToCpu,
+        Phase::AdamMove,
+        Phase::ActOffload,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::FwdBwd => "fwd+bwd",
+            Phase::Adam => "adam",
+            Phase::AllGather => "allgather",
+            Phase::ReduceScatter => "reduce-scatter",
+            Phase::CpuToGpu => "cpu->gpu",
+            Phase::GpuToCpu => "gpu->cpu",
+            Phase::AdamMove => "adam-move",
+            Phase::ActOffload => "act-offload",
+        }
+    }
+}
+
+/// Accumulating per-phase clock.
+#[derive(Clone, Debug, Default)]
+pub struct SimClock {
+    acc: BTreeMap<Phase, f64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, phase: Phase, secs: f64) {
+        debug_assert!(secs >= 0.0 && secs.is_finite(), "bad time {secs}");
+        *self.acc.entry(phase).or_insert(0.0) += secs;
+    }
+
+    pub fn get(&self, phase: Phase) -> f64 {
+        self.acc.get(&phase).copied().unwrap_or(0.0)
+    }
+
+    pub fn total(&self) -> f64 {
+        self.acc.values().sum()
+    }
+
+    pub fn reset(&mut self) {
+        self.acc.clear();
+    }
+
+    /// (phase, seconds) rows with non-zero time, largest first.
+    pub fn breakdown(&self) -> Vec<(Phase, f64)> {
+        let mut v: Vec<(Phase, f64)> =
+            self.acc.iter().map(|(&p, &t)| (p, t)).collect();
+        v.retain(|&(_, t)| t > 0.0);
+        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_per_phase() {
+        let mut c = SimClock::new();
+        c.add(Phase::FwdBwd, 1.0);
+        c.add(Phase::FwdBwd, 0.5);
+        c.add(Phase::Adam, 0.25);
+        assert_eq!(c.get(Phase::FwdBwd), 1.5);
+        assert_eq!(c.total(), 1.75);
+    }
+
+    #[test]
+    fn breakdown_sorted_desc() {
+        let mut c = SimClock::new();
+        c.add(Phase::Adam, 2.0);
+        c.add(Phase::AllGather, 5.0);
+        c.add(Phase::CpuToGpu, 1.0);
+        let b = c.breakdown();
+        assert_eq!(b[0].0, Phase::AllGather);
+        assert_eq!(b.len(), 3);
+    }
+
+    #[test]
+    #[should_panic]
+    #[cfg(debug_assertions)]
+    fn negative_time_rejected() {
+        SimClock::new().add(Phase::Adam, -1.0);
+    }
+}

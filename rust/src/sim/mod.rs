@@ -1,0 +1,13 @@
+//! Discrete-event cost model for the cluster simulator.
+//!
+//! Calibrated roofline per device (DESIGN.md §1): GEMM ops are
+//! flops-bound at an *achievable* (not peak) rate; memory-intensive ops
+//! (LayerNorm, ADAM) are bandwidth-bound.  Absolute numbers are testbed
+//! translations of the paper's V100/A100 results; the comparisons between
+//! systems depend only on the compute/transfer *ratios*.
+
+pub mod clock;
+pub mod cost;
+
+pub use clock::{Phase, SimClock};
+pub use cost::DeviceProfile;

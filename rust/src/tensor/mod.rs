@@ -1,0 +1,168 @@
+//! Stateful tensors (paper Sec. 6.2, Table 1, Fig. 7).
+//!
+//! Every model-data tensor carries a `TensorState`; a chunk's mobility is
+//! derived from the states of its tensors.  `ps_attr` in the paper's
+//! PyTorch implementation is `TensorInfo` here, owned by the
+//! `ChunkRegistry` rather than hung off a framework tensor.
+
+use thiserror::Error;
+
+/// Dense id for a model-data tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct TensorId(pub u32);
+
+/// Paper Table 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TensorState {
+    /// No payload space.
+    Free,
+    /// Participating in computing on a specific device.
+    Compute,
+    /// Payload must be kept, anywhere in heterogeneous memory.
+    Hold,
+    /// Hold, produced by a FWD release (distinguished so activation
+    /// checkpointing's FWD-inside-BWD cannot be confused with first FWD).
+    HoldAfterFwd,
+    /// Hold, produced by a BWD release (gates reduce-scatter readiness).
+    HoldAfterBwd,
+}
+
+impl TensorState {
+    /// Any of the three HOLD-like states (paper: "HOLD-like").
+    pub fn is_hold_like(&self) -> bool {
+        matches!(
+            self,
+            TensorState::Hold
+                | TensorState::HoldAfterFwd
+                | TensorState::HoldAfterBwd
+        )
+    }
+}
+
+#[derive(Error, Debug, PartialEq)]
+#[error("invalid tensor state transition {from:?} -> {to:?} for tensor {id:?}")]
+pub struct BadTransition {
+    pub id: TensorId,
+    pub from: TensorState,
+    pub to: TensorState,
+}
+
+/// The legal edges of the paper's Fig. 7 state diagram (param fp16), plus
+/// the OS-tensor edges used by the ADAM stage (Sec. 6.2).
+pub fn transition_allowed(from: TensorState, to: TensorState) -> bool {
+    use TensorState::*;
+    matches!(
+        (from, to),
+        // initialization / zero-init access
+        (Free, Hold) | (Free, Compute)
+            // operator access
+            | (Hold, Compute) | (HoldAfterFwd, Compute) | (HoldAfterBwd, Compute)
+            // operator release
+            | (Compute, HoldAfterFwd) | (Compute, HoldAfterBwd) | (Compute, Hold)
+            // end-of-FWD reset / end-of-ADAM reset
+            | (HoldAfterFwd, Hold) | (HoldAfterBwd, Hold)
+            // remote-chunk release / chunk reuse
+            | (HoldAfterFwd, Free) | (HoldAfterBwd, Free) | (Hold, Free)
+    )
+}
+
+/// Per-tensor bookkeeping (the paper's `ps_attr`).
+#[derive(Clone, Debug)]
+pub struct TensorInfo {
+    pub id: TensorId,
+    pub name: String,
+    pub numel: u64,
+    /// Index of the owning chunk in the registry.
+    pub chunk: usize,
+    /// Element offset of this tensor inside the chunk.
+    pub offset: u64,
+    pub state: TensorState,
+    /// Parameters may be shared by multiple operators; a tensor is only
+    /// releasable when its access refcount drains (paper Sec. 6.2).
+    pub ref_count: u32,
+}
+
+impl TensorInfo {
+    /// Validated state transition; returns the previous state.
+    pub fn set_state(
+        &mut self,
+        to: TensorState,
+    ) -> Result<TensorState, BadTransition> {
+        let from = self.state;
+        if from == to {
+            return Ok(from);
+        }
+        if !transition_allowed(from, to) {
+            return Err(BadTransition { id: self.id, from, to });
+        }
+        self.state = to;
+        Ok(from)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::TensorState::*;
+    use super::*;
+
+    fn info() -> TensorInfo {
+        TensorInfo {
+            id: TensorId(0),
+            name: "t".into(),
+            numel: 4,
+            chunk: 0,
+            offset: 0,
+            state: Free,
+            ref_count: 0,
+        }
+    }
+
+    #[test]
+    fn fig7_happy_path() {
+        // init -> FWD access -> FWD release -> reset -> BWD access ->
+        // BWD release -> post-reduce free.
+        let mut t = info();
+        for s in [Hold, Compute, HoldAfterFwd, Hold, Compute, HoldAfterBwd,
+                  Free] {
+            t.set_state(s).unwrap();
+        }
+    }
+
+    #[test]
+    fn checkpoint_recompute_path() {
+        // During BWD, activation checkpointing re-runs FWD between two
+        // checkpoints: HOLD_AFTER_FWD must be directly accessible.
+        let mut t = info();
+        t.set_state(Hold).unwrap();
+        t.set_state(Compute).unwrap();
+        t.set_state(HoldAfterFwd).unwrap();
+        t.set_state(Compute).unwrap(); // recompute FWD inside BWD
+        t.set_state(HoldAfterBwd).unwrap();
+    }
+
+    #[test]
+    fn illegal_edges_rejected() {
+        let mut t = info();
+        t.set_state(Hold).unwrap();
+        // HOLD cannot jump to HOLD_AFTER_BWD without computing.
+        assert!(t.set_state(HoldAfterBwd).is_err());
+        // FREE cannot go straight to HOLD_AFTER_FWD.
+        let mut t2 = info();
+        assert!(t2.set_state(HoldAfterFwd).is_err());
+    }
+
+    #[test]
+    fn self_transition_is_noop() {
+        let mut t = info();
+        assert_eq!(t.set_state(Free).unwrap(), Free);
+    }
+
+    #[test]
+    fn hold_like_classification() {
+        assert!(Hold.is_hold_like());
+        assert!(HoldAfterFwd.is_hold_like());
+        assert!(HoldAfterBwd.is_hold_like());
+        assert!(!Free.is_hold_like());
+        assert!(!Compute.is_hold_like());
+    }
+}

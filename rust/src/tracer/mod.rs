@@ -1,0 +1,190 @@
+//! Runtime memory tracer (paper Sec. 8.1, Fig. 11).
+//!
+//! A **moment** is the start or finish of an operator.  During a warm-up
+//! iteration the tracer records, per moment, the real GPU memory in use
+//! `R` and the chunkable memory `C` it granted; non-model footprint is
+//! `R - C`.  It also records the list of moments at which each chunk is
+//! used.  After warm-up, the schedule repeats (PTM iterations are
+//! structurally identical), so:
+//!
+//! * `chunkable_gpu(moment)` = GPU capacity − non-model(moment) bounds how
+//!   much chunk payload may sit on the GPU at that moment, and
+//! * the per-chunk moment lists feed the OPT eviction policy (Sec. 8.3).
+//!
+//! During warm-up itself only `warmup_gpu_frac` (default 20%) of GPU
+//! memory is granted to chunks and eviction falls back to chunk-list
+//! order (paper: "it simply evicts chunks in the order of the chunk
+//! list").
+
+use crate::chunk::ChunkId;
+
+pub type Moment = u32;
+
+/// Default conservative GPU fraction for chunks during warm-up.
+pub const WARMUP_GPU_FRAC: f64 = 0.20;
+
+#[derive(Clone, Debug, Default)]
+pub struct MemTracer {
+    /// Non-model GPU bytes per moment, recorded in warm-up.
+    non_model: Vec<u64>,
+    /// Moments at which each chunk is accessed (sorted, by construction).
+    chunk_moments: Vec<Vec<Moment>>,
+    /// Total moments in one iteration.
+    pub n_moments: Moment,
+    pub warmed_up: bool,
+}
+
+impl MemTracer {
+    pub fn new(n_chunks: usize) -> Self {
+        MemTracer {
+            non_model: Vec::new(),
+            chunk_moments: vec![Vec::new(); n_chunks],
+            n_moments: 0,
+            warmed_up: false,
+        }
+    }
+
+    // ------------------------------------------------------ warm-up phase
+
+    /// Record the non-model footprint at the current moment and advance
+    /// the moment counter.  Returns the moment just recorded.
+    pub fn record_moment(&mut self, non_model_bytes: u64) -> Moment {
+        let m = self.n_moments;
+        self.non_model.push(non_model_bytes);
+        self.n_moments += 1;
+        m
+    }
+
+    /// Record that `chunk` is needed at moment `m` (access during warm-up).
+    pub fn record_chunk_use(&mut self, chunk: ChunkId, m: Moment) {
+        let v = &mut self.chunk_moments[chunk.0 as usize];
+        if v.last() != Some(&m) {
+            v.push(m);
+        }
+    }
+
+    pub fn finish_warmup(&mut self) {
+        self.warmed_up = true;
+    }
+
+    // ------------------------------------------------------ steady state
+
+    /// Non-model footprint at a moment of the steady-state iteration.
+    pub fn non_model_at(&self, m: Moment) -> u64 {
+        if self.non_model.is_empty() {
+            return 0;
+        }
+        self.non_model[(m as usize).min(self.non_model.len() - 1)]
+    }
+
+    /// Peak non-model footprint across the iteration (defines the GPU
+    /// margin space for OS chunks, Sec. 8.2).
+    pub fn peak_non_model(&self) -> u64 {
+        self.non_model.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Chunkable GPU bytes at moment `m` given total GPU capacity.
+    /// Before warm-up completes this is the conservative 20% grant.
+    pub fn chunkable_gpu(&self, gpu_capacity: u64, m: Moment) -> u64 {
+        if !self.warmed_up {
+            return (gpu_capacity as f64 * WARMUP_GPU_FRAC) as u64;
+        }
+        gpu_capacity.saturating_sub(self.non_model_at(m))
+    }
+
+    /// Next moment >= `now` at which `chunk` is used; None if never again
+    /// this iteration.  O(log T) binary search (paper Sec. 8.3).
+    pub fn next_use(&self, chunk: ChunkId, now: Moment) -> Option<Moment> {
+        let v = &self.chunk_moments[chunk.0 as usize];
+        let i = v.partition_point(|&m| m < now);
+        v.get(i).copied()
+    }
+
+    pub fn moments_of(&self, chunk: ChunkId) -> &[Moment] {
+        &self.chunk_moments[chunk.0 as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::quickcheck::forall;
+
+    #[test]
+    fn warmup_grant_is_20_pct() {
+        let t = MemTracer::new(4);
+        assert_eq!(t.chunkable_gpu(1000, 0), 200);
+    }
+
+    #[test]
+    fn chunkable_is_capacity_minus_non_model() {
+        let mut t = MemTracer::new(1);
+        t.record_moment(300);
+        t.record_moment(700);
+        t.finish_warmup();
+        assert_eq!(t.chunkable_gpu(1000, 0), 700);
+        assert_eq!(t.chunkable_gpu(1000, 1), 300);
+        // Past-the-end moments clamp to the last recorded footprint.
+        assert_eq!(t.chunkable_gpu(1000, 99), 300);
+        assert_eq!(t.peak_non_model(), 700);
+    }
+
+    #[test]
+    fn saturating_when_non_model_exceeds_gpu() {
+        let mut t = MemTracer::new(1);
+        t.record_moment(2000);
+        t.finish_warmup();
+        assert_eq!(t.chunkable_gpu(1000, 0), 0);
+    }
+
+    #[test]
+    fn next_use_binary_search() {
+        let mut t = MemTracer::new(2);
+        for m in [2u32, 5, 9] {
+            t.record_chunk_use(ChunkId(0), m);
+        }
+        t.finish_warmup();
+        assert_eq!(t.next_use(ChunkId(0), 0), Some(2));
+        assert_eq!(t.next_use(ChunkId(0), 2), Some(2));
+        assert_eq!(t.next_use(ChunkId(0), 3), Some(5));
+        assert_eq!(t.next_use(ChunkId(0), 10), None);
+        assert_eq!(t.next_use(ChunkId(1), 0), None);
+    }
+
+    #[test]
+    fn duplicate_moment_dedup() {
+        let mut t = MemTracer::new(1);
+        t.record_chunk_use(ChunkId(0), 3);
+        t.record_chunk_use(ChunkId(0), 3);
+        assert_eq!(t.moments_of(ChunkId(0)), &[3]);
+    }
+
+    #[test]
+    fn property_next_use_is_minimal_geq_now() {
+        forall(
+            100,
+            |rng| {
+                let n = rng.range(1, 30);
+                let mut ms: Vec<Moment> =
+                    (0..n).map(|_| rng.range(0, 100) as Moment).collect();
+                ms.sort_unstable();
+                ms.dedup();
+                let now = rng.range(0, 110) as Moment;
+                (ms, now)
+            },
+            |(ms, now)| {
+                let mut t = MemTracer::new(1);
+                for &m in ms {
+                    t.record_chunk_use(ChunkId(0), m);
+                }
+                let got = t.next_use(ChunkId(0), *now);
+                let want = ms.iter().copied().filter(|&m| m >= *now).min();
+                if got == want {
+                    Ok(())
+                } else {
+                    Err(format!("next_use({now}) = {got:?}, want {want:?}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,15 @@
+//! Real end-to-end training: the chunk manager orchestrates actual
+//! parameter memory while JAX-lowered HLO (with the Pallas kernels
+//! inside) executes on the PJRT CPU client.
+//!
+//! This is the proof that the three layers compose (DESIGN.md §5 E2E):
+//! rust owns every byte of model data in chunks, streams them through the
+//! same Access/Release protocol the simulator uses, reuses param fp16
+//! chunks for gradients (paper Fig. 6), and updates parameters
+//! chunk-by-chunk with the Pallas fused-ADAM executable.
+
+pub mod data;
+pub mod trainer;
+
+pub use data::SyntheticCorpus;
+pub use trainer::{Trainer, TrainerConfig, TrainReport};

@@ -1,0 +1,497 @@
+//! The chunk-managed trainer over the PJRT runtime.
+//!
+//! Model data layout exactly follows the paper: four chunk lists (param
+//! fp16 / param fp32 / momentum / variance) built from the manifest's
+//! parameter order; gradients reuse the param fp16 chunks (Fig. 6);
+//! embeddings live in dedicated CPU buffers (Sec. 8.2) updated with the
+//! same Pallas ADAM executable.
+//!
+//! "GPU" here is a capacity-accounted pool (DESIGN.md §1): chunks must be
+//! resident in it to feed the executable, evictions really happen (LRU)
+//! and are really counted — the orchestration path is identical to a
+//! CUDA deployment; only the arithmetic runs on the host through PJRT.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::chunk::{ChunkKind, ChunkManager, ChunkRegistry, TensorSpec};
+use crate::evict::LruPolicy;
+use crate::mem::{Device, HeterogeneousSpace};
+use crate::runtime::{lit_f32, lit_f32_shaped, lit_i32_shaped, scalar_f32,
+                     to_f32, PjrtRuntime};
+use crate::tensor::TensorState;
+use crate::train::data::SyntheticCorpus;
+use crate::util::rng::Rng;
+
+/// ADAM + memory-budget configuration for the e2e run.
+#[derive(Clone, Debug)]
+pub struct TrainerConfig {
+    pub artifacts_dir: String,
+    /// Simulated GPU chunk capacity in bytes (small by default so chunk
+    /// eviction actually happens on the e2e path).
+    pub gpu_bytes: u64,
+    pub cpu_bytes: u64,
+    pub lr: f32,
+    pub weight_decay: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainerConfig {
+    fn default() -> Self {
+        TrainerConfig {
+            artifacts_dir: "artifacts".into(),
+            gpu_bytes: 6 << 20,
+            cpu_bytes: 2 << 30,
+            lr: 1e-3,
+            weight_decay: 0.01,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-run telemetry.
+#[derive(Clone, Debug, Default)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    pub step_secs: Vec<f64>,
+    pub evictions: u64,
+    pub cpu_to_gpu_bytes: u64,
+    pub gpu_to_cpu_bytes: u64,
+}
+
+/// Embedding parameter state (CPU-pinned, unmanaged by chunks).
+struct EmbState {
+    /// Kept for debugging/telemetry parity with the chunked tensors.
+    #[allow(dead_code)]
+    name: String,
+    p32: Vec<f32>,
+    m: Vec<f32>,
+    v: Vec<f32>,
+    grad: Vec<f32>,
+    #[allow(dead_code)]
+    shape: Vec<usize>,
+}
+
+pub struct Trainer {
+    pub rt: PjrtRuntime,
+    pub mgr: ChunkManager,
+    policy: LruPolicy,
+    emb: Vec<EmbState>,
+    /// manifest param index -> Some(non-embedding ordinal) or None (emb).
+    param_map: Vec<Option<usize>>,
+    step_count: u64,
+    cfg: TrainerConfig,
+    now: u32,
+}
+
+impl Trainer {
+    pub fn new(cfg: TrainerConfig) -> Result<Self> {
+        let rt = PjrtRuntime::load(Path::new(&cfg.artifacts_dir))
+            .context("loading artifacts")?;
+        let man = rt.manifest.clone();
+
+        // Chunk layout from the manifest (the python side guarantees
+        // chunk_elems fits the largest non-embedding tensor).
+        let specs: Vec<TensorSpec> = man
+            .params
+            .iter()
+            .map(|p| TensorSpec {
+                name: p.name.clone(),
+                numel: p.numel as u64,
+                embedding: p.embedding,
+            })
+            .collect();
+        let reg = ChunkRegistry::build(&specs, man.chunk_elems as u64)?;
+        let space = HeterogeneousSpace::new(cfg.gpu_bytes, cfg.cpu_bytes);
+        let mut mgr = ChunkManager::new(reg, space).with_real_payloads();
+
+        // Parameter initialization (GPT-2 style), chunk-resident on CPU.
+        let mut rng = Rng::new(cfg.seed ^ 0x9ead);
+        let mut param_map = Vec::with_capacity(man.params.len());
+        let mut emb = Vec::new();
+        let mut ordinal = 0usize;
+        for p in &man.params {
+            if p.embedding {
+                let mut p32 = vec![0.0f32; p.numel];
+                for x in &mut p32 {
+                    *x = rng.normal_f32(0.02);
+                }
+                emb.push(EmbState {
+                    name: p.name.clone(),
+                    m: vec![0.0; p.numel],
+                    v: vec![0.0; p.numel],
+                    grad: vec![0.0; p.numel],
+                    p32,
+                    shape: p.shape.clone(),
+                });
+                param_map.push(None);
+            } else {
+                param_map.push(Some(ordinal));
+                ordinal += 1;
+            }
+        }
+        let n_model = ordinal;
+
+        // Materialize all four lists on CPU and fill initial values.
+        let residual_scale = 0.02 / (2.0 * man.layers as f32).sqrt();
+        for kind in [ChunkKind::ParamFp16, ChunkKind::ParamFp32,
+                     ChunkKind::Momentum, ChunkKind::Variance] {
+            for id in mgr.reg.list(kind) {
+                mgr.alloc_payload(id, Device::Cpu)?;
+            }
+        }
+        for i in 0..n_model {
+            let info = mgr.reg.tensor(ChunkKind::ParamFp32, i).clone();
+            let chunk_id =
+                crate::chunk::ChunkId(info.chunk as u32);
+            let name = &info.name;
+            let init: Box<dyn Fn(&mut Rng) -> f32> =
+                if name.ends_with(".g") {
+                    Box::new(|_| 1.0)
+                } else if name.ends_with(".b")
+                    || name.ends_with(".bqkv")
+                    || name.ends_with(".bi")
+                    || name.ends_with(".bo")
+                {
+                    Box::new(|_| 0.0)
+                } else if name.ends_with("attn.wo")
+                    || name.ends_with("mlp.wo")
+                {
+                    Box::new(move |r| r.normal_f32(residual_scale))
+                } else {
+                    Box::new(|r| r.normal_f32(0.02))
+                };
+            let (off, n) = (info.offset as usize, info.numel as usize);
+            let buf = mgr
+                .payload_mut(chunk_id)
+                .ok_or_else(|| anyhow!("missing payload"))?;
+            for x in &mut buf[off..off + n] {
+                *x = init(&mut rng);
+            }
+            // fp32 master initialized -> HOLD.
+            let ti = mgr.reg.tensor_index(ChunkKind::ParamFp32, i);
+            mgr.reg.tensors[ti]
+                .set_state(TensorState::Hold)
+                .map_err(|e| anyhow!(e))?;
+        }
+        // Copy fp32 master -> fp16 working copy (same f32 storage; the
+        // fp16-ness is accounting-only, DESIGN.md §1).
+        for pos in 0..mgr.reg.list(ChunkKind::ParamFp16).len() {
+            let p16 = mgr.reg.list(ChunkKind::ParamFp16)[pos];
+            let p32 = mgr.reg.os_chunks_for(p16)[0];
+            let src = mgr.payload(p32).unwrap().to_vec();
+            mgr.payload_mut(p16).unwrap().copy_from_slice(&src);
+        }
+        for i in 0..n_model {
+            for kind in [ChunkKind::ParamFp16, ChunkKind::Momentum,
+                         ChunkKind::Variance] {
+                let ti = mgr.reg.tensor_index(kind, i);
+                mgr.reg.tensors[ti]
+                    .set_state(TensorState::Hold)
+                    .map_err(|e| anyhow!(e))?;
+            }
+        }
+
+        Ok(Trainer {
+            rt,
+            mgr,
+            policy: LruPolicy::default(),
+            emb,
+            param_map,
+            step_count: 0,
+            cfg,
+            now: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &crate::runtime::Manifest {
+        &self.rt.manifest
+    }
+
+    pub fn corpus(&self, seed: u64) -> SyntheticCorpus {
+        let m = self.manifest();
+        SyntheticCorpus::new(m.vocab, m.seq, m.batch, seed)
+    }
+
+    // ------------------------------------------------------------ helpers
+
+    /// Gather the flat parameter literal list (tokens first) for
+    /// train_step / eval_loss.  Each fp16 chunk is fetched to the GPU
+    /// pool through Algorithm 1, its tensor payload copied out to the
+    /// executable's argument literal, then released to HOLD_AFTER_FWD so
+    /// the chunk may be evicted while later chunks stream through — the
+    /// paper's per-operator streaming, compressed around a monolithic
+    /// AOT step function.
+    fn param_literals(&mut self) -> Result<Vec<xla::Literal>> {
+        let man = self.rt.manifest.clone();
+        let mut lits = Vec::with_capacity(man.params.len());
+        let mut ei = 0usize;
+        for (pi, p) in man.params.iter().enumerate() {
+            match self.param_map[pi] {
+                None => {
+                    // Embedding: CPU-pinned buffer, no chunk traffic.
+                    lits.push(lit_f32_shaped(&self.emb[ei].p32, &p.shape)?);
+                    ei += 1;
+                }
+                Some(i) => {
+                    self.now += 1;
+                    let now = self.now;
+                    self.mgr.access_tensor(
+                        ChunkKind::ParamFp16, i, Device::Gpu(0),
+                        &mut self.policy, now,
+                    )?;
+                    let info = self.mgr.reg.tensor(ChunkKind::ParamFp16, i);
+                    let (chunk, off, n) = (
+                        crate::chunk::ChunkId(info.chunk as u32),
+                        info.offset as usize,
+                        info.numel as usize,
+                    );
+                    let buf = self
+                        .mgr
+                        .payload(chunk)
+                        .ok_or_else(|| anyhow!("no payload"))?;
+                    lits.push(lit_f32_shaped(&buf[off..off + n], &p.shape)?);
+                    self.mgr.release_tensor(
+                        ChunkKind::ParamFp16, i, TensorState::HoldAfterFwd,
+                    )?;
+                }
+            }
+        }
+        Ok(lits)
+    }
+
+    /// One full training step: fwd+bwd via `train_step`, grads written
+    /// into the param fp16 chunks, chunk-wise Pallas ADAM, fp32->fp16
+    /// writeback.  Returns the loss.
+    ///
+    /// Set PS_TRACE=1 for a per-phase wall-time trace (perf pass,
+    /// EXPERIMENTS.md §Perf).
+    pub fn step(&mut self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let trace = std::env::var_os("PS_TRACE").is_some();
+        let mut mark = std::time::Instant::now();
+        let mut lap = |label: &str| {
+            if trace {
+                eprintln!("  [trace] {label}: {:.3}s",
+                          mark.elapsed().as_secs_f64());
+            }
+            mark = std::time::Instant::now();
+        };
+        let man = self.rt.manifest.clone();
+        let (b, s) = (man.batch, man.seq);
+        if tokens.len() != b * s || targets.len() != b * s {
+            bail!("batch shape mismatch: {} != {}", tokens.len(), b * s);
+        }
+
+        // ---- FWD+BWD --------------------------------------------------
+        let mut args = vec![
+            lit_i32_shaped(tokens, &[b, s])?,
+            lit_i32_shaped(targets, &[b, s])?,
+        ];
+        args.extend(self.param_literals()?);
+        lap("param literals");
+        let out = self.rt.run("train_step", &args)?;
+        lap("train_step exec");
+        if out.len() != 1 + man.params.len() {
+            bail!("train_step returned {} values", out.len());
+        }
+        let loss = scalar_f32(&out[0])?;
+
+        // ---- write grads: embeddings to their buffers, the rest into
+        // the param fp16 chunks (grad reuses param chunk, Fig. 6).  Each
+        // tensor is re-accessed (HOLD_AFTER_FWD -> COMPUTE, the BWD leg
+        // of Fig. 7), the grad lands over the parameter payload, and the
+        // tensor settles in HOLD_AFTER_BWD — chunks stream through the
+        // GPU pool one group at a time.
+        let mut ei = 0usize;
+        for (pi, _p) in man.params.iter().enumerate() {
+            let g = to_f32(&out[1 + pi])?;
+            match self.param_map[pi] {
+                None => {
+                    self.emb[ei].grad.copy_from_slice(&g);
+                    ei += 1;
+                }
+                Some(i) => {
+                    self.now += 1;
+                    let now = self.now;
+                    self.mgr.access_tensor(
+                        ChunkKind::ParamFp16, i, Device::Gpu(0),
+                        &mut self.policy, now,
+                    )?;
+                    let info = self.mgr.reg.tensor(ChunkKind::ParamFp16, i);
+                    let (chunk, off, n) = (
+                        crate::chunk::ChunkId(info.chunk as u32),
+                        info.offset as usize,
+                        info.numel as usize,
+                    );
+                    let buf = self
+                        .mgr
+                        .payload_mut(chunk)
+                        .ok_or_else(|| anyhow!("no payload"))?;
+                    buf[off..off + n].copy_from_slice(&g);
+                    self.mgr.release_tensor(
+                        ChunkKind::ParamFp16, i, TensorState::HoldAfterBwd,
+                    )?;
+                }
+            }
+        }
+
+        lap("grad writeback");
+
+        // ---- chunk-wise ADAM (Pallas kernel) ---------------------------
+        self.step_count += 1;
+        let hp = self.make_hp();
+        let chunk_elems = man.chunk_elems;
+        let fp16_list = self.mgr.reg.list(ChunkKind::ParamFp16);
+        for p16 in fp16_list {
+            let [p32, mom, var] = self.mgr.reg.os_chunks_for(p16);
+            // ADAM runs on CPU: bring the grad chunk home (Sec. 8.2 OSC
+            // default; the margin optimization lives in the simulator).
+            self.now += 1;
+            let now = self.now;
+            self.mgr.ensure_on(p16, Device::Cpu, &mut self.policy, now)?;
+            let getv = |mgrr: &ChunkManager, id| -> Result<Vec<f32>> {
+                Ok(mgrr
+                    .payload(id)
+                    .ok_or_else(|| anyhow!("payload missing"))?
+                    .to_vec())
+            };
+            let (pv, mv, vv, gv) = (
+                getv(&self.mgr, p32)?,
+                getv(&self.mgr, mom)?,
+                getv(&self.mgr, var)?,
+                getv(&self.mgr, p16)?,
+            );
+            debug_assert_eq!(pv.len(), chunk_elems);
+            let out = self.rt.run(
+                "adam_step",
+                &[lit_f32(&hp), lit_f32(&pv), lit_f32(&mv), lit_f32(&vv),
+                  lit_f32(&gv)],
+            )?;
+            if out.len() != 3 {
+                bail!("adam_step returned {} values", out.len());
+            }
+            let (np, nm, nv) =
+                (to_f32(&out[0])?, to_f32(&out[1])?, to_f32(&out[2])?);
+            self.mgr.payload_mut(p32).unwrap().copy_from_slice(&np);
+            self.mgr.payload_mut(mom).unwrap().copy_from_slice(&nm);
+            self.mgr.payload_mut(var).unwrap().copy_from_slice(&nv);
+            // fp32 master -> fp16 working copy for the next iteration.
+            self.mgr.payload_mut(p16).unwrap().copy_from_slice(&np);
+            // Grad consumed; params back to HOLD.
+            let tensors = self.mgr.chunk(p16).tensors.clone();
+            for t in tensors {
+                let i = t.0 as usize % self.mgr.reg.n_model_tensors;
+                let ti = self.mgr.reg.tensor_index(ChunkKind::ParamFp16, i);
+                if self.mgr.reg.tensors[ti].state
+                    == TensorState::HoldAfterBwd
+                {
+                    self.mgr.reg.tensors[ti]
+                        .set_state(TensorState::Hold)
+                        .map_err(|e| anyhow!(e))?;
+                }
+            }
+        }
+
+        lap("chunk adam");
+
+        // ---- embedding ADAM over padded chunk-size slices --------------
+        for e in 0..self.emb.len() {
+            self.adam_embedding(e, &hp, chunk_elems)?;
+        }
+        lap("embedding adam");
+        self.mgr.drain_events();
+        Ok(loss)
+    }
+
+    fn make_hp(&self) -> Vec<f32> {
+        let mut hp = vec![0.0f32; self.rt.manifest.adam_hp_len];
+        hp[0] = self.cfg.lr;
+        hp[1] = 0.9;
+        hp[2] = 0.999;
+        hp[3] = 1e-8;
+        hp[4] = self.cfg.weight_decay;
+        hp[5] = self.step_count as f32;
+        hp
+    }
+
+    fn adam_embedding(
+        &mut self,
+        e: usize,
+        hp: &[f32],
+        chunk_elems: usize,
+    ) -> Result<()> {
+        let n = self.emb[e].p32.len();
+        let padded = n.div_ceil(chunk_elems) * chunk_elems;
+        let slab = |src: &[f32]| {
+            let mut v = src.to_vec();
+            v.resize(padded, 0.0);
+            v
+        };
+        let (p, m, v, g) = (
+            slab(&self.emb[e].p32),
+            slab(&self.emb[e].m),
+            slab(&self.emb[e].v),
+            slab(&self.emb[e].grad),
+        );
+        for c in 0..(padded / chunk_elems) {
+            let r = c * chunk_elems..(c + 1) * chunk_elems;
+            let out = self.rt.run(
+                "adam_step",
+                &[lit_f32(hp), lit_f32(&p[r.clone()]), lit_f32(&m[r.clone()]),
+                  lit_f32(&v[r.clone()]), lit_f32(&g[r.clone()])],
+            )?;
+            let (np, nm, nv) =
+                (to_f32(&out[0])?, to_f32(&out[1])?, to_f32(&out[2])?);
+            let hi = ((c + 1) * chunk_elems).min(n);
+            if c * chunk_elems < n {
+                let w = hi - c * chunk_elems;
+                self.emb[e].p32[c * chunk_elems..hi]
+                    .copy_from_slice(&np[..w]);
+                self.emb[e].m[c * chunk_elems..hi].copy_from_slice(&nm[..w]);
+                self.emb[e].v[c * chunk_elems..hi].copy_from_slice(&nv[..w]);
+            }
+        }
+        Ok(())
+    }
+
+    /// Held-out loss with the current parameters (no grads, no update).
+    pub fn eval(&mut self, tokens: &[i32], targets: &[i32]) -> Result<f32> {
+        let man = self.rt.manifest.clone();
+        let (b, s) = (man.batch, man.seq);
+        let mut args = vec![
+            lit_i32_shaped(tokens, &[b, s])?,
+            lit_i32_shaped(targets, &[b, s])?,
+        ];
+        args.extend(self.param_literals()?);
+        let out = self.rt.run("eval_loss", &args)?;
+        // param_literals left everything HOLD_AFTER_FWD; reset to HOLD
+        // (the paper's end-of-FWD reset).
+        self.mgr.reset_after_fwd(ChunkKind::ParamFp16)?;
+        scalar_f32(&out[0])
+    }
+
+    /// Run `steps` steps over a fresh corpus; returns the loss curve.
+    pub fn train(&mut self, steps: usize, log_every: usize)
+        -> Result<TrainReport> {
+        let mut corpus = self.corpus(self.cfg.seed);
+        let mut report = TrainReport::default();
+        for step in 0..steps {
+            let (toks, tgts) = corpus.next_batch();
+            let t0 = std::time::Instant::now();
+            let loss = self.step(&toks, &tgts)?;
+            report.step_secs.push(t0.elapsed().as_secs_f64());
+            report.losses.push(loss);
+            if log_every > 0 && step % log_every == 0 {
+                eprintln!(
+                    "step {step:4}  loss {loss:.4}  ({:.2}s)",
+                    report.step_secs.last().unwrap()
+                );
+            }
+        }
+        report.evictions = self.mgr.stats.evictions;
+        report.cpu_to_gpu_bytes = self.mgr.stats.cpu_to_gpu_bytes;
+        report.gpu_to_cpu_bytes = self.mgr.stats.gpu_to_cpu_bytes;
+        Ok(report)
+    }
+}

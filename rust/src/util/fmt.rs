@@ -1,0 +1,120 @@
+//! Formatting helpers: human-readable byte sizes and aligned text tables
+//! (the bench harness prints paper tables/figures as text rows).
+
+/// "1.5 GB", "240.0 MB", "312 B".
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut v = bytes as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{bytes} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// "1.23 s", "45.6 ms", "789 us".
+pub fn human_time(secs: f64) -> String {
+    if secs >= 1.0 {
+        format!("{secs:.3} s")
+    } else if secs >= 1e-3 {
+        format!("{:.2} ms", secs * 1e3)
+    } else {
+        format!("{:.0} us", secs * 1e6)
+    }
+}
+
+/// Minimal aligned-column table printer.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str("| ");
+                out.push_str(c);
+                out.push_str(&" ".repeat(width[i] - c.len() + 1));
+            }
+            out.push_str("|\n");
+        };
+        line(&mut out, &self.header);
+        for (i, w) in width.iter().enumerate() {
+            out.push_str(if i == 0 { "|" } else { "|" });
+            out.push_str(&"-".repeat(w + 2));
+        }
+        out.push_str("|\n");
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_units() {
+        assert_eq!(human_bytes(42), "42 B");
+        assert_eq!(human_bytes(2048), "2.00 KB");
+        assert_eq!(human_bytes(240 * (1 << 30)), "240.00 GB");
+    }
+
+    #[test]
+    fn time_units() {
+        assert_eq!(human_time(1.5), "1.500 s");
+        assert_eq!(human_time(0.0123), "12.30 ms");
+        assert_eq!(human_time(12e-6), "12 us");
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["model", "tflops"]);
+        t.row(vec!["1B".into(), "47.1".into()]);
+        t.row(vec!["18B".into(), "419".into()]);
+        let s = t.render();
+        assert!(s.contains("| model | tflops |"));
+        assert!(s.lines().count() == 4);
+        // All rows render to equal width.
+        let widths: Vec<usize> = s.lines().map(|l| l.len()).collect();
+        assert!(widths.windows(2).all(|w| w[0] == w[1]));
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn table_rejects_bad_row() {
+        Table::new(&["a"]).row(vec!["x".into(), "y".into()]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Self-contained utilities.
+//!
+//! The offline crate cache lacks serde/clap/criterion/proptest/rand, so this
+//! module hand-rolls the small slices of each that the project needs (see
+//! DESIGN.md §6.6): a JSON value + parser/writer, a deterministic SplitMix64
+//! PRNG, a proptest-style randomized invariant harness, and formatting
+//! helpers for the bench tables.
+
+pub mod fmt;
+pub mod json;
+pub mod quickcheck;
+pub mod rng;
+
+pub use fmt::{human_bytes, Table};
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,97 @@
+//! proptest-lite: a randomized invariant harness (proptest itself is not in
+//! the offline crate cache — DESIGN.md §6.6).
+//!
+//! Usage:
+//! ```ignore
+//! forall(200, |rng| gen_case(rng), |case| check_invariant(case));
+//! ```
+//! Each failing case is reported with its seed so it can be replayed with
+//! `replay(seed, gen, prop)`.
+
+use super::rng::Rng;
+
+/// Run `prop` on `n` random cases drawn by `gen`.  Panics with the
+/// offending seed on the first failure.  Base seed is fixed for
+/// reproducibility; set `PATRICKSTAR_QC_SEED` to explore other universes.
+pub fn forall<T, G, P>(n: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let base = std::env::var("PATRICKSTAR_QC_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    for i in 0..n {
+        let seed = base.wrapping_add(i as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property failed (case {i}, seed {seed:#x}):\n  {msg}\n  \
+                 case: {case:?}"
+            );
+        }
+    }
+}
+
+/// Replay a single failing seed printed by `forall`.
+pub fn replay<T, G, P>(seed: u64, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    let case = gen(&mut rng);
+    if let Err(msg) = prop(&case) {
+        panic!("replay failed (seed {seed:#x}): {msg}\ncase: {case:?}");
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        forall(
+            100,
+            |rng| rng.range(0, 1000),
+            |&x| {
+                if x < 1000 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} out of range"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        forall(
+            100,
+            |rng| rng.range(0, 10),
+            |&x| {
+                if x < 5 {
+                    Ok(())
+                } else {
+                    Err("too big".into())
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,320 @@
+//! Integration tests across the simulator stack: engine + baselines +
+//! scale + collectives + config, exercising whole-system behaviours the
+//! unit tests cannot.
+
+use patrickstar::baselines::run_system;
+use patrickstar::config::{ClusterPreset, SystemKind, TrainTask};
+use patrickstar::dp::{CollectiveCost, RealCollectives};
+use patrickstar::engine::{Engine, EvictKind, OptimizationPlan};
+use patrickstar::model::{ActivationPlan, GptSpec};
+use patrickstar::scale::max_model_scale;
+use patrickstar::sim::Phase;
+use patrickstar::util::quickcheck::forall;
+use patrickstar::util::Json;
+
+fn yard_task(model: &str, batch: u64, gpus: u32) -> TrainTask {
+    TrainTask::new(GptSpec::by_name(model).unwrap(), batch, gpus)
+}
+
+// ---------------------------------------------------------------------
+// Headline shapes (paper Sec. 9.2)
+// ---------------------------------------------------------------------
+
+#[test]
+fn paper_headline_yard_scale_ratios() {
+    // Fig. 13 YARD 8 GPUs: PatrickStar 18B vs DeepSpeed-DP 4B (>=3x),
+    // PyTorch 1B (>=12x).
+    let ps = max_model_scale(SystemKind::PatrickStar,
+                             ClusterPreset::yard(), 8).unwrap();
+    let ds = max_model_scale(SystemKind::DeepSpeedDp,
+                             ClusterPreset::yard(), 8).unwrap();
+    let pt = max_model_scale(SystemKind::PyTorchDdp,
+                             ClusterPreset::yard(), 8).unwrap();
+    let n = |p: &patrickstar::scale::Probe| {
+        GptSpec::by_name(p.model).unwrap().n_params()
+    };
+    assert_eq!(ps.model, "18B");
+    assert!(n(&ps) >= 3 * n(&ds), "PS {} vs DS {}", ps.model, ds.model);
+    assert!(n(&ps) >= 12 * n(&pt), "PS {} vs PT {}", ps.model, pt.model);
+}
+
+#[test]
+fn paper_headline_superpod_scale_ratios() {
+    // Fig. 13 SuperPod 8 GPUs: PatrickStar 68B ~ 2.27x DeepSpeed 30B.
+    let ps = max_model_scale(SystemKind::PatrickStar,
+                             ClusterPreset::superpod(), 8).unwrap();
+    let ds = max_model_scale(SystemKind::DeepSpeedDp,
+                             ClusterPreset::superpod(), 8).unwrap();
+    assert_eq!(ps.model, "68B");
+    assert_eq!(ds.model, "30B");
+}
+
+#[test]
+fn patrickstar_throughput_beats_deepspeed_across_models() {
+    // Figs. 14/15: PatrickStar >= DeepSpeed-DP wherever both run.
+    for model in ["1B", "2B", "4B"] {
+        for gpus in [1u32, 8] {
+            let task = yard_task(model, 16, gpus);
+            let ps = run_system(SystemKind::PatrickStar,
+                                ClusterPreset::yard(), task);
+            let ds = run_system(SystemKind::DeepSpeedDp,
+                                ClusterPreset::yard(), task);
+            if let (Ok(ps), Ok(ds)) = (ps, ds) {
+                assert!(
+                    ps.tflops_per_gpu >= ds.tflops_per_gpu,
+                    "{model}/{gpus}g: ps {} < ds {}",
+                    ps.tflops_per_gpu,
+                    ds.tflops_per_gpu
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn patrickstar_trains_where_deepspeed_crashes() {
+    // Fig. 10: 8B on YARD single GPU — DeepSpeed's host-side footprint
+    // exceeds 240 GB; PatrickStar evicts chunks and proceeds.
+    let task = yard_task("8B", 8, 1);
+    assert!(run_system(SystemKind::DeepSpeedDp, ClusterPreset::yard(),
+                       task).is_err());
+    let ps = run_system(SystemKind::PatrickStar, ClusterPreset::yard(),
+                        task).unwrap();
+    assert!(ps.tflops_per_gpu > 10.0);
+}
+
+#[test]
+fn throughput_robust_to_model_scale() {
+    // Sec. 9.2.3: 18B throughput is >= 80% of 1B throughput on 8 GPUs
+    // (paper: 94%).
+    let best = |model| {
+        patrickstar::scale::best_over_batches(
+            SystemKind::PatrickStar,
+            ClusterPreset::yard(),
+            GptSpec::by_name(model).unwrap(),
+            8,
+        )
+        .best
+        .unwrap()
+        .tflops_per_gpu
+    };
+    let t1 = best("1B");
+    let t18 = best("18B");
+    assert!(t18 > 0.8 * t1, "18B {t18} vs 1B {t1}");
+}
+
+// ---------------------------------------------------------------------
+// Optimization ablations (Fig. 16)
+// ---------------------------------------------------------------------
+
+#[test]
+fn ablation_ordering_base_beats_sp_and_osc() {
+    let task = yard_task("12B", 8, 8);
+    let run = |opt| {
+        Engine::new(ClusterPreset::yard(), task)
+            .with_opt(opt)
+            .run()
+            .unwrap()
+            .iter_time_s
+    };
+    let base = run(OptimizationPlan::default());
+    let osc = run(OptimizationPlan::os_on_cpu());
+    let sp = run(OptimizationPlan::static_partition());
+    assert!(base <= osc + 1e-9, "base {base} vs osc {osc}");
+    assert!(base < sp, "base {base} vs sp {sp}");
+    // The paper's 10B/8g case shows ~6.9x for Base vs SP; require a
+    // material gap here too.
+    assert!(sp / base > 1.5, "sp/base only {:.2}", sp / base);
+}
+
+#[test]
+fn opt_eviction_moves_no_more_than_history_policies() {
+    let task = yard_task("12B", 8, 1);
+    let moved = |evict| {
+        let opt = OptimizationPlan { eviction: evict, ..Default::default() };
+        let r = Engine::new(ClusterPreset::yard(), task)
+            .with_opt(opt)
+            .run()
+            .unwrap();
+        r.move_stats.cpu_to_gpu_bytes + r.move_stats.gpu_to_cpu_bytes
+    };
+    let opt = moved(EvictKind::Opt);
+    for other in [EvictKind::Lru, EvictKind::Fifo, EvictKind::Lfu] {
+        let m = moved(other);
+        assert!(
+            opt <= m,
+            "OPT moved {opt} B > {other:?} moved {m} B"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Communication invariants (Sec. 7)
+// ---------------------------------------------------------------------
+
+#[test]
+fn wire_volume_matches_6_over_p_formula() {
+    // The engine's measured all-gather + reduce-scatter bytes per rank
+    // must equal 6(p-1)/p x chunked-params within chunk rounding.
+    let task = yard_task("4B", 8, 8);
+    let r = Engine::new(ClusterPreset::yard(), task).run().unwrap();
+    let m = GptSpec::by_name("4B").unwrap();
+    let chunked_params = m.n_params() - m.embedding_params();
+    let expect = 6.0 * 7.0 / 8.0 * chunked_params as f64;
+    let got = (r.allgather_bytes + r.reduce_scatter_bytes) as f64;
+    let ratio = got / expect;
+    assert!(
+        (0.9..1.25).contains(&ratio),
+        "wire bytes {got:.3e} vs formula {expect:.3e} (ratio {ratio:.3})"
+    );
+}
+
+#[test]
+fn collective_bandwidth_beats_broadcast_baseline() {
+    let cc = CollectiveCost::new(
+        patrickstar::mem::Interconnect::v100_node().nvlink, 8);
+    // Same payload: chunked all-gather vs per-tensor broadcast.
+    let chunk = 256u64 << 20;
+    let ag = cc.allgather_time(chunk);
+    let bc = cc.broadcast_time(chunk, 512 << 10);
+    assert!(bc > ag, "broadcast {bc} must exceed chunked allgather {ag}");
+}
+
+#[test]
+fn multi_rank_reduce_scatter_numeric_equivalence() {
+    // Spawn real threads, each contributing chunk data; reduce-scatter
+    // must equal the sequential average.
+    use std::sync::Arc;
+    let nproc = 4usize;
+    let len = 1024usize;
+    let contribs: Vec<Vec<Vec<f32>>> = (0..nproc)
+        .map(|r| {
+            (0..nproc)
+                .map(|g| {
+                    (0..len).map(|i| (r * 31 + g * 7 + i) as f32).collect()
+                })
+                .collect()
+        })
+        .collect();
+    let shared = Arc::new(contribs);
+    let handles: Vec<_> = (0..nproc)
+        .map(|rank| {
+            let c = Arc::clone(&shared);
+            std::thread::spawn(move || {
+                let out = RealCollectives::reduce_scatter_avg(&c);
+                out[rank].clone()
+            })
+        })
+        .collect();
+    for (rank, h) in handles.into_iter().enumerate() {
+        let got = h.join().unwrap();
+        for (i, &g) in got.iter().enumerate() {
+            let want: f32 = (0..nproc)
+                .map(|r| (r * 31 + rank * 7 + i) as f32)
+                .sum::<f32>()
+                / nproc as f32;
+            assert!((g - want).abs() < 1e-4, "rank {rank} elem {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Memory invariants
+// ---------------------------------------------------------------------
+
+#[test]
+fn gpu_peak_never_exceeds_capacity() {
+    for (cluster, model, gpus) in [
+        (ClusterPreset::yard(), "4B", 1u32),
+        (ClusterPreset::yard(), "12B", 8),
+        (ClusterPreset::superpod(), "30B", 8),
+    ] {
+        let task = TrainTask::new(GptSpec::by_name(model).unwrap(), 8, gpus);
+        let r = Engine::new(cluster, task).run().unwrap();
+        assert!(
+            r.gpu_peak <= cluster.gpu_mem,
+            "{model}/{gpus}g: chunk peak {} > GPU {}",
+            r.gpu_peak,
+            cluster.gpu_mem
+        );
+        assert!(r.cpu_peak <= cluster.cpu_mem);
+    }
+}
+
+#[test]
+fn batch_size_only_affects_nonmodel_side() {
+    // Raising batch must not change chunked model bytes, only the
+    // non-model peak (the decoupling DeepSpeed lacks, Sec. 4).
+    let r8 = Engine::new(ClusterPreset::yard(), yard_task("4B", 8, 1))
+        .run()
+        .unwrap();
+    let r32 = Engine::new(ClusterPreset::yard(), yard_task("4B", 32, 1))
+        .run()
+        .unwrap();
+    assert_eq!(r8.chunk_elems, r32.chunk_elems);
+    assert!(r32.non_model_peak > r8.non_model_peak);
+}
+
+#[test]
+fn property_engine_time_composition() {
+    // Random feasible small tasks: every phase non-negative and total =
+    // sum of phases.
+    forall(
+        8,
+        |rng| {
+            let models = ["1B", "2B", "4B"];
+            let model = models[rng.range(0, models.len())];
+            let batch = [4u64, 8, 16][rng.range(0, 3)];
+            let gpus = [1u32, 2, 4, 8][rng.range(0, 4)];
+            (model, batch, gpus)
+        },
+        |&(model, batch, gpus)| {
+            let task = yard_task(model, batch, gpus);
+            let r = Engine::new(ClusterPreset::yard(), task)
+                .run()
+                .map_err(|e| format!("engine failed: {e}"))?;
+            let sum: f64 =
+                Phase::ALL.iter().map(|&p| r.breakdown.get(p)).sum();
+            if (sum - r.iter_time_s).abs() > 1e-9 {
+                return Err(format!("sum {sum} != total {}", r.iter_time_s));
+            }
+            if r.tflops_per_gpu <= 0.0 {
+                return Err("non-positive throughput".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+// ---------------------------------------------------------------------
+// Config plumbing
+// ---------------------------------------------------------------------
+
+#[test]
+fn task_json_roundtrip_drives_engine() {
+    let j = Json::parse(
+        r#"{"model": "1B", "batch": 8, "gpus": 2, "plan": "ckpt"}"#,
+    )
+    .unwrap();
+    let task = TrainTask::from_json(&j).unwrap();
+    assert_eq!(task.plan, ActivationPlan::Checkpointing);
+    let r = Engine::new(ClusterPreset::yard(), task).run().unwrap();
+    assert_eq!(r.n_gpus, 2);
+}
+
+#[test]
+fn activation_offload_helps_when_memory_tight() {
+    // 8B batch 32 on one V100: plain checkpointing's boundary
+    // activations crowd out chunks; offload trades PCIe time for space.
+    let base = yard_task("8B", 32, 1);
+    let off = base.with_plan(ActivationPlan::CheckpointingOffload);
+    let r_off = Engine::new(ClusterPreset::yard(), off).run().unwrap();
+    assert!(r_off.breakdown.get(Phase::ActOffload) > 0.0);
+    match Engine::new(ClusterPreset::yard(), base).run() {
+        Ok(r_ck) => {
+            // If both run, offload must show lower non-model peak.
+            assert!(r_off.non_model_peak < r_ck.non_model_peak);
+        }
+        Err(_) => {} // plain ckpt infeasible: offload rescued the task
+    }
+}
