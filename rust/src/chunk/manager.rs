@@ -11,6 +11,8 @@
 //! telemetry.  This keeps one orchestration code path for both backends
 //! (DESIGN.md §6.1).
 
+use std::collections::HashSet;
+
 use anyhow::{anyhow, bail, Result};
 
 use super::chunk::{Chunk, ChunkId, ChunkKind};
@@ -32,6 +34,13 @@ pub enum MoveKind {
     Evict,
     /// Payload dropped entirely.
     Release,
+    /// Payload staged ahead of use on an async copy stream; the chunk is
+    /// *in flight* until its first access completes the copy.
+    Prefetch,
+    /// A pending prefetch reclaimed under memory pressure before its
+    /// copy reached the wire: the chunk returns to its source device and
+    /// the traffic accounted at issue is credited back.
+    PrefetchCancel,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -52,6 +61,9 @@ pub struct MoveStats {
     pub gpu_to_cpu_moves: u64,
     pub evictions: u64,
     pub allocs: u64,
+    /// Prefetches issued (cancelled ones included; their bytes are not).
+    pub prefetches: u64,
+    pub prefetch_cancels: u64,
 }
 
 /// The chunk manager.
@@ -61,6 +73,11 @@ pub struct ChunkManager {
     pub stats: MoveStats,
     /// Undrained movement events (consumed by the engine per operator).
     events: Vec<MoveEvent>,
+    /// Chunks with a pending (issued, not yet consumed) prefetch copy.
+    /// In-flight chunks already occupy space on their target device but
+    /// may not be evicted — only cancelled — until first access
+    /// completes the copy.
+    inflight: HashSet<ChunkId>,
     /// Real payloads (e2e mode): one optional f32 buffer per chunk.
     payloads: Vec<Option<Vec<f32>>>,
     real_mode: bool,
@@ -74,6 +91,7 @@ impl ChunkManager {
             space,
             stats: MoveStats::default(),
             events: Vec::new(),
+            inflight: HashSet::new(),
             payloads: vec![None; n],
             real_mode: false,
         }
@@ -96,11 +114,13 @@ impl ChunkManager {
     }
 
     /// Derived chunk mobility (paper Sec. 6.2): a chunk is movable iff no
-    /// tensor is COMPUTE and it is not pinned.
+    /// tensor is COMPUTE, it is not pinned, and no prefetch copy is in
+    /// flight for it (an in-flight chunk is cancelled, never evicted).
     pub fn movable(&self, id: ChunkId) -> bool {
         let c = self.chunk(id);
         !c.pinned
             && c.device.is_some()
+            && !self.inflight.contains(&id)
             && c.tensors.iter().all(|t| {
                 self.reg.tensors[t.0 as usize].state != TensorState::Compute
             })
@@ -129,6 +149,21 @@ impl ChunkManager {
         std::mem::take(&mut self.events)
     }
 
+    /// True while a prefetch copy for `id` is pending.
+    pub fn is_inflight(&self, id: ChunkId) -> bool {
+        self.inflight.contains(&id)
+    }
+
+    /// Lowest-id chunk with a pending prefetch on `device` — the victim
+    /// of last resort when eviction finds no movable chunk.
+    pub fn pending_prefetch_on(&self, device: Device) -> Option<ChunkId> {
+        self.inflight
+            .iter()
+            .copied()
+            .filter(|&c| self.chunk(c).device == Some(device))
+            .min()
+    }
+
     pub fn payload(&self, id: ChunkId) -> Option<&[f32]> {
         self.payloads[id.0 as usize].as_deref()
     }
@@ -142,6 +177,23 @@ impl ChunkManager {
     fn record(&mut self, ev: MoveEvent) {
         match (ev.kind, ev.from, ev.to) {
             (MoveKind::Alloc, _, _) => self.stats.allocs += 1,
+            // Credit back the traffic accounted when the prefetch was
+            // issued (the copy never reached the wire): a chunk now on
+            // the GPU was staged CPU->GPU, and vice versa.
+            (MoveKind::PrefetchCancel, Some(Device::Gpu(_)), _) => {
+                self.stats.cpu_to_gpu_bytes =
+                    self.stats.cpu_to_gpu_bytes.saturating_sub(ev.bytes);
+                self.stats.cpu_to_gpu_moves =
+                    self.stats.cpu_to_gpu_moves.saturating_sub(1);
+                self.stats.prefetch_cancels += 1;
+            }
+            (MoveKind::PrefetchCancel, _, _) => {
+                self.stats.gpu_to_cpu_bytes =
+                    self.stats.gpu_to_cpu_bytes.saturating_sub(ev.bytes);
+                self.stats.gpu_to_cpu_moves =
+                    self.stats.gpu_to_cpu_moves.saturating_sub(1);
+                self.stats.prefetch_cancels += 1;
+            }
             (_, Some(Device::Cpu), Some(Device::Gpu(_))) => {
                 self.stats.cpu_to_gpu_bytes += ev.bytes;
                 self.stats.cpu_to_gpu_moves += 1;
@@ -152,8 +204,10 @@ impl ChunkManager {
             }
             _ => {}
         }
-        if ev.kind == MoveKind::Evict {
-            self.stats.evictions += 1;
+        match ev.kind {
+            MoveKind::Evict => self.stats.evictions += 1,
+            MoveKind::Prefetch => self.stats.prefetches += 1,
+            _ => {}
         }
         self.events.push(ev);
     }
@@ -184,6 +238,21 @@ impl ChunkManager {
 
     /// Drop a payload (paper: release remote chunk / FREE reuse).
     pub fn release_payload(&mut self, id: ChunkId) -> Result<()> {
+        if self.inflight.remove(&id) {
+            // Releasing an in-flight chunk implicitly cancels its copy;
+            // reclaim the accounted traffic before dropping the payload.
+            // `from` (the chunk's current device) tells `record` which
+            // direction was charged at issue.
+            let c = self.chunk(id);
+            let (bytes, dev) = (c.bytes(), c.device);
+            self.record(MoveEvent {
+                chunk: id,
+                from: dev,
+                to: dev.map(Self::spill_target),
+                bytes,
+                kind: MoveKind::PrefetchCancel,
+            });
+        }
         let c = self.chunk(id);
         let (bytes, dev) = (c.bytes(), c.device);
         let dev = dev.ok_or_else(|| anyhow!("chunk {id:?} has no payload"))?;
@@ -215,6 +284,9 @@ impl ChunkManager {
         if from == to {
             return Ok(());
         }
+        // Moving an in-flight chunk forces its copy to completion first
+        // (callers wait on the timeline before relocating such chunks).
+        self.inflight.remove(&id);
         self.space.alloc(to, bytes)?;
         self.space.dealloc(from, bytes)?;
         self.chunk_mut(id).device = Some(to);
@@ -222,6 +294,70 @@ impl ChunkManager {
         // above is the honest analogue of cudaMemcpy on this testbed.
         self.record(MoveEvent { chunk: id, from: Some(from), to: Some(to),
                                 bytes, kind });
+        Ok(())
+    }
+
+    /// The device victims spill to.
+    fn spill_target(device: Device) -> Device {
+        match device {
+            Device::Cpu => Device::Gpu(0),
+            Device::Gpu(_) => Device::Cpu,
+        }
+    }
+
+    /// Push `victim` off `device`: FREE chunks are dropped, not moved
+    /// (paper: reuse/release); the rest spill to the other device.
+    fn evict_one(&mut self, victim: ChunkId, device: Device) -> Result<()> {
+        if self.all_free(victim) {
+            self.release_payload(victim)
+        } else {
+            self.move_payload(victim, Self::spill_target(device),
+                              MoveKind::Evict)
+        }
+    }
+
+    /// One pressure event: evict policy-picked victims from `device`
+    /// until `done` holds.  Candidates are collected once and victims
+    /// retired in place — nothing inside the loop changes any tensor
+    /// state, so the movable set cannot grow and a fresh registry scan
+    /// per victim is pure waste.  When no movable chunk remains, a
+    /// pending prefetch is reclaimed (cancelled, not fetched twice) as
+    /// the victim of last resort; if its source device is itself full,
+    /// the copy is completed instead and spilled normally.
+    fn evict_until(
+        &mut self,
+        device: Device,
+        policy: &mut dyn EvictionPolicy,
+        now: Moment,
+        exclude: Option<ChunkId>,
+        done: impl Fn(&Self) -> bool,
+        describe: impl Fn(&Self) -> String,
+    ) -> Result<()> {
+        if done(self) {
+            return Ok(());
+        }
+        let mut candidates = self.eviction_candidates(device);
+        if let Some(x) = exclude {
+            candidates.retain(|&c| c != x);
+        }
+        while !done(self) {
+            match policy.pick(&candidates, &self.reg.chunks, now) {
+                Some(victim) => {
+                    candidates.retain(|&c| c != victim);
+                    self.evict_one(victim, device)?;
+                }
+                None => {
+                    if let Some(c) = self.pending_prefetch_on(device) {
+                        if self.cancel_prefetch(c).is_err() {
+                            self.complete_prefetch(c);
+                            candidates.push(c);
+                        }
+                        continue;
+                    }
+                    bail!("{}", describe(self));
+                }
+            }
+        }
         Ok(())
     }
 
@@ -236,35 +372,28 @@ impl ChunkManager {
         now: Moment,
     ) -> Result<()> {
         if self.chunk(id).device == Some(device) {
+            // First access of a prefetched chunk consumes the in-flight
+            // copy (the engine waits on the timeline before this call).
+            self.inflight.remove(&id);
             policy.on_access(id, now);
             return Ok(());
         }
         let bytes = self.chunk(id).bytes();
-        // Evict until the target device can host the chunk.
-        while !self.space.dev(device).can_fit(bytes) {
-            let mut candidates = self.eviction_candidates(device);
-            candidates.retain(|&c| c != id);
-            let victim = policy
-                .pick(&candidates, &self.reg.chunks, now)
-                .ok_or_else(|| {
-                    anyhow!(
-                        "cannot place chunk {id:?} on {}: no evictable \
-                         chunk (need {bytes} B, free {} B)",
-                        device.name(),
-                        self.space.dev(device).free()
-                    )
-                })?;
-            let other = match device {
-                Device::Cpu => Device::Gpu(0),
-                Device::Gpu(_) => Device::Cpu,
-            };
-            if self.all_free(victim) {
-                // FREE chunks are dropped, not moved (paper: reuse/release).
-                self.release_payload(victim)?;
-            } else {
-                self.move_payload(victim, other, MoveKind::Evict)?;
-            }
-        }
+        self.evict_until(
+            device,
+            policy,
+            now,
+            Some(id),
+            |m| m.space.dev(device).can_fit(bytes),
+            |m| {
+                format!(
+                    "cannot place chunk {id:?} on {}: no evictable \
+                     chunk (need {bytes} B, free {} B)",
+                    device.name(),
+                    m.space.dev(device).free()
+                )
+            },
+        )?;
         if self.chunk(id).device.is_none() {
             self.alloc_payload(id, device)?;
         } else {
@@ -283,30 +412,143 @@ impl ChunkManager {
         policy: &mut dyn EvictionPolicy,
         now: Moment,
     ) -> Result<()> {
-        while self.space.dev(device).over_capacity() {
-            let candidates = self.eviction_candidates(device);
-            let victim = policy
-                .pick(&candidates, &self.reg.chunks, now)
-                .ok_or_else(|| {
-                    anyhow!(
-                        "cannot shrink {} to {} B: no evictable chunk \
-                         (used {} B)",
-                        device.name(),
-                        self.space.dev(device).capacity,
-                        self.space.dev(device).used()
-                    )
-                })?;
-            let other = match device {
-                Device::Cpu => Device::Gpu(0),
-                Device::Gpu(_) => Device::Cpu,
-            };
-            if self.all_free(victim) {
-                self.release_payload(victim)?;
-            } else {
-                self.move_payload(victim, other, MoveKind::Evict)?;
+        self.evict_until(
+            device,
+            policy,
+            now,
+            None,
+            |m| !m.space.dev(device).over_capacity(),
+            |m| {
+                format!(
+                    "cannot shrink {} to {} B: no evictable chunk \
+                     (used {} B)",
+                    device.name(),
+                    m.space.dev(device).capacity,
+                    m.space.dev(device).used()
+                )
+            },
+        )
+    }
+
+    // ----------------------------------------------------------- prefetch
+
+    /// Stage `id` onto `device` ahead of its next use (warm-up-guided
+    /// pipeline).  Works in both directions: CPU->GPU for upcoming
+    /// FWD/BWD operator uses, GPU->CPU for the next CPU-ADAM group.
+    /// Best-effort: returns Ok(false) without touching anything when the
+    /// chunk is not a HOLD-like chunk resident on the opposite device,
+    /// or when making room would require evicting a chunk `may_evict`
+    /// rejects (the engine passes a Belady guard: only victims whose
+    /// next use lies beyond the prefetched chunk's use may spill).
+    ///
+    /// `limit_bytes` caps the device's post-prefetch usage — the caller
+    /// derives it from the tightest `chunkable_gpu` grant between now
+    /// and the use moment, so staged payload never triggers the very
+    /// evictions it is meant to hide.
+    ///
+    /// On success the chunk is accounted on `device` and marked
+    /// in-flight: it cannot be evicted (only cancelled) until an access
+    /// completes the copy.
+    pub fn prefetch_to(
+        &mut self,
+        id: ChunkId,
+        device: Device,
+        limit_bytes: u64,
+        policy: &mut dyn EvictionPolicy,
+        now: Moment,
+        may_evict: &dyn Fn(ChunkId) -> bool,
+    ) -> Result<bool> {
+        {
+            let c = self.chunk(id);
+            if c.device != Some(Self::spill_target(device))
+                || c.embedding
+                || self.inflight.contains(&id)
+                || !self.movable(id)
+            {
+                return Ok(false);
             }
         }
+        let bytes = self.chunk(id).bytes();
+        let mut projected = self.space.dev(device).used();
+        if projected + bytes <= limit_bytes {
+            // Common case: headroom exists, no victim planning needed —
+            // skip the registry scan entirely (this runs for every
+            // window chunk at every moment tick).
+            self.move_payload(id, device, MoveKind::Prefetch)?;
+            self.inflight.insert(id);
+            return Ok(true);
+        }
+        // Plan the full victim set first so an infeasible prefetch
+        // abstains without having moved anything — including checking
+        // that the spill device can absorb every non-FREE victim (the
+        // staged chunk vacates its own slot only after the victims
+        // land, so its bytes don't count as room).
+        let spill = Self::spill_target(device);
+        let mut spill_free = self.space.dev(spill).free();
+        let mut candidates: Vec<ChunkId> = self
+            .eviction_candidates(device)
+            .into_iter()
+            .filter(|&v| v != id && may_evict(v))
+            .collect();
+        let mut victims = Vec::new();
+        while projected + bytes > limit_bytes {
+            match policy.pick(&candidates, &self.reg.chunks, now) {
+                Some(v) => {
+                    candidates.retain(|&c| c != v);
+                    let vb = self.chunk(v).bytes();
+                    if !self.all_free(v) {
+                        if spill_free < vb {
+                            return Ok(false);
+                        }
+                        spill_free -= vb;
+                    }
+                    projected = projected.saturating_sub(vb);
+                    victims.push(v);
+                }
+                None => return Ok(false),
+            }
+        }
+        for v in victims {
+            self.evict_one(v, device)?;
+        }
+        self.move_payload(id, device, MoveKind::Prefetch)?;
+        self.inflight.insert(id);
+        Ok(true)
+    }
+
+    /// Reclaim a pending prefetch: the chunk returns to its source
+    /// device and the traffic accounted at issue is credited back (the
+    /// copy is assumed still queued behind the copy stream's backlog,
+    /// not on the wire).  Atomic: if the source device can no longer
+    /// host the chunk, nothing changes and the prefetch stays pending —
+    /// callers fall back to completing the copy and evicting normally.
+    pub fn cancel_prefetch(&mut self, id: ChunkId) -> Result<()> {
+        if !self.inflight.contains(&id) {
+            bail!("chunk {id:?} has no pending prefetch");
+        }
+        let c = self.chunk(id);
+        let (bytes, dev) = (c.bytes(), c.device);
+        let dev = dev.ok_or_else(|| anyhow!("in-flight chunk {id:?} \
+                                             lost its payload"))?;
+        let restore = Self::spill_target(dev);
+        self.space.alloc(restore, bytes)?;
+        self.space.dealloc(dev, bytes)?;
+        self.inflight.remove(&id);
+        self.chunk_mut(id).device = Some(restore);
+        self.record(MoveEvent {
+            chunk: id,
+            from: Some(dev),
+            to: Some(restore),
+            bytes,
+            kind: MoveKind::PrefetchCancel,
+        });
         Ok(())
+    }
+
+    /// Mark the in-flight copy of `id` consumed (the engine calls this
+    /// after blocking on the copy's completion time).
+    pub fn complete_prefetch(&mut self, id: ChunkId) {
+        self.inflight.remove(&id);
     }
 
     pub fn pin(&mut self, id: ChunkId) {
@@ -525,6 +767,149 @@ mod tests {
             let ti = m.reg.tensor_index(ChunkKind::ParamFp16, i);
             assert_eq!(m.reg.tensors[ti].state, TensorState::Hold);
         }
+    }
+
+    #[test]
+    fn prefetch_roundtrip_completes_on_access() {
+        let mut m = mk(4, 50, 100, 10_000, 10_000);
+        let id = m.reg.list(ChunkKind::ParamFp16)[0];
+        m.alloc_payload(id, Device::Cpu).unwrap();
+        let mut pol = FifoPolicy::default();
+        let issued = m
+            .prefetch_to(id, Device::Gpu(0), 10_000, &mut pol, 0, &|_| true)
+            .unwrap();
+        assert!(issued);
+        assert!(m.is_inflight(id));
+        assert_eq!(m.chunk(id).device, Some(Device::Gpu(0)));
+        assert_eq!(m.stats.prefetches, 1);
+        assert_eq!(m.stats.cpu_to_gpu_bytes, 200);
+        // In-flight chunks are invisible to eviction.
+        assert!(!m.eviction_candidates(Device::Gpu(0)).contains(&id));
+        // Re-issue is a no-op.
+        assert!(!m
+            .prefetch_to(id, Device::Gpu(0), 10_000, &mut pol, 0, &|_| true)
+            .unwrap());
+        // First access consumes the copy.
+        m.ensure_on(id, Device::Gpu(0), &mut pol, 1).unwrap();
+        assert!(!m.is_inflight(id));
+    }
+
+    #[test]
+    fn pressure_cancels_pending_prefetch_instead_of_failing() {
+        // GPU fits exactly one chunk; a pending prefetch occupies it.
+        let mut m = mk(4, 50, 100, 200, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let (a, b) = (list[0], list[1]);
+        m.alloc_payload(a, Device::Cpu).unwrap();
+        let mut pol = FifoPolicy::default();
+        assert!(m
+            .prefetch_to(a, Device::Gpu(0), 200, &mut pol, 0, &|_| true)
+            .unwrap());
+        assert_eq!(m.stats.cpu_to_gpu_bytes, 200);
+        // Demand access for b finds no evictable chunk (a is in flight)
+        // and reclaims the prefetch rather than erroring.
+        m.access_tensor(ChunkKind::ParamFp16, 2, Device::Gpu(0), &mut pol, 1)
+            .unwrap();
+        assert!(!m.is_inflight(a));
+        assert_eq!(m.chunk(a).device, Some(Device::Cpu), "a back home");
+        assert_eq!(m.chunk(b).device, Some(Device::Gpu(0)));
+        assert_eq!(m.stats.prefetch_cancels, 1);
+        // The cancelled copy's traffic was credited back.
+        assert_eq!(m.stats.cpu_to_gpu_bytes, 0);
+    }
+
+    #[test]
+    fn prefetch_abstains_when_guard_rejects_victims() {
+        let mut m = mk(4, 50, 100, 200, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let (a, b) = (list[0], list[1]);
+        let mut pol = FifoPolicy::default();
+        // b occupies the whole GPU in HOLD.
+        m.ensure_on(b, Device::Gpu(0), &mut pol, 0).unwrap();
+        for i in [2usize, 3] {
+            let ti = m.reg.tensor_index(ChunkKind::ParamFp16, i);
+            m.reg.tensors[ti].set_state(TensorState::Hold).unwrap();
+        }
+        m.alloc_payload(a, Device::Cpu).unwrap();
+        let before = m.stats;
+        // Belady guard refuses to spill b -> the prefetch abstains with
+        // nothing moved.
+        let issued = m
+            .prefetch_to(a, Device::Gpu(0), 200, &mut pol, 1, &|_| false)
+            .unwrap();
+        assert!(!issued);
+        assert_eq!(m.chunk(a).device, Some(Device::Cpu));
+        assert_eq!(m.chunk(b).device, Some(Device::Gpu(0)));
+        assert_eq!(m.stats.gpu_to_cpu_bytes, before.gpu_to_cpu_bytes);
+        // With the guard's blessing the same prefetch evicts b.
+        let issued = m
+            .prefetch_to(a, Device::Gpu(0), 200, &mut pol, 1, &|_| true)
+            .unwrap();
+        assert!(issued);
+        assert_eq!(m.chunk(b).device, Some(Device::Cpu), "b spilled");
+    }
+
+    #[test]
+    fn d2h_staging_and_cancel_credit_gpu_to_cpu() {
+        // The ADAM-bound direction: stage a GPU-resident grad chunk
+        // toward the CPU, then cancel and verify the g2c traffic (not
+        // c2g) is credited back.
+        let mut m = mk(2, 50, 100, 10_000, 10_000);
+        let id = m.reg.list(ChunkKind::ParamFp16)[0];
+        m.alloc_payload(id, Device::Gpu(0)).unwrap();
+        let mut pol = FifoPolicy::default();
+        let issued = m
+            .prefetch_to(id, Device::Cpu, 10_000, &mut pol, 0, &|_| false)
+            .unwrap();
+        assert!(issued);
+        assert_eq!(m.chunk(id).device, Some(Device::Cpu));
+        assert!(m.is_inflight(id));
+        assert_eq!(m.stats.gpu_to_cpu_bytes, 200);
+        m.cancel_prefetch(id).unwrap();
+        assert_eq!(m.chunk(id).device, Some(Device::Gpu(0)), "restored");
+        assert_eq!(m.stats.gpu_to_cpu_bytes, 0, "g2c credited back");
+        assert_eq!(m.stats.cpu_to_gpu_bytes, 0, "c2g untouched");
+    }
+
+    #[test]
+    fn prefetch_respects_limit_below_capacity() {
+        // Capacity would fit the chunk, but the caller's forward-looking
+        // cap (limit) does not: abstain.
+        let mut m = mk(4, 50, 100, 400, 10_000);
+        let id = m.reg.list(ChunkKind::ParamFp16)[0];
+        m.alloc_payload(id, Device::Cpu).unwrap();
+        let mut pol = FifoPolicy::default();
+        let issued = m
+            .prefetch_to(id, Device::Gpu(0), 100, &mut pol, 0, &|_| true)
+            .unwrap();
+        assert!(!issued);
+        assert_eq!(m.chunk(id).device, Some(Device::Cpu));
+    }
+
+    #[test]
+    fn evict_to_fit_shrink_retires_candidates_in_place() {
+        // Three chunks resident on GPU in HOLD; shrinking the cap to one
+        // chunk must evict two, and FREE chunks must still be dropped.
+        let mut m = mk(6, 50, 100, 600, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let mut pol = FifoPolicy::default();
+        for (i, &c) in list.iter().take(3).enumerate() {
+            m.ensure_on(c, Device::Gpu(0), &mut pol, i as u32).unwrap();
+        }
+        // chunk0 stays all-FREE; chunk1, chunk2 HOLD.  FIFO retires in
+        // arrival order: chunk0 (dropped), then chunk1 (spilled).
+        for i in 2..6usize {
+            let ti = m.reg.tensor_index(ChunkKind::ParamFp16, i);
+            m.reg.tensors[ti].set_state(TensorState::Hold).unwrap();
+        }
+        m.space.dev_mut(Device::Gpu(0)).set_capacity(200);
+        m.evict_to_fit(Device::Gpu(0), &mut pol, 9).unwrap();
+        assert!(!m.space.dev(Device::Gpu(0)).over_capacity());
+        // The FREE chunk was dropped, not transferred.
+        assert_eq!(m.chunk(list[0]).device, None);
+        assert_eq!(m.chunk(list[1]).device, Some(Device::Cpu));
+        assert_eq!(m.chunk(list[2]).device, Some(Device::Gpu(0)));
+        assert_eq!(m.stats.gpu_to_cpu_bytes, 200);
     }
 
     #[test]

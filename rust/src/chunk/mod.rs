@@ -15,5 +15,5 @@ pub mod search;
 
 pub use chunk::{Chunk, ChunkId, ChunkKind};
 pub use layout::{ChunkRegistry, LayoutStats, TensorSpec};
-pub use manager::{ChunkManager, MoveStats};
+pub use manager::{ChunkManager, MoveEvent, MoveKind, MoveStats};
 pub use search::{search_chunk_size, SearchResult};

@@ -1,0 +1,138 @@
+//! Warm-up-guided chunk prefetcher.
+//!
+//! The tracer's warm-up pass records, for every chunk, the exact moments
+//! at which it will be needed on the GPU — PTM training iterations are
+//! structurally identical, so the warm-up schedule *is* the steady-state
+//! schedule.  The prefetcher inverts those per-chunk moment lists into a
+//! per-moment work list; at each moment boundary the engine walks a
+//! lookahead window over it and stages CPU-resident chunks onto the GPU
+//! through `ChunkManager::prefetch_to`, subject to two guards:
+//!
+//! * **headroom budget** — staged payload must fit under the tightest
+//!   `chunkable_gpu` grant between now and the use moment
+//!   (`MemTracer::min_chunkable_gpu`), so prefetching never triggers the
+//!   cap-shrink evictions it is trying to hide;
+//! * **Belady guard** — making room for a prefetch may only spill
+//!   victims whose own next use lies beyond the prefetched chunk's use
+//!   moment.  This is exactly the eviction OPT would perform at demand
+//!   time, executed early on the async D2H stream instead of on the
+//!   compute critical path.
+//!
+//! Together the guards keep the prefetched schedule's transfer *volume*
+//! at the serial schedule's level — the pipeline only changes *when*
+//! copies happen (and which stream pays for them), not how many bytes
+//! cross PCIe.
+
+use crate::chunk::ChunkId;
+use crate::tracer::{MemTracer, Moment};
+
+/// Default lookahead window, in moments (ops).  Seven ops per
+/// transformer layer means ~4-5 layers of headstart — deep enough to
+/// keep the H2D stream busy across multi-chunk layers, shallow enough
+/// that staged chunks do not crowd out the working set.
+pub const DEFAULT_LOOKAHEAD: u32 = 32;
+
+/// Per-moment GPU work list inverted from the tracer's chunk moment
+/// lists after warm-up.
+#[derive(Clone, Debug)]
+pub struct Prefetcher {
+    uses_at: Vec<Vec<ChunkId>>,
+}
+
+impl Prefetcher {
+    /// Invert the tracer's GPU-targeted moment lists.  Only meaningful
+    /// after `tracer.finish_warmup()`.
+    pub fn from_tracer(tracer: &MemTracer, n_chunks: usize) -> Self {
+        let mut uses_at: Vec<Vec<ChunkId>> =
+            vec![Vec::new(); tracer.n_moments as usize];
+        for c in 0..n_chunks {
+            let id = ChunkId(c as u32);
+            for &m in tracer.gpu_moments_of(id) {
+                if let Some(slot) = uses_at.get_mut(m as usize) {
+                    slot.push(id);
+                }
+            }
+        }
+        Prefetcher { uses_at }
+    }
+
+    /// Chunks with a GPU-targeted use at moment `m` (empty past the end
+    /// of the recorded iteration).
+    pub fn uses_at(&self, m: Moment) -> &[ChunkId] {
+        self.uses_at
+            .get(m as usize)
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+    }
+
+    /// (moment, chunk) pairs for the window `[from, from + lookahead)`,
+    /// in schedule order — the engine's per-tick prefetch candidates.
+    pub fn window(
+        &self,
+        from: Moment,
+        lookahead: u32,
+    ) -> Vec<(Moment, ChunkId)> {
+        let hi = (from.saturating_add(lookahead) as usize)
+            .min(self.uses_at.len());
+        (from as usize..hi)
+            .flat_map(|m| {
+                self.uses_at[m].iter().map(move |&c| (m as Moment, c))
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tracer_with(uses: &[(u32, &[Moment])], n_moments: u32) -> MemTracer {
+        let n = uses.len();
+        let mut t = MemTracer::new(n);
+        for _ in 0..n_moments {
+            t.record_moment(0);
+        }
+        for &(c, ms) in uses {
+            for &m in ms {
+                t.record_chunk_use(ChunkId(c), m);
+            }
+        }
+        t.finish_warmup();
+        t
+    }
+
+    #[test]
+    fn inverts_moment_lists() {
+        let t = tracer_with(&[(0, &[1, 4]), (1, &[1]), (2, &[3])], 6);
+        let pf = Prefetcher::from_tracer(&t, 3);
+        assert_eq!(pf.uses_at(1), &[ChunkId(0), ChunkId(1)]);
+        assert_eq!(pf.uses_at(3), &[ChunkId(2)]);
+        assert_eq!(pf.uses_at(0), &[] as &[ChunkId]);
+        assert_eq!(pf.uses_at(99), &[] as &[ChunkId]);
+    }
+
+    #[test]
+    fn window_is_schedule_ordered_and_clamped() {
+        let t = tracer_with(&[(0, &[1, 4]), (1, &[2])], 6);
+        let pf = Prefetcher::from_tracer(&t, 2);
+        assert_eq!(
+            pf.window(1, 4),
+            vec![(1, ChunkId(0)), (2, ChunkId(1)), (4, ChunkId(0))]
+        );
+        assert_eq!(pf.window(5, 100), vec![]);
+        // Window start beyond the iteration is empty, not a panic.
+        assert_eq!(pf.window(1000, 10), vec![]);
+    }
+
+    #[test]
+    fn cpu_targeted_uses_never_enter_the_work_list() {
+        let mut t = MemTracer::new(1);
+        for _ in 0..4 {
+            t.record_moment(0);
+        }
+        t.record_chunk_use_at(ChunkId(0), 2, false); // CPU ADAM access
+        t.finish_warmup();
+        let pf = Prefetcher::from_tracer(&t, 1);
+        assert_eq!(pf.uses_at(2), &[] as &[ChunkId]);
+    }
+}

@@ -2,14 +2,25 @@
 
 use crate::chunk::MoveStats;
 use crate::placement::PlacementPlan;
-use crate::sim::{Phase, SimClock};
+use crate::sim::{Phase, SimClock, StreamTimeline};
 use crate::util::fmt::human_time;
 use crate::util::{human_bytes, Table};
 
 /// Per-phase seconds of one measured iteration (paper Fig. 16 bars).
+///
+/// Phases carry *work* (serial-sum semantics): with the overlap pipeline
+/// on, their sum exceeds `EngineReport::iter_time_s` by exactly
+/// `overlapped_transfer_s` — the copy time hidden under compute on the
+/// dual copy streams.  `exposed_transfer_s` is the copy time the compute
+/// stream actually stalled for.  Serially both collapse: exposed = all
+/// copy time, overlapped = 0, sum = iter time.
 #[derive(Clone, Debug, Default)]
 pub struct IterBreakdown {
     secs: Vec<(Phase, f64)>,
+    /// Copy time on the compute critical path (stalls).
+    pub exposed_transfer_s: f64,
+    /// Copy time hidden under compute by the dual-stream pipeline.
+    pub overlapped_transfer_s: f64,
 }
 
 impl IterBreakdown {
@@ -19,6 +30,19 @@ impl IterBreakdown {
                 .iter()
                 .map(|&p| (p, clock.get(p)))
                 .collect(),
+            exposed_transfer_s: 0.0,
+            overlapped_transfer_s: 0.0,
+        }
+    }
+
+    pub fn from_timeline(tl: &StreamTimeline) -> Self {
+        IterBreakdown {
+            secs: Phase::ALL
+                .iter()
+                .map(|&p| (p, tl.get(p)))
+                .collect(),
+            exposed_transfer_s: tl.exposed_transfer(),
+            overlapped_transfer_s: tl.overlapped_transfer(),
         }
     }
 
@@ -81,15 +105,30 @@ impl EngineReport {
             self.tflops_per_gpu,
             self.total_tflops(),
         );
+        // Share of phase *work* (with the overlap pipeline on, work
+        // exceeds wall time by the hidden transfer time, so dividing by
+        // iter_time_s would sum past 100%).
+        let work = self.breakdown.total().max(f64::MIN_POSITIVE);
         let mut t = Table::new(&["phase", "time", "share"]);
         for (p, secs) in self.breakdown.rows() {
             t.row(vec![
                 p.name().into(),
                 human_time(secs),
-                format!("{:.1}%", 100.0 * secs / self.iter_time_s),
+                format!("{:.1}%", 100.0 * secs / work),
             ]);
         }
         out.push_str(&t.render());
+        if self.breakdown.overlapped_transfer_s > 0.0 {
+            out.push_str(&format!(
+                "transfers: {} exposed / {} overlapped (pipeline hid \
+                 {:.0}% of copy time)\n",
+                human_time(self.breakdown.exposed_transfer_s),
+                human_time(self.breakdown.overlapped_transfer_s),
+                100.0 * self.breakdown.overlapped_transfer_s
+                    / (self.breakdown.exposed_transfer_s
+                        + self.breakdown.overlapped_transfer_s),
+            ));
+        }
         out.push_str(&format!(
             "margin/spill {:+} | moved c2g {} g2c {} | \
              allgather {} @ {:.1} GB/s | reduce-scatter {} @ {:.1} GB/s\n\

@@ -5,6 +5,12 @@
 //! warm-up moment lists) is farthest in the future.  History-based
 //! policies from the DBMS literature (FIFO / LRU / LFU) are implemented
 //! as baselines for the ablation benches.
+//!
+//! Policies only ever see the *candidate* set the `ChunkManager` hands
+//! them: pinned chunks, chunks with a COMPUTE tensor, and chunks with an
+//! in-flight prefetch copy are filtered out before `pick` is called, so
+//! no policy can victimize them (property-tested in
+//! `tests/prefetch_overlap.rs`).
 
 use std::collections::HashMap;
 

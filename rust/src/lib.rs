@@ -25,11 +25,13 @@ pub mod evict;
 pub mod mem;
 pub mod model;
 pub mod placement;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod scale;
 pub mod sim;
 pub mod tensor;
 pub mod tracer;
+#[cfg(feature = "pjrt")]
 pub mod train;
 pub mod util;
 

@@ -23,6 +23,7 @@ use patrickstar::config::{ClusterPreset, SystemKind, TrainTask};
 use patrickstar::engine::{Engine, OptimizationPlan};
 use patrickstar::model::GptSpec;
 use patrickstar::scale::max_model_scale;
+#[cfg(feature = "pjrt")]
 use patrickstar::train::{Trainer, TrainerConfig};
 use patrickstar::util::{human_bytes, Table};
 
@@ -56,6 +57,30 @@ impl Args {
             None => Ok(default),
             Some(v) => v.parse().map_err(|_| anyhow!("--{key}: bad number")),
         }
+    }
+
+    fn get_bool(&self, key: &str, default: bool) -> Result<bool> {
+        match self.flags.get(key).map(String::as_str) {
+            None => Ok(default),
+            Some("on") | Some("true") | Some("1") => Ok(true),
+            Some("off") | Some("false") | Some("0") => Ok(false),
+            Some(v) => bail!("--{key}: expected on|off, got '{v}'"),
+        }
+    }
+
+    /// The prefetch/overlap pipeline switches shared by simulate and
+    /// breakdown (`--pipeline on` = both; individual flags override).
+    fn opt_plan(&self) -> Result<OptimizationPlan> {
+        let pipeline = self.get_bool("pipeline", false)?;
+        Ok(OptimizationPlan {
+            prefetch: self.get_bool("prefetch", pipeline)?,
+            overlap: self.get_bool("overlap", pipeline)?,
+            lookahead: self.get_u64(
+                "lookahead",
+                patrickstar::engine::DEFAULT_LOOKAHEAD as u64,
+            )? as u32,
+            ..Default::default()
+        })
     }
 
     fn cluster(&self) -> Result<ClusterPreset> {
@@ -101,11 +126,14 @@ USAGE:
   patrickstar simulate --system patrickstar|deepspeed-dp|deepspeed-mpN|\
 pytorch-ddp
                        [--cluster yard] [--model 10B] [--gpus 8] [--batch 16]
+                       [--pipeline on] [--prefetch on|off] [--overlap on|off]
+                       [--lookahead 32]
   patrickstar breakdown [--cluster superpod] [--model 10B] [--gpus 8] \
 [--batch 16]
+             (rows: Base, Base+PF prefetch+overlap pipeline, OSC, SP)
   patrickstar scale [--cluster yard] [--gpus 8]
   patrickstar train [--artifacts artifacts] [--steps 50] [--gpu-mb 6] \
-[--lr 0.001] [--log-every 10]
+[--lr 0.001] [--log-every 10] [--prefetch-ahead 0]
 ";
 
 fn cmd_models() -> Result<()> {
@@ -160,7 +188,15 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let gpus = args.get_u64("gpus", 8)? as u32;
     let batch = args.get_u64("batch", 16)?;
     let task = TrainTask::new(model, batch, gpus);
-    let report = run_system(system, cluster, task)?;
+    let opt = args.opt_plan()?;
+    let report = if system == SystemKind::PatrickStar {
+        Engine::new(cluster, task).with_opt(opt).run()?
+    } else {
+        if opt.prefetch || opt.overlap {
+            bail!("--prefetch/--overlap only apply to system patrickstar");
+        }
+        run_system(system, cluster, task)?
+    };
     print!("{}", report.render());
     Ok(())
 }
@@ -173,6 +209,7 @@ fn cmd_breakdown(args: &Args) -> Result<()> {
     let task = TrainTask::new(model, batch, gpus);
     for (label, opt) in [
         ("Base", OptimizationPlan::default()),
+        ("Base+PF", OptimizationPlan::pipelined()),
         ("OSC", OptimizationPlan::os_on_cpu()),
         ("SP", OptimizationPlan::static_partition()),
     ] {
@@ -215,6 +252,15 @@ fn cmd_scale(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_train(_args: &Args) -> Result<()> {
+    bail!(
+        "the real training path needs the PJRT runtime; rebuild with \
+         `--features pjrt` (requires the xla bindings)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
     let cfg = TrainerConfig {
         artifacts_dir: args.get("artifacts", "artifacts"),
@@ -223,6 +269,7 @@ fn cmd_train(args: &Args) -> Result<()> {
         lr: args.get("lr", "0.001").parse()?,
         weight_decay: args.get("wd", "0.01").parse()?,
         seed: args.get_u64("seed", 0)?,
+        prefetch_lookahead: args.get_u64("prefetch-ahead", 0)? as usize,
     };
     let steps = args.get_u64("steps", 50)? as usize;
     let log_every = args.get_u64("log-every", 10)? as usize;

@@ -67,6 +67,15 @@ impl SimClock {
         *self.acc.entry(phase).or_insert(0.0) += secs;
     }
 
+    /// Remove previously-charged time (a queued copy that was reclaimed
+    /// before reaching the wire); clamps at zero.
+    pub fn sub(&mut self, phase: Phase, secs: f64) {
+        debug_assert!(secs >= 0.0 && secs.is_finite(), "bad time {secs}");
+        if let Some(t) = self.acc.get_mut(&phase) {
+            *t = (*t - secs).max(0.0);
+        }
+    }
+
     pub fn get(&self, phase: Phase) -> f64 {
         self.acc.get(&phase).copied().unwrap_or(0.0)
     }

@@ -5,9 +5,23 @@
 //! (LayerNorm, ADAM) are bandwidth-bound.  Absolute numbers are testbed
 //! translations of the paper's V100/A100 results; the comparisons between
 //! systems depend only on the compute/transfer *ratios*.
+//!
+//! Time lives on two levels:
+//!
+//! * [`clock`] — the flat per-phase accumulator (paper Fig. 16's bars):
+//!   how much *work* each phase performed.
+//! * [`stream`] — the three-stream timeline (compute + H2D + D2H copy
+//!   engines) that decides how much of that work ran *concurrently*.
+//!   The engine's overlap/prefetch pipeline enqueues chunk copies on the
+//!   copy streams and only blocks compute when a consumer catches up
+//!   with an in-flight transfer; with overlap disabled the timeline
+//!   collapses to the serial accumulator, so the pre-pipeline numbers
+//!   stay reproducible.
 
 pub mod clock;
 pub mod cost;
+pub mod stream;
 
 pub use clock::{Phase, SimClock};
 pub use cost::DeviceProfile;
+pub use stream::{CopyDir, StreamTimeline};

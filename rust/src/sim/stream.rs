@@ -1,0 +1,304 @@
+//! Multi-stream timeline: compute / H2D-copy / D2H-copy overlap.
+//!
+//! The GPU model behind the prefetch pipeline: one compute stream and two
+//! copy engines (CPU->GPU and GPU->CPU), as on every discrete GPU since
+//! Fermi.  Each stream tracks its own time frontier.  Work charged to the
+//! compute stream advances only the compute frontier; a copy enqueued on
+//! a copy stream starts no earlier than (a) the moment it was issued
+//! (the compute frontier at enqueue time), (b) the copy stream's own
+//! frontier (copies on one engine are FIFO), and (c) an optional `ready`
+//! dependency — used to model an H2D fetch that must wait for the D2H
+//! eviction that frees its space.
+//!
+//! Two kinds of copies:
+//!
+//! * **demand** copies sit on the requester's critical path: the compute
+//!   stream blocks until the copy completes.  The stall (queueing delay +
+//!   wire time) is accounted as *exposed* transfer time.
+//! * **async** copies (prefetches, evictions, activation offload) do not
+//!   block; they return their completion time so the engine can `wait
+//!   until` it if a later operator actually needs the payload.  Whatever
+//!   part of an async copy the compute stream never waits for is
+//!   *overlapped* (hidden) transfer time.
+//!
+//! With `overlap = false` the timeline degenerates to the flat per-phase
+//! accumulator semantics the serial engine always had: every copy charges
+//! the compute frontier and `makespan() == clock.total()`, bit-for-bit —
+//! the overlap-off ablation reproduces the pre-pipeline numbers exactly.
+
+use super::clock::{Phase, SimClock};
+
+/// Direction of a PCIe copy, selecting the copy engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CopyDir {
+    /// CPU -> GPU (host-to-device engine).
+    H2D,
+    /// GPU -> CPU (device-to-host engine).
+    D2H,
+}
+
+/// Three-stream simulated timeline with per-phase attribution.
+#[derive(Clone, Debug)]
+pub struct StreamTimeline {
+    clock: SimClock,
+    overlap: bool,
+    /// Stream frontiers (seconds since iteration start).
+    compute: f64,
+    h2d: f64,
+    d2h: f64,
+    /// Sum of all copy durations (both engines, both kinds).
+    copy_total: f64,
+    /// Compute-stream stall time attributable to copies.
+    exposed: f64,
+}
+
+impl StreamTimeline {
+    pub fn new(overlap: bool) -> Self {
+        StreamTimeline {
+            clock: SimClock::new(),
+            overlap,
+            compute: 0.0,
+            h2d: 0.0,
+            d2h: 0.0,
+            copy_total: 0.0,
+            exposed: 0.0,
+        }
+    }
+
+    pub fn overlap(&self) -> bool {
+        self.overlap
+    }
+
+    /// Per-phase attribution (serial-sum semantics: phases always add up
+    /// to the *work* performed, regardless of how much was hidden).
+    pub fn clock(&self) -> &SimClock {
+        &self.clock
+    }
+
+    pub fn get(&self, phase: Phase) -> f64 {
+        self.clock.get(phase)
+    }
+
+    /// Charge work to the compute stream (operators, ADAM, collectives).
+    pub fn charge(&mut self, phase: Phase, secs: f64) {
+        self.clock.add(phase, secs);
+        self.compute += secs;
+    }
+
+    fn stream_mut(&mut self, dir: CopyDir) -> &mut f64 {
+        match dir {
+            CopyDir::H2D => &mut self.h2d,
+            CopyDir::D2H => &mut self.d2h,
+        }
+    }
+
+    /// Blocking copy on the compute critical path.  `ready` is an extra
+    /// start dependency (0.0 for none).
+    pub fn demand_copy(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        dir: CopyDir,
+        ready: f64,
+    ) {
+        self.clock.add(phase, secs);
+        self.copy_total += secs;
+        if !self.overlap {
+            self.compute += secs;
+            return;
+        }
+        let issue = self.compute;
+        let start = issue.max(*self.stream_mut(dir)).max(ready);
+        let done = start + secs;
+        *self.stream_mut(dir) = done;
+        self.exposed += done - issue;
+        self.compute = done;
+    }
+
+    /// Non-blocking copy; returns its completion time.  With overlap off
+    /// the copy is charged serially and "completes" immediately.
+    pub fn async_copy(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        dir: CopyDir,
+        ready: f64,
+    ) -> f64 {
+        self.clock.add(phase, secs);
+        self.copy_total += secs;
+        if !self.overlap {
+            self.compute += secs;
+            return self.compute;
+        }
+        let start = self.compute.max(*self.stream_mut(dir)).max(ready);
+        let done = start + secs;
+        *self.stream_mut(dir) = done;
+        done
+    }
+
+    /// Un-charge a previously enqueued async copy that was cancelled
+    /// before reaching the wire: the queue behind it compresses, so its
+    /// duration comes back off the stream frontier, the phase clock and
+    /// the copy total.  Keeps time accounting consistent with the byte
+    /// accounting (`MoveStats` credits cancelled prefetches back too).
+    pub fn reclaim(&mut self, phase: Phase, secs: f64, dir: CopyDir) {
+        self.clock.sub(phase, secs);
+        self.copy_total = (self.copy_total - secs).max(0.0);
+        if self.overlap {
+            let s = self.stream_mut(dir);
+            *s = (*s - secs).max(0.0);
+        } else {
+            self.compute = (self.compute - secs).max(0.0);
+        }
+    }
+
+    /// Block the compute stream until `t` (completion of an async copy a
+    /// consumer now needs).  The stall counts as exposed transfer time.
+    pub fn wait_until(&mut self, t: f64) {
+        if self.overlap && t > self.compute {
+            self.exposed += t - self.compute;
+            self.compute = t;
+        }
+    }
+
+    /// Current compute-stream time (used to decide whether an async
+    /// copy being cancelled had already landed).
+    pub fn now(&self) -> f64 {
+        self.compute
+    }
+
+    /// Iteration wall time: the latest stream frontier (overlap mode) or
+    /// the flat per-phase sum (serial mode).
+    pub fn makespan(&self) -> f64 {
+        if self.overlap {
+            self.compute.max(self.h2d).max(self.d2h)
+        } else {
+            self.clock.total()
+        }
+    }
+
+    /// Copy time the compute stream actually waited for.
+    pub fn exposed_transfer(&self) -> f64 {
+        if self.overlap {
+            self.exposed
+        } else {
+            self.copy_total
+        }
+    }
+
+    /// Copy time hidden under compute.
+    pub fn overlapped_transfer(&self) -> f64 {
+        if self.overlap {
+            (self.copy_total - self.exposed).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.clock.reset();
+        self.compute = 0.0;
+        self.h2d = 0.0;
+        self.d2h = 0.0;
+        self.copy_total = 0.0;
+        self.exposed = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serial_mode_matches_flat_clock() {
+        let mut tl = StreamTimeline::new(false);
+        tl.charge(Phase::FwdBwd, 1.0);
+        tl.demand_copy(Phase::CpuToGpu, 0.5, CopyDir::H2D, 0.0);
+        tl.async_copy(Phase::GpuToCpu, 0.25, CopyDir::D2H, 0.0);
+        assert_eq!(tl.makespan(), tl.clock().total());
+        assert!((tl.makespan() - 1.75).abs() < 1e-12);
+        // Serial mode: every copy is exposed by definition.
+        assert!((tl.exposed_transfer() - 0.75).abs() < 1e-12);
+        assert_eq!(tl.overlapped_transfer(), 0.0);
+    }
+
+    #[test]
+    fn async_copy_hides_under_compute() {
+        let mut tl = StreamTimeline::new(true);
+        let done = tl.async_copy(Phase::CpuToGpu, 0.5, CopyDir::H2D, 0.0);
+        tl.charge(Phase::FwdBwd, 1.0);
+        tl.wait_until(done); // copy finished long ago: no stall
+        assert_eq!(tl.makespan(), 1.0);
+        assert_eq!(tl.exposed_transfer(), 0.0);
+        assert!((tl.overlapped_transfer() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn late_wait_exposes_remainder() {
+        let mut tl = StreamTimeline::new(true);
+        let done = tl.async_copy(Phase::CpuToGpu, 1.0, CopyDir::H2D, 0.0);
+        tl.charge(Phase::FwdBwd, 0.4);
+        tl.wait_until(done); // 0.6 s of the copy still outstanding
+        assert!((tl.exposed_transfer() - 0.6).abs() < 1e-12);
+        assert!((tl.overlapped_transfer() - 0.4).abs() < 1e-12);
+        assert!((tl.makespan() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn demand_copy_blocks_and_queues_fifo() {
+        let mut tl = StreamTimeline::new(true);
+        // A prefetch occupies the H2D engine for 1 s...
+        tl.async_copy(Phase::CpuToGpu, 1.0, CopyDir::H2D, 0.0);
+        // ...so a demand fetch issued at t=0 waits behind it.
+        tl.demand_copy(Phase::CpuToGpu, 0.5, CopyDir::H2D, 0.0);
+        assert!((tl.makespan() - 1.5).abs() < 1e-12);
+        assert!((tl.exposed_transfer() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ready_dependency_delays_start() {
+        let mut tl = StreamTimeline::new(true);
+        // Eviction on D2H completes at 0.3; the fetch into the freed
+        // space cannot start before that.
+        let evict_done =
+            tl.async_copy(Phase::GpuToCpu, 0.3, CopyDir::D2H, 0.0);
+        tl.demand_copy(Phase::CpuToGpu, 0.2, CopyDir::H2D, evict_done);
+        assert!((tl.makespan() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn copy_streams_independent_of_each_other() {
+        let mut tl = StreamTimeline::new(true);
+        tl.async_copy(Phase::CpuToGpu, 1.0, CopyDir::H2D, 0.0);
+        tl.async_copy(Phase::GpuToCpu, 1.0, CopyDir::D2H, 0.0);
+        // Both engines run concurrently: makespan 1, not 2.
+        assert!((tl.makespan() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reclaim_undoes_a_cancelled_queued_copy() {
+        let mut tl = StreamTimeline::new(true);
+        tl.async_copy(Phase::CpuToGpu, 1.0, CopyDir::H2D, 0.0);
+        tl.reclaim(Phase::CpuToGpu, 1.0, CopyDir::H2D);
+        assert_eq!(tl.makespan(), 0.0);
+        assert_eq!(tl.get(Phase::CpuToGpu), 0.0);
+        assert_eq!(tl.overlapped_transfer(), 0.0);
+        // Serial mode nets out the same way.
+        let mut tl = StreamTimeline::new(false);
+        tl.async_copy(Phase::CpuToGpu, 1.0, CopyDir::H2D, 0.0);
+        tl.reclaim(Phase::CpuToGpu, 1.0, CopyDir::H2D);
+        assert_eq!(tl.makespan(), 0.0);
+        assert_eq!(tl.exposed_transfer(), 0.0);
+    }
+
+    #[test]
+    fn reset_clears_frontiers() {
+        let mut tl = StreamTimeline::new(true);
+        tl.charge(Phase::FwdBwd, 1.0);
+        tl.async_copy(Phase::CpuToGpu, 2.0, CopyDir::H2D, 0.0);
+        tl.reset();
+        assert_eq!(tl.makespan(), 0.0);
+        assert_eq!(tl.clock().total(), 0.0);
+        assert_eq!(tl.exposed_transfer(), 0.0);
+    }
+}

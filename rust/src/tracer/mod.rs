@@ -29,6 +29,10 @@ pub struct MemTracer {
     non_model: Vec<u64>,
     /// Moments at which each chunk is accessed (sorted, by construction).
     chunk_moments: Vec<Vec<Moment>>,
+    /// The subset of `chunk_moments` whose access targeted the GPU —
+    /// the prefetcher's work list (a CPU-targeted ADAM access must not
+    /// trigger a CPU->GPU prefetch).
+    gpu_moments: Vec<Vec<Moment>>,
     /// Total moments in one iteration.
     pub n_moments: Moment,
     pub warmed_up: bool,
@@ -39,6 +43,7 @@ impl MemTracer {
         MemTracer {
             non_model: Vec::new(),
             chunk_moments: vec![Vec::new(); n_chunks],
+            gpu_moments: vec![Vec::new(); n_chunks],
             n_moments: 0,
             warmed_up: false,
         }
@@ -55,11 +60,29 @@ impl MemTracer {
         m
     }
 
-    /// Record that `chunk` is needed at moment `m` (access during warm-up).
+    /// Record that `chunk` is needed at moment `m` (access during
+    /// warm-up), assumed GPU-targeted.
     pub fn record_chunk_use(&mut self, chunk: ChunkId, m: Moment) {
+        self.record_chunk_use_at(chunk, m, true);
+    }
+
+    /// Record a warm-up access with its target device: `gpu_target`
+    /// accesses also enter the prefetcher's GPU work list.
+    pub fn record_chunk_use_at(
+        &mut self,
+        chunk: ChunkId,
+        m: Moment,
+        gpu_target: bool,
+    ) {
         let v = &mut self.chunk_moments[chunk.0 as usize];
         if v.last() != Some(&m) {
             v.push(m);
+        }
+        if gpu_target {
+            let g = &mut self.gpu_moments[chunk.0 as usize];
+            if g.last() != Some(&m) {
+                g.push(m);
+            }
         }
     }
 
@@ -92,6 +115,30 @@ impl MemTracer {
         gpu_capacity.saturating_sub(self.non_model_at(m))
     }
 
+    /// Tightest chunkable-GPU grant over the moment span `[from, to]`
+    /// (inclusive, clamped to the recorded iteration).  The prefetch
+    /// headroom budget: chunk payload staged ahead of moment `to` must
+    /// stay under every intervening cap, or the staging itself would
+    /// trigger the evictions it is trying to avoid.
+    pub fn min_chunkable_gpu(
+        &self,
+        gpu_capacity: u64,
+        from: Moment,
+        to: Moment,
+    ) -> u64 {
+        if !self.warmed_up {
+            return (gpu_capacity as f64 * WARMUP_GPU_FRAC) as u64;
+        }
+        if self.non_model.is_empty() {
+            return gpu_capacity;
+        }
+        let last = self.non_model.len() - 1;
+        let lo = (from as usize).min(last);
+        let hi = (to.max(from) as usize).min(last);
+        let worst = self.non_model[lo..=hi].iter().copied().max().unwrap_or(0);
+        gpu_capacity.saturating_sub(worst)
+    }
+
     /// Next moment >= `now` at which `chunk` is used; None if never again
     /// this iteration.  O(log T) binary search (paper Sec. 8.3).
     pub fn next_use(&self, chunk: ChunkId, now: Moment) -> Option<Moment> {
@@ -102,6 +149,11 @@ impl MemTracer {
 
     pub fn moments_of(&self, chunk: ChunkId) -> &[Moment] {
         &self.chunk_moments[chunk.0 as usize]
+    }
+
+    /// GPU-targeted use moments of `chunk` (the prefetcher's view).
+    pub fn gpu_moments_of(&self, chunk: ChunkId) -> &[Moment] {
+        &self.gpu_moments[chunk.0 as usize]
     }
 }
 
@@ -149,6 +201,35 @@ mod tests {
         assert_eq!(t.next_use(ChunkId(0), 3), Some(5));
         assert_eq!(t.next_use(ChunkId(0), 10), None);
         assert_eq!(t.next_use(ChunkId(1), 0), None);
+    }
+
+    #[test]
+    fn min_chunkable_is_worst_cap_over_span() {
+        let mut t = MemTracer::new(1);
+        for nm in [300u64, 700, 100] {
+            t.record_moment(nm);
+        }
+        t.finish_warmup();
+        assert_eq!(t.min_chunkable_gpu(1000, 0, 0), 700);
+        assert_eq!(t.min_chunkable_gpu(1000, 0, 2), 300);
+        assert_eq!(t.min_chunkable_gpu(1000, 2, 2), 900);
+        // Spans past the recorded iteration clamp to the last moment.
+        assert_eq!(t.min_chunkable_gpu(1000, 2, 99), 900);
+        // Degenerate reversed span behaves like a single moment.
+        assert_eq!(t.min_chunkable_gpu(1000, 1, 0), 300);
+    }
+
+    #[test]
+    fn cpu_targeted_uses_stay_off_gpu_list() {
+        let mut t = MemTracer::new(1);
+        t.record_chunk_use_at(ChunkId(0), 2, true);
+        t.record_chunk_use_at(ChunkId(0), 5, false); // ADAM on CPU
+        t.record_chunk_use_at(ChunkId(0), 9, true);
+        t.finish_warmup();
+        // OPT eviction sees every use...
+        assert_eq!(t.moments_of(ChunkId(0)), &[2, 5, 9]);
+        // ...the prefetcher only the GPU-targeted ones.
+        assert_eq!(t.gpu_moments_of(ChunkId(0)), &[2, 9]);
     }
 
     #[test]

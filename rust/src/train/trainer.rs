@@ -35,6 +35,11 @@ pub struct TrainerConfig {
     pub lr: f32,
     pub weight_decay: f32,
     pub seed: u64,
+    /// Stage the chunk `prefetch_lookahead` tensors ahead into the GPU
+    /// pool while the current chunk streams through (0 = off).  The e2e
+    /// analogue of the simulator's warm-up-guided prefetch: chunk order
+    /// is static here, so the "trace" is the parameter order itself.
+    pub prefetch_lookahead: usize,
 }
 
 impl Default for TrainerConfig {
@@ -46,6 +51,7 @@ impl Default for TrainerConfig {
             lr: 1e-3,
             weight_decay: 0.01,
             seed: 0,
+            prefetch_lookahead: 0,
         }
     }
 }
@@ -58,6 +64,7 @@ pub struct TrainReport {
     pub evictions: u64,
     pub cpu_to_gpu_bytes: u64,
     pub gpu_to_cpu_bytes: u64,
+    pub prefetches: u64,
 }
 
 /// Embedding parameter state (CPU-pinned, unmanaged by chunks).
@@ -216,6 +223,32 @@ impl Trainer {
 
     // ------------------------------------------------------------ helpers
 
+    /// Stage the chunk owning non-embedding tensor `i + lookahead` into
+    /// the GPU pool (best-effort; the in-flight mark keeps it safe from
+    /// the LRU until its access consumes it).  Free pool space only —
+    /// never evicts for a speculative fetch, so a tight pool simply
+    /// stages nothing rather than thrashing the chunks the next few
+    /// accesses are about to need.
+    fn prefetch_ahead(&mut self, i: usize) -> Result<()> {
+        let look = self.cfg.prefetch_lookahead;
+        if look == 0 {
+            return Ok(());
+        }
+        let ahead = i + look;
+        if ahead >= self.mgr.reg.n_model_tensors {
+            return Ok(());
+        }
+        let info = self.mgr.reg.tensor(ChunkKind::ParamFp16, ahead);
+        let chunk = crate::chunk::ChunkId(info.chunk as u32);
+        let limit = self.mgr.space.dev(Device::Gpu(0)).capacity;
+        self.now += 1;
+        let now = self.now;
+        self.mgr
+            .prefetch_to(chunk, Device::Gpu(0), limit, &mut self.policy,
+                         now, &|_| false)?;
+        Ok(())
+    }
+
     /// Gather the flat parameter literal list (tokens first) for
     /// train_step / eval_loss.  Each fp16 chunk is fetched to the GPU
     /// pool through Algorithm 1, its tensor payload copied out to the
@@ -235,6 +268,7 @@ impl Trainer {
                     ei += 1;
                 }
                 Some(i) => {
+                    self.prefetch_ahead(i)?;
                     self.now += 1;
                     let now = self.now;
                     self.mgr.access_tensor(
@@ -312,6 +346,7 @@ impl Trainer {
                     ei += 1;
                 }
                 Some(i) => {
+                    self.prefetch_ahead(i)?;
                     self.now += 1;
                     let now = self.now;
                     self.mgr.access_tensor(
@@ -492,6 +527,7 @@ impl Trainer {
         report.evictions = self.mgr.stats.evictions;
         report.cpu_to_gpu_bytes = self.mgr.stats.cpu_to_gpu_bytes;
         report.gpu_to_cpu_bytes = self.mgr.stats.gpu_to_cpu_bytes;
+        report.prefetches = self.mgr.stats.prefetches;
         Ok(report)
     }
 }
