@@ -46,6 +46,7 @@ fn main() {
         ("fig19_pc", fig19_pc),
         ("ablation_eviction", ablation_eviction),
         ("prefetch_overlap", prefetch_overlap),
+        ("collective_overlap", collective_overlap),
         ("micro_hotpaths", micro_hotpaths),
     ];
     for (name, f) in benches {
@@ -675,6 +676,128 @@ fn prefetch_overlap() {
         "acceptance: pf+ov speedup >= 1.10x on at least two configs with \
          moved bytes not increased; serial reproduces the pre-pipeline \
          breakdown."
+    );
+}
+
+// =====================================================================
+// Collective-stream overlap ablation (ISSUE 2 tentpole)
+// =====================================================================
+//
+// Serial vs collective-stream (group-level lookahead gathers + draining
+// reduce-scatters) on nproc >= 2 configs where all-gather/reduce-scatter
+// sit on the critical path.  The contract measured here:
+//
+//   * exposed collective time drops with the stream on (and is
+//     non-increasing in --group-lookahead);
+//   * total all-gather/reduce-scatter byte volume is EXACTLY unchanged —
+//     the pipeline moves collectives on the clock, never on the wire.
+//
+// Emits BENCH_collectives.json (name/value/unit entries) next to
+// BENCH_prefetch.json so the distributed perf trajectory is tracked
+// across PRs.
+fn collective_overlap() {
+    let cases = [
+        (ClusterPreset::yard(), "4B", 2u32, 8u64),
+        (ClusterPreset::yard(), "8B", 4, 8),
+        (ClusterPreset::yard(), "15B", 8, 8),
+        (ClusterPreset::superpod(), "50B", 8, 8),
+    ];
+    let mut entries: Vec<Json> = Vec::new();
+    let mut push = |name: String, value: f64, unit: &str| {
+        entries.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("value", Json::num(value)),
+            ("unit", Json::str(unit)),
+        ]));
+    };
+    let coll_volume = |r: &patrickstar::engine::EngineReport| {
+        r.allgather_bytes + r.reduce_scatter_bytes
+    };
+    for (cluster, model, gpus, batch) in cases {
+        let m = GptSpec::by_name(model).unwrap();
+        let task = TrainTask::new(m, batch, gpus);
+        let case = format!("{}_{model}_{gpus}g", cluster.name);
+        println!("--- {case} ---");
+        let mut t = Table::new(&["plan", "iter s", "coll exposed",
+                                 "coll overlapped", "coll volume",
+                                 "gathers ahead"]);
+        let serial = match Engine::new(cluster, task).run() {
+            Ok(r) => r,
+            Err(e) => {
+                println!("infeasible: {e}");
+                continue;
+            }
+        };
+        let serial_exposed = serial.breakdown.critical_collective_s();
+        t.row(vec![
+            "serial".into(),
+            format!("{:.2}", serial.iter_time_s),
+            format!("{serial_exposed:.2}"),
+            "0.00".into(),
+            human_bytes(coll_volume(&serial)),
+            "0".into(),
+        ]);
+        push(format!("{case}/serial_iter_s"), serial.iter_time_s, "s");
+        push(format!("{case}/serial_exposed_coll_s"), serial_exposed, "s");
+        for la in [1u32, 2, 4] {
+            let opt = OptimizationPlan {
+                group_lookahead: la,
+                ..OptimizationPlan::collectives_pipelined()
+            };
+            match Engine::new(cluster, task).with_opt(opt).run() {
+                Ok(r) => {
+                    let exposed = r.breakdown.exposed_collective_s;
+                    t.row(vec![
+                        format!("coll la={la}"),
+                        format!("{:.2}", r.iter_time_s),
+                        format!("{exposed:.2}"),
+                        format!(
+                            "{:.2}", r.breakdown.overlapped_collective_s),
+                        human_bytes(coll_volume(&r)),
+                        r.gather_prefetches.to_string(),
+                    ]);
+                    println!(
+                        "la={la}: exposed {:.2}s vs serial \
+                         {serial_exposed:.2}s, volume {}",
+                        exposed,
+                        if coll_volume(&r) == coll_volume(&serial) {
+                            "unchanged"
+                        } else {
+                            "CHANGED (regression!)"
+                        },
+                    );
+                    push(format!("{case}/la{la}_iter_s"),
+                         r.iter_time_s, "s");
+                    push(format!("{case}/la{la}_exposed_coll_s"),
+                         exposed, "s");
+                    push(format!("{case}/la{la}_coll_bytes"),
+                         coll_volume(&r) as f64, "B");
+                    push(
+                        format!("{case}/la{la}_speedup"),
+                        serial.iter_time_s / r.iter_time_s,
+                        "x",
+                    );
+                }
+                Err(e) => {
+                    t.row(vec![format!("coll la={la}"), format!("err {e}"),
+                               "-".into(), "-".into(), "-".into(),
+                               "-".into()]);
+                }
+            }
+        }
+        push(format!("{case}/serial_coll_bytes"),
+             coll_volume(&serial) as f64, "B");
+        print!("{}", t.render());
+    }
+    let json = Json::Arr(entries).to_string_pretty();
+    match std::fs::write("BENCH_collectives.json", json) {
+        Ok(()) => println!("wrote BENCH_collectives.json"),
+        Err(e) => println!("could not write BENCH_collectives.json: {e}"),
+    }
+    println!(
+        "acceptance: exposed collective time < serial on every nproc>=2 \
+         config, non-increasing in lookahead, collective byte volume \
+         exactly unchanged."
     );
 }
 

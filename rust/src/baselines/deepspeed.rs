@@ -231,6 +231,8 @@ impl DeepSpeedSim {
             reduce_scatter_bytes: 0,
             allgather_bw: 0.0,
             reduce_scatter_bw: 0.0,
+            gather_prefetches: 0,
+            gather_cancels: 0,
             gpu_peak: gpu_need,
             cpu_peak: cpu_need,
             non_model_peak: peak_nm,

@@ -92,6 +92,8 @@ impl PyTorchDdpSim {
             reduce_scatter_bytes: 0,
             allgather_bw: 0.0,
             reduce_scatter_bw: 0.0,
+            gather_prefetches: 0,
+            gather_cancels: 0,
             gpu_peak: gpu_need,
             cpu_peak: 0,
             non_model_peak: peak_nm,

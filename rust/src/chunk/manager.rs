@@ -41,6 +41,11 @@ pub enum MoveKind {
     /// copy reached the wire: the chunk returns to its source device and
     /// the traffic accounted at issue is credited back.
     PrefetchCancel,
+    /// A remote chunk's payload, staged for an in-flight lookahead
+    /// all-gather, reclaimed under memory pressure: the payload is
+    /// dropped (remote chunks have no home to return to) and the engine
+    /// credits the group's collective back.
+    GatherCancel,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -64,6 +69,8 @@ pub struct MoveStats {
     /// Prefetches issued (cancelled ones included; their bytes are not).
     pub prefetches: u64,
     pub prefetch_cancels: u64,
+    /// In-flight lookahead gathers reclaimed under memory pressure.
+    pub gather_cancels: u64,
 }
 
 /// The chunk manager.
@@ -78,6 +85,12 @@ pub struct ChunkManager {
     /// may not be evicted — only cancelled — until first access
     /// completes the copy.
     inflight: HashSet<ChunkId>,
+    /// Remote chunks whose payload is being filled by an in-flight
+    /// lookahead all-gather on the collective stream.  Same
+    /// cancel-never-victimize contract as `inflight`: invisible to
+    /// eviction, reclaimed whole (the payload is dropped) as the victim
+    /// of last resort.
+    gathering: HashSet<ChunkId>,
     /// Real payloads (e2e mode): one optional f32 buffer per chunk.
     payloads: Vec<Option<Vec<f32>>>,
     real_mode: bool,
@@ -92,6 +105,7 @@ impl ChunkManager {
             stats: MoveStats::default(),
             events: Vec::new(),
             inflight: HashSet::new(),
+            gathering: HashSet::new(),
             payloads: vec![None; n],
             real_mode: false,
         }
@@ -114,13 +128,16 @@ impl ChunkManager {
     }
 
     /// Derived chunk mobility (paper Sec. 6.2): a chunk is movable iff no
-    /// tensor is COMPUTE, it is not pinned, and no prefetch copy is in
-    /// flight for it (an in-flight chunk is cancelled, never evicted).
+    /// tensor is COMPUTE, it is not pinned, and no prefetch copy or
+    /// lookahead all-gather is in flight for it (an in-flight chunk is
+    /// cancelled, never evicted — spilling a half-arrived payload to the
+    /// CPU would persist garbage).
     pub fn movable(&self, id: ChunkId) -> bool {
         let c = self.chunk(id);
         !c.pinned
             && c.device.is_some()
             && !self.inflight.contains(&id)
+            && !self.gathering.contains(&id)
             && c.tensors.iter().all(|t| {
                 self.reg.tensors[t.0 as usize].state != TensorState::Compute
             })
@@ -162,6 +179,28 @@ impl ChunkManager {
             .copied()
             .filter(|&c| self.chunk(c).device == Some(device))
             .min()
+    }
+
+    /// True while an in-flight lookahead all-gather is filling `id`.
+    pub fn is_gathering(&self, id: ChunkId) -> bool {
+        self.gathering.contains(&id)
+    }
+
+    /// Lowest-id chunk on `device` mid-gather — reclaimed after pending
+    /// prefetches when eviction has nothing else left.
+    pub fn gathering_on(&self, device: Device) -> Option<ChunkId> {
+        self.gathering
+            .iter()
+            .copied()
+            .filter(|&c| self.chunk(c).device == Some(device))
+            .min()
+    }
+
+    /// All chunks currently mid-gather (iteration-boundary settling).
+    pub fn gathering_chunks(&self) -> Vec<ChunkId> {
+        let mut v: Vec<ChunkId> = self.gathering.iter().copied().collect();
+        v.sort_unstable();
+        v
     }
 
     pub fn payload(&self, id: ChunkId) -> Option<&[f32]> {
@@ -207,6 +246,7 @@ impl ChunkManager {
         match ev.kind {
             MoveKind::Evict => self.stats.evictions += 1,
             MoveKind::Prefetch => self.stats.prefetches += 1,
+            MoveKind::GatherCancel => self.stats.gather_cancels += 1,
             _ => {}
         }
         self.events.push(ev);
@@ -253,6 +293,9 @@ impl ChunkManager {
                 kind: MoveKind::PrefetchCancel,
             });
         }
+        // Releasing a gathered chunk simply drops the (consumed or
+        // superfluous) gather state along with the payload.
+        self.gathering.remove(&id);
         let c = self.chunk(id);
         let (bytes, dev) = (c.bytes(), c.device);
         let dev = dev.ok_or_else(|| anyhow!("chunk {id:?} has no payload"))?;
@@ -287,6 +330,7 @@ impl ChunkManager {
         // Moving an in-flight chunk forces its copy to completion first
         // (callers wait on the timeline before relocating such chunks).
         self.inflight.remove(&id);
+        self.gathering.remove(&id);
         self.space.alloc(to, bytes)?;
         self.space.dealloc(from, bytes)?;
         self.chunk_mut(id).device = Some(to);
@@ -352,6 +396,12 @@ impl ChunkManager {
                             self.complete_prefetch(c);
                             candidates.push(c);
                         }
+                        continue;
+                    }
+                    // Mid-gather chunks are the victims after that:
+                    // reclaimed whole (never spilled half-filled).
+                    if let Some(c) = self.gathering_on(device) {
+                        self.cancel_gather(c)?;
                         continue;
                     }
                     bail!("{}", describe(self));
@@ -549,6 +599,74 @@ impl ChunkManager {
     /// after blocking on the copy's completion time).
     pub fn complete_prefetch(&mut self, id: ChunkId) {
         self.inflight.remove(&id);
+    }
+
+    // ------------------------------------------------- lookahead gathers
+
+    /// Mark `id` as being filled by an in-flight lookahead all-gather.
+    /// The payload must already be materialized (the gather writes into
+    /// it); until `finish_gather`, the chunk is invisible to eviction
+    /// and can only be reclaimed whole via `cancel_gather`.
+    pub fn begin_gather(&mut self, id: ChunkId) -> Result<()> {
+        if self.chunk(id).device.is_none() {
+            bail!("cannot gather into chunk {id:?}: no payload");
+        }
+        self.gathering.insert(id);
+        Ok(())
+    }
+
+    /// The gather landed (or its group was consumed): `id` becomes a
+    /// normal resident chunk again.
+    pub fn finish_gather(&mut self, id: ChunkId) {
+        self.gathering.remove(&id);
+    }
+
+    /// Reclaim a mid-gather chunk under memory pressure: the payload is
+    /// dropped — a remote chunk has no source device to return to; the
+    /// demand path will re-gather the whole group.  The engine reacts to
+    /// the `GatherCancel` event by cancelling the group's collective and
+    /// crediting its time and bytes back.
+    pub fn cancel_gather(&mut self, id: ChunkId) -> Result<()> {
+        if !self.gathering.remove(&id) {
+            bail!("chunk {id:?} has no in-flight gather");
+        }
+        let c = self.chunk(id);
+        let (bytes, dev) = (c.bytes(), c.device);
+        let dev = dev.ok_or_else(|| {
+            anyhow!("gathering chunk {id:?} lost its payload")
+        })?;
+        self.space.dealloc(dev, bytes)?;
+        self.chunk_mut(id).device = None;
+        if self.real_mode {
+            self.payloads[id.0 as usize] = None;
+        }
+        self.record(MoveEvent {
+            chunk: id,
+            from: Some(dev),
+            to: None,
+            bytes,
+            kind: MoveKind::GatherCancel,
+        });
+        Ok(())
+    }
+
+    /// Retag every `from`-state tensor of `id` to `to` — remote payload
+    /// arrival (FREE -> HOLD, Algorithm 1 line 14) and gather
+    /// cancellation (HOLD -> FREE) share this.
+    pub fn retag_tensors(
+        &mut self,
+        id: ChunkId,
+        from: TensorState,
+        to: TensorState,
+    ) -> Result<()> {
+        let tensors = self.chunk(id).tensors.clone();
+        for t in tensors {
+            let ti = &mut self.reg.tensors[t.0 as usize];
+            if ti.state == from {
+                ti.set_state(to).map_err(|e| anyhow!(e))?;
+            }
+        }
+        Ok(())
     }
 
     pub fn pin(&mut self, id: ChunkId) {
@@ -910,6 +1028,81 @@ mod tests {
         assert_eq!(m.chunk(list[1]).device, Some(Device::Cpu));
         assert_eq!(m.chunk(list[2]).device, Some(Device::Gpu(0)));
         assert_eq!(m.stats.gpu_to_cpu_bytes, 200);
+    }
+
+    #[test]
+    fn evict_to_fit_never_victimizes_gathering_chunks() {
+        // ISSUE 2 satellite regression: before the `movable` guard, a
+        // remote chunk mid-all-gather was a legal eviction victim — the
+        // pressure loop would spill its half-filled payload to the CPU
+        // as if it were ordinary HOLD data.  This test was written
+        // first (failing) and the guard added after.
+        let mut m = mk(6, 50, 100, 600, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let mut pol = FifoPolicy::default();
+        for (i, &c) in list.iter().take(3).enumerate() {
+            m.ensure_on(c, Device::Gpu(0), &mut pol, i as u32).unwrap();
+        }
+        // All tensors HOLD; chunk0 is mid-gather.
+        for i in 0..6usize {
+            let ti = m.reg.tensor_index(ChunkKind::ParamFp16, i);
+            m.reg.tensors[ti].set_state(TensorState::Hold).unwrap();
+        }
+        m.begin_gather(list[0]).unwrap();
+        assert!(!m.movable(list[0]), "gathering chunk must be immovable");
+        assert!(!m.eviction_candidates(Device::Gpu(0)).contains(&list[0]));
+        // Shrink to two chunks: FIFO would pick chunk0 first, but it is
+        // mid-gather — chunk1 must go instead.
+        m.space.dev_mut(Device::Gpu(0)).set_capacity(400);
+        m.evict_to_fit(Device::Gpu(0), &mut pol, 9).unwrap();
+        assert_eq!(m.chunk(list[0]).device, Some(Device::Gpu(0)),
+                   "mid-gather chunk spilled by pressure");
+        assert_eq!(m.chunk(list[1]).device, Some(Device::Cpu));
+        assert_eq!(m.stats.gather_cancels, 0);
+        // Shrink below the gathering chunk with nothing else left: the
+        // gather is reclaimed whole (payload dropped), never spilled.
+        m.space.dev_mut(Device::Gpu(0)).set_capacity(100);
+        m.evict_to_fit(Device::Gpu(0), &mut pol, 10).unwrap();
+        assert_eq!(m.chunk(list[0]).device, None, "reclaimed, not moved");
+        assert!(!m.is_gathering(list[0]));
+        assert_eq!(m.stats.gather_cancels, 1);
+        let cancels: Vec<_> = m
+            .drain_events()
+            .into_iter()
+            .filter(|e| e.kind == MoveKind::GatherCancel)
+            .collect();
+        assert_eq!(cancels.len(), 1);
+        assert_eq!(cancels[0].chunk, list[0]);
+        assert_eq!(cancels[0].to, None);
+    }
+
+    #[test]
+    fn gather_roundtrip_and_release_clear_state() {
+        let mut m = mk(4, 50, 100, 10_000, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let (a, b) = (list[0], list[1]);
+        // begin_gather requires a payload.
+        assert!(m.begin_gather(a).is_err());
+        m.alloc_payload(a, Device::Gpu(0)).unwrap();
+        m.begin_gather(a).unwrap();
+        assert!(m.is_gathering(a));
+        assert_eq!(m.gathering_on(Device::Gpu(0)), Some(a));
+        assert_eq!(m.gathering_chunks(), vec![a]);
+        // A prefetch of a gathering chunk abstains (immovable).
+        let mut pol = FifoPolicy::default();
+        assert!(!m
+            .prefetch_to(a, Device::Cpu, 10_000, &mut pol, 0, &|_| true)
+            .unwrap());
+        m.finish_gather(a);
+        assert!(!m.is_gathering(a));
+        // Releasing a still-gathering payload drops the state silently.
+        m.alloc_payload(b, Device::Gpu(0)).unwrap();
+        m.begin_gather(b).unwrap();
+        m.release_payload(b).unwrap();
+        assert!(!m.is_gathering(b));
+        assert_eq!(m.stats.gather_cancels, 0);
+        // cancel_gather on a non-gathering chunk is an error.
+        assert!(m.cancel_gather(a).is_err());
     }
 
     #[test]

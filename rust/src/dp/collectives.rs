@@ -79,6 +79,26 @@ impl CollectiveCost {
         self.allgather_bytes(chunk_bytes) / self.allgather_time(chunk_bytes)
     }
 
+    /// Issue half of a group all-gather: wire time and per-rank byte
+    /// volume are fixed here; completion is a collective-stream timeline
+    /// event.  The issue/complete split is what lets the engine enqueue
+    /// the gather for group g+1 while group g still computes, and drain
+    /// group g-1's reduce-scatter behind it.
+    pub fn allgather_op(&self, chunk_bytes: u64) -> CollectiveOp {
+        CollectiveOp {
+            secs: self.allgather_time(chunk_bytes),
+            bytes: self.allgather_bytes(chunk_bytes) as u64,
+        }
+    }
+
+    /// Issue half of a group reduce-scatter (same ring shape).
+    pub fn reduce_scatter_op(&self, chunk_bytes: u64) -> CollectiveOp {
+        CollectiveOp {
+            secs: self.reduce_scatter_time(chunk_bytes),
+            bytes: self.reduce_scatter_bytes(chunk_bytes) as u64,
+        }
+    }
+
     /// Total wire bytes per iteration per rank for M parameters:
     /// PatrickStar pattern = 6(p-1)/p·M (paper Sec. 7).
     pub fn patrickstar_iter_bytes(&self, m_params: u64) -> f64 {
@@ -89,6 +109,18 @@ impl CollectiveCost {
     pub fn broadcast_iter_bytes(&self, m_params: u64) -> f64 {
         10.0 * self.ratio() * m_params as f64
     }
+}
+
+/// One issued collective: its cost, frozen at issue time.  Completing
+/// the operation (applying the time to a stream, counting the bytes)
+/// happens later — possibly never, if memory pressure cancels a
+/// lookahead gather while it is still queued.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CollectiveOp {
+    /// Wire time on the collective stream.
+    pub secs: f64,
+    /// Per-rank wire byte volume.
+    pub bytes: u64,
 }
 
 // ---------------------------------------------------------------------
@@ -160,6 +192,28 @@ mod tests {
         let c = cost(1);
         assert_eq!(c.allgather_time(1 << 20), 0.0);
         assert_eq!(c.broadcast_time(1 << 20, 1 << 20), 0.0);
+    }
+
+    #[test]
+    fn issued_ops_match_the_flat_cost_functions() {
+        // The issue/complete split must not change the numbers: an op
+        // frozen at issue carries exactly the time and bytes the serial
+        // path charges inline.
+        for p in [1usize, 2, 4, 8] {
+            let c = cost(p);
+            for chunk_bytes in [1u64 << 20, 64 << 20] {
+                let ag = c.allgather_op(chunk_bytes);
+                assert_eq!(ag.secs, c.allgather_time(chunk_bytes));
+                assert_eq!(ag.bytes, c.allgather_bytes(chunk_bytes) as u64);
+                let rs = c.reduce_scatter_op(chunk_bytes);
+                assert_eq!(rs.secs, c.reduce_scatter_time(chunk_bytes));
+                assert_eq!(
+                    rs.bytes,
+                    c.reduce_scatter_bytes(chunk_bytes) as u64
+                );
+            }
+        }
+        assert_eq!(cost(1).allgather_op(1 << 20).secs, 0.0);
     }
 
     #[test]

@@ -1,10 +1,21 @@
-//! Communication groups (paper Sec. 7, Fig. 8).
+//! Communication groups (paper Sec. 7, Fig. 8) and the per-group
+//! collective-stream pipeline state.
 //!
 //! A chunk list of length `n` trained on `nproc` processes is cut into
 //! groups of `nproc` consecutive chunks; chunk `g*nproc + r` is the
 //! *local chunk* of rank `r` in group `g`.  The aligned layout (Sec. 6.1)
 //! guarantees the ADAM working set of a local chunk is also local, so the
 //! optimizer never communicates.
+//!
+//! [`CollectivePipeline`] tracks which group all-gathers are in flight on
+//! the collective stream (issued ahead of use by the group-level
+//! prefetcher) and which reduce-scatters are still draining behind
+//! compute — the distributed analogue of the chunk manager's in-flight
+//! prefetch set.
+
+use std::collections::HashMap;
+
+use crate::tracer::Moment;
 
 /// Group/rank arithmetic over one chunk list.
 #[derive(Clone, Copy, Debug)]
@@ -52,6 +63,103 @@ impl CommGroups {
     }
 }
 
+/// One group all-gather in flight on the collective stream.
+#[derive(Clone, Copy, Debug)]
+pub struct InFlightGather {
+    /// Completion time on the collective stream.
+    pub done: f64,
+    /// Wire time charged at issue (reclaimed if cancelled while queued).
+    pub secs: f64,
+    /// Per-rank byte volume charged at issue (credited back on cancel).
+    pub bytes: u64,
+    /// Moment the steady-state schedule demand-fetches this group.
+    pub use_moment: Moment,
+}
+
+/// Per-group collective pipeline: in-flight lookahead gathers and
+/// draining reduce-scatters, keyed by group index.
+#[derive(Clone, Debug, Default)]
+pub struct CollectivePipeline {
+    gathers: HashMap<usize, InFlightGather>,
+    rs_done: HashMap<usize, f64>,
+}
+
+impl CollectivePipeline {
+    /// Forget everything (iteration boundary: the timeline restarts at
+    /// zero, so stale completion times must not leak across).
+    pub fn clear(&mut self) {
+        self.gathers.clear();
+        self.rs_done.clear();
+    }
+
+    pub fn gather_issued(&self, g: usize) -> bool {
+        self.gathers.contains_key(&g)
+    }
+
+    pub fn n_inflight_gathers(&self) -> usize {
+        self.gathers.len()
+    }
+
+    pub fn issue_gather(&mut self, g: usize, gi: InFlightGather) {
+        self.gathers.insert(g, gi);
+    }
+
+    /// Consume (or cancel) the in-flight gather for `g`.
+    pub fn take_gather(&mut self, g: usize) -> Option<InFlightGather> {
+        self.gathers.remove(&g)
+    }
+
+    /// Groups whose gather has landed by collective-stream time `now`,
+    /// in ascending group order (deterministic iteration).
+    pub fn landed(&self, now: f64) -> Vec<usize> {
+        let mut v: Vec<usize> = self
+            .gathers
+            .iter()
+            .filter(|(_, gi)| gi.done <= now)
+            .map(|(&g, _)| g)
+            .collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// FIFO queue compression after a queued gather (completing at
+    /// `done`, lasting `secs`) was reclaimed: everything queued behind
+    /// it — later gathers *and* draining reduce-scatters — lands
+    /// earlier now, keeping every stored completion time consistent
+    /// with the reclaimed stream frontier.
+    pub fn compress_after(&mut self, done: f64, secs: f64) {
+        for gi in self.gathers.values_mut() {
+            if gi.done > done {
+                gi.done = (gi.done - secs).max(0.0);
+            }
+        }
+        for t in self.rs_done.values_mut() {
+            if *t > done {
+                *t = (*t - secs).max(0.0);
+            }
+        }
+    }
+
+    /// A reduce-scatter for group `g` drains on the collective stream
+    /// until `t`.
+    pub fn set_rs_done(&mut self, g: usize, t: f64) {
+        self.rs_done.insert(g, t);
+    }
+
+    /// The ADAM stage consumes the drain time of `g`'s reduce-scatter.
+    pub fn take_rs_done(&mut self, g: usize) -> Option<f64> {
+        self.rs_done.remove(&g)
+    }
+
+    /// Outstanding reduce-scatter completion times (end-of-iteration
+    /// barrier), in deterministic group order.
+    pub fn drain_rs(&mut self) -> Vec<f64> {
+        let mut v: Vec<(usize, f64)> = self.rs_done.drain().collect();
+        v.sort_unstable_by_key(|&(g, _)| g);
+        v.into_iter().map(|(_, t)| t).collect()
+    }
+}
+
 trait BoolSome {
     fn some<T>(self, v: T) -> Option<T>;
 }
@@ -95,6 +203,51 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn pipeline_gather_lifecycle() {
+        let mut p = CollectivePipeline::default();
+        assert!(!p.gather_issued(3));
+        p.issue_gather(
+            3,
+            InFlightGather { done: 2.0, secs: 1.5, bytes: 100, use_moment: 7 },
+        );
+        p.issue_gather(
+            4,
+            InFlightGather { done: 3.0, secs: 1.0, bytes: 100, use_moment: 9 },
+        );
+        assert!(p.gather_issued(3));
+        assert_eq!(p.n_inflight_gathers(), 2);
+        // Only the first gather has landed by t=2.5.
+        assert_eq!(p.landed(2.5), vec![3]);
+        assert_eq!(p.landed(0.0), Vec::<usize>::new());
+        // Cancelling group 3 while queued compresses group 4 forward —
+        // and a reduce-scatter draining behind it shifts too.
+        p.set_rs_done(7, 4.0);
+        p.set_rs_done(8, 1.0); // ahead of the cancelled gather: untouched
+        let gi = p.take_gather(3).unwrap();
+        p.compress_after(gi.done, gi.secs);
+        assert!((p.take_gather(4).unwrap().done - 1.5).abs() < 1e-12);
+        assert!(p.take_gather(3).is_none());
+        assert!((p.take_rs_done(7).unwrap() - 2.5).abs() < 1e-12);
+        assert_eq!(p.take_rs_done(8), Some(1.0));
+    }
+
+    #[test]
+    fn pipeline_rs_drain_ordering() {
+        let mut p = CollectivePipeline::default();
+        p.set_rs_done(2, 5.0);
+        p.set_rs_done(0, 9.0);
+        assert_eq!(p.take_rs_done(2), Some(5.0));
+        assert_eq!(p.take_rs_done(2), None);
+        p.set_rs_done(1, 4.0);
+        // drain_rs is group-ordered (determinism), not time-ordered.
+        assert_eq!(p.drain_rs(), vec![9.0, 4.0]);
+        assert_eq!(p.drain_rs(), Vec::<f64>::new());
+        p.set_rs_done(5, 1.0);
+        p.clear();
+        assert_eq!(p.take_rs_done(5), None);
     }
 
     #[test]

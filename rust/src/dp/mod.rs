@@ -1,14 +1,21 @@
 //! ZeRO-symbiotic data parallelism over chunks (paper Sec. 7).
 //!
 //! * [`group`]       — communication groups: `nproc` consecutive chunks of
-//!                     a chunk list, one per process (Fig. 8).
+//!                     a chunk list, one per process (Fig. 8); plus the
+//!                     per-group collective-stream pipeline state
+//!                     (in-flight lookahead gathers, draining
+//!                     reduce-scatters).
 //! * [`collectives`] — cost model for chunk all-gather / reduce-scatter
 //!                     and the broadcast baseline (Thakur et al. [49]),
-//!                     plus a *real* in-process collective implementation
-//!                     used by the multi-rank tests and the e2e trainer.
+//!                     with an issue/complete split ([`CollectiveOp`])
+//!                     for the collective stream, plus a *real*
+//!                     in-process collective implementation used by the
+//!                     multi-rank tests and the DP e2e path.
+//!
+//! See `README.md` in this directory for the fetch_group pipeline.
 
 pub mod collectives;
 pub mod group;
 
-pub use collectives::{CollectiveCost, RealCollectives};
-pub use group::CommGroups;
+pub use collectives::{CollectiveCost, CollectiveOp, RealCollectives};
+pub use group::{CollectivePipeline, CommGroups, InFlightGather};

@@ -34,22 +34,35 @@
 //!   group *k* updates on the CPU, group *k+1*'s grad chunk rides the
 //!   D2H stream home.  A staged chunk is *in flight* — never evicted,
 //!   only cancelled — until its first access waits out the copy.
+//! * **overlap_collectives** extends the same pipeline to the
+//!   data-parallel layer (ISSUE 2 tentpole): a fourth **collective
+//!   stream** carries all-gather/reduce-scatter, and a group-level
+//!   prefetcher ([`prefetch::GroupPrefetcher`], fed by the warm-up's
+//!   gather log) issues the all-gather for group *g+1*'s remote chunks
+//!   while group *g* computes (`group_lookahead` groups deep), with
+//!   group *g-1*'s reduce-scatter draining behind it.  Chunks being
+//!   filled by an in-flight gather are invisible to eviction and only
+//!   ever *cancelled* whole under memory pressure, with the collective's
+//!   time and bytes credited back — so total collective volume is
+//!   bit-for-bit the serial schedule's volume, only its placement on
+//!   the clock changes.
 //!
-//! Both default **off**: the serial path reproduces the pre-pipeline
-//! numbers exactly, and the pipelined path is an ablation cell measured
-//! by `cargo bench -- prefetch_overlap`.
+//! All switches default **off**: the serial path reproduces the
+//! pre-pipeline numbers exactly; the pipelined paths are ablation cells
+//! measured by `cargo bench -- prefetch_overlap collective_overlap`.
 
 pub mod prefetch;
 pub mod report;
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeSet, HashMap, HashSet};
 
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::chunk::{ChunkId, ChunkKind, ChunkManager, ChunkRegistry,
                    MoveKind};
 use crate::config::{ClusterPreset, TrainTask};
-use crate::dp::{CollectiveCost, CommGroups};
+use crate::dp::{CollectiveCost, CollectivePipeline, CommGroups,
+                InFlightGather};
 use crate::evict::{EvictionPolicy, FifoPolicy, LfuPolicy, LruPolicy,
                    OptPolicy};
 use crate::mem::{Device, HeterogeneousSpace};
@@ -60,7 +73,8 @@ use crate::sim::{CopyDir, Phase, StreamTimeline};
 use crate::tensor::TensorState;
 use crate::tracer::{MemTracer, Moment, WARMUP_GPU_FRAC};
 
-pub use prefetch::{Prefetcher, DEFAULT_LOOKAHEAD};
+pub use prefetch::{GroupPrefetcher, Prefetcher, DEFAULT_GROUP_LOOKAHEAD,
+                   DEFAULT_LOOKAHEAD};
 pub use report::{EngineReport, IterBreakdown};
 
 /// Eviction policy selection (paper Sec. 8.3 + DBMS baselines).
@@ -89,6 +103,12 @@ pub struct OptimizationPlan {
     pub overlap: bool,
     /// Prefetch lookahead window, in moments.
     pub lookahead: u32,
+    /// Run collectives on a dedicated fourth stream with group-level
+    /// lookahead gathers and draining reduce-scatters (requires
+    /// `overlap`; no-op on a single process).
+    pub overlap_collectives: bool,
+    /// Group-gather lookahead depth, in communication groups.
+    pub group_lookahead: u32,
 }
 
 impl Default for OptimizationPlan {
@@ -100,6 +120,8 @@ impl Default for OptimizationPlan {
             prefetch: false,
             overlap: false,
             lookahead: DEFAULT_LOOKAHEAD,
+            overlap_collectives: false,
+            group_lookahead: DEFAULT_GROUP_LOOKAHEAD,
         }
     }
 }
@@ -124,6 +146,25 @@ impl OptimizationPlan {
     /// evictions and activation offload leave the critical path.
     pub fn overlap_only() -> Self {
         OptimizationPlan { overlap: true, ..Default::default() }
+    }
+
+    /// The collective stream alone on top of overlap: chunk prefetch
+    /// off, so the distributed win is measured in isolation.
+    pub fn collectives_pipelined() -> Self {
+        OptimizationPlan {
+            overlap: true,
+            overlap_collectives: true,
+            ..Default::default()
+        }
+    }
+
+    /// Everything on: chunk prefetch + dual copy streams + collective
+    /// stream with group lookahead.
+    pub fn fully_pipelined() -> Self {
+        OptimizationPlan {
+            overlap_collectives: true,
+            ..Self::pipelined()
+        }
     }
 }
 
@@ -174,6 +215,22 @@ struct RunState {
     reduce_scatter_bytes: u64,
     allgather_time: f64,
     reduce_scatter_time: f64,
+    /// Warm-up log of demand gathers: (moment, group), schedule order.
+    gather_log: Vec<(Moment, usize)>,
+    /// Group-gather schedule (built once after warm-up when the
+    /// collective-stream switch is on).
+    group_prefetcher: Option<GroupPrefetcher>,
+    /// Collective-stream pipeline: in-flight lookahead gathers and
+    /// draining reduce-scatters, by group.
+    coll: CollectivePipeline,
+    /// Lookahead gathers issued this iteration.
+    gather_prefetches: u64,
+    /// Lookahead gathers cancelled this iteration, counted per *group*
+    /// (the same unit as `gather_prefetches`; the manager's
+    /// `MoveStats::gather_cancels` counts reclaimed chunks).
+    gather_cancelled_groups: u64,
+    /// Per-moment timeline snapshots (golden-trace tests).
+    trace: Option<Vec<String>>,
 }
 
 /// The engine: one (cluster, task, optimization plan) triple.
@@ -200,6 +257,12 @@ impl Engine {
     fn prefetch_enabled(&self) -> bool {
         // SP has no moment lists: the prefetcher is tracer-fed.
         self.opt.prefetch && self.opt.use_tracer
+    }
+
+    /// The collective stream is live: overlap timeline on, switch on,
+    /// and there is actually more than one process to talk to.
+    fn collectives_overlapped(&self) -> bool {
+        self.opt.overlap && self.opt.overlap_collectives && self.nproc() > 1
     }
 
     /// Pick the chunk size: task override or the paper-grid search
@@ -248,6 +311,21 @@ impl Engine {
 
     /// Run warm-up + 2 steady iterations; report the final iteration.
     pub fn run(&self) -> Result<EngineReport> {
+        self.run_inner(false).map(|(r, _)| r)
+    }
+
+    /// `run`, capturing a per-moment bit-exact timeline snapshot trace
+    /// (one line per moment, plus iteration markers) for the
+    /// golden-trace regression tests.
+    pub fn run_traced(&self) -> Result<(EngineReport, Vec<String>)> {
+        self.run_inner(true)
+            .map(|(r, t)| (r, t.unwrap_or_default()))
+    }
+
+    fn run_inner(
+        &self,
+        traced: bool,
+    ) -> Result<(EngineReport, Option<Vec<String>>)> {
         let m = &self.task.model;
         let nproc = self.nproc();
         let chunk_elems = self.chunk_elems()?;
@@ -303,11 +381,20 @@ impl Engine {
             reduce_scatter_bytes: 0,
             allgather_time: 0.0,
             reduce_scatter_time: 0.0,
+            gather_log: Vec::new(),
+            group_prefetcher: None,
+            coll: CollectivePipeline::default(),
+            gather_prefetches: 0,
+            gather_cancelled_groups: 0,
+            trace: if traced { Some(Vec::new()) } else { None },
         };
 
         let graph = OpGraph::build(*m, self.task.batch_per_gpu);
 
         // ---- warm-up iteration (conservative 20% GPU, FIFO eviction).
+        if let Some(tr) = st.trace.as_mut() {
+            tr.push("== warmup ==".into());
+        }
         self.iteration(&mut st, &graph).context("warm-up iteration")?;
         st.tracer.finish_warmup();
         st.warmup = false;
@@ -340,6 +427,11 @@ impl Engine {
             st.prefetcher =
                 Some(Prefetcher::from_tracer(&st.tracer, n_chunks));
         }
+        if self.collectives_overlapped() {
+            st.group_prefetcher = Some(GroupPrefetcher::from_log(
+                std::mem::take(&mut st.gather_log),
+            ));
+        }
 
         // ---- steady state: 2 iterations, measure the last.
         let mut breakdown = IterBreakdown::default();
@@ -348,10 +440,16 @@ impl Engine {
             // Settle copies still in flight from the previous iteration:
             // their payloads are already resident, and the fresh
             // timeline starts at zero, so stale completion times must
-            // not leak across the boundary.
+            // not leak across the boundary.  Gathers settle the same
+            // way: anything issued is consumed by its group's fetch
+            // within the iteration, but belt-and-braces.
             while let Some(c) = st.mgr.pending_prefetch_on(Device::Gpu(0)) {
                 st.mgr.complete_prefetch(c);
             }
+            for c in st.mgr.gathering_chunks() {
+                st.mgr.finish_gather(c);
+            }
+            st.coll.clear();
             st.inflight_done.clear();
             st.tl.reset();
             st.mgr.stats = Default::default();
@@ -359,6 +457,11 @@ impl Engine {
             st.reduce_scatter_bytes = 0;
             st.allgather_time = 0.0;
             st.reduce_scatter_time = 0.0;
+            st.gather_prefetches = 0;
+            st.gather_cancelled_groups = 0;
+            if let Some(tr) = st.trace.as_mut() {
+                tr.push(format!("== iter {it} =="));
+            }
             self.iteration(&mut st, &graph)
                 .with_context(|| format!("steady iteration {it}"))?;
             breakdown = IterBreakdown::from_timeline(&st.tl);
@@ -366,7 +469,8 @@ impl Engine {
         }
 
         let iter_flops = m.iter_flops(self.task.batch_per_gpu);
-        Ok(EngineReport {
+        let trace = st.trace.take();
+        let report = EngineReport {
             system: "patrickstar".into(),
             model: m.name.into(),
             n_gpus: self.task.n_gpus,
@@ -389,10 +493,13 @@ impl Engine {
             } else {
                 0.0
             },
+            gather_prefetches: st.gather_prefetches,
+            gather_cancels: st.gather_cancelled_groups,
             gpu_peak: st.mgr.space.dev(Device::Gpu(0)).peak(),
             cpu_peak: st.mgr.space.dev(Device::Cpu).peak(),
             non_model_peak: st.tracer.peak_non_model(),
-        })
+        };
+        Ok((report, trace))
     }
 
     // ------------------------------------------------------------------
@@ -451,6 +558,14 @@ impl Engine {
             let cpu = self.shared_cpu();
             st.tl.charge(Phase::Adam, cpu.adam_time(emb_os_bytes));
         }
+        // The optimizer step is not done until every reduce-scatter has
+        // drained off the collective stream (exec_adam waits per group;
+        // this barrier catches any group whose drain no consumer hit).
+        if !st.warmup && self.collectives_overlapped() {
+            for t in st.coll.drain_rs() {
+                st.tl.wait_collective(t);
+            }
+        }
         Ok(())
     }
 
@@ -476,6 +591,12 @@ impl Engine {
             let m = st.tracer.record_moment(nm);
             debug_assert_eq!(m, st.moment);
         }
+        // A landed lookahead gather turns its chunks back into ordinary
+        // residents *before* the cap shrink, so pressure prefers normal
+        // eviction over cancelling still-queued gathers.
+        if !st.warmup && self.collectives_overlapped() {
+            self.complete_landed_gathers(st);
+        }
         st.mgr.space.dev_mut(Device::Gpu(0)).set_capacity(cap);
         let RunState { mgr, tracer, policy, moment, .. } = st;
         with_policy(policy, tracer, |pol| {
@@ -486,7 +607,106 @@ impl Engine {
             self.issue_prefetches(st)?;
             self.charge_moves(st)?;
         }
+        if !st.warmup && st.group_prefetcher.is_some() {
+            self.issue_group_gathers(st)?;
+            self.charge_moves(st)?;
+        }
         st.moment += 1;
+        if let Some(tr) = st.trace.as_mut() {
+            tr.push(format!("m{:05} {}", st.moment - 1, st.tl.snapshot()));
+        }
+        Ok(())
+    }
+
+    /// A gather whose collective has completed by the current compute
+    /// time holds real data: its chunks become normal resident chunks
+    /// (evictable under the usual rules — spilling landed data is
+    /// honest, spilling a half-arrived payload is not).  The in-flight
+    /// entry itself stays until the demand fetch consumes it, at zero
+    /// stall.
+    fn complete_landed_gathers(&self, st: &mut RunState) {
+        let now_t = st.tl.now();
+        for g in st.coll.landed(now_t) {
+            let members: Vec<usize> = st.groups.members(g).collect();
+            for p in members {
+                st.mgr.finish_gather(st.fp16_list[p]);
+            }
+        }
+    }
+
+    /// Issue all-gathers for the next `group_lookahead` groups of the
+    /// warm-up gather schedule onto the collective stream, under the
+    /// same forward-looking headroom budget as the chunk prefetcher.
+    /// Issue order strictly follows the schedule: if the next group
+    /// cannot be staged (no absent members yet, or no headroom), later
+    /// groups must not jump the queue — a demand gather must never find
+    /// a less-urgent gather ahead of it on the stream.
+    fn issue_group_gathers(&self, st: &mut RunState) -> Result<()> {
+        let k = self.opt.group_lookahead as usize;
+        if k == 0 {
+            return Ok(());
+        }
+        let now = st.moment;
+        let upcoming = match &st.group_prefetcher {
+            Some(gp) => gp.upcoming(now, k),
+            None => return Ok(()),
+        };
+        let gpu_cap = self.cluster.gpu_mem;
+        let cc = CollectiveCost::new(self.cluster.net.nvlink, self.nproc());
+        for (use_m, g) in upcoming {
+            if st.coll.gather_issued(g) {
+                continue; // already on the stream, in schedule order
+            }
+            if st.gathered.contains(&g) {
+                break; // still held from the previous stage; retry later
+            }
+            let members: Vec<usize> = st.groups.members(g).collect();
+            let absent: Vec<ChunkId> = members
+                .iter()
+                .map(|&p| st.fp16_list[p])
+                .filter(|&c| st.mgr.chunk(c).device.is_none())
+                .collect();
+            if absent.is_empty() {
+                break; // nothing to gather (yet); keep FIFO order
+            }
+            let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
+            let new_bytes = absent.len() as u64 * chunk_bytes;
+            // Headroom budget: the staged group must fit under the
+            // tightest chunkable cap between now and its use moment, so
+            // staging never triggers the evictions it is hiding from.
+            let budget = if self.opt.use_tracer {
+                st.tracer.min_chunkable_gpu(gpu_cap, now, use_m)
+            } else {
+                (gpu_cap as f64 * WARMUP_GPU_FRAC) as u64
+            };
+            let gpu = st.mgr.space.dev(Device::Gpu(0));
+            if gpu.used() + new_bytes > budget
+                || !gpu.can_fit(new_bytes)
+            {
+                break; // no headroom; retry next moment
+            }
+            for &c in &absent {
+                st.mgr.alloc_payload(c, Device::Gpu(0))?;
+                st.mgr.begin_gather(c)?;
+                // Remote payloads arrive in HOLD (as in fetch_group).
+                st.mgr.retag_tensors(
+                    c, TensorState::Free, TensorState::Hold)?;
+            }
+            let op = cc.allgather_op(chunk_bytes);
+            let done = st.tl.async_collective(Phase::AllGather, op.secs);
+            st.allgather_time += op.secs;
+            st.allgather_bytes += op.bytes;
+            st.coll.issue_gather(
+                g,
+                InFlightGather {
+                    done,
+                    secs: op.secs,
+                    bytes: op.bytes,
+                    use_moment: use_m,
+                },
+            );
+            st.gather_prefetches += 1;
+        }
         Ok(())
     }
 
@@ -634,6 +854,10 @@ impl Engine {
         }
 
         // Distributed: fetch the communication groups of every param.
+        // BTreeSet: group order must be deterministic — HashSet
+        // iteration order varies per process, which would make the
+        // multi-GPU stream timeline (and the golden traces locked on
+        // it) run-to-run nondeterministic.
         if self.nproc() > 1 {
             let positions: HashSet<usize> = params
                 .iter()
@@ -643,7 +867,7 @@ impl Engine {
                         .list_pos as usize
                 })
                 .collect();
-            let groups: HashSet<usize> =
+            let groups: BTreeSet<usize> =
                 positions.iter().map(|&p| st.groups.group_of(p)).collect();
             for g in groups {
                 self.fetch_group(st, g, now)?;
@@ -699,7 +923,8 @@ impl Engine {
             st.mgr.release_tensor(ChunkKind::ParamFp16, t, target)?;
         }
 
-        // Distributed: release/reduce groups that completed this stage.
+        // Distributed: release/reduce groups that completed this stage
+        // (deterministic order, as above).
         if self.nproc() > 1 {
             let positions: HashSet<usize> = params
                 .iter()
@@ -709,7 +934,7 @@ impl Engine {
                         .list_pos as usize
                 })
                 .collect();
-            let groups: HashSet<usize> =
+            let groups: BTreeSet<usize> =
                 positions.iter().map(|&p| st.groups.group_of(p)).collect();
             for g in groups {
                 self.release_group(st, g, target)?;
@@ -725,6 +950,16 @@ impl Engine {
         if st.gathered.contains(&g) {
             return Ok(());
         }
+        // Consume an in-flight lookahead gather: block only for
+        // whatever part of the collective compute hasn't already hidden.
+        if let Some(gi) = st.coll.take_gather(g) {
+            st.tl.wait_collective(gi.done);
+            for p in st.groups.members(g) {
+                st.mgr.finish_gather(st.fp16_list[p]);
+            }
+            st.gathered.insert(g);
+            return Ok(());
+        }
         let members: Vec<usize> = st.groups.members(g).collect();
         // Trigger only when some member chunk is absent (paper line 5:
         // a FREE tensor exists).
@@ -736,6 +971,12 @@ impl Engine {
             st.gathered.insert(g);
             return Ok(());
         }
+        if st.warmup {
+            // The gather log *is* the steady-state gather schedule
+            // (iterations are structurally identical) — the group
+            // prefetcher is built from it after warm-up.
+            st.gather_log.push((now, g));
+        }
         let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
         for &p in &members {
             let c = st.fp16_list[p];
@@ -746,13 +987,7 @@ impl Engine {
             })?;
             st.mgr.pin(c);
             // Remote payloads arrive in HOLD.
-            let chunk_tensors = st.mgr.chunk(c).tensors.clone();
-            for t in chunk_tensors {
-                let ti = &mut st.mgr.reg.tensors[t.0 as usize];
-                if ti.state == TensorState::Free {
-                    ti.set_state(TensorState::Hold).map_err(|e| anyhow!(e))?;
-                }
-            }
+            st.mgr.retag_tensors(c, TensorState::Free, TensorState::Hold)?;
             if st.warmup {
                 st.tracer.record_chunk_use_at(c, now, true);
             }
@@ -760,10 +995,16 @@ impl Engine {
         if !st.warmup {
             let cc = CollectiveCost::new(self.cluster.net.nvlink,
                                          self.nproc());
-            let t = cc.allgather_time(chunk_bytes);
-            st.tl.charge(Phase::AllGather, t);
-            st.allgather_time += t;
-            st.allgather_bytes += cc.allgather_bytes(chunk_bytes) as u64;
+            let op = cc.allgather_op(chunk_bytes);
+            if self.collectives_overlapped() {
+                // Demand gather on the collective stream: compute
+                // stalls for queueing delay + wire time.
+                st.tl.demand_collective(Phase::AllGather, op.secs);
+            } else {
+                st.tl.charge(Phase::AllGather, op.secs);
+            }
+            st.allgather_time += op.secs;
+            st.allgather_bytes += op.bytes;
         }
         for &p in &members {
             st.mgr.unpin(st.fp16_list[p]);
@@ -796,11 +1037,18 @@ impl Engine {
             let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
             let cc =
                 CollectiveCost::new(self.cluster.net.nvlink, self.nproc());
-            let t = cc.reduce_scatter_time(chunk_bytes);
-            st.tl.charge(Phase::ReduceScatter, t);
-            st.reduce_scatter_time += t;
-            st.reduce_scatter_bytes +=
-                cc.reduce_scatter_bytes(chunk_bytes) as u64;
+            let op = cc.reduce_scatter_op(chunk_bytes);
+            if self.collectives_overlapped() {
+                // Drain behind compute (and behind queued gathers);
+                // ADAM waits it out per group.
+                let done =
+                    st.tl.async_collective(Phase::ReduceScatter, op.secs);
+                st.coll.set_rs_done(g, done);
+            } else {
+                st.tl.charge(Phase::ReduceScatter, op.secs);
+            }
+            st.reduce_scatter_time += op.secs;
+            st.reduce_scatter_bytes += op.bytes;
         }
         // Release remote payloads; tensors -> FREE.
         for &p in &members {
@@ -831,6 +1079,14 @@ impl Engine {
     ) -> Result<()> {
         let now = st.moment.saturating_sub(1);
         let fp16 = st.fp16_list[pos];
+        // The group's averaged gradient must be home before the update:
+        // wait out whatever part of its reduce-scatter hasn't drained.
+        if !st.warmup && self.collectives_overlapped() {
+            let g = st.groups.group_of(pos);
+            if let Some(t) = st.coll.take_rs_done(g) {
+                st.tl.wait_collective(t);
+            }
+        }
         let os = st.mgr.reg.os_chunks_for(fp16);
         let on_gpu = !st.warmup
             && self.opt.device_aware_os
@@ -931,7 +1187,39 @@ impl Engine {
         }
         let pcie = self.cluster.net.pcie;
         let mut dep = 0.0f64;
+        let mut cancelled_groups: Vec<usize> = Vec::new();
         for ev in events {
+            if ev.kind == MoveKind::GatherCancel {
+                // Memory pressure reclaimed a mid-gather chunk: cancel
+                // the whole group's collective.  The demand path will
+                // re-gather (and re-charge) exactly once, so total
+                // collective volume stays at the serial schedule's.
+                let pos = st.mgr.reg.chunks[ev.chunk.0 as usize].list_pos
+                    as usize;
+                let g = st.groups.group_of(pos);
+                if let Some(gi) = st.coll.take_gather(g) {
+                    st.allgather_bytes =
+                        st.allgather_bytes.saturating_sub(gi.bytes);
+                    st.allgather_time =
+                        (st.allgather_time - gi.secs).max(0.0);
+                    let now_t = st.tl.now();
+                    if gi.done > now_t {
+                        // Un-charge only the part of the collective
+                        // that has not physically run yet: the full
+                        // wire time while still queued, the remainder
+                        // when cancelled mid-wire.  Followers compress
+                        // forward by the same amount, so no completion
+                        // time ever drops below elapsed time.
+                        let remainder = (gi.done - now_t).min(gi.secs);
+                        st.tl.reclaim_collective(
+                            Phase::AllGather, remainder);
+                        st.coll.compress_after(gi.done, remainder);
+                    }
+                    st.gather_cancelled_groups += 1;
+                    cancelled_groups.push(g);
+                }
+                continue;
+            }
             if ev.kind == MoveKind::PrefetchCancel {
                 if let Some(pc) = st.inflight_done.remove(&ev.chunk) {
                     if pc.done > st.tl.now() {
@@ -1001,6 +1289,28 @@ impl Engine {
                     st.tl.demand_copy(phase, t, dir, dep);
                 }
             }
+        }
+        // Finish cancelling each reclaimed group: drop the remaining
+        // mid-gather member payloads and revert their tensors, so the
+        // group is back in the released state the demand path expects.
+        for g in cancelled_groups {
+            let members: Vec<usize> = st.groups.members(g).collect();
+            for p in members {
+                if st.groups.owner_of(p) == 0 {
+                    continue; // the local chunk was never gathering
+                }
+                let c = st.fp16_list[p];
+                if st.mgr.is_gathering(c) {
+                    // Emits another GatherCancel event; it finds the
+                    // group already cancelled on the next drain.
+                    st.mgr.cancel_gather(c)?;
+                }
+                if st.mgr.chunk(c).device.is_none() {
+                    st.mgr.retag_tensors(
+                        c, TensorState::Hold, TensorState::Free)?;
+                }
+            }
+            st.gathered.remove(&g);
         }
         Ok(())
     }

@@ -32,6 +32,10 @@ use crate::tracer::{MemTracer, Moment};
 /// that staged chunks do not crowd out the working set.
 pub const DEFAULT_LOOKAHEAD: u32 = 32;
 
+/// Default group-gather lookahead, in communication groups: while group
+/// g computes, the all-gather for group g+1 rides the collective stream.
+pub const DEFAULT_GROUP_LOOKAHEAD: u32 = 1;
+
 /// Per-moment GPU work list inverted from the tracer's chunk moment
 /// lists after warm-up.
 #[derive(Clone, Debug)]
@@ -82,6 +86,53 @@ impl Prefetcher {
     }
 }
 
+/// Warm-up-logged group-gather schedule: the (moment, group) pairs at
+/// which one steady-state iteration demand-gathers each communication
+/// group, in schedule order.  The distributed analogue of the chunk
+/// moment lists: PTM iterations are structurally identical, so the
+/// warm-up's gather sequence *is* the steady-state sequence, and the
+/// engine issues the all-gathers for the next `group_lookahead` entries
+/// on the collective stream while the current group computes.
+#[derive(Clone, Debug, Default)]
+pub struct GroupPrefetcher {
+    /// Demand-gather events of one iteration, sorted by moment.
+    fetches: Vec<(Moment, usize)>,
+}
+
+impl GroupPrefetcher {
+    pub fn from_log(mut log: Vec<(Moment, usize)>) -> Self {
+        // Warm-up records in schedule order already; sort defensively so
+        // `upcoming`'s partition_point contract always holds.
+        log.sort_unstable();
+        GroupPrefetcher { fetches: log }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.fetches.is_empty()
+    }
+
+    /// The next `k` distinct groups gathered at or after `now`, each
+    /// paired with its gather moment, in schedule order.  Inclusive of
+    /// `now` on purpose: the engine ticks the moment *before* the op
+    /// runs, so an entry at `now` is the demand gather about to be
+    /// issued — staging it first keeps the collective stream FIFO in
+    /// schedule order (a demand must never queue behind the gather of a
+    /// later group).
+    pub fn upcoming(&self, now: Moment, k: usize) -> Vec<(Moment, usize)> {
+        let i = self.fetches.partition_point(|&(m, _)| m < now);
+        let mut out: Vec<(Moment, usize)> = Vec::new();
+        for &(m, g) in &self.fetches[i..] {
+            if out.len() >= k {
+                break;
+            }
+            if !out.iter().any(|&(_, og)| og == g) {
+                out.push((m, g));
+            }
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,6 +173,30 @@ mod tests {
         assert_eq!(pf.window(5, 100), vec![]);
         // Window start beyond the iteration is empty, not a panic.
         assert_eq!(pf.window(1000, 10), vec![]);
+    }
+
+    #[test]
+    fn group_prefetcher_upcoming_is_inclusive_and_deduped() {
+        // One iteration's gather log: groups 0,1,2 in FWD (moments
+        // 1,4,8), then 2,1,0 again in BWD (moments 10,13,16).
+        let gp = GroupPrefetcher::from_log(vec![
+            (1, 0), (4, 1), (8, 2), (10, 2), (13, 1), (16, 0),
+        ]);
+        // At group 0's own fetch moment, group 0 leads the window
+        // (inclusive: the imminent demand is staged first, FIFO).
+        assert_eq!(gp.upcoming(1, 2), vec![(1, 0), (4, 1)]);
+        // Just past it, lookahead 1 sees group 1.
+        assert_eq!(gp.upcoming(2, 1), vec![(4, 1)]);
+        assert_eq!(gp.upcoming(2, 2), vec![(4, 1), (8, 2)]);
+        // Dedup keeps the first occurrence of each group: the BWD
+        // refetches of groups 2 and 1 are folded into their FWD entries,
+        // so depth 3 reaches group 0's BWD fetch.
+        assert_eq!(gp.upcoming(2, 3), vec![(4, 1), (8, 2), (16, 0)]);
+        // BWD direction falls out of the log order automatically.
+        assert_eq!(gp.upcoming(10, 2), vec![(10, 2), (13, 1)]);
+        // Past the end: empty, not a panic.
+        assert_eq!(gp.upcoming(17, 4), vec![]);
+        assert!(GroupPrefetcher::from_log(vec![]).is_empty());
     }
 
     #[test]

@@ -21,6 +21,12 @@ pub struct IterBreakdown {
     pub exposed_transfer_s: f64,
     /// Copy time hidden under compute by the dual-stream pipeline.
     pub overlapped_transfer_s: f64,
+    /// Collective time the compute stream stalled for.  Without the
+    /// collective stream this is zero and the AllGather/ReduceScatter
+    /// phases themselves are the (fully exposed) collective time.
+    pub exposed_collective_s: f64,
+    /// Collective time hidden under compute by the collective stream.
+    pub overlapped_collective_s: f64,
 }
 
 impl IterBreakdown {
@@ -32,6 +38,8 @@ impl IterBreakdown {
                 .collect(),
             exposed_transfer_s: 0.0,
             overlapped_transfer_s: 0.0,
+            exposed_collective_s: 0.0,
+            overlapped_collective_s: 0.0,
         }
     }
 
@@ -43,6 +51,21 @@ impl IterBreakdown {
                 .collect(),
             exposed_transfer_s: tl.exposed_transfer(),
             overlapped_transfer_s: tl.overlapped_transfer(),
+            exposed_collective_s: tl.exposed_collective(),
+            overlapped_collective_s: tl.overlapped_collective(),
+        }
+    }
+
+    /// Collective time on the compute critical path, in every mode:
+    /// with the collective stream off, the phase clocks themselves;
+    /// with it on, the measured stalls.
+    pub fn critical_collective_s(&self) -> f64 {
+        if self.overlapped_collective_s > 0.0
+            || self.exposed_collective_s > 0.0
+        {
+            self.exposed_collective_s
+        } else {
+            self.get(Phase::AllGather) + self.get(Phase::ReduceScatter)
         }
     }
 
@@ -81,6 +104,10 @@ pub struct EngineReport {
     /// Achieved collective bandwidths (Table 5).
     pub allgather_bw: f64,
     pub reduce_scatter_bw: f64,
+    /// Lookahead group gathers issued on the collective stream.
+    pub gather_prefetches: u64,
+    /// Lookahead gathers reclaimed under memory pressure.
+    pub gather_cancels: u64,
     pub gpu_peak: u64,
     pub cpu_peak: u64,
     pub non_model_peak: u64,
@@ -127,6 +154,20 @@ impl EngineReport {
                 100.0 * self.breakdown.overlapped_transfer_s
                     / (self.breakdown.exposed_transfer_s
                         + self.breakdown.overlapped_transfer_s),
+            ));
+        }
+        if self.breakdown.overlapped_collective_s > 0.0 {
+            out.push_str(&format!(
+                "collectives: {} exposed / {} overlapped (stream hid \
+                 {:.0}% of collective time; {} gathers ahead, {} \
+                 cancelled)\n",
+                human_time(self.breakdown.exposed_collective_s),
+                human_time(self.breakdown.overlapped_collective_s),
+                100.0 * self.breakdown.overlapped_collective_s
+                    / (self.breakdown.exposed_collective_s
+                        + self.breakdown.overlapped_collective_s),
+                self.gather_prefetches,
+                self.gather_cancels,
             ));
         }
         out.push_str(&format!(

@@ -69,15 +69,31 @@ impl Args {
     }
 
     /// The prefetch/overlap pipeline switches shared by simulate and
-    /// breakdown (`--pipeline on` = both; individual flags override).
+    /// breakdown (`--pipeline on` = prefetch+overlap, exactly as in
+    /// PR 1; individual flags override).  `--overlap-collectives on`
+    /// pulls `--overlap` on with it — the collective stream rides the
+    /// overlap timeline.
     fn opt_plan(&self) -> Result<OptimizationPlan> {
         let pipeline = self.get_bool("pipeline", false)?;
+        let oc = self.get_bool("overlap-collectives", false)?;
+        let overlap = self.get_bool("overlap", pipeline || oc)?;
+        if oc && !overlap {
+            bail!(
+                "--overlap-collectives on requires the overlap timeline \
+                 (drop --overlap off)"
+            );
+        }
         Ok(OptimizationPlan {
             prefetch: self.get_bool("prefetch", pipeline)?,
-            overlap: self.get_bool("overlap", pipeline)?,
+            overlap,
             lookahead: self.get_u64(
                 "lookahead",
                 patrickstar::engine::DEFAULT_LOOKAHEAD as u64,
+            )? as u32,
+            overlap_collectives: oc,
+            group_lookahead: self.get_u64(
+                "group-lookahead",
+                patrickstar::engine::DEFAULT_GROUP_LOOKAHEAD as u64,
             )? as u32,
             ..Default::default()
         })
@@ -127,10 +143,12 @@ USAGE:
 pytorch-ddp
                        [--cluster yard] [--model 10B] [--gpus 8] [--batch 16]
                        [--pipeline on] [--prefetch on|off] [--overlap on|off]
-                       [--lookahead 32]
+                       [--lookahead 32] [--overlap-collectives on|off]
+                       [--group-lookahead 1]
   patrickstar breakdown [--cluster superpod] [--model 10B] [--gpus 8] \
 [--batch 16]
-             (rows: Base, Base+PF prefetch+overlap pipeline, OSC, SP)
+             (rows: Base, Base+PF prefetch+overlap pipeline, Base+PF+CO
+              with the collective stream, OSC, SP)
   patrickstar scale [--cluster yard] [--gpus 8]
   patrickstar train [--artifacts artifacts] [--steps 50] [--gpu-mb 6] \
 [--lr 0.001] [--log-every 10] [--prefetch-ahead 0]
@@ -192,8 +210,11 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let report = if system == SystemKind::PatrickStar {
         Engine::new(cluster, task).with_opt(opt).run()?
     } else {
-        if opt.prefetch || opt.overlap {
-            bail!("--prefetch/--overlap only apply to system patrickstar");
+        if opt.prefetch || opt.overlap || opt.overlap_collectives {
+            bail!(
+                "--prefetch/--overlap/--overlap-collectives only apply \
+                 to system patrickstar"
+            );
         }
         run_system(system, cluster, task)?
     };
@@ -210,6 +231,7 @@ fn cmd_breakdown(args: &Args) -> Result<()> {
     for (label, opt) in [
         ("Base", OptimizationPlan::default()),
         ("Base+PF", OptimizationPlan::pipelined()),
+        ("Base+PF+CO", OptimizationPlan::fully_pipelined()),
         ("OSC", OptimizationPlan::os_on_cpu()),
         ("SP", OptimizationPlan::static_partition()),
     ] {

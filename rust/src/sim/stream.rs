@@ -1,25 +1,34 @@
-//! Multi-stream timeline: compute / H2D-copy / D2H-copy overlap.
+//! Multi-stream timeline: compute / H2D-copy / D2H-copy / collective
+//! overlap.
 //!
-//! The GPU model behind the prefetch pipeline: one compute stream and two
+//! The GPU model behind the prefetch pipeline: one compute stream, two
 //! copy engines (CPU->GPU and GPU->CPU), as on every discrete GPU since
-//! Fermi.  Each stream tracks its own time frontier.  Work charged to the
-//! compute stream advances only the compute frontier; a copy enqueued on
-//! a copy stream starts no earlier than (a) the moment it was issued
-//! (the compute frontier at enqueue time), (b) the copy stream's own
-//! frontier (copies on one engine are FIFO), and (c) an optional `ready`
-//! dependency — used to model an H2D fetch that must wait for the D2H
-//! eviction that frees its space.
+//! Fermi, and one **collective stream** (the dedicated NCCL stream real
+//! frameworks use for all-gather/reduce-scatter).  Each stream tracks its
+//! own time frontier.  Work charged to the compute stream advances only
+//! the compute frontier; a copy enqueued on a copy stream starts no
+//! earlier than (a) the moment it was issued (the compute frontier at
+//! enqueue time), (b) the copy stream's own frontier (copies on one
+//! engine are FIFO), and (c) an optional `ready` dependency — used to
+//! model an H2D fetch that must wait for the D2H eviction that frees its
+//! space.  Collectives queue FIFO on the collective stream the same way.
 //!
-//! Two kinds of copies:
+//! Two kinds of copies (and, symmetrically, collectives):
 //!
 //! * **demand** copies sit on the requester's critical path: the compute
 //!   stream blocks until the copy completes.  The stall (queueing delay +
 //!   wire time) is accounted as *exposed* transfer time.
-//! * **async** copies (prefetches, evictions, activation offload) do not
-//!   block; they return their completion time so the engine can `wait
-//!   until` it if a later operator actually needs the payload.  Whatever
-//!   part of an async copy the compute stream never waits for is
-//!   *overlapped* (hidden) transfer time.
+//! * **async** copies (prefetches, evictions, activation offload,
+//!   lookahead group gathers, draining reduce-scatters) do not block;
+//!   they return their completion time so the engine can `wait until` it
+//!   if a later operator actually needs the payload.  Whatever part of an
+//!   async copy the compute stream never waits for is *overlapped*
+//!   (hidden) time.
+//!
+//! Copy time and collective time are attributed separately (`exposed_
+//! transfer`/`overlapped_transfer` vs `exposed_collective`/`overlapped_
+//! collective`) because the paper's multi-GPU story hinges on hiding the
+//! latter behind compute specifically.
 //!
 //! With `overlap = false` the timeline degenerates to the flat per-phase
 //! accumulator semantics the serial engine always had: every copy charges
@@ -37,7 +46,7 @@ pub enum CopyDir {
     D2H,
 }
 
-/// Three-stream simulated timeline with per-phase attribution.
+/// Four-stream simulated timeline with per-phase attribution.
 #[derive(Clone, Debug)]
 pub struct StreamTimeline {
     clock: SimClock,
@@ -46,10 +55,16 @@ pub struct StreamTimeline {
     compute: f64,
     h2d: f64,
     d2h: f64,
+    /// Collective (NCCL) stream frontier.
+    coll: f64,
     /// Sum of all copy durations (both engines, both kinds).
     copy_total: f64,
     /// Compute-stream stall time attributable to copies.
     exposed: f64,
+    /// Sum of all collective durations enqueued on the collective stream.
+    coll_total: f64,
+    /// Compute-stream stall time attributable to collectives.
+    coll_exposed: f64,
 }
 
 impl StreamTimeline {
@@ -60,8 +75,11 @@ impl StreamTimeline {
             compute: 0.0,
             h2d: 0.0,
             d2h: 0.0,
+            coll: 0.0,
             copy_total: 0.0,
             exposed: 0.0,
+            coll_total: 0.0,
+            coll_exposed: 0.0,
         }
     }
 
@@ -161,6 +179,83 @@ impl StreamTimeline {
         }
     }
 
+    // ------------------------------------------------- collective stream
+
+    /// Blocking collective on the collective stream: the compute stream
+    /// stalls until it completes (queueing delay behind earlier
+    /// collectives included).  The stall is exposed collective time.
+    pub fn demand_collective(&mut self, phase: Phase, secs: f64) {
+        self.clock.add(phase, secs);
+        self.coll_total += secs;
+        if !self.overlap {
+            self.compute += secs;
+            return;
+        }
+        let issue = self.compute;
+        let start = issue.max(self.coll);
+        let done = start + secs;
+        self.coll = done;
+        self.coll_exposed += done - issue;
+        self.compute = done;
+    }
+
+    /// Non-blocking collective (a lookahead group gather or a draining
+    /// reduce-scatter); returns its completion time.  With overlap off
+    /// the collective is charged serially and "completes" immediately.
+    pub fn async_collective(&mut self, phase: Phase, secs: f64) -> f64 {
+        self.clock.add(phase, secs);
+        self.coll_total += secs;
+        if !self.overlap {
+            self.compute += secs;
+            return self.compute;
+        }
+        let start = self.compute.max(self.coll);
+        let done = start + secs;
+        self.coll = done;
+        done
+    }
+
+    /// Block the compute stream until `t` (completion of an async
+    /// collective a consumer now needs).  The stall counts as exposed
+    /// collective time.
+    pub fn wait_collective(&mut self, t: f64) {
+        if self.overlap && t > self.compute {
+            self.coll_exposed += t - self.compute;
+            self.compute = t;
+        }
+    }
+
+    /// Un-charge a queued async collective cancelled before reaching the
+    /// wire (a lookahead gather reclaimed under memory pressure) — the
+    /// collective analogue of [`StreamTimeline::reclaim`].
+    pub fn reclaim_collective(&mut self, phase: Phase, secs: f64) {
+        self.clock.sub(phase, secs);
+        self.coll_total = (self.coll_total - secs).max(0.0);
+        if self.overlap {
+            self.coll = (self.coll - secs).max(0.0);
+        } else {
+            self.compute = (self.compute - secs).max(0.0);
+        }
+    }
+
+    /// Collective time the compute stream actually waited for.
+    pub fn exposed_collective(&self) -> f64 {
+        if self.overlap {
+            self.coll_exposed
+        } else {
+            self.coll_total
+        }
+    }
+
+    /// Collective time hidden under compute by the collective stream.
+    pub fn overlapped_collective(&self) -> f64 {
+        if self.overlap {
+            (self.coll_total - self.coll_exposed).max(0.0)
+        } else {
+            0.0
+        }
+    }
+
     /// Current compute-stream time (used to decide whether an async
     /// copy being cancelled had already landed).
     pub fn now(&self) -> f64 {
@@ -171,7 +266,7 @@ impl StreamTimeline {
     /// the flat per-phase sum (serial mode).
     pub fn makespan(&self) -> f64 {
         if self.overlap {
-            self.compute.max(self.h2d).max(self.d2h)
+            self.compute.max(self.h2d).max(self.d2h).max(self.coll)
         } else {
             self.clock.total()
         }
@@ -200,8 +295,38 @@ impl StreamTimeline {
         self.compute = 0.0;
         self.h2d = 0.0;
         self.d2h = 0.0;
+        self.coll = 0.0;
         self.copy_total = 0.0;
         self.exposed = 0.0;
+        self.coll_total = 0.0;
+        self.coll_exposed = 0.0;
+    }
+
+    /// Bit-exact snapshot of the full timeline state: every stream
+    /// frontier, the exposure accumulators and the per-phase clock, as
+    /// hex-encoded f64 bits.  The golden-trace regression tests
+    /// serialize one snapshot per moment; any change to stream or
+    /// eviction scheduling shows up as a textual diff.
+    pub fn snapshot(&self) -> String {
+        use std::fmt::Write as _;
+        let mut s = String::new();
+        for v in [
+            self.compute,
+            self.h2d,
+            self.d2h,
+            self.coll,
+            self.copy_total,
+            self.exposed,
+            self.coll_total,
+            self.coll_exposed,
+        ] {
+            let _ = write!(s, "{:016x} ", v.to_bits());
+        }
+        for p in Phase::ALL {
+            let _ = write!(s, "{:016x} ", self.clock.get(p).to_bits());
+        }
+        s.pop();
+        s
     }
 }
 
@@ -296,9 +421,95 @@ mod tests {
         let mut tl = StreamTimeline::new(true);
         tl.charge(Phase::FwdBwd, 1.0);
         tl.async_copy(Phase::CpuToGpu, 2.0, CopyDir::H2D, 0.0);
+        tl.async_collective(Phase::AllGather, 2.0);
         tl.reset();
         assert_eq!(tl.makespan(), 0.0);
         assert_eq!(tl.clock().total(), 0.0);
         assert_eq!(tl.exposed_transfer(), 0.0);
+        assert_eq!(tl.exposed_collective(), 0.0);
+    }
+
+    #[test]
+    fn async_collective_hides_under_compute() {
+        let mut tl = StreamTimeline::new(true);
+        let done = tl.async_collective(Phase::AllGather, 0.5);
+        tl.charge(Phase::FwdBwd, 1.0);
+        tl.wait_collective(done); // landed long ago: no stall
+        assert_eq!(tl.makespan(), 1.0);
+        assert_eq!(tl.exposed_collective(), 0.0);
+        assert!((tl.overlapped_collective() - 0.5).abs() < 1e-12);
+        // Collective accounting is separate from copy accounting.
+        assert_eq!(tl.exposed_transfer(), 0.0);
+        assert_eq!(tl.overlapped_transfer(), 0.0);
+    }
+
+    #[test]
+    fn late_collective_wait_exposes_remainder() {
+        let mut tl = StreamTimeline::new(true);
+        let done = tl.async_collective(Phase::AllGather, 1.0);
+        tl.charge(Phase::FwdBwd, 0.4);
+        tl.wait_collective(done); // 0.6 s still on the wire
+        assert!((tl.exposed_collective() - 0.6).abs() < 1e-12);
+        assert!((tl.overlapped_collective() - 0.4).abs() < 1e-12);
+        assert!((tl.makespan() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn demand_collective_queues_fifo_behind_async() {
+        let mut tl = StreamTimeline::new(true);
+        // A lookahead gather occupies the collective stream for 1 s...
+        tl.async_collective(Phase::AllGather, 1.0);
+        // ...so a demand gather issued at t=0 waits behind it.
+        tl.demand_collective(Phase::AllGather, 0.5);
+        assert!((tl.makespan() - 1.5).abs() < 1e-12);
+        assert!((tl.exposed_collective() - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collective_stream_independent_of_copy_engines() {
+        let mut tl = StreamTimeline::new(true);
+        tl.async_copy(Phase::CpuToGpu, 1.0, CopyDir::H2D, 0.0);
+        tl.async_copy(Phase::GpuToCpu, 1.0, CopyDir::D2H, 0.0);
+        tl.async_collective(Phase::ReduceScatter, 1.0);
+        // All three engines run concurrently: makespan 1, not 3.
+        assert!((tl.makespan() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn serial_mode_collective_charges_compute() {
+        let mut tl = StreamTimeline::new(false);
+        tl.charge(Phase::FwdBwd, 1.0);
+        let done = tl.async_collective(Phase::AllGather, 0.5);
+        tl.demand_collective(Phase::ReduceScatter, 0.25);
+        tl.wait_collective(done); // no-op serially
+        assert_eq!(tl.makespan(), tl.clock().total());
+        assert!((tl.makespan() - 1.75).abs() < 1e-12);
+        // Serial mode: every collective is exposed by definition.
+        assert!((tl.exposed_collective() - 0.75).abs() < 1e-12);
+        assert_eq!(tl.overlapped_collective(), 0.0);
+    }
+
+    #[test]
+    fn reclaim_collective_undoes_a_cancelled_queued_gather() {
+        let mut tl = StreamTimeline::new(true);
+        tl.async_collective(Phase::AllGather, 1.0);
+        tl.reclaim_collective(Phase::AllGather, 1.0);
+        assert_eq!(tl.makespan(), 0.0);
+        assert_eq!(tl.get(Phase::AllGather), 0.0);
+        assert_eq!(tl.overlapped_collective(), 0.0);
+    }
+
+    #[test]
+    fn snapshot_is_bit_exact_and_deterministic() {
+        let mut a = StreamTimeline::new(true);
+        let mut b = StreamTimeline::new(true);
+        for tl in [&mut a, &mut b] {
+            tl.charge(Phase::FwdBwd, 0.1 + 0.2); // not a round float
+            tl.async_copy(Phase::CpuToGpu, 1.0 / 3.0, CopyDir::H2D, 0.0);
+            tl.async_collective(Phase::AllGather, 0.7);
+        }
+        assert_eq!(a.snapshot(), b.snapshot());
+        b.charge(Phase::FwdBwd, f64::EPSILON);
+        assert_ne!(a.snapshot(), b.snapshot(), "1-ulp drift must show");
     }
 }

@@ -1,0 +1,124 @@
+//! Golden-trace regression tests (ISSUE 2 satellite): the full
+//! per-moment stream timeline of one small config is serialized into
+//! `tests/golden/` and compared bit-for-bit, so future stream, eviction
+//! or collective changes cannot silently drift the simulated clock.
+//!
+//! Every line is a moment index plus the hex-encoded f64 bits of every
+//! stream frontier, exposure accumulator and per-phase clock — any
+//! 1-ulp change anywhere in the schedule shows up as a textual diff
+//! (run the suite with `--nocapture` to see it).
+//!
+//! Bootstrap: on a machine where the golden file does not exist yet,
+//! the test writes it and instead asserts run-to-run bit-for-bit
+//! determinism, so the first run is still a real check.  Regenerate
+//! deliberately with `GOLDEN_UPDATE=1 cargo test golden`.
+
+use std::fs;
+use std::path::PathBuf;
+
+use patrickstar::config::{ClusterPreset, TrainTask};
+use patrickstar::engine::{Engine, OptimizationPlan};
+use patrickstar::model::GptSpec;
+
+fn golden_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/golden")
+}
+
+/// The reference config: small enough to run in seconds, 2 GPUs so the
+/// distributed gather/reduce-scatter path is in the trace.
+fn task() -> TrainTask {
+    TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, 2)
+}
+
+fn trace_for(opt: OptimizationPlan) -> Vec<String> {
+    let (_, trace) = Engine::new(ClusterPreset::yard(), task())
+        .with_opt(opt)
+        .run_traced()
+        .expect("engine run");
+    assert!(!trace.is_empty(), "trace must not be empty");
+    trace
+}
+
+/// First differing line, printed in full so `--nocapture` CI logs show
+/// exactly where the clock drifted.
+fn diff_report(want: &[String], got: &[String]) -> String {
+    for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+        if w != g {
+            return format!(
+                "first divergence at line {}:\n  golden: {}\n  got:    {}",
+                i + 1,
+                w,
+                g
+            );
+        }
+    }
+    format!(
+        "line count changed: golden {} lines, got {}",
+        want.len(),
+        got.len()
+    )
+}
+
+fn check_golden(name: &str, opt: OptimizationPlan) {
+    let got = trace_for(opt);
+    // Bit-for-bit determinism is a precondition for a golden trace to
+    // mean anything — assert it on every run, not just bootstrap.
+    let again = trace_for(opt);
+    assert!(
+        got == again,
+        "non-deterministic trace for {name}:\n{}",
+        diff_report(&got, &again)
+    );
+    let path = golden_dir().join(format!("{name}.txt"));
+    let update = std::env::var("GOLDEN_UPDATE").is_ok();
+    if update || !path.exists() {
+        fs::create_dir_all(golden_dir()).expect("mkdir tests/golden");
+        fs::write(&path, got.join("\n") + "\n").expect("write golden");
+        println!(
+            "golden trace {} {} ({} lines)",
+            path.display(),
+            if update { "updated" } else { "bootstrapped" },
+            got.len()
+        );
+        return;
+    }
+    let want: Vec<String> = fs::read_to_string(&path)
+        .expect("read golden")
+        .lines()
+        .map(str::to_string)
+        .collect();
+    assert!(
+        want == got,
+        "stream timeline drifted from {} — if intentional, regenerate \
+         with GOLDEN_UPDATE=1\n{}",
+        path.display(),
+        diff_report(&want, &got)
+    );
+}
+
+#[test]
+fn golden_trace_serial() {
+    check_golden("trace_1b_2g_serial", OptimizationPlan::default());
+}
+
+#[test]
+fn golden_trace_pipelined() {
+    // Everything on: chunk prefetch, copy streams, collective stream.
+    check_golden("trace_1b_2g_pipelined", OptimizationPlan::fully_pipelined());
+}
+
+#[test]
+fn traced_run_reports_exactly_like_untraced() {
+    // Tracing must be a pure observer: the report (times, volumes,
+    // placement) is bit-identical with and without it.
+    let e = Engine::new(ClusterPreset::yard(), task());
+    let plain = e.run().unwrap();
+    let (traced, _) = e.run_traced().unwrap();
+    assert_eq!(plain.iter_time_s, traced.iter_time_s);
+    assert_eq!(plain.allgather_bytes, traced.allgather_bytes);
+    assert_eq!(
+        plain.move_stats.cpu_to_gpu_bytes,
+        traced.move_stats.cpu_to_gpu_bytes
+    );
+    assert_eq!(plain.gpu_peak, traced.gpu_peak);
+}
