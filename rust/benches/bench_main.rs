@@ -47,6 +47,7 @@ fn main() {
         ("ablation_eviction", ablation_eviction),
         ("prefetch_overlap", prefetch_overlap),
         ("collective_overlap", collective_overlap),
+        ("pinned_pool", pinned_pool),
         ("micro_hotpaths", micro_hotpaths),
     ];
     for (name, f) in benches {
@@ -798,6 +799,157 @@ fn collective_overlap() {
         "acceptance: exposed collective time < serial on every nproc>=2 \
          config, non-increasing in lookahead, collective byte volume \
          exactly unchanged."
+    );
+}
+
+// =====================================================================
+// Pinned staging-buffer pool sweep (ISSUE 3 tentpole)
+// =====================================================================
+//
+// The full pipeline run under shrinking pinned-pool sizes on the
+// transfer-bound configs.  Pool 0 disables the model entirely (every
+// copy on the single pinned curve — the PR 1/PR 2 idealization); finite
+// pools throttle the prefetch lookahead to the staging backlog and
+// downgrade buffer-less evictions/offload to the pageable (~0.5x) curve.
+// The contract measured here:
+//
+//   * iteration time degrades monotonically as the pool shrinks
+//     (16 -> 8 -> 4 -> 2 -> 1 buffers);
+//   * PCIe transfer *volume* never increases over the disabled pool
+//     (same contract as the prefetch bench: the pool re-times and
+//     re-prices copies, it never adds traffic).
+//
+// A serial (no-pipeline) baseline row is printed for context: demand
+// copies preempt the pool by construction, but a starved pool CAN run
+// slower than serial — pool-dry evictions pay the 0.5x pageable curve,
+// which the serial schedule never does — so serial-vs-pool is reported,
+// not asserted.  Emits BENCH_pinned.json next to the other artifacts.
+fn pinned_pool() {
+    let cases = [
+        (ClusterPreset::yard(), "12B", 1u32, 8u64),
+        (ClusterPreset::superpod(), "50B", 1, 8),
+        (ClusterPreset::yard(), "15B", 8, 8),
+    ];
+    let pools = [0u32, 16, 8, 4, 2, 1];
+    let mut entries: Vec<Json> = Vec::new();
+    let mut push = |name: String, value: f64, unit: &str| {
+        entries.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("value", Json::num(value)),
+            ("unit", Json::str(unit)),
+        ]));
+    };
+    for (cluster, model, gpus, batch) in cases {
+        let m = GptSpec::by_name(model).unwrap();
+        let task = TrainTask::new(m, batch, gpus);
+        let case = format!("{}_{model}_{gpus}g", cluster.name);
+        println!("--- {case} ---");
+        let mut t = Table::new(&["pool", "iter s", "exposed", "pageable",
+                                 "prefetches", "throttled", "moved"]);
+        if let Ok(serial) = Engine::new(cluster, task).run() {
+            t.row(vec![
+                "serial".into(),
+                format!("{:.3}", serial.iter_time_s),
+                format!("{:.2}", serial.breakdown.exposed_transfer_s),
+                "0.00".into(),
+                "0".into(),
+                "0".into(),
+                human_bytes(serial.move_stats.cpu_to_gpu_bytes
+                            + serial.move_stats.gpu_to_cpu_bytes),
+            ]);
+            push(format!("{case}/serial_iter_s"), serial.iter_time_s,
+                 "s");
+        }
+        let mut prev: Option<(u32, f64)> = None;
+        let mut vol0: Option<u64> = None;
+        let mut monotone = true;
+        for pool in pools {
+            let opt = OptimizationPlan {
+                pinned_buffers: pool,
+                ..OptimizationPlan::fully_pipelined()
+            };
+            match Engine::new(cluster, task).with_opt(opt).run() {
+                Ok(r) => {
+                    let vol = r.move_stats.cpu_to_gpu_bytes
+                        + r.move_stats.gpu_to_cpu_bytes;
+                    t.row(vec![
+                        if pool == 0 {
+                            "off".into()
+                        } else {
+                            pool.to_string()
+                        },
+                        format!("{:.3}", r.iter_time_s),
+                        format!("{:.2}", r.breakdown.exposed_transfer_s),
+                        format!("{:.2}", r.breakdown.pageable_copy_s),
+                        r.move_stats.prefetches.to_string(),
+                        r.move_stats.pinned_waits.to_string(),
+                        human_bytes(vol),
+                    ]);
+                    let tag = if pool == 0 {
+                        "off".to_string()
+                    } else {
+                        pool.to_string()
+                    };
+                    push(format!("{case}/pool_{tag}_iter_s"),
+                         r.iter_time_s, "s");
+                    push(format!("{case}/pool_{tag}_pageable_s"),
+                         r.breakdown.pageable_copy_s, "s");
+                    push(format!("{case}/pool_{tag}_throttled"),
+                         r.move_stats.pinned_waits as f64, "count");
+                    match vol0 {
+                        None => vol0 = Some(vol),
+                        Some(v) => {
+                            if vol > v {
+                                println!(
+                                    "pool {pool}: volume INCREASED \
+                                     (regression!): {vol} > {v}"
+                                );
+                            }
+                        }
+                    }
+                    // Monotonicity only over the finite pool sizes —
+                    // pool 0 is the disabled idealization, not the
+                    // largest pool.
+                    if let Some((pp, pt)) = prev {
+                        if pool > 0
+                            && pp > 0
+                            && r.iter_time_s < pt * (1.0 - 1e-9)
+                        {
+                            monotone = false;
+                            println!(
+                                "pool {pool}: FASTER than pool {pp} \
+                                 ({:.4} < {pt:.4}) — not monotone!",
+                                r.iter_time_s
+                            );
+                        }
+                    }
+                    if pool > 0 {
+                        prev = Some((pool, r.iter_time_s));
+                    }
+                }
+                Err(e) => {
+                    t.row(vec![pool.to_string(), format!("err {e}"),
+                               "-".into(), "-".into(), "-".into(),
+                               "-".into(), "-".into()]);
+                }
+            }
+        }
+        print!("{}", t.render());
+        println!(
+            "monotone degradation as the pool shrinks: {}",
+            if monotone { "yes" } else { "VIOLATED (regression!)" }
+        );
+    }
+    let json = Json::Arr(entries).to_string_pretty();
+    match std::fs::write("BENCH_pinned.json", json) {
+        Ok(()) => println!("wrote BENCH_pinned.json"),
+        Err(e) => println!("could not write BENCH_pinned.json: {e}"),
+    }
+    println!(
+        "acceptance: iter time non-decreasing as the pool shrinks on \
+         every config, transfer volume never increased over the \
+         disabled pool, pool off == PR 2 pipeline numbers; serial row \
+         is context only (a starved pool may exceed it)."
     );
 }
 

@@ -71,6 +71,10 @@ pub struct MoveStats {
     pub prefetch_cancels: u64,
     /// In-flight lookahead gathers reclaimed under memory pressure.
     pub gather_cancels: u64,
+    /// Prefetch/lookahead-gather issues deferred because the pinned
+    /// staging pool had no free buffer (the engine retries next moment;
+    /// the effective lookahead window is throttled by pool capacity).
+    pub pinned_waits: u64,
 }
 
 /// The chunk manager.

@@ -15,6 +15,7 @@
 
 use std::collections::HashMap;
 
+use crate::mem::PinnedLease;
 use crate::tracer::Moment;
 
 /// Group/rank arithmetic over one chunk list.
@@ -74,6 +75,10 @@ pub struct InFlightGather {
     pub bytes: u64,
     /// Moment the steady-state schedule demand-fetches this group.
     pub use_moment: Moment,
+    /// Pinned staging buffer held while the gather is in flight (None
+    /// with the pool disabled).  Released early on cancel; expires at
+    /// `done` otherwise.
+    pub lease: Option<PinnedLease>,
 }
 
 /// Per-group collective pipeline: in-flight lookahead gathers and
@@ -107,6 +112,15 @@ impl CollectivePipeline {
     /// Consume (or cancel) the in-flight gather for `g`.
     pub fn take_gather(&mut self, g: usize) -> Option<InFlightGather> {
         self.gathers.remove(&g)
+    }
+
+    /// Mutable walk over the in-flight gathers — the engine resyncs
+    /// pinned-pool lease release times after queue compression shifts
+    /// `done` values.
+    pub fn gathers_mut(
+        &mut self,
+    ) -> impl Iterator<Item = &mut InFlightGather> {
+        self.gathers.values_mut()
     }
 
     /// Groups whose gather has landed by collective-stream time `now`,
@@ -211,11 +225,17 @@ mod tests {
         assert!(!p.gather_issued(3));
         p.issue_gather(
             3,
-            InFlightGather { done: 2.0, secs: 1.5, bytes: 100, use_moment: 7 },
+            InFlightGather {
+                done: 2.0, secs: 1.5, bytes: 100, use_moment: 7,
+                lease: None,
+            },
         );
         p.issue_gather(
             4,
-            InFlightGather { done: 3.0, secs: 1.0, bytes: 100, use_moment: 9 },
+            InFlightGather {
+                done: 3.0, secs: 1.0, bytes: 100, use_moment: 9,
+                lease: None,
+            },
         );
         assert!(p.gather_issued(3));
         assert_eq!(p.n_inflight_gathers(), 2);

@@ -47,9 +47,21 @@
 //!   bit-for-bit the serial schedule's volume, only its placement on
 //!   the clock changes.
 //!
+//! * **pinned_buffers** (ISSUE 3 tentpole) prices the pipeline's host
+//!   copies honestly: a finite pool of chunk-sized pinned staging
+//!   buffers ([`crate::mem::PinnedPool`]) is leased per staged copy
+//!   (issue to completion).  Demand copies preempt (always the pinned
+//!   PCIe curve); prefetches and lookahead gathers that find the pool
+//!   dry wait until the next moment (the lookahead window throttles to
+//!   the pool-sized backlog); evictions and activation offload
+//!   downgrade to the pageable (~0.5x-peak) curve.  Pool size 0
+//!   disables the model: the single-curve timelines of PR 1/PR 2,
+//!   bit-for-bit.
+//!
 //! All switches default **off**: the serial path reproduces the
 //! pre-pipeline numbers exactly; the pipelined paths are ablation cells
-//! measured by `cargo bench -- prefetch_overlap collective_overlap`.
+//! measured by `cargo bench -- prefetch_overlap collective_overlap
+//! pinned_pool`.
 
 pub mod prefetch;
 pub mod report;
@@ -65,11 +77,12 @@ use crate::dp::{CollectiveCost, CollectivePipeline, CommGroups,
                 InFlightGather};
 use crate::evict::{EvictionPolicy, FifoPolicy, LfuPolicy, LruPolicy,
                    OptPolicy};
-use crate::mem::{Device, HeterogeneousSpace};
+use crate::mem::{Device, HeterogeneousSpace, PinnedLease, PinnedPool,
+                 DEFAULT_PINNED_BUFFERS};
 use crate::model::activation::{non_model_bytes, BASE_OVERHEAD};
 use crate::model::{ActivationPlan, OpGraph, OpKind};
 use crate::placement::{plan as placement_plan, PlacementPlan};
-use crate::sim::{CopyDir, Phase, StreamTimeline};
+use crate::sim::{CopyDir, CopyRoute, Phase, StreamTimeline};
 use crate::tensor::TensorState;
 use crate::tracer::{MemTracer, Moment, WARMUP_GPU_FRAC};
 
@@ -109,6 +122,16 @@ pub struct OptimizationPlan {
     pub overlap_collectives: bool,
     /// Group-gather lookahead depth, in communication groups.
     pub group_lookahead: u32,
+    /// Size of the pinned staging-buffer pool (ISSUE 3 tentpole).
+    /// 0 disables the pool: every host transfer charges the single
+    /// pinned PCIe curve, reproducing the pre-pool timelines
+    /// bit-for-bit.  With a finite pool, async copies and lookahead
+    /// gathers hold a buffer from issue to completion; prefetches that
+    /// cannot acquire one wait (throttling the lookahead window),
+    /// evictions and activation offload downgrade to the pageable
+    /// curve, and demand copies preempt (always pinned, never queued
+    /// on the pool).
+    pub pinned_buffers: u32,
 }
 
 impl Default for OptimizationPlan {
@@ -122,6 +145,7 @@ impl Default for OptimizationPlan {
             lookahead: DEFAULT_LOOKAHEAD,
             overlap_collectives: false,
             group_lookahead: DEFAULT_GROUP_LOOKAHEAD,
+            pinned_buffers: 0,
         }
     }
 }
@@ -166,6 +190,16 @@ impl OptimizationPlan {
             ..Self::pipelined()
         }
     }
+
+    /// The realistic transfer pipeline: everything on, plus a finite
+    /// pinned staging pool ([`DEFAULT_PINNED_BUFFERS`] chunk-sized
+    /// buffers) that the prefetchers compete for.
+    pub fn pinned_pipeline() -> Self {
+        OptimizationPlan {
+            pinned_buffers: DEFAULT_PINNED_BUFFERS,
+            ..Self::fully_pipelined()
+        }
+    }
 }
 
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -176,13 +210,29 @@ enum Stage {
 }
 
 /// Timeline bookkeeping for one in-flight prefetch copy: when it lands,
-/// and what to un-charge if it is cancelled before reaching the wire.
+/// what to un-charge if it is cancelled before reaching the wire, which
+/// curve it was charged on, and the pinned staging buffer it holds.
 #[derive(Clone, Copy, Debug)]
 struct PendingCopy {
     done: f64,
     secs: f64,
     dir: CopyDir,
     phase: Phase,
+    route: CopyRoute,
+    lease: Option<PinnedLease>,
+}
+
+/// A pinned-buffer lease held by a non-prefetch async copy (eviction,
+/// activation offload).  Prefetch leases live in [`PendingCopy`] and
+/// gather leases in [`InFlightGather`]; these need the same (stream,
+/// completion) bookkeeping so queue compression after a cancelled
+/// prefetch can shift their release times with the frontier — otherwise
+/// the pool would look busier than the stream actually is.
+#[derive(Clone, Copy, Debug)]
+struct StreamLease {
+    lease: PinnedLease,
+    dir: CopyDir,
+    done: f64,
 }
 
 enum PolicySel {
@@ -223,6 +273,12 @@ struct RunState {
     /// Collective-stream pipeline: in-flight lookahead gathers and
     /// draining reduce-scatters, by group.
     coll: CollectivePipeline,
+    /// Pinned staging-buffer pool (capacity 0 = disabled: single-curve
+    /// charging, the pre-pool numbers bit-for-bit).
+    pool: PinnedPool,
+    /// Leases held by eviction/offload copies still queued or on the
+    /// wire (see [`StreamLease`]).  Pruned as they expire.
+    stream_leases: Vec<StreamLease>,
     /// Lookahead gathers issued this iteration.
     gather_prefetches: u64,
     /// Lookahead gathers cancelled this iteration, counted per *group*
@@ -384,6 +440,8 @@ impl Engine {
             gather_log: Vec::new(),
             group_prefetcher: None,
             coll: CollectivePipeline::default(),
+            pool: PinnedPool::new(self.opt.pinned_buffers as usize),
+            stream_leases: Vec::new(),
             gather_prefetches: 0,
             gather_cancelled_groups: 0,
             trace: if traced { Some(Vec::new()) } else { None },
@@ -450,6 +508,8 @@ impl Engine {
                 st.mgr.finish_gather(c);
             }
             st.coll.clear();
+            st.pool.clear();
+            st.stream_leases.clear();
             st.inflight_done.clear();
             st.tl.reset();
             st.mgr.stats = Default::default();
@@ -685,6 +745,21 @@ impl Engine {
             {
                 break; // no headroom; retry next moment
             }
+            // A lookahead gather stages its local shard through one
+            // pinned buffer held for the collective's lifetime; if
+            // every buffer is leased out, the gather waits its turn
+            // (FIFO: later groups must not jump the queue either).
+            let lease = if st.pool.enabled() {
+                match st.pool.try_acquire(st.tl.now()) {
+                    Some(l) => Some(l),
+                    None => {
+                        st.mgr.stats.pinned_waits += 1;
+                        break; // retry next moment
+                    }
+                }
+            } else {
+                None
+            };
             for &c in &absent {
                 st.mgr.alloc_payload(c, Device::Gpu(0))?;
                 st.mgr.begin_gather(c)?;
@@ -694,6 +769,9 @@ impl Engine {
             }
             let op = cc.allgather_op(chunk_bytes);
             let done = st.tl.async_collective(Phase::AllGather, op.secs);
+            if let Some(l) = lease {
+                st.pool.set_release(l, done);
+            }
             st.allgather_time += op.secs;
             st.allgather_bytes += op.bytes;
             st.coll.issue_gather(
@@ -703,6 +781,7 @@ impl Engine {
                     secs: op.secs,
                     bytes: op.bytes,
                     use_moment: use_m,
+                    lease,
                 },
             );
             st.gather_prefetches += 1;
@@ -719,9 +798,23 @@ impl Engine {
             None => return Ok(()),
         };
         let gpu_cap = self.cluster.gpu_mem;
+        // Staging-capacity budget (pool enabled only): each prefetch
+        // issued this tick will lease one pinned buffer when its copy is
+        // charged; once the free buffers are spoken for, the rest of the
+        // window waits for the next moment — the effective lookahead is
+        // throttled to the pool-sized backlog.
+        let mut pool_budget = if st.pool.enabled() {
+            Some(st.pool.available_at(st.tl.now()))
+        } else {
+            None
+        };
         for (use_moment, c) in window {
             if st.mgr.chunk(c).device != Some(Device::Cpu) {
                 continue; // resident, in flight, or released
+            }
+            if pool_budget == Some(0) {
+                st.mgr.stats.pinned_waits += 1;
+                break; // no staging buffer free; retry next moment
             }
             // Headroom budget: staying under the tightest chunkable cap
             // between now and the use moment guarantees the staged bytes
@@ -729,7 +822,7 @@ impl Engine {
             let limit =
                 st.tracer.min_chunkable_gpu(gpu_cap, now, use_moment);
             let RunState { mgr, tracer, policy, .. } = st;
-            with_policy(policy, tracer, |pol| {
+            let issued = with_policy(policy, tracer, |pol| {
                 mgr.prefetch_to(c, Device::Gpu(0), limit, pol, now, &|v| {
                     // Belady guard: spill only chunks OPT would spill at
                     // the use moment anyway — next use farther than the
@@ -740,6 +833,11 @@ impl Engine {
                     }
                 })
             })?;
+            if issued {
+                if let Some(b) = pool_budget.as_mut() {
+                    *b -= 1;
+                }
+            }
         }
         Ok(())
     }
@@ -769,6 +867,13 @@ impl Engine {
         let c = st.fp16_list[local[next]];
         if st.mgr.chunk(c).device != Some(Device::Gpu(0)) {
             return Ok(()); // already home (or released)
+        }
+        // The D2H staging leg competes for the same pinned pool: with
+        // no buffer free, the grad chunk waits and rides home on the
+        // demand path instead.
+        if st.pool.enabled() && st.pool.available_at(st.tl.now()) == 0 {
+            st.mgr.stats.pinned_waits += 1;
+            return Ok(());
         }
         let limit = st.mgr.space.dev(Device::Cpu).capacity;
         let now = st.moment.saturating_sub(1);
@@ -905,10 +1010,22 @@ impl Engine {
             {
                 let m = &graph.spec;
                 let bytes = 2 * self.task.batch_per_gpu * m.seq * m.hidden;
-                let t = self.cluster.net.pcie.transfer_time(bytes);
                 if st.stage == Stage::Fwd {
-                    st.tl.async_copy(Phase::ActOffload, t, CopyDir::D2H, 0.0);
+                    // Offload cannot wait for a buffer (the boundary is
+                    // leaving the GPU now): pinned if one is free,
+                    // pageable otherwise.
+                    let (_, done, _, lease) = self.charge_async_routed(
+                        st, Phase::ActOffload, CopyDir::D2H, 0.0, bytes);
+                    if let Some(l) = lease {
+                        st.stream_leases.push(StreamLease {
+                            lease: l,
+                            dir: CopyDir::D2H,
+                            done,
+                        });
+                    }
                 } else {
+                    // Demand reload: preempts the pool, pinned rate.
+                    let t = self.cluster.net.pcie.transfer_time(bytes);
                     st.tl.demand_copy(Phase::ActOffload, t, CopyDir::H2D, 0.0);
                 }
             }
@@ -1156,6 +1273,60 @@ impl Engine {
         }
     }
 
+    /// Pick the host-memory path for an async (non-demand) PCIe copy of
+    /// `bytes`: pinned while a staging buffer is held, pageable when the
+    /// pool is exhausted (pressure-driven copies cannot wait).  With the
+    /// pool disabled everything is pinned on the single curve — the
+    /// pre-pool behaviour bit-for-bit.  The caller sets the returned
+    /// lease's release time once the copy's completion time is known.
+    fn route_async_copy(
+        &self,
+        st: &mut RunState,
+        bytes: u64,
+    ) -> (f64, CopyRoute, Option<PinnedLease>) {
+        if !st.pool.enabled() {
+            return (
+                self.cluster.net.pcie.transfer_time(bytes),
+                CopyRoute::Pinned,
+                None,
+            );
+        }
+        match st.pool.try_acquire(st.tl.now()) {
+            Some(lease) => (
+                self.cluster.net.pcie.transfer_time(bytes),
+                CopyRoute::Pinned,
+                Some(lease),
+            ),
+            None => (
+                self.cluster.net.pcie_pageable.transfer_time(bytes),
+                CopyRoute::Pageable,
+                None,
+            ),
+        }
+    }
+
+    /// Route, charge and lease one async copy in a single step: pick
+    /// the curve ([`Engine::route_async_copy`]), enqueue on `dir`, and
+    /// set the lease's release to the completion time.  The one place
+    /// the async lease protocol lives — the Evict and Prefetch drain
+    /// arms and the activation-offload path all charge through here.
+    /// Returns (wire secs, completion time, route, lease).
+    fn charge_async_routed(
+        &self,
+        st: &mut RunState,
+        phase: Phase,
+        dir: CopyDir,
+        ready: f64,
+        bytes: u64,
+    ) -> (f64, f64, CopyRoute, Option<PinnedLease>) {
+        let (t, route, lease) = self.route_async_copy(st, bytes);
+        let done = st.tl.async_copy_on(phase, t, dir, ready, route);
+        if let Some(l) = lease {
+            st.pool.set_release(l, done);
+        }
+        (t, done, route, lease)
+    }
+
     /// CPU profile with bandwidth shared across the node's nproc ranks.
     fn shared_cpu(&self) -> crate::sim::DeviceProfile {
         let mut p = self.cluster.cpu;
@@ -1186,6 +1357,12 @@ impl Engine {
             return Ok(());
         }
         let pcie = self.cluster.net.pcie;
+        // Leases whose copies have completed need no more shifting;
+        // drop them so the compression scan stays short.
+        if st.pool.enabled() {
+            let now_t = st.tl.now();
+            st.stream_leases.retain(|sl| sl.done > now_t);
+        }
         let mut dep = 0.0f64;
         let mut cancelled_groups: Vec<usize> = Vec::new();
         for ev in events {
@@ -1202,6 +1379,10 @@ impl Engine {
                         st.allgather_bytes.saturating_sub(gi.bytes);
                     st.allgather_time =
                         (st.allgather_time - gi.secs).max(0.0);
+                    // The cancelled gather's staging buffer frees now.
+                    if let Some(l) = gi.lease {
+                        st.pool.release(l);
+                    }
                     let now_t = st.tl.now();
                     if gi.done > now_t {
                         // Un-charge only the part of the collective
@@ -1214,6 +1395,15 @@ impl Engine {
                         st.tl.reclaim_collective(
                             Phase::AllGather, remainder);
                         st.coll.compress_after(gi.done, remainder);
+                        // Queue compression moved the surviving
+                        // gathers' completion times; their buffer
+                        // leases release at the new times.
+                        let RunState { coll, pool, .. } = st;
+                        for g2 in coll.gathers_mut() {
+                            if let Some(l) = g2.lease {
+                                pool.set_release(l, g2.done);
+                            }
+                        }
                     }
                     st.gather_cancelled_groups += 1;
                     cancelled_groups.push(g);
@@ -1222,22 +1412,42 @@ impl Engine {
             }
             if ev.kind == MoveKind::PrefetchCancel {
                 if let Some(pc) = st.inflight_done.remove(&ev.chunk) {
+                    // The staging buffer frees with the cancel (a no-op
+                    // for an already-landed copy's expired lease).
+                    if let Some(l) = pc.lease {
+                        st.pool.release(l);
+                    }
                     if pc.done > st.tl.now() {
                         // Still queued: un-charge its time so the
                         // timeline agrees with the credited-back
                         // MoveStats — otherwise the later demand fetch
                         // double-charges, and a cancel-heavy run could
                         // look slower than serial.
-                        st.tl.reclaim(pc.phase, pc.secs, pc.dir);
+                        st.tl.reclaim_on(pc.phase, pc.secs, pc.dir,
+                                         pc.route);
                         // Queue compression: copies FIFO-queued behind
                         // the reclaimed one land earlier now; shift
                         // their recorded completion times too, so later
-                        // waits and cancel classifications stay honest.
-                        for other in st.inflight_done.values_mut() {
+                        // waits and cancel classifications stay honest
+                        // — and their buffer leases (prefetch AND
+                        // eviction/offload) release earlier with them.
+                        let RunState {
+                            inflight_done, stream_leases, pool, ..
+                        } = st;
+                        for other in inflight_done.values_mut() {
                             if other.dir == pc.dir && other.done > pc.done
                             {
                                 other.done =
                                     (other.done - pc.secs).max(0.0);
+                                if let Some(l) = other.lease {
+                                    pool.set_release(l, other.done);
+                                }
+                            }
+                        }
+                        for sl in stream_leases.iter_mut() {
+                            if sl.dir == pc.dir && sl.done > pc.done {
+                                sl.done = (sl.done - pc.secs).max(0.0);
+                                pool.set_release(sl.lease, sl.done);
                             }
                         }
                     } else {
@@ -1265,7 +1475,6 @@ impl Engine {
                 (Some(Device::Gpu(_)), Some(Device::Cpu)) => CopyDir::D2H,
                 _ => continue, // allocs and releases are free
             };
-            let t = pcie.transfer_time(ev.bytes);
             let phase = if adam {
                 Phase::AdamMove
             } else {
@@ -1276,17 +1485,38 @@ impl Engine {
             };
             match ev.kind {
                 MoveKind::Evict => {
-                    dep = st.tl.async_copy(phase, t, dir, dep);
+                    // Pressure-driven: cannot wait for a buffer, so it
+                    // downgrades to the pageable curve when the pool is
+                    // dry.
+                    let (_, done, _, lease) = self
+                        .charge_async_routed(st, phase, dir, dep,
+                                             ev.bytes);
+                    dep = done;
+                    if let Some(l) = lease {
+                        st.stream_leases
+                            .push(StreamLease { lease: l, dir, done });
+                    }
                 }
                 MoveKind::Prefetch => {
-                    let done = st.tl.async_copy(phase, t, dir, dep);
+                    // The issue paths reserve pool capacity before
+                    // staging, so this normally lands a pinned lease;
+                    // if an eviction in the same drain batch took the
+                    // last buffer, the copy downgrades rather than
+                    // un-staging the chunk.
+                    let (t, done, route, lease) = self
+                        .charge_async_routed(st, phase, dir, dep,
+                                             ev.bytes);
                     st.inflight_done.insert(
                         ev.chunk,
-                        PendingCopy { done, secs: t, dir, phase },
+                        PendingCopy { done, secs: t, dir, phase, route,
+                                      lease },
                     );
                 }
                 _ => {
-                    st.tl.demand_copy(phase, t, dir, dep);
+                    // Demand copies preempt the pool: always charged at
+                    // the pinned rate, never queued on a buffer.
+                    st.tl.demand_copy(phase, pcie.transfer_time(ev.bytes),
+                                      dir, dep);
                 }
             }
         }

@@ -16,12 +16,19 @@
 //!   victims whose own next use lies beyond the prefetched chunk's use
 //!   moment.  This is exactly the eviction OPT would perform at demand
 //!   time, executed early on the async D2H stream instead of on the
-//!   compute critical path.
+//!   compute critical path;
+//! * **staging-capacity guard** (ISSUE 3) — with a finite pinned pool
+//!   ([`crate::mem::PinnedPool`]) each staged copy holds one pinned
+//!   buffer from issue to completion, so the engine stops walking the
+//!   window once the free buffers are spoken for
+//!   (`MoveStats::pinned_waits` counts the throttles).  The effective
+//!   lookahead is thereby bounded by the staging backlog the pool can
+//!   hold — the ROADMAP's "backlog-sized window" in its simplest form.
 //!
 //! Together the guards keep the prefetched schedule's transfer *volume*
 //! at the serial schedule's level — the pipeline only changes *when*
-//! copies happen (and which stream pays for them), not how many bytes
-//! cross PCIe.
+//! copies happen (and which stream and which PCIe curve pays for them),
+//! not how many bytes cross PCIe.
 
 use crate::chunk::ChunkId;
 use crate::tracer::{MemTracer, Moment};

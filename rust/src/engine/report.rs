@@ -27,6 +27,10 @@ pub struct IterBreakdown {
     pub exposed_collective_s: f64,
     /// Collective time hidden under compute by the collective stream.
     pub overlapped_collective_s: f64,
+    /// Copy time charged on the pageable PCIe curve — transfers that
+    /// could not acquire a pinned staging buffer
+    /// ([`crate::mem::PinnedPool`]).  Zero with the pool disabled.
+    pub pageable_copy_s: f64,
 }
 
 impl IterBreakdown {
@@ -40,6 +44,7 @@ impl IterBreakdown {
             overlapped_transfer_s: 0.0,
             exposed_collective_s: 0.0,
             overlapped_collective_s: 0.0,
+            pageable_copy_s: 0.0,
         }
     }
 
@@ -53,6 +58,7 @@ impl IterBreakdown {
             overlapped_transfer_s: tl.overlapped_transfer(),
             exposed_collective_s: tl.exposed_collective(),
             overlapped_collective_s: tl.overlapped_collective(),
+            pageable_copy_s: tl.pageable_transfer(),
         }
     }
 
@@ -154,6 +160,16 @@ impl EngineReport {
                 100.0 * self.breakdown.overlapped_transfer_s
                     / (self.breakdown.exposed_transfer_s
                         + self.breakdown.overlapped_transfer_s),
+            ));
+        }
+        if self.breakdown.pageable_copy_s > 0.0
+            || self.move_stats.pinned_waits > 0
+        {
+            out.push_str(&format!(
+                "pinned staging: {} of copy time fell to the pageable \
+                 curve; {} prefetch issues throttled by the pool\n",
+                human_time(self.breakdown.pageable_copy_s),
+                self.move_stats.pinned_waits,
             ));
         }
         if self.breakdown.overlapped_collective_s > 0.0 {

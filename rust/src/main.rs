@@ -95,6 +95,9 @@ impl Args {
                 "group-lookahead",
                 patrickstar::engine::DEFAULT_GROUP_LOOKAHEAD as u64,
             )? as u32,
+            // 0 = pool disabled: single-curve charging, bit-identical
+            // to the pre-pool timelines.
+            pinned_buffers: self.get_u64("pinned-buffers", 0)? as u32,
             ..Default::default()
         })
     }
@@ -144,11 +147,12 @@ pytorch-ddp
                        [--cluster yard] [--model 10B] [--gpus 8] [--batch 16]
                        [--pipeline on] [--prefetch on|off] [--overlap on|off]
                        [--lookahead 32] [--overlap-collectives on|off]
-                       [--group-lookahead 1]
+                       [--group-lookahead 1] [--pinned-buffers 0]
   patrickstar breakdown [--cluster superpod] [--model 10B] [--gpus 8] \
 [--batch 16]
              (rows: Base, Base+PF prefetch+overlap pipeline, Base+PF+CO
-              with the collective stream, OSC, SP)
+              with the collective stream, Base+PF+CO+PIN with a finite
+              pinned staging pool, OSC, SP)
   patrickstar scale [--cluster yard] [--gpus 8]
   patrickstar train [--artifacts artifacts] [--steps 50] [--gpu-mb 6] \
 [--lr 0.001] [--log-every 10] [--prefetch-ahead 0]
@@ -210,10 +214,14 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let report = if system == SystemKind::PatrickStar {
         Engine::new(cluster, task).with_opt(opt).run()?
     } else {
-        if opt.prefetch || opt.overlap || opt.overlap_collectives {
+        if opt.prefetch
+            || opt.overlap
+            || opt.overlap_collectives
+            || opt.pinned_buffers > 0
+        {
             bail!(
-                "--prefetch/--overlap/--overlap-collectives only apply \
-                 to system patrickstar"
+                "--prefetch/--overlap/--overlap-collectives/\
+                 --pinned-buffers only apply to system patrickstar"
             );
         }
         run_system(system, cluster, task)?
@@ -232,6 +240,7 @@ fn cmd_breakdown(args: &Args) -> Result<()> {
         ("Base", OptimizationPlan::default()),
         ("Base+PF", OptimizationPlan::pipelined()),
         ("Base+PF+CO", OptimizationPlan::fully_pipelined()),
+        ("Base+PF+CO+PIN", OptimizationPlan::pinned_pipeline()),
         ("OSC", OptimizationPlan::os_on_cpu()),
         ("SP", OptimizationPlan::static_partition()),
     ] {

@@ -48,50 +48,74 @@ impl Link {
         self.latency_s + bytes as f64 / self.effective_bps(bytes)
     }
 
-    /// Wall time to move `total` bytes split into `n_msgs` equal messages
-    /// (models per-tensor vs per-chunk transfer granularity).
+    /// Wall time to move `total` bytes split into `n_msgs` (near-)equal
+    /// messages (models per-tensor vs per-chunk transfer granularity).
+    /// The remainder of the integer division is distributed one byte per
+    /// message — `total % n_msgs` messages carry `per + 1` bytes — so
+    /// the bytes charged always sum to exactly `total` (truncating to
+    /// `per` undercharged the DeepSpeed baseline's per-tensor grad
+    /// transfers by up to `n_msgs - 1` bytes).
     pub fn transfer_time_split(&self, total: u64, n_msgs: u64) -> f64 {
         if total == 0 || n_msgs == 0 {
             return 0.0;
         }
-        let per = total / n_msgs.max(1);
-        n_msgs as f64 * self.transfer_time(per.max(1))
+        let per = total / n_msgs;
+        let rem = total % n_msgs;
+        // `transfer_time(0) == 0`: when total < n_msgs the empty
+        // messages are never sent and cost nothing.
+        (n_msgs - rem) as f64 * self.transfer_time(per)
+            + rem as f64 * self.transfer_time(per + 1)
+    }
+
+    /// The pageable-memory variant of this link: same saturation shape
+    /// and latency, [`PAGEABLE_FRACTION`] of the peak — a host copy not
+    /// staged through a pinned buffer bounces through the driver and
+    /// reaches roughly half the pinned DMA rate.
+    pub fn pageable(self) -> Link {
+        Link { peak_bps: self.peak_bps * PAGEABLE_FRACTION, ..self }
     }
 }
+
+/// Fraction of pinned PCIe bandwidth a pageable host copy achieves.
+pub const PAGEABLE_FRACTION: f64 = 0.5;
 
 /// The interconnect complement of a cluster node.
 #[derive(Clone, Copy, Debug)]
 pub struct Interconnect {
-    /// CPU<->GPU link (PCIe).
+    /// CPU<->GPU link (PCIe) at the *pinned*-memory DMA rate.  Copies
+    /// staged through a pinned buffer from the staging pool
+    /// ([`crate::mem::PinnedPool`]) are charged on this curve.
     pub pcie: Link,
+    /// CPU<->GPU link for copies that could not acquire a pinned
+    /// staging buffer: the driver bounces them through its own pageable
+    /// path at roughly half the pinned rate.
+    pub pcie_pageable: Link,
     /// GPU<->GPU link (NVLink) used by collectives.
     pub nvlink: Link,
 }
 
 impl Interconnect {
+    fn node(pcie: Link, nvlink: Link) -> Self {
+        Interconnect { pcie, pcie_pageable: pcie.pageable(), nvlink }
+    }
+
     /// PCIe 3.0 x16 (~16 GB/s peak) + NVLink2 (~150 GB/s per direction
     /// aggregate as seen by one GPU in a DGX-style mesh).  Saturation
     /// points from Li et al. [23]: P2P half-sat well below 4 MB, NVLink
     /// collectives need tens of MB.
     pub fn v100_node() -> Self {
-        Interconnect {
-            pcie: Link::new(16.0, 1.0, 10.0),
-            nvlink: Link::new(150.0, 32.0, 20.0),
-        }
+        Self::node(Link::new(16.0, 1.0, 10.0), Link::new(150.0, 32.0, 20.0))
     }
 
     /// PCIe 4.0 x16 (~32 GB/s) + NVLink3 (~300 GB/s).
     pub fn a100_node() -> Self {
-        Interconnect {
-            pcie: Link::new(32.0, 1.0, 10.0),
-            nvlink: Link::new(300.0, 32.0, 20.0),
-        }
+        Self::node(Link::new(32.0, 1.0, 10.0), Link::new(300.0, 32.0, 20.0))
     }
 
     /// Consumer PC: PCIe 3.0 x16, no NVLink (collectives over PCIe).
     pub fn pc() -> Self {
         let pcie = Link::new(12.0, 1.0, 15.0);
-        Interconnect { pcie, nvlink: pcie }
+        Self::node(pcie, pcie)
     }
 }
 
@@ -148,5 +172,107 @@ mod tests {
         let l = Link::new(16.0, 1.0, 10.0);
         let t = l.transfer_time(16);
         assert!(t > 0.9e-5, "latency floor applies: {t}");
+    }
+
+    #[test]
+    fn property_split_charges_exactly_total_bytes() {
+        // ISSUE 3 satellite: the integer division used to drop up to
+        // n_msgs - 1 remainder bytes.  For arbitrary (total, n_msgs),
+        // build the reference message-size list, check its sizes sum
+        // to `total`, and require the function's time to equal the
+        // per-message time sum of that list — so any implementation
+        // that bills a different byte total (like the old truncating
+        // one, checked explicitly below) fails.
+        use crate::util::quickcheck::forall;
+        let l = Link::new(16.0, 1.0, 10.0);
+        forall(
+            300,
+            |rng| {
+                (
+                    rng.range(0, 1 << 22) as u64,
+                    rng.range(0, 1000) as u64,
+                )
+            },
+            |&(total, n_msgs)| {
+                let got = l.transfer_time_split(total, n_msgs);
+                if total == 0 || n_msgs == 0 {
+                    return if got == 0.0 {
+                        Ok(())
+                    } else {
+                        Err(format!("degenerate case not free: {got}"))
+                    };
+                }
+                // Reference model: rem messages of per+1 bytes, the
+                // rest of per bytes — sizes must sum to total (sanity
+                // of the reference, not of the implementation).
+                let per = total / n_msgs;
+                let rem = total % n_msgs;
+                let sizes: Vec<u64> = (0..n_msgs)
+                    .map(|i| if i < rem { per + 1 } else { per })
+                    .collect();
+                if sizes.iter().sum::<u64>() != total {
+                    return Err("reference sizes don't sum".into());
+                }
+                // The implementation must bill exactly that list.
+                let want: f64 =
+                    sizes.iter().map(|&s| l.transfer_time(s)).sum();
+                if (got - want).abs() > 1e-9 * want.max(1e-30) {
+                    return Err(format!(
+                        "time {got} != per-message sum {want}"
+                    ));
+                }
+                // And whenever a remainder exists, the old truncating
+                // formula (n_msgs equal messages of `per` bytes,
+                // clamped to 1) must disagree — the regression this
+                // satellite fixes cannot silently come back.
+                if rem > 0 {
+                    let truncating =
+                        n_msgs as f64 * l.transfer_time(per.max(1));
+                    if got == truncating {
+                        return Err(format!(
+                            "remainder dropped again: {got} matches \
+                             the truncating formula"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn split_remainder_not_dropped() {
+        // 1001 bytes over 10 messages: one message carries 101 bytes.
+        // The truncating version charged 10 x 100 = 1000 bytes, i.e.
+        // strictly less time than the fixed version.
+        let l = Link::new(16.0, 1.0, 10.0);
+        let fixed = l.transfer_time_split(1001, 10);
+        let truncated = 10.0 * l.transfer_time(100);
+        assert!(fixed > truncated, "{fixed} !> {truncated}");
+        // total < n_msgs: the empty messages are free, the occupied
+        // ones carry exactly one byte each.
+        let tiny = l.transfer_time_split(3, 10);
+        assert!((tiny - 3.0 * l.transfer_time(1)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pageable_curve_is_half_peak_same_shape() {
+        let net = Interconnect::v100_node();
+        assert!(
+            (net.pcie_pageable.peak_bps
+                - PAGEABLE_FRACTION * net.pcie.peak_bps)
+                .abs()
+                < 1e-6
+        );
+        assert_eq!(net.pcie_pageable.half_sat_bytes, net.pcie.half_sat_bytes);
+        assert_eq!(net.pcie_pageable.latency_s, net.pcie.latency_s);
+        // Any real transfer is strictly slower on the pageable curve.
+        for bytes in [64_000u64, 4_000_000, 64 << 20] {
+            assert!(
+                net.pcie_pageable.transfer_time(bytes)
+                    > net.pcie.transfer_time(bytes)
+            );
+        }
+        assert_eq!(net.pcie_pageable.transfer_time(0), 0.0);
     }
 }

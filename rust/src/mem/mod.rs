@@ -11,8 +11,10 @@
 
 pub mod bandwidth;
 pub mod device;
+pub mod pinned;
 pub mod space;
 
-pub use bandwidth::{Interconnect, Link};
+pub use bandwidth::{Interconnect, Link, PAGEABLE_FRACTION};
 pub use device::{Device, DeviceMem, MemError};
+pub use pinned::{PinnedLease, PinnedPool, DEFAULT_PINNED_BUFFERS};
 pub use space::HeterogeneousSpace;

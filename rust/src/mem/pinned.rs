@@ -1,0 +1,193 @@
+//! Pinned staging-buffer pool (ISSUE 3 tentpole).
+//!
+//! Real offload engines do not DMA pageable host memory at the rates the
+//! paper's bandwidth argument assumes: `cudaMemcpyAsync` from pageable
+//! memory is staged through a driver bounce buffer at roughly half the
+//! pinned rate, and true async overlap requires `cudaMallocHost`-style
+//! pinned buffers — of which a training process keeps only a small,
+//! fixed pool (ZeRO-Infinity and AutoHete both make this pool the
+//! central contended resource of their pipelines).  This module models
+//! that pool for the simulator: a fixed number of chunk-sized pinned
+//! buffers with acquire/release semantics on the simulated clock.
+//!
+//! A *lease* is one buffer held for the lifetime of one staged copy —
+//! from the moment the copy is enqueued (the payload is memcpy'd into
+//! the pinned buffer at issue, so a queued copy holds its buffer while
+//! it waits for the engine) until the DMA completes.  Lease release
+//! times therefore equal copy completion times on the stream timeline;
+//! the pool answers "is a buffer free at simulated time t" by counting
+//! outstanding leases, pruning expired ones lazily.
+//!
+//! Contention policy (wired up by the engine):
+//!
+//! * **demand copies preempt** — they never consult the pool and are
+//!   always charged at the pinned rate (the runtime reserves staging
+//!   capacity for the critical path);
+//! * **prefetches wait** — a chunk prefetch or lookahead group gather
+//!   that cannot acquire a buffer is simply not issued this moment and
+//!   retries at the next tick, so the effective lookahead window is
+//!   throttled by pool availability;
+//! * **evictions and activation offload downgrade** — pressure-driven
+//!   copies cannot wait, so they fall back to the pageable curve
+//!   ([`crate::mem::Interconnect::pcie_pageable`]) when the pool is
+//!   exhausted.
+//!
+//! A pool of capacity 0 is *disabled*: the engine skips all pool logic
+//! and every transfer charges the single pinned curve, reproducing the
+//! pre-pool numbers bit-for-bit.
+
+/// Default pool size when the pinned pipeline is switched on wholesale
+/// (`OptimizationPlan::pinned_pipeline`, the CLI breakdown row): enough
+/// buffers to keep both copy engines and one lookahead gather fed while
+/// still exercising contention under a deep prefetch backlog.
+pub const DEFAULT_PINNED_BUFFERS: u32 = 4;
+
+/// One outstanding buffer lease (opaque handle).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PinnedLease(u64);
+
+/// Fixed-size pool of chunk-sized pinned staging buffers.
+#[derive(Clone, Debug, Default)]
+pub struct PinnedPool {
+    capacity: usize,
+    next_id: u64,
+    /// Outstanding leases: (id, release time on the simulated clock).
+    /// A fresh lease releases at +inf until the caller learns the
+    /// copy's completion time and calls [`PinnedPool::set_release`].
+    leases: Vec<(u64, f64)>,
+}
+
+impl PinnedPool {
+    pub fn new(capacity: usize) -> Self {
+        PinnedPool { capacity, next_id: 0, leases: Vec::new() }
+    }
+
+    /// The disabled pool: no buffers, no modeling.
+    pub fn disabled() -> Self {
+        Self::new(0)
+    }
+
+    /// False means the engine must skip pool routing entirely (single
+    /// pinned curve, pre-pool behaviour).
+    pub fn enabled(&self) -> bool {
+        self.capacity > 0
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Leases still held at simulated time `now`.
+    pub fn in_use_at(&self, now: f64) -> usize {
+        self.leases.iter().filter(|&&(_, rel)| rel > now).count()
+    }
+
+    /// Buffers free at simulated time `now`.
+    pub fn available_at(&self, now: f64) -> usize {
+        self.capacity.saturating_sub(self.in_use_at(now))
+    }
+
+    /// Acquire a buffer at simulated time `now`, releasing "never" until
+    /// [`PinnedPool::set_release`] pins down the copy's completion time.
+    /// Returns None when every buffer is held at `now` — the caller
+    /// either waits (prefetch) or downgrades to the pageable curve
+    /// (eviction/offload).
+    pub fn try_acquire(&mut self, now: f64) -> Option<PinnedLease> {
+        // Lazy prune keeps the scan short across a long run.
+        self.leases.retain(|&(_, rel)| rel > now);
+        if self.leases.len() >= self.capacity {
+            return None;
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.leases.push((id, f64::INFINITY));
+        Some(PinnedLease(id))
+    }
+
+    /// The copy holding `lease` completes (and its buffer frees) at `t`.
+    /// Also used to *shift* a release when FIFO queue compression moves
+    /// the copy's completion time.
+    pub fn set_release(&mut self, lease: PinnedLease, t: f64) {
+        if let Some(e) = self.leases.iter_mut().find(|e| e.0 == lease.0) {
+            e.1 = t;
+        }
+    }
+
+    /// Release `lease` immediately (the copy was cancelled before the
+    /// wire).  Unknown or already-expired leases are a no-op.
+    pub fn release(&mut self, lease: PinnedLease) {
+        self.leases.retain(|&(id, _)| id != lease.0);
+    }
+
+    /// Forget every lease (iteration boundary: the timeline restarts at
+    /// zero, so stale release times must not leak across).
+    pub fn clear(&mut self) {
+        self.leases.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_release_roundtrip() {
+        let mut p = PinnedPool::new(2);
+        assert!(p.enabled());
+        assert_eq!(p.available_at(0.0), 2);
+        let a = p.try_acquire(0.0).unwrap();
+        let b = p.try_acquire(0.0).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(p.available_at(0.0), 0);
+        assert!(p.try_acquire(0.0).is_none(), "pool exhausted");
+        p.release(a);
+        assert_eq!(p.available_at(0.0), 1);
+        assert!(p.try_acquire(0.0).is_some());
+    }
+
+    #[test]
+    fn leases_expire_at_release_time() {
+        let mut p = PinnedPool::new(1);
+        let a = p.try_acquire(0.0).unwrap();
+        // Unset release: held forever.
+        assert_eq!(p.available_at(1e12), 0);
+        p.set_release(a, 2.0);
+        assert_eq!(p.available_at(1.9), 0, "still on the wire");
+        assert_eq!(p.available_at(2.0), 1, "freed exactly at done");
+        // A later acquire at t=3 succeeds and prunes the expired lease.
+        assert!(p.try_acquire(3.0).is_some());
+        assert_eq!(p.in_use_at(3.0), 1);
+    }
+
+    #[test]
+    fn queue_compression_shifts_release_earlier() {
+        let mut p = PinnedPool::new(1);
+        let a = p.try_acquire(0.0).unwrap();
+        p.set_release(a, 5.0);
+        // The copy ahead of it was reclaimed: it now lands at 3.5.
+        p.set_release(a, 3.5);
+        assert_eq!(p.available_at(4.0), 1);
+        assert_eq!(p.available_at(3.0), 0);
+    }
+
+    #[test]
+    fn disabled_pool_never_grants() {
+        let mut p = PinnedPool::disabled();
+        assert!(!p.enabled());
+        assert_eq!(p.capacity(), 0);
+        assert!(p.try_acquire(0.0).is_none());
+        assert_eq!(p.available_at(0.0), 0);
+    }
+
+    #[test]
+    fn clear_forgets_all_leases() {
+        let mut p = PinnedPool::new(1);
+        let a = p.try_acquire(0.0).unwrap();
+        p.set_release(a, 100.0);
+        p.clear();
+        assert_eq!(p.in_use_at(0.0), 0);
+        assert!(p.try_acquire(0.0).is_some());
+        // Releasing a cleared lease is a harmless no-op.
+        p.release(a);
+    }
+}

@@ -24,4 +24,4 @@ pub mod stream;
 
 pub use clock::{Phase, SimClock};
 pub use cost::DeviceProfile;
-pub use stream::{CopyDir, StreamTimeline};
+pub use stream::{CopyDir, CopyRoute, StreamTimeline};

@@ -46,6 +46,20 @@ pub enum CopyDir {
     D2H,
 }
 
+/// Which host-memory path a PCIe copy was charged on (ISSUE 3
+/// tentpole).  The engine decides per copy: pinned while holding a
+/// staging buffer from the [`crate::mem::PinnedPool`], pageable
+/// otherwise.  The timeline only *attributes* the split
+/// ([`StreamTimeline::pageable_transfer`]) — the duration difference is
+/// already baked into `secs` by the caller's curve choice.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CopyRoute {
+    /// DMA out of a pinned staging buffer (full PCIe rate).
+    Pinned,
+    /// Driver-bounced pageable copy (~half the pinned rate).
+    Pageable,
+}
+
 /// Four-stream simulated timeline with per-phase attribution.
 #[derive(Clone, Debug)]
 pub struct StreamTimeline {
@@ -65,6 +79,9 @@ pub struct StreamTimeline {
     coll_total: f64,
     /// Compute-stream stall time attributable to collectives.
     coll_exposed: f64,
+    /// Copy time (within `copy_total`) charged on the pageable curve —
+    /// transfers that could not acquire a pinned staging buffer.
+    pageable_total: f64,
 }
 
 impl StreamTimeline {
@@ -80,6 +97,7 @@ impl StreamTimeline {
             exposed: 0.0,
             coll_total: 0.0,
             coll_exposed: 0.0,
+            pageable_total: 0.0,
         }
     }
 
@@ -111,7 +129,8 @@ impl StreamTimeline {
     }
 
     /// Blocking copy on the compute critical path.  `ready` is an extra
-    /// start dependency (0.0 for none).
+    /// start dependency (0.0 for none).  Charged as pinned — demand
+    /// copies preempt the staging pool (see [`CopyRoute`]).
     pub fn demand_copy(
         &mut self,
         phase: Phase,
@@ -119,8 +138,29 @@ impl StreamTimeline {
         dir: CopyDir,
         ready: f64,
     ) {
+        self.demand_copy_on(phase, secs, dir, ready, CopyRoute::Pinned)
+    }
+
+    /// [`StreamTimeline::demand_copy`] with an explicit host-memory
+    /// route for the pinned/pageable attribution.  The engine never
+    /// routes a demand copy Pageable (demand preempts the pool — see
+    /// [`CopyRoute`]), so production callers go through `demand_copy`;
+    /// this variant keeps the demand/async/reclaim API symmetric for
+    /// tests and for future policies where demand copies, too, queue
+    /// on the staging pool (e.g. a strict-FIFO pool model).
+    pub fn demand_copy_on(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        dir: CopyDir,
+        ready: f64,
+        route: CopyRoute,
+    ) {
         self.clock.add(phase, secs);
         self.copy_total += secs;
+        if route == CopyRoute::Pageable {
+            self.pageable_total += secs;
+        }
         if !self.overlap {
             self.compute += secs;
             return;
@@ -142,8 +182,24 @@ impl StreamTimeline {
         dir: CopyDir,
         ready: f64,
     ) -> f64 {
+        self.async_copy_on(phase, secs, dir, ready, CopyRoute::Pinned)
+    }
+
+    /// [`StreamTimeline::async_copy`] with an explicit host-memory
+    /// route for the pinned/pageable attribution.
+    pub fn async_copy_on(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        dir: CopyDir,
+        ready: f64,
+        route: CopyRoute,
+    ) -> f64 {
         self.clock.add(phase, secs);
         self.copy_total += secs;
+        if route == CopyRoute::Pageable {
+            self.pageable_total += secs;
+        }
         if !self.overlap {
             self.compute += secs;
             return self.compute;
@@ -160,8 +216,24 @@ impl StreamTimeline {
     /// the copy total.  Keeps time accounting consistent with the byte
     /// accounting (`MoveStats` credits cancelled prefetches back too).
     pub fn reclaim(&mut self, phase: Phase, secs: f64, dir: CopyDir) {
+        self.reclaim_on(phase, secs, dir, CopyRoute::Pinned)
+    }
+
+    /// [`StreamTimeline::reclaim`] for a copy charged on an explicit
+    /// route — a cancelled pageable copy credits the pageable
+    /// attribution back too.
+    pub fn reclaim_on(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        dir: CopyDir,
+        route: CopyRoute,
+    ) {
         self.clock.sub(phase, secs);
         self.copy_total = (self.copy_total - secs).max(0.0);
+        if route == CopyRoute::Pageable {
+            self.pageable_total = (self.pageable_total - secs).max(0.0);
+        }
         if self.overlap {
             let s = self.stream_mut(dir);
             *s = (*s - secs).max(0.0);
@@ -290,6 +362,12 @@ impl StreamTimeline {
         }
     }
 
+    /// Copy time charged on the pageable curve (no staging buffer held).
+    /// Zero whenever the pinned pool is disabled.
+    pub fn pageable_transfer(&self) -> f64 {
+        self.pageable_total
+    }
+
     pub fn reset(&mut self) {
         self.clock.reset();
         self.compute = 0.0;
@@ -300,6 +378,7 @@ impl StreamTimeline {
         self.exposed = 0.0;
         self.coll_total = 0.0;
         self.coll_exposed = 0.0;
+        self.pageable_total = 0.0;
     }
 
     /// Bit-exact snapshot of the full timeline state: every stream
@@ -319,6 +398,7 @@ impl StreamTimeline {
             self.exposed,
             self.coll_total,
             self.coll_exposed,
+            self.pageable_total,
         ] {
             let _ = write!(s, "{:016x} ", v.to_bits());
         }
@@ -497,6 +577,54 @@ mod tests {
         assert_eq!(tl.makespan(), 0.0);
         assert_eq!(tl.get(Phase::AllGather), 0.0);
         assert_eq!(tl.overlapped_collective(), 0.0);
+    }
+
+    #[test]
+    fn pinned_route_is_bit_identical_to_legacy_methods() {
+        // ISSUE 3 acceptance: with the pool disabled every copy routes
+        // Pinned, and that path must reproduce the pre-pool timeline
+        // bit-for-bit — the routed methods with Pinned ARE the legacy
+        // methods.
+        for overlap in [false, true] {
+            let mut legacy = StreamTimeline::new(overlap);
+            let mut routed = StreamTimeline::new(overlap);
+            legacy.charge(Phase::FwdBwd, 0.1 + 0.2);
+            routed.charge(Phase::FwdBwd, 0.1 + 0.2);
+            legacy.async_copy(Phase::CpuToGpu, 1.0 / 3.0, CopyDir::H2D, 0.0);
+            routed.async_copy_on(
+                Phase::CpuToGpu, 1.0 / 3.0, CopyDir::H2D, 0.0,
+                CopyRoute::Pinned,
+            );
+            legacy.demand_copy(Phase::GpuToCpu, 0.7, CopyDir::D2H, 0.1);
+            routed.demand_copy_on(
+                Phase::GpuToCpu, 0.7, CopyDir::D2H, 0.1, CopyRoute::Pinned,
+            );
+            legacy.reclaim(Phase::CpuToGpu, 1.0 / 3.0, CopyDir::H2D);
+            routed.reclaim_on(
+                Phase::CpuToGpu, 1.0 / 3.0, CopyDir::H2D, CopyRoute::Pinned,
+            );
+            assert_eq!(legacy.snapshot(), routed.snapshot());
+            assert_eq!(routed.pageable_transfer(), 0.0);
+        }
+    }
+
+    #[test]
+    fn pageable_route_is_attributed_and_reclaimable() {
+        let mut tl = StreamTimeline::new(true);
+        tl.async_copy_on(
+            Phase::CpuToGpu, 0.5, CopyDir::H2D, 0.0, CopyRoute::Pageable,
+        );
+        tl.demand_copy_on(
+            Phase::GpuToCpu, 0.25, CopyDir::D2H, 0.0, CopyRoute::Pinned,
+        );
+        assert!((tl.pageable_transfer() - 0.5).abs() < 1e-12);
+        // Stream scheduling is route-independent: both engines advanced.
+        assert!((tl.makespan() - 0.5).abs() < 1e-12);
+        tl.reclaim_on(Phase::CpuToGpu, 0.5, CopyDir::H2D,
+                      CopyRoute::Pageable);
+        assert_eq!(tl.pageable_transfer(), 0.0);
+        tl.reset();
+        assert_eq!(tl.pageable_transfer(), 0.0);
     }
 
     #[test]
