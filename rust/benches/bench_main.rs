@@ -48,6 +48,7 @@ fn main() {
         ("prefetch_overlap", prefetch_overlap),
         ("collective_overlap", collective_overlap),
         ("pinned_pool", pinned_pool),
+        ("adaptive_lookahead", adaptive_lookahead),
         ("micro_hotpaths", micro_hotpaths),
     ];
     for (name, f) in benches {
@@ -950,6 +951,159 @@ fn pinned_pool() {
          every config, transfer volume never increased over the \
          disabled pool, pool off == PR 2 pipeline numbers; serial row \
          is context only (a starved pool may exceed it)."
+    );
+}
+
+// =====================================================================
+// Adaptive lookahead sweep (ISSUE 4 tentpole)
+// =====================================================================
+//
+// Static (lookahead, group_lookahead) pairs vs the feedback controller
+// on the pinned pipeline, across model sizes.  The acceptance contract:
+//
+//   * adaptive matches or beats the BEST static pair on every config
+//     (within 1% tolerance — printed as PASS/FAIL here, gated at 5% by
+//     the CI diff step over BENCH_adaptive.json);
+//   * adaptive beats the DEFAULT static windows (32, 1) outright on at
+//     least one config;
+//   * volume discipline is covered by the test suites, not re-measured
+//     here.
+//
+// Emits BENCH_adaptive.json next to the other artifacts.
+fn adaptive_lookahead() {
+    let cases = [
+        (ClusterPreset::yard(), "4B", 1u32, 8u64),
+        (ClusterPreset::yard(), "12B", 1, 8),
+        (ClusterPreset::yard(), "15B", 8, 8),
+        (ClusterPreset::superpod(), "50B", 8, 8),
+    ];
+    let mut entries: Vec<Json> = Vec::new();
+    let mut push = |name: String, value: f64, unit: &str| {
+        entries.push(Json::obj(vec![
+            ("name", Json::str(name)),
+            ("value", Json::num(value)),
+            ("unit", Json::str(unit)),
+        ]));
+    };
+    let mut beats_default_somewhere = false;
+    let mut within_best_everywhere = true;
+    for (cluster, model, gpus, batch) in cases {
+        let m = GptSpec::by_name(model).unwrap();
+        let task = TrainTask::new(m, batch, gpus);
+        let case = format!("{}_{model}_{gpus}g", cluster.name);
+        println!("--- {case} ---");
+        let mut t = Table::new(&["plan", "iter s", "exposed tx",
+                                 "exposed coll", "avg la", "avg gla"]);
+        // Static sweep: window depths around the default; the group
+        // dimension only exists on multi-GPU configs.
+        let las = [8u32, 32, 64];
+        let glas: &[u32] = if gpus > 1 { &[1, 2, 4] } else { &[1] };
+        let mut best_static: Option<(f64, u32, u32)> = None;
+        let mut default_static: Option<f64> = None;
+        for &la in &las {
+            for &gla in glas {
+                let opt = OptimizationPlan {
+                    lookahead: la,
+                    group_lookahead: gla,
+                    ..OptimizationPlan::pinned_pipeline()
+                };
+                match Engine::new(cluster, task).with_opt(opt).run() {
+                    Ok(r) => {
+                        t.row(vec![
+                            format!("la={la} gla={gla}"),
+                            format!("{:.3}", r.iter_time_s),
+                            format!(
+                                "{:.2}", r.breakdown.exposed_transfer_s),
+                            format!(
+                                "{:.2}",
+                                r.breakdown.exposed_collective_s),
+                            la.to_string(),
+                            gla.to_string(),
+                        ]);
+                        push(
+                            format!("{case}/static_la{la}_gla{gla}_iter_s"),
+                            r.iter_time_s,
+                            "s",
+                        );
+                        if la == 32 && gla == 1 {
+                            default_static = Some(r.iter_time_s);
+                        }
+                        if best_static
+                            .map(|(b, _, _)| r.iter_time_s < b)
+                            .unwrap_or(true)
+                        {
+                            best_static = Some((r.iter_time_s, la, gla));
+                        }
+                    }
+                    Err(e) => {
+                        t.row(vec![format!("la={la} gla={gla}"),
+                                   format!("err {e}"), "-".into(),
+                                   "-".into(), "-".into(), "-".into()]);
+                    }
+                }
+            }
+        }
+        let adaptive = match Engine::new(cluster, task)
+            .with_opt(OptimizationPlan::adaptive_pipeline())
+            .run()
+        {
+            Ok(r) => r,
+            Err(e) => {
+                println!("adaptive infeasible: {e}");
+                continue;
+            }
+        };
+        t.row(vec![
+            "adaptive".into(),
+            format!("{:.3}", adaptive.iter_time_s),
+            format!("{:.2}", adaptive.breakdown.exposed_transfer_s),
+            format!("{:.2}", adaptive.breakdown.exposed_collective_s),
+            format!("{:.1}", adaptive.avg_chunk_lookahead),
+            format!("{:.1}", adaptive.avg_group_lookahead),
+        ]);
+        print!("{}", t.render());
+        push(format!("{case}/adaptive_iter_s"), adaptive.iter_time_s,
+             "s");
+        push(format!("{case}/adaptive_avg_lookahead"),
+             adaptive.avg_chunk_lookahead, "moments");
+        push(format!("{case}/adaptive_avg_group_lookahead"),
+             adaptive.avg_group_lookahead, "groups");
+        if let Some((best, bla, bgla)) = best_static {
+            push(format!("{case}/best_static_iter_s"), best, "s");
+            push(
+                format!("{case}/adaptive_vs_best_static"),
+                adaptive.iter_time_s / best,
+                "x",
+            );
+            let ok = adaptive.iter_time_s <= best * 1.01;
+            if !ok {
+                within_best_everywhere = false;
+            }
+            println!(
+                "best static: la={bla} gla={bgla} @ {best:.3}s | \
+                 adaptive {:.3}s -> {}",
+                adaptive.iter_time_s,
+                if ok { "PASS (within 1%)" } else { "FAIL (>1% behind)" },
+            );
+        }
+        if let Some(d) = default_static {
+            push(format!("{case}/default_static_iter_s"), d, "s");
+            if adaptive.iter_time_s < d * (1.0 - 1e-9) {
+                beats_default_somewhere = true;
+            }
+        }
+    }
+    let json = Json::Arr(entries).to_string_pretty();
+    match std::fs::write("BENCH_adaptive.json", json) {
+        Ok(()) => println!("wrote BENCH_adaptive.json"),
+        Err(e) => println!("could not write BENCH_adaptive.json: {e}"),
+    }
+    println!(
+        "acceptance: adaptive within 1% of the best static pair on \
+         every config ({}), beats the default static windows outright \
+         on at least one config ({}).",
+        if within_best_everywhere { "PASS" } else { "FAIL" },
+        if beats_default_somewhere { "PASS" } else { "FAIL" },
     );
 }
 

@@ -233,6 +233,9 @@ impl DeepSpeedSim {
             reduce_scatter_bw: 0.0,
             gather_prefetches: 0,
             gather_cancels: 0,
+            adaptive_lookahead: false,
+            avg_chunk_lookahead: 0.0,
+            avg_group_lookahead: 0.0,
             gpu_peak: gpu_need,
             cpu_peak: cpu_need,
             non_model_peak: peak_nm,

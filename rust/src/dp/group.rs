@@ -105,6 +105,15 @@ impl CollectivePipeline {
         self.gathers.len()
     }
 
+    /// Per-rank byte volume of every gather still in flight — a
+    /// telemetry/test probe of the collective lane's committed staging
+    /// volume.  Note this volume needs no ledger accounting: the staged
+    /// payloads already show in the device's `used()` the moment they
+    /// are allocated.
+    pub fn inflight_gather_bytes(&self) -> u64 {
+        self.gathers.values().map(|gi| gi.bytes).sum()
+    }
+
     pub fn issue_gather(&mut self, g: usize, gi: InFlightGather) {
         self.gathers.insert(g, gi);
     }
@@ -239,6 +248,7 @@ mod tests {
         );
         assert!(p.gather_issued(3));
         assert_eq!(p.n_inflight_gathers(), 2);
+        assert_eq!(p.inflight_gather_bytes(), 200);
         // Only the first gather has landed by t=2.5.
         assert_eq!(p.landed(2.5), vec![3]);
         assert_eq!(p.landed(0.0), Vec::<usize>::new());

@@ -1,0 +1,567 @@
+//! Adaptive lookahead controller + negotiated headroom ledger (ISSUE 4
+//! tentpole).
+//!
+//! PR 1 and PR 2 gave the engine two prefetch windows — the chunk
+//! window (`--lookahead`, moments) and the group-gather window
+//! (`--group-lookahead`, communication groups) — as *static knobs*.
+//! AutoHete (PAPERS.md) argues the right depth is a function of the
+//! measured compute/transfer ratio, and PR 3's pinned pool already
+//! showed the window must respect staging capacity.  This module closes
+//! the loop: both windows are re-sized every moment from live feedback.
+//!
+//! # The feedback loop
+//!
+//! [`LookaheadController::observe`] differences three cumulative
+//! [`crate::sim::StreamTimeline`] accumulators per moment tick —
+//! compute work, H2D copy work, collective work — and folds each delta
+//! into an exponential moving average (alpha [`EMA_ALPHA`]).  The EMAs
+//! survive the iteration boundary (PTM iterations are structurally
+//! identical, so last iteration's rates are this iteration's best
+//! prior); only the cumulative baselines reset with the timeline.
+//!
+//! # Window sizing
+//!
+//! *Chunk window* ([`LookaheadController::chunk_window`]):
+//!
+//! ```text
+//! want    = MIN_CHUNK_WINDOW + ceil(HEADSTART * h2d_ema / compute_ema)
+//! window  = clamp(want - h2d_backlog_moments, 1, static cap)
+//! window  = min(window, free_pinned_buffers * POOL_MOMENTS_PER_BUFFER)
+//! ```
+//!
+//! The ratio term keeps the H2D engine fed: if every moment produces
+//! `t` seconds of staging against `c` seconds of compute, a copy must
+//! be issued ~`t/c` moments early to finish in time, and [`HEADSTART`]
+//! doubles that for queueing slack.  The backlog term shrinks the walk
+//! while the engine is already running ahead — copies enqueued behind a
+//! deep backlog would land *later* than their use moments and be
+//! evicted by the cap shrink before paying off.  The pool term bounds
+//! the walk to what the free staging buffers could possibly issue
+//! (chunk uses arrive at well under one per moment — 7 ops per layer
+//! and multi-layer chunks — so [`POOL_MOMENTS_PER_BUFFER`] moments per
+//! buffer is a generous over-approximation; a dry pool collapses the
+//! window to zero instead of walking and throttling).
+//!
+//! *Group window* ([`LookaheadController::group_window`]): the same
+//! shape on the fourth stream — `1 + ceil(coll_ema / compute_ema)`,
+//! backlog-compressed, clamped to `[1, static cap]`.  The floor of 1
+//! keeps the next demand gather always stageable.
+//!
+//! # The headroom ledger
+//!
+//! Before this PR the two prefetchers budgeted *independently* against
+//! `MemTracer::min_chunkable_gpu`: a deep chunk walk could consume the
+//! exact headroom the next moment's all-gather needed, forcing the
+//! gather to retry while less urgent chunk copies occupied the space.
+//! [`HeadroomLedger`] is the single negotiation point: every byte limit
+//! either prefetcher uses comes from the ledger, and in adaptive mode
+//! the engine *earmarks* the upcoming group gathers' absent bytes
+//! before the chunk walk starts, so the chunk prefetcher sees
+//! `grant - earmarks` and cannot starve the collective lane.  Demand
+//! traffic always preempts — demand fetches and demand gathers never
+//! consult the ledger at all.  With no earmarks the ledger's arithmetic
+//! is exactly the pre-PR expressions, which is what keeps the
+//! adaptive-off timelines bit-identical to PR 3.
+
+use crate::sim::{CopyDir, StreamTimeline};
+use crate::tracer::{MemTracer, Moment, WARMUP_GPU_FRAC};
+
+use super::prefetch::{DEFAULT_GROUP_LOOKAHEAD, DEFAULT_LOOKAHEAD};
+
+/// Cap on the adaptive chunk window when the user asks for
+/// `--lookahead auto` (the controller sizes *within* the cap; the cap
+/// itself stays a static safety rail, which is what the window-bound
+/// property test pins).
+pub const DEFAULT_ADAPTIVE_MAX_LOOKAHEAD: u32 = 64;
+
+/// Cap on the adaptive group-gather window in auto mode.
+pub const DEFAULT_ADAPTIVE_MAX_GROUP_LOOKAHEAD: u32 = 4;
+
+/// EMA smoothing: ~4-moment memory, quick enough to track the
+/// FWD->BWD->ADAM phase changes within one iteration.
+const EMA_ALPHA: f64 = 0.25;
+
+/// Floor of the ratio-derived chunk window: even a compute-bound phase
+/// keeps about a layer of headstart (7 ops) so the first spill of the
+/// next transfer-bound stretch is already hidden.
+const MIN_CHUNK_WINDOW: u32 = 8;
+
+/// Safety multiple on the measured transfer/compute ratio.  Generous on
+/// purpose: chunk uses are sparse (one chunk spans a layer or more of
+/// ops) and copies are not spaced uniformly, and an over-deep window is
+/// cheap — the headroom budget, Belady guard and pool budget already
+/// throttle it — while an under-deep one leaves the H2D engine idle.
+const HEADSTART: f64 = 4.0;
+
+/// Moments of window depth one free pinned buffer licenses (a generous
+/// over-approximation: roughly one *distinct* chunk use per one-to-two
+/// transformer layers of 7 ops each).
+const POOL_MOMENTS_PER_BUFFER: u32 = 16;
+
+/// Cap on the overlap-aware eviction tie-break margin (moments): a
+/// near-equal droppable victim may jump at most this far ahead of the
+/// OPT choice, however deep the D2H backlog grows.
+const MAX_EVICT_MARGIN: u32 = 8;
+
+/// One exponential moving average over per-moment deltas.
+#[derive(Clone, Copy, Debug, Default)]
+struct Ema(Option<f64>);
+
+impl Ema {
+    fn update(&mut self, x: f64) {
+        self.0 = Some(match self.0 {
+            None => x,
+            Some(v) => EMA_ALPHA * x + (1.0 - EMA_ALPHA) * v,
+        });
+    }
+
+    fn get(&self) -> Option<f64> {
+        self.0
+    }
+}
+
+/// Per-stream observations the controller sizes the windows from at one
+/// moment tick.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct WindowInputs {
+    /// Free pinned staging buffers grantable to H2D copies right now
+    /// (None: pool disabled, no staging-capacity bound).
+    pub pool_free: Option<u32>,
+    /// Seconds the H2D engine's frontier runs ahead of compute.
+    pub h2d_backlog_secs: f64,
+    /// Seconds the collective stream's frontier runs ahead of compute.
+    pub coll_backlog_secs: f64,
+}
+
+/// Feedback-driven sizing of both prefetch windows.
+#[derive(Clone, Debug)]
+pub struct LookaheadController {
+    /// Static caps the adaptive windows may never exceed.
+    max_lookahead: u32,
+    max_group_lookahead: u32,
+    ema_compute: Ema,
+    ema_h2d: Ema,
+    ema_coll: Ema,
+    /// Cumulative-accumulator baselines from the previous tick.
+    last_compute: f64,
+    last_h2d: f64,
+    last_coll: f64,
+}
+
+impl LookaheadController {
+    pub fn new(max_lookahead: u32, max_group_lookahead: u32) -> Self {
+        LookaheadController {
+            max_lookahead,
+            max_group_lookahead,
+            ema_compute: Ema::default(),
+            ema_h2d: Ema::default(),
+            ema_coll: Ema::default(),
+            last_compute: 0.0,
+            last_h2d: 0.0,
+            last_coll: 0.0,
+        }
+    }
+
+    /// Fold this tick's per-stream work deltas into the EMAs.  Ticks
+    /// that charged no compute (the iteration's first tick) are skipped
+    /// so idle boundaries don't drag the rate estimates toward zero.
+    pub fn observe(&mut self, tl: &StreamTimeline) {
+        let dc = tl.compute_work() - self.last_compute;
+        let dh = tl.copy_busy(CopyDir::H2D) - self.last_h2d;
+        let dk = tl.collective_work() - self.last_coll;
+        self.last_compute = tl.compute_work();
+        self.last_h2d = tl.copy_busy(CopyDir::H2D);
+        self.last_coll = tl.collective_work();
+        if dc > 0.0 {
+            self.ema_compute.update(dc);
+            // Reclaims can drive a delta negative; the work physically
+            // enqueued this tick is never less than zero.
+            self.ema_h2d.update(dh.max(0.0));
+            self.ema_coll.update(dk.max(0.0));
+        }
+    }
+
+    /// The timeline restarted at zero (iteration boundary): re-base the
+    /// cumulative baselines, keep the learned rates.
+    pub fn iteration_boundary(&mut self) {
+        self.last_compute = 0.0;
+        self.last_h2d = 0.0;
+        self.last_coll = 0.0;
+    }
+
+    fn pool_bound(w: u32, pool_free: Option<u32>) -> u32 {
+        match pool_free {
+            Some(f) => w.min(f.saturating_mul(POOL_MOMENTS_PER_BUFFER)),
+            None => w,
+        }
+    }
+
+    /// Chunk-prefetch window for this moment, in moments.
+    pub fn chunk_window(&self, inp: WindowInputs) -> u32 {
+        let cap = self.max_lookahead;
+        if cap == 0 {
+            return 0; // a zero cap disables the lane outright
+        }
+        let (c, t) = match (self.ema_compute.get(), self.ema_h2d.get()) {
+            (Some(c), Some(t)) if c > 0.0 => (c, t),
+            // Cold start (first ticks of the first steady iteration):
+            // the static default, still pool-bounded.
+            _ => {
+                return Self::pool_bound(
+                    DEFAULT_LOOKAHEAD.min(cap),
+                    inp.pool_free,
+                )
+            }
+        };
+        let want = MIN_CHUNK_WINDOW as f64 + (HEADSTART * t / c).ceil();
+        let backlog_moments = (inp.h2d_backlog_secs / c).floor();
+        let w = (want - backlog_moments).clamp(1.0, cap as f64) as u32;
+        Self::pool_bound(w, inp.pool_free)
+    }
+
+    /// Group-gather window for this moment, in communication groups.
+    pub fn group_window(&self, inp: WindowInputs) -> u32 {
+        if self.max_group_lookahead == 0 {
+            return 0; // a zero cap disables the lane outright
+        }
+        let cap = self.max_group_lookahead;
+        let (c, t) = match (self.ema_compute.get(), self.ema_coll.get()) {
+            (Some(c), Some(t)) if c > 0.0 => (c, t),
+            _ => return DEFAULT_GROUP_LOOKAHEAD.clamp(1, cap),
+        };
+        let want = 1.0 + (t / c).ceil();
+        let backlog_groups = (inp.coll_backlog_secs / c).floor();
+        (want - backlog_groups).clamp(1.0, cap as f64) as u32
+    }
+
+    /// Overlap-aware eviction tie-break margin, in moments: how much
+    /// sooner a *droppable* (no-copy) victim's next use may be than the
+    /// OPT choice's before we still prefer it.  Grows with the D2H
+    /// backlog the spill copy would queue behind; zero while the spill
+    /// engine is idle (plain OPT).
+    pub fn evict_margin(&self, d2h_backlog_secs: f64) -> u32 {
+        match self.ema_compute.get() {
+            Some(c) if c > 0.0 && d2h_backlog_secs > 0.0 => {
+                ((d2h_backlog_secs / c).floor() as u32)
+                    .min(MAX_EVICT_MARGIN)
+            }
+            _ => 0,
+        }
+    }
+}
+
+// =====================================================================
+// Headroom ledger
+// =====================================================================
+
+/// The single budgeting point both prefetchers draw GPU headroom from
+/// during one moment tick.  Demand traffic preempts by construction —
+/// it never consults the ledger.
+#[derive(Clone, Debug)]
+pub struct HeadroomLedger {
+    now: Moment,
+    gpu_cap: u64,
+    /// False reproduces the "SP" plan's flat warm-up grant.
+    use_tracer: bool,
+    /// Bytes earmarked for upcoming lookahead group gathers, per group.
+    earmarks: Vec<(usize, u64)>,
+}
+
+impl HeadroomLedger {
+    pub fn new(now: Moment, gpu_cap: u64, use_tracer: bool) -> Self {
+        HeadroomLedger { now, gpu_cap, use_tracer, earmarks: Vec::new() }
+    }
+
+    /// The tightest chunkable grant between now and `use_m` — the same
+    /// forward-looking budget both prefetchers used before the ledger
+    /// existed, now computed in exactly one place.
+    fn grant(&self, tracer: &MemTracer, use_m: Moment) -> u64 {
+        if self.use_tracer {
+            tracer.min_chunkable_gpu(self.gpu_cap, self.now, use_m)
+        } else {
+            (self.gpu_cap as f64 * WARMUP_GPU_FRAC) as u64
+        }
+    }
+
+    /// Reserve headroom for group `g`'s upcoming all-gather (adaptive
+    /// mode; idempotent per group — re-earmarking replaces).
+    pub fn earmark_group(&mut self, g: usize, bytes: u64) {
+        self.earmarks.retain(|&(og, _)| og != g);
+        self.earmarks.push((g, bytes));
+    }
+
+    /// Group `g`'s reservation was consumed (its gather issued and its
+    /// bytes now show in the device's `used()`) or abandoned.
+    pub fn consume_group(&mut self, g: usize) {
+        self.earmarks.retain(|&(og, _)| og != g);
+    }
+
+    pub fn earmarked_total(&self) -> u64 {
+        self.earmarks
+            .iter()
+            .fold(0u64, |a, &(_, b)| a.saturating_add(b))
+    }
+
+    fn earmarked_except(&self, g: usize) -> u64 {
+        self.earmarks
+            .iter()
+            .filter(|&&(og, _)| og != g)
+            .fold(0u64, |a, &(_, b)| a.saturating_add(b))
+    }
+
+    /// Byte limit for a chunk prefetch whose use moment is `use_m`: the
+    /// tightest grant minus every gather reservation.  With no earmarks
+    /// this IS `min_chunkable_gpu` — the pre-ledger budget, bit-for-bit.
+    pub fn chunk_limit(&self, tracer: &MemTracer, use_m: Moment) -> u64 {
+        self.grant(tracer, use_m).saturating_sub(self.earmarked_total())
+    }
+
+    /// Byte budget for group `g`'s lookahead gather at `use_m`: the
+    /// tightest grant minus the *other* groups' reservations (its own
+    /// earmark is exactly the headroom being spent).
+    pub fn gather_budget(
+        &self,
+        tracer: &MemTracer,
+        use_m: Moment,
+        g: usize,
+    ) -> u64 {
+        self.grant(tracer, use_m)
+            .saturating_sub(self.earmarked_except(g))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunk::ChunkId;
+    use crate::sim::Phase;
+    use crate::util::quickcheck::forall;
+
+    fn warmed(compute: f64, h2d: f64, coll: f64, ticks: u32)
+        -> LookaheadController {
+        let mut ctl = LookaheadController::new(
+            DEFAULT_ADAPTIVE_MAX_LOOKAHEAD,
+            DEFAULT_ADAPTIVE_MAX_GROUP_LOOKAHEAD,
+        );
+        let mut tl = StreamTimeline::new(true);
+        for _ in 0..ticks {
+            tl.charge(Phase::FwdBwd, compute);
+            if h2d > 0.0 {
+                tl.async_copy(Phase::CpuToGpu, h2d, CopyDir::H2D, 0.0);
+            }
+            if coll > 0.0 {
+                tl.async_collective(Phase::AllGather, coll);
+            }
+            ctl.observe(&tl);
+        }
+        ctl
+    }
+
+    #[test]
+    fn cold_controller_falls_back_to_static_default() {
+        let ctl = LookaheadController::new(16, 2);
+        let w = ctl.chunk_window(WindowInputs::default());
+        assert_eq!(w, DEFAULT_LOOKAHEAD.min(16));
+        assert_eq!(ctl.group_window(WindowInputs::default()), 1);
+        assert_eq!(ctl.evict_margin(10.0), 0);
+    }
+
+    #[test]
+    fn transfer_bound_phases_deepen_the_window() {
+        // Compute-bound: shallow (the MIN floor + ~ratio).
+        let light = warmed(1.0, 0.05, 0.0, 16);
+        let deep = warmed(1.0, 8.0, 0.0, 16);
+        let wl = light.chunk_window(WindowInputs::default());
+        let wd = deep.chunk_window(WindowInputs::default());
+        assert!(
+            wl >= MIN_CHUNK_WINDOW && wl <= MIN_CHUNK_WINDOW + 2,
+            "light window {wl}"
+        );
+        assert!(wd > wl, "transfer-bound must deepen: {wd} <= {wl}");
+        assert!(wd <= DEFAULT_ADAPTIVE_MAX_LOOKAHEAD);
+    }
+
+    #[test]
+    fn backlog_compresses_the_window() {
+        let ctl = warmed(1.0, 2.0, 0.0, 16);
+        let free = ctl.chunk_window(WindowInputs::default());
+        let jammed = ctl.chunk_window(WindowInputs {
+            h2d_backlog_secs: 5.0,
+            ..Default::default()
+        });
+        assert!(jammed < free, "backlog must shrink: {jammed} >= {free}");
+        assert!(jammed >= 1, "window floor is 1 while the pool allows");
+    }
+
+    #[test]
+    fn pool_bounds_the_window_and_a_dry_pool_closes_it() {
+        let ctl = warmed(1.0, 8.0, 0.0, 16);
+        let unbounded = ctl.chunk_window(WindowInputs::default());
+        let one = ctl.chunk_window(WindowInputs {
+            pool_free: Some(1),
+            ..Default::default()
+        });
+        assert!(one <= POOL_MOMENTS_PER_BUFFER);
+        assert!(one <= unbounded);
+        let dry = ctl.chunk_window(WindowInputs {
+            pool_free: Some(0),
+            ..Default::default()
+        });
+        assert_eq!(dry, 0, "dry pool: skip the walk entirely");
+    }
+
+    #[test]
+    fn collective_bound_phases_deepen_the_group_window() {
+        let light = warmed(1.0, 0.0, 0.1, 16);
+        let heavy = warmed(1.0, 0.0, 2.5, 16);
+        assert_eq!(light.group_window(WindowInputs::default()), 2);
+        let wg = heavy.group_window(WindowInputs::default());
+        assert_eq!(wg, DEFAULT_ADAPTIVE_MAX_GROUP_LOOKAHEAD);
+        // Backlog compression floors at 1, never 0.
+        let jammed = heavy.group_window(WindowInputs {
+            coll_backlog_secs: 100.0,
+            ..Default::default()
+        });
+        assert_eq!(jammed, 1);
+    }
+
+    #[test]
+    fn evict_margin_scales_with_backlog_and_saturates() {
+        let ctl = warmed(1.0, 1.0, 0.0, 16);
+        assert_eq!(ctl.evict_margin(0.0), 0);
+        assert_eq!(ctl.evict_margin(2.5), 2);
+        assert_eq!(ctl.evict_margin(1e9), MAX_EVICT_MARGIN);
+    }
+
+    #[test]
+    fn emas_survive_the_iteration_boundary() {
+        let mut ctl = warmed(1.0, 8.0, 0.0, 16);
+        let before = ctl.chunk_window(WindowInputs::default());
+        ctl.iteration_boundary();
+        // Rates kept: the next iteration starts warm, not at the
+        // static default.
+        assert_eq!(ctl.chunk_window(WindowInputs::default()), before);
+        // And a fresh timeline does not produce phantom negative
+        // deltas.
+        let tl = StreamTimeline::new(true);
+        ctl.observe(&tl);
+        assert_eq!(ctl.chunk_window(WindowInputs::default()), before);
+    }
+
+    /// ISSUE 4 property (a): whatever the feedback, the adaptive window
+    /// never exceeds the static cap nor the pool-sized backlog bound,
+    /// and the group window stays within [1, cap].
+    #[test]
+    fn property_windows_respect_caps_and_pool_bound() {
+        forall(
+            300,
+            |rng| {
+                (
+                    rng.range(1, 65) as u32,          // chunk cap
+                    rng.range(1, 9) as u32,           // group cap
+                    rng.range(1, 1000) as f64 / 100.0, // compute/moment
+                    rng.range(0, 5000) as f64 / 100.0, // h2d/moment
+                    rng.range(0, 5000) as f64 / 100.0, // coll/moment
+                    rng.range(0, 10000) as f64 / 10.0, // h2d backlog
+                    rng.range(0, 10000) as f64 / 10.0, // coll backlog
+                    rng.range(0, 10),                  // pool free (9=None)
+                    rng.range(1, 30) as u32,           // warm ticks
+                )
+            },
+            |&(cap, gcap, c, h, k, hb, kb, pf, ticks)| {
+                let mut ctl = LookaheadController::new(cap, gcap);
+                let mut tl = StreamTimeline::new(true);
+                for _ in 0..ticks {
+                    tl.charge(Phase::FwdBwd, c);
+                    tl.async_copy(Phase::CpuToGpu, h, CopyDir::H2D, 0.0);
+                    tl.async_collective(Phase::AllGather, k);
+                    ctl.observe(&tl);
+                }
+                let pool_free =
+                    if pf == 9 { None } else { Some(pf as u32) };
+                let inp = WindowInputs {
+                    pool_free,
+                    h2d_backlog_secs: hb,
+                    coll_backlog_secs: kb,
+                };
+                let w = ctl.chunk_window(inp);
+                if w > cap {
+                    return Err(format!("chunk window {w} > cap {cap}"));
+                }
+                if let Some(f) = pool_free {
+                    let bound = f * POOL_MOMENTS_PER_BUFFER;
+                    if w > bound {
+                        return Err(format!(
+                            "chunk window {w} > pool bound {bound}"
+                        ));
+                    }
+                }
+                let g = ctl.group_window(inp);
+                if g < 1 || g > gcap.max(1) {
+                    return Err(format!(
+                        "group window {g} outside [1, {gcap}]"
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn ledger_without_earmarks_is_the_legacy_budget() {
+        // The bit-identity anchor for adaptive-off mode: chunk_limit
+        // and gather_budget reduce to the exact pre-ledger expressions.
+        let mut t = MemTracer::new(1);
+        for nm in [300u64, 500, 700, 100] {
+            t.record_moment(nm);
+        }
+        t.record_chunk_use(ChunkId(0), 1);
+        t.finish_warmup();
+        let cap = 1000u64;
+        for now in 0..4u32 {
+            let ledger = HeadroomLedger::new(now, cap, true);
+            for use_m in now..4u32 {
+                assert_eq!(
+                    ledger.chunk_limit(&t, use_m),
+                    t.min_chunkable_gpu(cap, now, use_m)
+                );
+                assert_eq!(
+                    ledger.gather_budget(&t, use_m, 3),
+                    t.min_chunkable_gpu(cap, now, use_m)
+                );
+            }
+        }
+        // SP plan: the flat warm-up grant.
+        let sp = HeadroomLedger::new(0, cap, false);
+        let want = (cap as f64 * WARMUP_GPU_FRAC) as u64;
+        assert_eq!(sp.chunk_limit(&t, 3), want);
+        assert_eq!(sp.gather_budget(&t, 3, 0), want);
+    }
+
+    #[test]
+    fn earmarks_reserve_headroom_for_the_collective_lane() {
+        let mut t = MemTracer::new(1);
+        for _ in 0..4 {
+            t.record_moment(200);
+        }
+        t.finish_warmup();
+        let mut ledger = HeadroomLedger::new(0, 1000, true);
+        let grant = ledger.chunk_limit(&t, 3);
+        ledger.earmark_group(7, 300);
+        ledger.earmark_group(8, 100);
+        assert_eq!(ledger.earmarked_total(), 400);
+        // The chunk walk sees the grant minus every reservation...
+        assert_eq!(ledger.chunk_limit(&t, 3), grant - 400);
+        // ...each gather sees the grant minus the *other* groups'.
+        assert_eq!(ledger.gather_budget(&t, 3, 7), grant - 100);
+        assert_eq!(ledger.gather_budget(&t, 3, 8), grant - 300);
+        // Re-earmarking replaces, consuming releases.
+        ledger.earmark_group(7, 50);
+        assert_eq!(ledger.earmarked_total(), 150);
+        ledger.consume_group(8);
+        assert_eq!(ledger.chunk_limit(&t, 3), grant - 50);
+        // Over-earmarking saturates at zero, never wraps.
+        ledger.earmark_group(9, u64::MAX);
+        assert_eq!(ledger.chunk_limit(&t, 3), 0);
+    }
+}

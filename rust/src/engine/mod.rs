@@ -58,11 +58,25 @@
 //!   disables the model: the single-curve timelines of PR 1/PR 2,
 //!   bit-for-bit.
 //!
+//! * **adaptive_lookahead** (ISSUE 4 tentpole) replaces both static
+//!   windows with a feedback controller
+//!   ([`adaptive::LookaheadController`]): the chunk window is sized
+//!   each moment from the EMA compute/H2D-transfer ratio, compressed by
+//!   the live H2D backlog and bounded by the free pinned buffers; the
+//!   group window from the collective/compute ratio on the fourth
+//!   stream.  The two prefetchers stop budgeting independently against
+//!   `min_chunkable_gpu` and draw from one negotiated
+//!   [`adaptive::HeadroomLedger`] (upcoming gathers earmark their bytes
+//!   before the chunk walk; demand traffic preempts both).  The static
+//!   `lookahead`/`group_lookahead` knobs become the caps the adaptive
+//!   windows never exceed.
+//!
 //! All switches default **off**: the serial path reproduces the
 //! pre-pipeline numbers exactly; the pipelined paths are ablation cells
 //! measured by `cargo bench -- prefetch_overlap collective_overlap
-//! pinned_pool`.
+//! pinned_pool adaptive_lookahead`.
 
+pub mod adaptive;
 pub mod prefetch;
 pub mod report;
 
@@ -75,8 +89,8 @@ use crate::chunk::{ChunkId, ChunkKind, ChunkManager, ChunkRegistry,
 use crate::config::{ClusterPreset, TrainTask};
 use crate::dp::{CollectiveCost, CollectivePipeline, CommGroups,
                 InFlightGather};
-use crate::evict::{EvictionPolicy, FifoPolicy, LfuPolicy, LruPolicy,
-                   OptPolicy};
+use crate::evict::{BacklogAwareOpt, EvictionPolicy, FifoPolicy,
+                   LfuPolicy, LruPolicy, OptPolicy};
 use crate::mem::{Device, HeterogeneousSpace, PinnedLease, PinnedPool,
                  DEFAULT_PINNED_BUFFERS};
 use crate::model::activation::{non_model_bytes, BASE_OVERHEAD};
@@ -86,6 +100,9 @@ use crate::sim::{CopyDir, CopyRoute, Phase, StreamTimeline};
 use crate::tensor::TensorState;
 use crate::tracer::{MemTracer, Moment, WARMUP_GPU_FRAC};
 
+pub use adaptive::{HeadroomLedger, LookaheadController, WindowInputs,
+                   DEFAULT_ADAPTIVE_MAX_GROUP_LOOKAHEAD,
+                   DEFAULT_ADAPTIVE_MAX_LOOKAHEAD};
 pub use prefetch::{GroupPrefetcher, Prefetcher, DEFAULT_GROUP_LOOKAHEAD,
                    DEFAULT_LOOKAHEAD};
 pub use report::{EngineReport, IterBreakdown};
@@ -132,6 +149,19 @@ pub struct OptimizationPlan {
     /// curve, and demand copies preempt (always pinned, never queued
     /// on the pool).
     pub pinned_buffers: u32,
+    /// Per-direction staging sub-pool caps `(h2d, d2h)` within
+    /// `pinned_buffers` (ISSUE 4 satellite).  None = unsplit: either
+    /// direction may lease the whole pool — bit-identical to the PR 3
+    /// shared pool.  A split caps each direction's concurrent leases so
+    /// a D2H eviction burst cannot starve H2D prefetch.
+    pub pinned_split: Option<(u32, u32)>,
+    /// Size both prefetch windows at runtime from measured
+    /// compute/transfer and compute/collective ratios (ISSUE 4
+    /// tentpole) instead of the static `lookahead`/`group_lookahead`
+    /// knobs — which then act as *caps* the adaptive windows never
+    /// exceed.  Off (default): the static windows, bit-identical to
+    /// PR 3 timelines.
+    pub adaptive_lookahead: bool,
 }
 
 impl Default for OptimizationPlan {
@@ -146,6 +176,8 @@ impl Default for OptimizationPlan {
             overlap_collectives: false,
             group_lookahead: DEFAULT_GROUP_LOOKAHEAD,
             pinned_buffers: 0,
+            pinned_split: None,
+            adaptive_lookahead: false,
         }
     }
 }
@@ -198,6 +230,18 @@ impl OptimizationPlan {
         OptimizationPlan {
             pinned_buffers: DEFAULT_PINNED_BUFFERS,
             ..Self::fully_pipelined()
+        }
+    }
+
+    /// The ISSUE 4 tentpole cell: the full pinned pipeline with both
+    /// prefetch windows sized by the feedback controller.  The static
+    /// knobs become the adaptive caps (`--lookahead auto`).
+    pub fn adaptive_pipeline() -> Self {
+        OptimizationPlan {
+            adaptive_lookahead: true,
+            lookahead: DEFAULT_ADAPTIVE_MAX_LOOKAHEAD,
+            group_lookahead: DEFAULT_ADAPTIVE_MAX_GROUP_LOOKAHEAD,
+            ..Self::pinned_pipeline()
         }
     }
 }
@@ -285,6 +329,13 @@ struct RunState {
     /// (the same unit as `gather_prefetches`; the manager's
     /// `MoveStats::gather_cancels` counts reclaimed chunks).
     gather_cancelled_groups: u64,
+    /// Feedback-driven window sizing (adaptive mode only; None keeps
+    /// the static windows bit-identical to PR 3).
+    ctl: Option<LookaheadController>,
+    /// Window telemetry for the measured iteration: (sum, ticks) of
+    /// the chunk and group windows actually used each moment.
+    chunk_win: (u64, u64),
+    group_win: (u64, u64),
     /// Per-moment timeline snapshots (golden-trace tests).
     trace: Option<Vec<String>>,
 }
@@ -440,10 +491,19 @@ impl Engine {
             gather_log: Vec::new(),
             group_prefetcher: None,
             coll: CollectivePipeline::default(),
-            pool: PinnedPool::new(self.opt.pinned_buffers as usize),
+            pool: {
+                let p = PinnedPool::new(self.opt.pinned_buffers as usize);
+                match self.opt.pinned_split {
+                    Some((h, d)) => p.with_split(h as usize, d as usize),
+                    None => p,
+                }
+            },
             stream_leases: Vec::new(),
             gather_prefetches: 0,
             gather_cancelled_groups: 0,
+            ctl: None,
+            chunk_win: (0, 0),
+            group_win: (0, 0),
             trace: if traced { Some(Vec::new()) } else { None },
         };
 
@@ -490,6 +550,17 @@ impl Engine {
                 std::mem::take(&mut st.gather_log),
             ));
         }
+        // The adaptive controller sizes whatever prefetch lanes are
+        // live; with neither lane there is nothing to size and the
+        // static path stays untouched.
+        if self.opt.adaptive_lookahead
+            && (st.prefetcher.is_some() || st.group_prefetcher.is_some())
+        {
+            st.ctl = Some(LookaheadController::new(
+                self.opt.lookahead,
+                self.opt.group_lookahead,
+            ));
+        }
 
         // ---- steady state: 2 iterations, measure the last.
         let mut breakdown = IterBreakdown::default();
@@ -519,6 +590,13 @@ impl Engine {
             st.reduce_scatter_time = 0.0;
             st.gather_prefetches = 0;
             st.gather_cancelled_groups = 0;
+            st.chunk_win = (0, 0);
+            st.group_win = (0, 0);
+            if let Some(c) = st.ctl.as_mut() {
+                // The timeline restarts at zero; the learned rates
+                // carry over (iterations are structurally identical).
+                c.iteration_boundary();
+            }
             if let Some(tr) = st.trace.as_mut() {
                 tr.push(format!("== iter {it} =="));
             }
@@ -555,6 +633,17 @@ impl Engine {
             },
             gather_prefetches: st.gather_prefetches,
             gather_cancels: st.gather_cancelled_groups,
+            adaptive_lookahead: st.ctl.is_some(),
+            avg_chunk_lookahead: if st.chunk_win.1 > 0 {
+                st.chunk_win.0 as f64 / st.chunk_win.1 as f64
+            } else {
+                0.0
+            },
+            avg_group_lookahead: if st.group_win.1 > 0 {
+                st.group_win.0 as f64 / st.group_win.1 as f64
+            } else {
+                0.0
+            },
             gpu_peak: st.mgr.space.dev(Device::Gpu(0)).peak(),
             cpu_peak: st.mgr.space.dev(Device::Cpu).peak(),
             non_model_peak: st.tracer.peak_non_model(),
@@ -657,18 +746,93 @@ impl Engine {
         if !st.warmup && self.collectives_overlapped() {
             self.complete_landed_gathers(st);
         }
+        // Feedback first: the controller differences the timeline's
+        // per-stream work accumulators against the previous tick, so
+        // this tick's window sizes reflect everything charged up to the
+        // previous operator (st.ctl is only ever Some in adaptive mode,
+        // after warm-up).
+        if let Some(c) = st.ctl.as_mut() {
+            c.observe(&st.tl);
+        }
         st.mgr.space.dev_mut(Device::Gpu(0)).set_capacity(cap);
-        let RunState { mgr, tracer, policy, moment, .. } = st;
-        with_policy(policy, tracer, |pol| {
-            mgr.evict_to_fit(Device::Gpu(0), pol, *moment)
-        })?;
+        // Cap-shrink eviction.  In adaptive mode with the OPT policy a
+        // deep D2H backlog turns on the overlap-aware tie-break: a
+        // near-equal victim that can be *dropped* (all tensors FREE)
+        // beats one whose spill would queue behind the backlog.  Margin
+        // 0 (static mode, idle engine, non-OPT policy) is plain OPT.
+        let evict_margin = match (&st.ctl, &st.policy) {
+            (Some(c), PolicySel::Opt) => {
+                c.evict_margin(st.tl.copy_backlog(CopyDir::D2H))
+            }
+            _ => 0,
+        };
+        if evict_margin > 0 {
+            let droppable: HashSet<ChunkId> = st
+                .mgr
+                .reg
+                .chunks
+                .iter()
+                .filter(|c| c.device == Some(Device::Gpu(0)))
+                .map(|c| c.id)
+                .filter(|&id| st.mgr.all_free(id))
+                .collect();
+            let RunState { mgr, tracer, moment, .. } = st;
+            let mut pol = BacklogAwareOpt {
+                tracer,
+                droppable,
+                margin: evict_margin,
+            };
+            mgr.evict_to_fit(Device::Gpu(0), &mut pol, *moment)?;
+        } else {
+            let RunState { mgr, tracer, policy, moment, .. } = st;
+            with_policy(policy, tracer, |pol| {
+                mgr.evict_to_fit(Device::Gpu(0), pol, *moment)
+            })?;
+        }
         self.charge_moves(st)?;
+        // Window sizing + the negotiated headroom ledger.  Static mode:
+        // the configured knobs and a ledger with no earmarks — whose
+        // arithmetic is exactly the PR 3 budgets, bit-for-bit.
+        let inputs = WindowInputs {
+            pool_free: if st.pool.enabled() {
+                Some(st.pool.available_at(st.tl.now(), CopyDir::H2D)
+                     as u32)
+            } else {
+                None
+            },
+            h2d_backlog_secs: st.tl.copy_backlog(CopyDir::H2D),
+            coll_backlog_secs: st.tl.collective_backlog(),
+        };
+        let chunk_la = match &st.ctl {
+            Some(c) => c.chunk_window(inputs),
+            None => self.opt.lookahead,
+        };
+        let group_la = match &st.ctl {
+            Some(c) => c.group_window(inputs),
+            None => self.opt.group_lookahead,
+        };
+        let mut ledger = HeadroomLedger::new(
+            st.moment,
+            self.cluster.gpu_mem,
+            self.opt.use_tracer,
+        );
+        if st.ctl.is_some() && st.group_prefetcher.is_some() {
+            // Negotiation: reserve the upcoming all-gathers' bytes
+            // before the chunk walk starts, so a deep chunk window
+            // cannot starve the collective lane of headroom.  (Demand
+            // traffic preempts both — it never consults the ledger.)
+            self.earmark_upcoming_gathers(st, group_la, &mut ledger);
+        }
         if !st.warmup && st.prefetcher.is_some() {
-            self.issue_prefetches(st)?;
+            st.chunk_win.0 += chunk_la as u64;
+            st.chunk_win.1 += 1;
+            self.issue_prefetches(st, chunk_la, &ledger)?;
             self.charge_moves(st)?;
         }
         if !st.warmup && st.group_prefetcher.is_some() {
-            self.issue_group_gathers(st)?;
+            st.group_win.0 += group_la as u64;
+            st.group_win.1 += 1;
+            self.issue_group_gathers(st, group_la, &mut ledger)?;
             self.charge_moves(st)?;
         }
         st.moment += 1;
@@ -694,15 +858,57 @@ impl Engine {
         }
     }
 
-    /// Issue all-gathers for the next `group_lookahead` groups of the
-    /// warm-up gather schedule onto the collective stream, under the
-    /// same forward-looking headroom budget as the chunk prefetcher.
-    /// Issue order strictly follows the schedule: if the next group
-    /// cannot be staged (no absent members yet, or no headroom), later
-    /// groups must not jump the queue — a demand gather must never find
-    /// a less-urgent gather ahead of it on the stream.
-    fn issue_group_gathers(&self, st: &mut RunState) -> Result<()> {
-        let k = self.opt.group_lookahead as usize;
+    /// Record the byte needs of the next `k` scheduled group gathers as
+    /// ledger earmarks (adaptive mode).  Mirrors the walk of
+    /// [`Engine::issue_group_gathers`] up to (not including) its budget
+    /// and pool checks, so exactly the groups that *could* issue this
+    /// tick or soon after hold reservations against the chunk walk.
+    fn earmark_upcoming_gathers(
+        &self,
+        st: &RunState,
+        k: u32,
+        ledger: &mut HeadroomLedger,
+    ) {
+        let upcoming = match &st.group_prefetcher {
+            Some(gp) => gp.upcoming(st.moment, k as usize),
+            None => return,
+        };
+        let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
+        for (_, g) in upcoming {
+            if st.coll.gather_issued(g) {
+                continue; // already staged; its bytes show in used()
+            }
+            if st.gathered.contains(&g) {
+                break; // schedule-order FIFO, as in the issue walk
+            }
+            let absent = st
+                .groups
+                .members(g)
+                .map(|p| st.fp16_list[p])
+                .filter(|&c| st.mgr.chunk(c).device.is_none())
+                .count() as u64;
+            if absent == 0 {
+                break;
+            }
+            ledger.earmark_group(g, absent * chunk_bytes);
+        }
+    }
+
+    /// Issue all-gathers for the next `k` groups of the warm-up gather
+    /// schedule onto the collective stream, drawing headroom from the
+    /// negotiated ledger (statically `k = --group-lookahead`;
+    /// adaptively the controller's collective/compute window).  Issue
+    /// order strictly follows the schedule: if the next group cannot be
+    /// staged (no absent members yet, or no headroom), later groups
+    /// must not jump the queue — a demand gather must never find a
+    /// less-urgent gather ahead of it on the stream.
+    fn issue_group_gathers(
+        &self,
+        st: &mut RunState,
+        k: u32,
+        ledger: &mut HeadroomLedger,
+    ) -> Result<()> {
+        let k = k as usize;
         if k == 0 {
             return Ok(());
         }
@@ -711,7 +917,6 @@ impl Engine {
             Some(gp) => gp.upcoming(now, k),
             None => return Ok(()),
         };
-        let gpu_cap = self.cluster.gpu_mem;
         let cc = CollectiveCost::new(self.cluster.net.nvlink, self.nproc());
         for (use_m, g) in upcoming {
             if st.coll.gather_issued(g) {
@@ -731,14 +936,12 @@ impl Engine {
             }
             let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
             let new_bytes = absent.len() as u64 * chunk_bytes;
-            // Headroom budget: the staged group must fit under the
-            // tightest chunkable cap between now and its use moment, so
-            // staging never triggers the evictions it is hiding from.
-            let budget = if self.opt.use_tracer {
-                st.tracer.min_chunkable_gpu(gpu_cap, now, use_m)
-            } else {
-                (gpu_cap as f64 * WARMUP_GPU_FRAC) as u64
-            };
+            // Headroom budget from the ledger: the tightest chunkable
+            // cap between now and the use moment, minus the *other*
+            // groups' reservations (this group's own earmark is the
+            // headroom being spent), so staging never triggers the
+            // evictions it is hiding from.
+            let budget = ledger.gather_budget(&st.tracer, use_m, g);
             let gpu = st.mgr.space.dev(Device::Gpu(0));
             if gpu.used() + new_bytes > budget
                 || !gpu.can_fit(new_bytes)
@@ -750,7 +953,7 @@ impl Engine {
             // every buffer is leased out, the gather waits its turn
             // (FIFO: later groups must not jump the queue either).
             let lease = if st.pool.enabled() {
-                match st.pool.try_acquire(st.tl.now()) {
+                match st.pool.try_acquire(st.tl.now(), CopyDir::H2D) {
                     Some(l) => Some(l),
                     None => {
                         st.mgr.stats.pinned_waits += 1;
@@ -785,26 +988,36 @@ impl Engine {
                 },
             );
             st.gather_prefetches += 1;
+            // The reservation is spent: the staged bytes now show in
+            // the device's used(), so keeping the earmark would charge
+            // the remaining groups twice.
+            ledger.consume_group(g);
         }
         Ok(())
     }
 
     /// Walk the lookahead window and stage CPU-resident chunks with an
-    /// upcoming GPU use onto the H2D stream (tentpole step 2).
-    fn issue_prefetches(&self, st: &mut RunState) -> Result<()> {
+    /// upcoming GPU use onto the H2D stream (statically `lookahead =
+    /// --lookahead`; adaptively the controller's ratio-sized,
+    /// backlog-compressed, pool-bounded window).
+    fn issue_prefetches(
+        &self,
+        st: &mut RunState,
+        lookahead: u32,
+        ledger: &HeadroomLedger,
+    ) -> Result<()> {
         let now = st.moment;
         let window = match &st.prefetcher {
-            Some(pf) => pf.window(now, self.opt.lookahead),
+            Some(pf) => pf.window(now, lookahead),
             None => return Ok(()),
         };
-        let gpu_cap = self.cluster.gpu_mem;
         // Staging-capacity budget (pool enabled only): each prefetch
         // issued this tick will lease one pinned buffer when its copy is
-        // charged; once the free buffers are spoken for, the rest of the
-        // window waits for the next moment — the effective lookahead is
-        // throttled to the pool-sized backlog.
+        // charged; once the free H2D buffers are spoken for, the rest of
+        // the window waits for the next moment — the effective lookahead
+        // is throttled to the pool-sized backlog.
         let mut pool_budget = if st.pool.enabled() {
-            Some(st.pool.available_at(st.tl.now()))
+            Some(st.pool.available_at(st.tl.now(), CopyDir::H2D))
         } else {
             None
         };
@@ -816,11 +1029,12 @@ impl Engine {
                 st.mgr.stats.pinned_waits += 1;
                 break; // no staging buffer free; retry next moment
             }
-            // Headroom budget: staying under the tightest chunkable cap
-            // between now and the use moment guarantees the staged bytes
-            // never cause a cap-shrink eviction of their own.
-            let limit =
-                st.tracer.min_chunkable_gpu(gpu_cap, now, use_moment);
+            // Headroom budget from the ledger: staying under the
+            // tightest chunkable cap between now and the use moment
+            // (minus any bytes earmarked for the collective lane)
+            // guarantees the staged bytes never cause a cap-shrink
+            // eviction of their own nor starve an imminent all-gather.
+            let limit = ledger.chunk_limit(&st.tracer, use_moment);
             let RunState { mgr, tracer, policy, .. } = st;
             let issued = with_policy(policy, tracer, |pol| {
                 mgr.prefetch_to(c, Device::Gpu(0), limit, pol, now, &|v| {
@@ -868,10 +1082,12 @@ impl Engine {
         if st.mgr.chunk(c).device != Some(Device::Gpu(0)) {
             return Ok(()); // already home (or released)
         }
-        // The D2H staging leg competes for the same pinned pool: with
-        // no buffer free, the grad chunk waits and rides home on the
-        // demand path instead.
-        if st.pool.enabled() && st.pool.available_at(st.tl.now()) == 0 {
+        // The D2H staging leg competes for the pinned pool's D2H
+        // sub-pool: with no buffer free, the grad chunk waits and rides
+        // home on the demand path instead.
+        if st.pool.enabled()
+            && st.pool.available_at(st.tl.now(), CopyDir::D2H) == 0
+        {
             st.mgr.stats.pinned_waits += 1;
             return Ok(());
         }
@@ -1274,14 +1490,17 @@ impl Engine {
     }
 
     /// Pick the host-memory path for an async (non-demand) PCIe copy of
-    /// `bytes`: pinned while a staging buffer is held, pageable when the
-    /// pool is exhausted (pressure-driven copies cannot wait).  With the
-    /// pool disabled everything is pinned on the single curve — the
-    /// pre-pool behaviour bit-for-bit.  The caller sets the returned
-    /// lease's release time once the copy's completion time is known.
+    /// `bytes` in direction `dir`: pinned while a staging buffer from
+    /// `dir`'s sub-pool is held, pageable when the pool (total or
+    /// sub-pool) is exhausted (pressure-driven copies cannot wait).
+    /// With the pool disabled everything is pinned on the single curve
+    /// — the pre-pool behaviour bit-for-bit.  The caller sets the
+    /// returned lease's release time once the copy's completion time is
+    /// known.
     fn route_async_copy(
         &self,
         st: &mut RunState,
+        dir: CopyDir,
         bytes: u64,
     ) -> (f64, CopyRoute, Option<PinnedLease>) {
         if !st.pool.enabled() {
@@ -1291,7 +1510,7 @@ impl Engine {
                 None,
             );
         }
-        match st.pool.try_acquire(st.tl.now()) {
+        match st.pool.try_acquire(st.tl.now(), dir) {
             Some(lease) => (
                 self.cluster.net.pcie.transfer_time(bytes),
                 CopyRoute::Pinned,
@@ -1319,7 +1538,7 @@ impl Engine {
         ready: f64,
         bytes: u64,
     ) -> (f64, f64, CopyRoute, Option<PinnedLease>) {
-        let (t, route, lease) = self.route_async_copy(st, bytes);
+        let (t, route, lease) = self.route_async_copy(st, dir, bytes);
         let done = st.tl.async_copy_on(phase, t, dir, ready, route);
         if let Some(l) = lease {
             st.pool.set_release(l, done);

@@ -36,11 +36,14 @@ use crate::tracer::{MemTracer, Moment};
 /// Default lookahead window, in moments (ops).  Seven ops per
 /// transformer layer means ~4-5 layers of headstart — deep enough to
 /// keep the H2D stream busy across multi-chunk layers, shallow enough
-/// that staged chunks do not crowd out the working set.
+/// that staged chunks do not crowd out the working set.  Also the
+/// adaptive controller's cold-start window before its first rate
+/// estimates land (see [`super::adaptive::LookaheadController`]).
 pub const DEFAULT_LOOKAHEAD: u32 = 32;
 
 /// Default group-gather lookahead, in communication groups: while group
 /// g computes, the all-gather for group g+1 rides the collective stream.
+/// The adaptive controller's cold-start group window, too.
 pub const DEFAULT_GROUP_LOOKAHEAD: u32 = 1;
 
 /// Per-moment GPU work list inverted from the tracer's chunk moment
@@ -65,6 +68,13 @@ impl Prefetcher {
             }
         }
         Prefetcher { uses_at }
+    }
+
+    /// Moments in the recorded iteration.  [`Prefetcher::window`]
+    /// already clamps its walk to this bound, so an over-deep window
+    /// (static or adaptive) costs nothing past the iteration end.
+    pub fn n_moments(&self) -> u32 {
+        self.uses_at.len() as u32
     }
 
     /// Chunks with a GPU-targeted use at moment `m` (empty past the end
@@ -173,6 +183,7 @@ mod tests {
     fn window_is_schedule_ordered_and_clamped() {
         let t = tracer_with(&[(0, &[1, 4]), (1, &[2])], 6);
         let pf = Prefetcher::from_tracer(&t, 2);
+        assert_eq!(pf.n_moments(), 6);
         assert_eq!(
             pf.window(1, 4),
             vec![(1, ChunkId(0)), (2, ChunkId(1)), (4, ChunkId(0))]

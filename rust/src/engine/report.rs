@@ -114,6 +114,14 @@ pub struct EngineReport {
     pub gather_prefetches: u64,
     /// Lookahead gathers reclaimed under memory pressure.
     pub gather_cancels: u64,
+    /// The feedback controller sized the prefetch windows (ISSUE 4).
+    pub adaptive_lookahead: bool,
+    /// Mean per-moment chunk window of the measured iteration (the
+    /// static `--lookahead` when `adaptive_lookahead` is false; 0 when
+    /// the chunk prefetch lane was off).
+    pub avg_chunk_lookahead: f64,
+    /// Mean per-moment group-gather window (same conventions).
+    pub avg_group_lookahead: f64,
     pub gpu_peak: u64,
     pub cpu_peak: u64,
     pub non_model_peak: u64,
@@ -170,6 +178,13 @@ impl EngineReport {
                  curve; {} prefetch issues throttled by the pool\n",
                 human_time(self.breakdown.pageable_copy_s),
                 self.move_stats.pinned_waits,
+            ));
+        }
+        if self.adaptive_lookahead {
+            out.push_str(&format!(
+                "adaptive lookahead: avg chunk window {:.1} moments, \
+                 avg group window {:.1}\n",
+                self.avg_chunk_lookahead, self.avg_group_lookahead,
             ));
         }
         if self.breakdown.overlapped_collective_s > 0.0 {

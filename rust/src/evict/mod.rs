@@ -82,6 +82,78 @@ impl<'a> EvictionPolicy for OptPolicy<'a> {
     }
 }
 
+// ------------------------------------------- OPT + backlog tie-break
+
+/// Belady's OPT with an *overlap-aware tie-break* (ISSUE 4 satellite):
+/// spilling a victim costs a D2H copy that queues behind whatever the
+/// copy engine already has in flight, while a victim whose tensors are
+/// all FREE is simply *dropped* — no copy at all.  When the D2H backlog
+/// is deep, a droppable candidate whose next use is within `margin`
+/// moments of the OPT choice's is therefore the better victim: we give
+/// up at most `margin` moments of reuse distance and save a spill that
+/// would have queued behind the backlog (and a re-fetch later).
+///
+/// `margin == 0` (or no droppable candidate near the top) reproduces
+/// plain [`OptPolicy`] decision-for-decision — the engine derives the
+/// margin from the measured backlog and only passes a nonzero value in
+/// adaptive mode, so static-mode behaviour is bit-identical.
+///
+/// The full ROADMAP "overlap-aware eviction" item (scoring *spill cost
+/// on the clock* for every candidate, both directions) stays open; this
+/// is the tie-break half.
+pub struct BacklogAwareOpt<'a> {
+    pub tracer: &'a MemTracer,
+    /// Candidates evictable without a copy (all tensors FREE — the
+    /// manager drops these instead of spilling them).
+    pub droppable: std::collections::HashSet<ChunkId>,
+    /// Near-equality window, in moments (0 = plain OPT).
+    pub margin: Moment,
+}
+
+impl<'a> BacklogAwareOpt<'a> {
+    fn key(&self, c: ChunkId, now: Moment) -> u64 {
+        match self.tracer.next_use(c, now) {
+            None => u64::MAX,
+            Some(m) => m as u64,
+        }
+    }
+}
+
+impl<'a> EvictionPolicy for BacklogAwareOpt<'a> {
+    fn pick(
+        &mut self,
+        candidates: &[ChunkId],
+        chunks: &[Chunk],
+        now: Moment,
+    ) -> Option<ChunkId> {
+        let mut opt = OptPolicy { tracer: self.tracer };
+        let best = opt.pick(candidates, chunks, now)?;
+        if self.margin == 0 || self.droppable.contains(&best) {
+            return Some(best);
+        }
+        let best_key = self.key(best, now);
+        // Among droppable candidates within `margin` of the OPT pick,
+        // keep the farthest next use (same max_by_key tie rules as OPT,
+        // so the choice stays deterministic).
+        candidates
+            .iter()
+            .copied()
+            .filter(|&c| {
+                self.droppable.contains(&c)
+                    && self
+                        .key(c, now)
+                        .saturating_add(self.margin as u64)
+                        >= best_key
+            })
+            .max_by_key(|&c| self.key(c, now))
+            .or(Some(best))
+    }
+
+    fn name(&self) -> &'static str {
+        "opt+backlog"
+    }
+}
+
 // --------------------------------------------------------------- FIFO
 
 /// Evict in chunk-list order (also the paper's warm-up fallback).
@@ -232,6 +304,51 @@ mod tests {
         }
         p.on_access(ChunkId(1), 0);
         assert_eq!(p.pick(&ids(&[0, 1]), &[], 1), Some(ChunkId(1)));
+    }
+
+    #[test]
+    fn backlog_tiebreak_prefers_near_equal_droppable_victims() {
+        // ISSUE 4 satellite regression: chunk 0's next use (20) is
+        // farthest, so plain OPT spills it — a D2H copy that queues
+        // behind the backlog.  Chunk 1 (next use 18) is all-FREE, i.e.
+        // droppable for free.  With a 2-moment margin the tie-break
+        // takes the free drop; with margin 0 (idle engine) behaviour is
+        // exactly OPT.
+        let mut t = MemTracer::new(3);
+        t.record_chunk_use(ChunkId(0), 20);
+        t.record_chunk_use(ChunkId(1), 18);
+        t.record_chunk_use(ChunkId(2), 5);
+        t.finish_warmup();
+        let droppable: std::collections::HashSet<ChunkId> =
+            [ChunkId(1)].into_iter().collect();
+        let cands = ids(&[0, 1, 2]);
+        let mut idle = BacklogAwareOpt {
+            tracer: &t,
+            droppable: droppable.clone(),
+            margin: 0,
+        };
+        assert_eq!(idle.pick(&cands, &[], 0), Some(ChunkId(0)),
+                   "margin 0 must be plain OPT");
+        let mut jammed = BacklogAwareOpt {
+            tracer: &t,
+            droppable: droppable.clone(),
+            margin: 2,
+        };
+        assert_eq!(jammed.pick(&cands, &[], 0), Some(ChunkId(1)),
+                   "near-equal droppable must win under backlog");
+        // Out of margin (1 < 20-18): OPT's choice stands.
+        let mut narrow = BacklogAwareOpt {
+            tracer: &t,
+            droppable,
+            margin: 1,
+        };
+        assert_eq!(narrow.pick(&cands, &[], 0), Some(ChunkId(0)));
+        // A droppable OPT winner needs no tie-break at all.
+        let all: std::collections::HashSet<ChunkId> =
+            cands.iter().copied().collect();
+        let mut free_best =
+            BacklogAwareOpt { tracer: &t, droppable: all, margin: 8 };
+        assert_eq!(free_best.pick(&cands, &[], 0), Some(ChunkId(0)));
     }
 
     #[test]

@@ -72,7 +72,9 @@ impl Args {
     /// breakdown (`--pipeline on` = prefetch+overlap, exactly as in
     /// PR 1; individual flags override).  `--overlap-collectives on`
     /// pulls `--overlap` on with it — the collective stream rides the
-    /// overlap timeline.
+    /// overlap timeline.  `--lookahead auto` (or `--adaptive-lookahead
+    /// on`) sizes both windows from runtime feedback; a numeric
+    /// `--lookahead`/`--group-lookahead` then acts as the adaptive cap.
     fn opt_plan(&self) -> Result<OptimizationPlan> {
         let pipeline = self.get_bool("pipeline", false)?;
         let oc = self.get_bool("overlap-collectives", false)?;
@@ -83,21 +85,71 @@ impl Args {
                  (drop --overlap off)"
             );
         }
+        let la_raw = self.flags.get("lookahead").cloned();
+        let la_auto = la_raw.as_deref() == Some("auto");
+        let adaptive = self.get_bool("adaptive-lookahead", la_auto)?;
+        if la_auto && !adaptive {
+            bail!(
+                "--lookahead auto contradicts --adaptive-lookahead off"
+            );
+        }
+        let prefetch = self.get_bool("prefetch", pipeline)?;
+        if adaptive && !prefetch && !oc {
+            bail!(
+                "--adaptive-lookahead sizes the prefetch windows; turn \
+                 a lane on first (--pipeline on, --prefetch on or \
+                 --overlap-collectives on)"
+            );
+        }
+        let lookahead = match la_raw.as_deref() {
+            Some("auto") | None if adaptive => {
+                patrickstar::engine::DEFAULT_ADAPTIVE_MAX_LOOKAHEAD
+            }
+            None => patrickstar::engine::DEFAULT_LOOKAHEAD,
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow!("--lookahead: expected a number \
+                                      or 'auto', got '{v}'"))?,
+        };
+        let group_default = if adaptive {
+            patrickstar::engine::DEFAULT_ADAPTIVE_MAX_GROUP_LOOKAHEAD
+        } else {
+            patrickstar::engine::DEFAULT_GROUP_LOOKAHEAD
+        };
+        // 0 = pool disabled: single-curve charging, bit-identical
+        // to the pre-pool timelines.
+        let pinned_buffers = self.get_u64("pinned-buffers", 0)? as u32;
+        let pinned_split = match self.flags.get("pinned-split") {
+            None => None,
+            Some(v) => {
+                if pinned_buffers == 0 {
+                    bail!(
+                        "--pinned-split needs a pool: set \
+                         --pinned-buffers N"
+                    );
+                }
+                let (h, d) = v.split_once(':').ok_or_else(|| {
+                    anyhow!("--pinned-split: expected h2d:d2h, got '{v}'")
+                })?;
+                let parse = |s: &str| -> Result<u32> {
+                    s.parse().map_err(|_| {
+                        anyhow!("--pinned-split: bad number '{s}'")
+                    })
+                };
+                Some((parse(h)?, parse(d)?))
+            }
+        };
         Ok(OptimizationPlan {
-            prefetch: self.get_bool("prefetch", pipeline)?,
+            prefetch,
             overlap,
-            lookahead: self.get_u64(
-                "lookahead",
-                patrickstar::engine::DEFAULT_LOOKAHEAD as u64,
-            )? as u32,
+            lookahead,
             overlap_collectives: oc,
-            group_lookahead: self.get_u64(
-                "group-lookahead",
-                patrickstar::engine::DEFAULT_GROUP_LOOKAHEAD as u64,
-            )? as u32,
-            // 0 = pool disabled: single-curve charging, bit-identical
-            // to the pre-pool timelines.
-            pinned_buffers: self.get_u64("pinned-buffers", 0)? as u32,
+            group_lookahead: self
+                .get_u64("group-lookahead", group_default as u64)?
+                as u32,
+            pinned_buffers,
+            pinned_split,
+            adaptive_lookahead: adaptive,
             ..Default::default()
         })
     }
@@ -146,13 +198,15 @@ USAGE:
 pytorch-ddp
                        [--cluster yard] [--model 10B] [--gpus 8] [--batch 16]
                        [--pipeline on] [--prefetch on|off] [--overlap on|off]
-                       [--lookahead 32] [--overlap-collectives on|off]
+                       [--lookahead 32|auto] [--overlap-collectives on|off]
                        [--group-lookahead 1] [--pinned-buffers 0]
+                       [--pinned-split h2d:d2h] [--adaptive-lookahead on|off]
   patrickstar breakdown [--cluster superpod] [--model 10B] [--gpus 8] \
 [--batch 16]
              (rows: Base, Base+PF prefetch+overlap pipeline, Base+PF+CO
               with the collective stream, Base+PF+CO+PIN with a finite
-              pinned staging pool, OSC, SP)
+              pinned staging pool, Base+PF+CO+PIN+AD with feedback-sized
+              prefetch windows, OSC, SP)
   patrickstar scale [--cluster yard] [--gpus 8]
   patrickstar train [--artifacts artifacts] [--steps 50] [--gpu-mb 6] \
 [--lr 0.001] [--log-every 10] [--prefetch-ahead 0]
@@ -218,10 +272,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             || opt.overlap
             || opt.overlap_collectives
             || opt.pinned_buffers > 0
+            || opt.adaptive_lookahead
         {
             bail!(
                 "--prefetch/--overlap/--overlap-collectives/\
-                 --pinned-buffers only apply to system patrickstar"
+                 --pinned-buffers/--adaptive-lookahead only apply to \
+                 system patrickstar"
             );
         }
         run_system(system, cluster, task)?
@@ -241,6 +297,7 @@ fn cmd_breakdown(args: &Args) -> Result<()> {
         ("Base+PF", OptimizationPlan::pipelined()),
         ("Base+PF+CO", OptimizationPlan::fully_pipelined()),
         ("Base+PF+CO+PIN", OptimizationPlan::pinned_pipeline()),
+        ("Base+PF+CO+PIN+AD", OptimizationPlan::adaptive_pipeline()),
         ("OSC", OptimizationPlan::os_on_cpu()),
         ("SP", OptimizationPlan::static_partition()),
     ] {

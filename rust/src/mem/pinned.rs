@@ -35,6 +35,19 @@
 //! A pool of capacity 0 is *disabled*: the engine skips all pool logic
 //! and every transfer charges the single pinned curve, reproducing the
 //! pre-pool numbers bit-for-bit.
+//!
+//! # Per-direction sub-pools (ISSUE 4 satellite)
+//!
+//! Real runtimes keep *separate* H2D and D2H staging rings (and NCCL
+//! its own registered buffers), so a burst of D2H evictions must not
+//! be able to lease every buffer out from under the H2D prefetcher.
+//! The pool therefore carries optional per-direction caps on top of
+//! the shared total: a lease is granted only while both the total and
+//! the requested direction's cap have room.  The default is *unsplit*
+//! (each direction may use the whole pool) — bit-identical to the
+//! single shared pool this generalizes.
+
+use crate::sim::CopyDir;
 
 /// Default pool size when the pinned pipeline is switched on wholesale
 /// (`OptimizationPlan::pinned_pipeline`, the CLI breakdown row): enough
@@ -46,20 +59,55 @@ pub const DEFAULT_PINNED_BUFFERS: u32 = 4;
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct PinnedLease(u64);
 
-/// Fixed-size pool of chunk-sized pinned staging buffers.
+#[derive(Clone, Copy, Debug)]
+struct Lease {
+    id: u64,
+    /// Release time on the simulated clock.  A fresh lease releases at
+    /// +inf until the caller learns the copy's completion time and
+    /// calls [`PinnedPool::set_release`].
+    release: f64,
+    dir: CopyDir,
+}
+
+/// Fixed-size pool of chunk-sized pinned staging buffers with optional
+/// per-direction sub-pool caps.
 #[derive(Clone, Debug, Default)]
 pub struct PinnedPool {
     capacity: usize,
+    /// Per-direction lease caps (each `<= capacity`; both default to
+    /// `capacity`, i.e. unsplit).
+    h2d_cap: usize,
+    d2h_cap: usize,
     next_id: u64,
-    /// Outstanding leases: (id, release time on the simulated clock).
-    /// A fresh lease releases at +inf until the caller learns the
-    /// copy's completion time and calls [`PinnedPool::set_release`].
-    leases: Vec<(u64, f64)>,
+    /// Outstanding leases, pruned lazily as they expire.
+    leases: Vec<Lease>,
 }
 
 impl PinnedPool {
     pub fn new(capacity: usize) -> Self {
-        PinnedPool { capacity, next_id: 0, leases: Vec::new() }
+        PinnedPool {
+            capacity,
+            h2d_cap: capacity,
+            d2h_cap: capacity,
+            next_id: 0,
+            leases: Vec::new(),
+        }
+    }
+
+    /// Cap the per-direction sub-pools (values clamp to the total).
+    /// `capacity:capacity` is the explicit spelling of the unsplit
+    /// default and behaves identically to it.
+    pub fn with_split(mut self, h2d_cap: usize, d2h_cap: usize) -> Self {
+        self.h2d_cap = h2d_cap.min(self.capacity);
+        self.d2h_cap = d2h_cap.min(self.capacity);
+        self
+    }
+
+    fn dir_cap(&self, dir: CopyDir) -> usize {
+        match dir {
+            CopyDir::H2D => self.h2d_cap,
+            CopyDir::D2H => self.d2h_cap,
+        }
     }
 
     /// The disabled pool: no buffers, no modeling.
@@ -77,30 +125,48 @@ impl PinnedPool {
         self.capacity
     }
 
-    /// Leases still held at simulated time `now`.
+    /// Leases still held at simulated time `now` (both directions).
     pub fn in_use_at(&self, now: f64) -> usize {
-        self.leases.iter().filter(|&&(_, rel)| rel > now).count()
+        self.leases.iter().filter(|l| l.release > now).count()
     }
 
-    /// Buffers free at simulated time `now`.
-    pub fn available_at(&self, now: f64) -> usize {
-        self.capacity.saturating_sub(self.in_use_at(now))
+    /// Leases held at `now` by copies in one direction.
+    pub fn dir_in_use_at(&self, now: f64, dir: CopyDir) -> usize {
+        self.leases
+            .iter()
+            .filter(|l| l.dir == dir && l.release > now)
+            .count()
     }
 
-    /// Acquire a buffer at simulated time `now`, releasing "never" until
-    /// [`PinnedPool::set_release`] pins down the copy's completion time.
-    /// Returns None when every buffer is held at `now` — the caller
-    /// either waits (prefetch) or downgrades to the pageable curve
+    /// Buffers grantable to a `dir` copy at simulated time `now`: both
+    /// the shared total and the direction's sub-pool cap must have room.
+    pub fn available_at(&self, now: f64, dir: CopyDir) -> usize {
+        let total_free = self.capacity.saturating_sub(self.in_use_at(now));
+        let dir_free = self
+            .dir_cap(dir)
+            .saturating_sub(self.dir_in_use_at(now, dir));
+        total_free.min(dir_free)
+    }
+
+    /// Acquire a buffer for a `dir` copy at simulated time `now`,
+    /// releasing "never" until [`PinnedPool::set_release`] pins down the
+    /// copy's completion time.  Returns None when the total pool or the
+    /// direction's sub-pool is exhausted at `now` — the caller either
+    /// waits (prefetch) or downgrades to the pageable curve
     /// (eviction/offload).
-    pub fn try_acquire(&mut self, now: f64) -> Option<PinnedLease> {
+    pub fn try_acquire(&mut self, now: f64, dir: CopyDir)
+        -> Option<PinnedLease> {
         // Lazy prune keeps the scan short across a long run.
-        self.leases.retain(|&(_, rel)| rel > now);
-        if self.leases.len() >= self.capacity {
+        self.leases.retain(|l| l.release > now);
+        if self.leases.len() >= self.capacity
+            || self.leases.iter().filter(|l| l.dir == dir).count()
+                >= self.dir_cap(dir)
+        {
             return None;
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.leases.push((id, f64::INFINITY));
+        self.leases.push(Lease { id, release: f64::INFINITY, dir });
         Some(PinnedLease(id))
     }
 
@@ -108,15 +174,15 @@ impl PinnedPool {
     /// Also used to *shift* a release when FIFO queue compression moves
     /// the copy's completion time.
     pub fn set_release(&mut self, lease: PinnedLease, t: f64) {
-        if let Some(e) = self.leases.iter_mut().find(|e| e.0 == lease.0) {
-            e.1 = t;
+        if let Some(e) = self.leases.iter_mut().find(|e| e.id == lease.0) {
+            e.release = t;
         }
     }
 
     /// Release `lease` immediately (the copy was cancelled before the
     /// wire).  Unknown or already-expired leases are a no-op.
     pub fn release(&mut self, lease: PinnedLease) {
-        self.leases.retain(|&(id, _)| id != lease.0);
+        self.leases.retain(|l| l.id != lease.0);
     }
 
     /// Forget every lease (iteration boundary: the timeline restarts at
@@ -130,44 +196,47 @@ impl PinnedPool {
 mod tests {
     use super::*;
 
+    const H2D: CopyDir = CopyDir::H2D;
+    const D2H: CopyDir = CopyDir::D2H;
+
     #[test]
     fn acquire_release_roundtrip() {
         let mut p = PinnedPool::new(2);
         assert!(p.enabled());
-        assert_eq!(p.available_at(0.0), 2);
-        let a = p.try_acquire(0.0).unwrap();
-        let b = p.try_acquire(0.0).unwrap();
+        assert_eq!(p.available_at(0.0, H2D), 2);
+        let a = p.try_acquire(0.0, H2D).unwrap();
+        let b = p.try_acquire(0.0, D2H).unwrap();
         assert_ne!(a, b);
-        assert_eq!(p.available_at(0.0), 0);
-        assert!(p.try_acquire(0.0).is_none(), "pool exhausted");
+        assert_eq!(p.available_at(0.0, H2D), 0);
+        assert!(p.try_acquire(0.0, H2D).is_none(), "pool exhausted");
         p.release(a);
-        assert_eq!(p.available_at(0.0), 1);
-        assert!(p.try_acquire(0.0).is_some());
+        assert_eq!(p.available_at(0.0, H2D), 1);
+        assert!(p.try_acquire(0.0, H2D).is_some());
     }
 
     #[test]
     fn leases_expire_at_release_time() {
         let mut p = PinnedPool::new(1);
-        let a = p.try_acquire(0.0).unwrap();
+        let a = p.try_acquire(0.0, H2D).unwrap();
         // Unset release: held forever.
-        assert_eq!(p.available_at(1e12), 0);
+        assert_eq!(p.available_at(1e12, H2D), 0);
         p.set_release(a, 2.0);
-        assert_eq!(p.available_at(1.9), 0, "still on the wire");
-        assert_eq!(p.available_at(2.0), 1, "freed exactly at done");
+        assert_eq!(p.available_at(1.9, H2D), 0, "still on the wire");
+        assert_eq!(p.available_at(2.0, H2D), 1, "freed exactly at done");
         // A later acquire at t=3 succeeds and prunes the expired lease.
-        assert!(p.try_acquire(3.0).is_some());
+        assert!(p.try_acquire(3.0, H2D).is_some());
         assert_eq!(p.in_use_at(3.0), 1);
     }
 
     #[test]
     fn queue_compression_shifts_release_earlier() {
         let mut p = PinnedPool::new(1);
-        let a = p.try_acquire(0.0).unwrap();
+        let a = p.try_acquire(0.0, H2D).unwrap();
         p.set_release(a, 5.0);
         // The copy ahead of it was reclaimed: it now lands at 3.5.
         p.set_release(a, 3.5);
-        assert_eq!(p.available_at(4.0), 1);
-        assert_eq!(p.available_at(3.0), 0);
+        assert_eq!(p.available_at(4.0, H2D), 1);
+        assert_eq!(p.available_at(3.0, H2D), 0);
     }
 
     #[test]
@@ -175,19 +244,68 @@ mod tests {
         let mut p = PinnedPool::disabled();
         assert!(!p.enabled());
         assert_eq!(p.capacity(), 0);
-        assert!(p.try_acquire(0.0).is_none());
-        assert_eq!(p.available_at(0.0), 0);
+        assert!(p.try_acquire(0.0, H2D).is_none());
+        assert_eq!(p.available_at(0.0, H2D), 0);
     }
 
     #[test]
     fn clear_forgets_all_leases() {
         let mut p = PinnedPool::new(1);
-        let a = p.try_acquire(0.0).unwrap();
+        let a = p.try_acquire(0.0, H2D).unwrap();
         p.set_release(a, 100.0);
         p.clear();
         assert_eq!(p.in_use_at(0.0), 0);
-        assert!(p.try_acquire(0.0).is_some());
+        assert!(p.try_acquire(0.0, H2D).is_some());
         // Releasing a cleared lease is a harmless no-op.
         p.release(a);
+    }
+
+    #[test]
+    fn full_split_is_identical_to_unsplit() {
+        // `N:N` is the explicit spelling of the default: every grant
+        // decision matches the single shared pool.
+        let mut unsplit = PinnedPool::new(2);
+        let mut full = PinnedPool::new(2).with_split(2, 2);
+        for p in [&mut unsplit, &mut full] {
+            let a = p.try_acquire(0.0, D2H).unwrap();
+            let _b = p.try_acquire(0.0, D2H).unwrap();
+            assert!(p.try_acquire(0.0, H2D).is_none());
+            p.set_release(a, 1.0);
+            assert_eq!(p.available_at(1.0, H2D), 1);
+            assert_eq!(p.available_at(1.0, D2H), 1);
+            assert!(p.try_acquire(1.0, H2D).is_some());
+        }
+    }
+
+    #[test]
+    fn split_protects_h2d_from_a_d2h_burst() {
+        // Pool of 3 split 2:1 — the regression the satellite exists
+        // for: an eviction burst (D2H) saturates its sub-pool after one
+        // lease and the H2D prefetcher still gets buffers.
+        let mut p = PinnedPool::new(3).with_split(2, 1);
+        assert!(p.try_acquire(0.0, D2H).is_some());
+        assert!(p.try_acquire(0.0, D2H).is_none(), "D2H sub-pool full");
+        assert_eq!(p.available_at(0.0, D2H), 0);
+        assert_eq!(p.available_at(0.0, H2D), 2, "H2D unaffected");
+        assert!(p.try_acquire(0.0, H2D).is_some());
+        assert!(p.try_acquire(0.0, H2D).is_some());
+        assert!(p.try_acquire(0.0, H2D).is_none(), "H2D sub-pool full");
+        // The shared total still binds: a 2:2 split over capacity 3
+        // grants at most 3 leases overall.
+        let mut p = PinnedPool::new(3).with_split(2, 2);
+        assert!(p.try_acquire(0.0, H2D).is_some());
+        assert!(p.try_acquire(0.0, H2D).is_some());
+        assert!(p.try_acquire(0.0, D2H).is_some());
+        assert!(p.try_acquire(0.0, D2H).is_none(), "total exhausted");
+    }
+
+    #[test]
+    fn split_caps_clamp_to_capacity() {
+        let p = PinnedPool::new(2).with_split(100, 0);
+        assert_eq!(p.dir_cap(H2D), 2);
+        assert_eq!(p.dir_cap(D2H), 0);
+        let mut p = p;
+        assert!(p.try_acquire(0.0, D2H).is_none(), "0-cap direction");
+        assert!(p.try_acquire(0.0, H2D).is_some());
     }
 }

@@ -73,6 +73,15 @@ pub struct StreamTimeline {
     coll: f64,
     /// Sum of all copy durations (both engines, both kinds).
     copy_total: f64,
+    /// Sum of compute-stream *work* charged via [`StreamTimeline::
+    /// charge`] — unlike the `compute` frontier it excludes stall time,
+    /// so the adaptive lookahead controller can difference it per
+    /// moment to estimate pure compute throughput.
+    compute_work: f64,
+    /// Per-engine copy-duration sums (subset of `copy_total`): the
+    /// controller's transfer-rate feedback signals.
+    h2d_work: f64,
+    d2h_work: f64,
     /// Compute-stream stall time attributable to copies.
     exposed: f64,
     /// Sum of all collective durations enqueued on the collective stream.
@@ -94,6 +103,9 @@ impl StreamTimeline {
             d2h: 0.0,
             coll: 0.0,
             copy_total: 0.0,
+            compute_work: 0.0,
+            h2d_work: 0.0,
+            d2h_work: 0.0,
             exposed: 0.0,
             coll_total: 0.0,
             coll_exposed: 0.0,
@@ -118,6 +130,7 @@ impl StreamTimeline {
     /// Charge work to the compute stream (operators, ADAM, collectives).
     pub fn charge(&mut self, phase: Phase, secs: f64) {
         self.clock.add(phase, secs);
+        self.compute_work += secs;
         self.compute += secs;
     }
 
@@ -125,6 +138,13 @@ impl StreamTimeline {
         match dir {
             CopyDir::H2D => &mut self.h2d,
             CopyDir::D2H => &mut self.d2h,
+        }
+    }
+
+    fn work_mut(&mut self, dir: CopyDir) -> &mut f64 {
+        match dir {
+            CopyDir::H2D => &mut self.h2d_work,
+            CopyDir::D2H => &mut self.d2h_work,
         }
     }
 
@@ -158,6 +178,7 @@ impl StreamTimeline {
     ) {
         self.clock.add(phase, secs);
         self.copy_total += secs;
+        *self.work_mut(dir) += secs;
         if route == CopyRoute::Pageable {
             self.pageable_total += secs;
         }
@@ -197,6 +218,7 @@ impl StreamTimeline {
     ) -> f64 {
         self.clock.add(phase, secs);
         self.copy_total += secs;
+        *self.work_mut(dir) += secs;
         if route == CopyRoute::Pageable {
             self.pageable_total += secs;
         }
@@ -231,6 +253,8 @@ impl StreamTimeline {
     ) {
         self.clock.sub(phase, secs);
         self.copy_total = (self.copy_total - secs).max(0.0);
+        let w = self.work_mut(dir);
+        *w = (*w - secs).max(0.0);
         if route == CopyRoute::Pageable {
             self.pageable_total = (self.pageable_total - secs).max(0.0);
         }
@@ -334,6 +358,55 @@ impl StreamTimeline {
         self.compute
     }
 
+    // ------------------------------------- feedback accessors (ISSUE 4)
+    //
+    // Per-stream busy/backlog probes for the adaptive lookahead
+    // controller.  None of these enter `snapshot()` — they are derived
+    // observers, and the golden traces must stay byte-comparable across
+    // the PR that introduced them.
+
+    /// Cumulative compute *work* charged so far (stall time excluded).
+    pub fn compute_work(&self) -> f64 {
+        self.compute_work
+    }
+
+    /// Cumulative copy durations enqueued on one copy engine (demand +
+    /// async, both routes; reclaims subtracted).
+    pub fn copy_busy(&self, dir: CopyDir) -> f64 {
+        match dir {
+            CopyDir::H2D => self.h2d_work,
+            CopyDir::D2H => self.d2h_work,
+        }
+    }
+
+    /// How far one copy engine's frontier runs ahead of the compute
+    /// stream: the queued copy work a new enqueue would wait behind.
+    /// Zero in serial mode (copies charge the compute stream directly).
+    pub fn copy_backlog(&self, dir: CopyDir) -> f64 {
+        if !self.overlap {
+            return 0.0;
+        }
+        let f = match dir {
+            CopyDir::H2D => self.h2d,
+            CopyDir::D2H => self.d2h,
+        };
+        (f - self.compute).max(0.0)
+    }
+
+    /// Cumulative collective durations enqueued on the collective
+    /// stream (demand + async; reclaims subtracted).
+    pub fn collective_work(&self) -> f64 {
+        self.coll_total
+    }
+
+    /// How far the collective stream's frontier runs ahead of compute.
+    pub fn collective_backlog(&self) -> f64 {
+        if !self.overlap {
+            return 0.0;
+        }
+        (self.coll - self.compute).max(0.0)
+    }
+
     /// Iteration wall time: the latest stream frontier (overlap mode) or
     /// the flat per-phase sum (serial mode).
     pub fn makespan(&self) -> f64 {
@@ -375,6 +448,9 @@ impl StreamTimeline {
         self.d2h = 0.0;
         self.coll = 0.0;
         self.copy_total = 0.0;
+        self.compute_work = 0.0;
+        self.h2d_work = 0.0;
+        self.d2h_work = 0.0;
         self.exposed = 0.0;
         self.coll_total = 0.0;
         self.coll_exposed = 0.0;
@@ -386,6 +462,11 @@ impl StreamTimeline {
     /// hex-encoded f64 bits.  The golden-trace regression tests
     /// serialize one snapshot per moment; any change to stream or
     /// eviction scheduling shows up as a textual diff.
+    ///
+    /// The feedback accumulators (`compute_work`, per-engine copy work)
+    /// are deliberately *not* serialized: they are derived observers for
+    /// the adaptive controller, and including them would invalidate
+    /// every golden trace recorded before they existed.
     pub fn snapshot(&self) -> String {
         use std::fmt::Write as _;
         let mut s = String::new();
@@ -625,6 +706,48 @@ mod tests {
         assert_eq!(tl.pageable_transfer(), 0.0);
         tl.reset();
         assert_eq!(tl.pageable_transfer(), 0.0);
+    }
+
+    #[test]
+    fn feedback_accessors_track_busy_and_backlog() {
+        let mut tl = StreamTimeline::new(true);
+        tl.charge(Phase::FwdBwd, 1.0);
+        tl.async_copy(Phase::CpuToGpu, 2.0, CopyDir::H2D, 0.0);
+        tl.async_copy(Phase::GpuToCpu, 0.5, CopyDir::D2H, 0.0);
+        tl.async_collective(Phase::AllGather, 3.0);
+        assert!((tl.compute_work() - 1.0).abs() < 1e-12);
+        assert!((tl.copy_busy(CopyDir::H2D) - 2.0).abs() < 1e-12);
+        assert!((tl.copy_busy(CopyDir::D2H) - 0.5).abs() < 1e-12);
+        // Copies start at the compute frontier (1.0): the H2D engine
+        // runs ahead to 3.0, so its backlog past compute is 2.0.
+        assert!((tl.copy_backlog(CopyDir::H2D) - 2.0).abs() < 1e-12);
+        assert!((tl.copy_backlog(CopyDir::D2H) - 0.5).abs() < 1e-12);
+        assert!((tl.collective_work() - 3.0).abs() < 1e-12);
+        assert!((tl.collective_backlog() - 3.0).abs() < 1e-12);
+        // A wait advances the compute frontier but not compute work,
+        // and drains the backlog.
+        tl.wait_until(3.0);
+        assert!((tl.compute_work() - 1.0).abs() < 1e-12);
+        assert_eq!(tl.copy_backlog(CopyDir::H2D), 0.0);
+        // Reclaim subtracts from the per-engine busy accumulator.
+        tl.reclaim(Phase::GpuToCpu, 0.5, CopyDir::D2H);
+        assert_eq!(tl.copy_busy(CopyDir::D2H), 0.0);
+        tl.reset();
+        assert_eq!(tl.compute_work(), 0.0);
+        assert_eq!(tl.copy_busy(CopyDir::H2D), 0.0);
+    }
+
+    #[test]
+    fn feedback_accessors_zero_backlog_in_serial_mode() {
+        let mut tl = StreamTimeline::new(false);
+        tl.charge(Phase::FwdBwd, 1.0);
+        tl.async_copy(Phase::CpuToGpu, 2.0, CopyDir::H2D, 0.0);
+        tl.async_collective(Phase::AllGather, 3.0);
+        // Work is still attributed per engine, but nothing queues: the
+        // serial timeline has no stream to run ahead of compute.
+        assert!((tl.copy_busy(CopyDir::H2D) - 2.0).abs() < 1e-12);
+        assert_eq!(tl.copy_backlog(CopyDir::H2D), 0.0);
+        assert_eq!(tl.collective_backlog(), 0.0);
     }
 
     #[test]

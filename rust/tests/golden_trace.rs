@@ -128,6 +128,15 @@ fn golden_trace_pipelined() {
 }
 
 #[test]
+fn golden_trace_adaptive() {
+    // The ISSUE 4 cell: pinned pipeline with feedback-sized windows and
+    // the negotiated headroom ledger.  The controller reads only the
+    // (deterministic) stream timeline, so its trace is as bit-stable as
+    // the static ones.
+    check_golden("trace_1b_2g_adaptive", OptimizationPlan::adaptive_pipeline());
+}
+
+#[test]
 fn traced_run_reports_exactly_like_untraced() {
     // Tracing must be a pure observer: the report (times, volumes,
     // placement) is bit-identical with and without it.

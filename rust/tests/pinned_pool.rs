@@ -153,6 +153,56 @@ fn property_pool_never_changes_transfer_volume() {
 // Contention on a spill-heavy config: throttling is real and monotone
 // ---------------------------------------------------------------------
 
+// ---------------------------------------------------------------------
+// Per-direction sub-pools (ISSUE 4 satellite)
+// ---------------------------------------------------------------------
+
+/// `--pinned-buffers N` keeps meaning *total*: an explicit `N:N` split
+/// (each direction may use the whole pool) is the identity spelling of
+/// the unsplit default, bit-for-bit, on every pipeline shape.
+#[test]
+fn full_split_is_bit_identical_to_unsplit_pool() {
+    let task = TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, 2);
+    for pool in [1u32, 4] {
+        let base = OptimizationPlan {
+            pinned_buffers: pool,
+            ..OptimizationPlan::fully_pipelined()
+        };
+        let unsplit = trace(task, base);
+        let split = trace(
+            task,
+            OptimizationPlan { pinned_split: Some((pool, pool)), ..base },
+        );
+        assert_eq!(
+            unsplit, split,
+            "N:N split drifted from the shared pool at size {pool}"
+        );
+    }
+}
+
+/// A directional split re-prices and re-times copies like any pool
+/// configuration — it never adds PCIe or collective traffic.
+#[test]
+fn split_pool_never_changes_transfer_volume() {
+    let task = TrainTask::new(GptSpec::by_name("12B").unwrap(), 8, 1);
+    let serial = run(task, OptimizationPlan::default());
+    for split in [(3u32, 1u32), (1, 3), (2, 2)] {
+        let r = run(
+            task,
+            OptimizationPlan {
+                pinned_buffers: 4,
+                pinned_split: Some(split),
+                ..OptimizationPlan::fully_pipelined()
+            },
+        );
+        assert!(
+            pcie_volume(&r) <= pcie_volume(&serial),
+            "split {split:?} added PCIe traffic"
+        );
+        assert_eq!(coll_volume(&r), coll_volume(&serial));
+    }
+}
+
 #[test]
 fn tiny_pool_throttles_and_degrades_on_spilled_model() {
     // 12B on one V100 streams spilled fp16 chunks every iteration — the
