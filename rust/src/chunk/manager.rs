@@ -57,6 +57,23 @@ pub struct MoveEvent {
     pub kind: MoveKind,
 }
 
+impl MoveEvent {
+    /// The PCIe copy engine this event's transfer rides, or None for
+    /// events that move no bytes across the link (allocs, releases,
+    /// cancels).  The completion-protocol half of the move: every
+    /// execution backend translates drained events into copy charges
+    /// through this one classifier, so the simulator and the real
+    /// trainer agree on what counts as H2D vs D2H traffic.
+    pub fn copy_dir(&self) -> Option<crate::sim::CopyDir> {
+        use crate::sim::CopyDir;
+        match (self.from, self.to) {
+            (Some(Device::Cpu), Some(Device::Gpu(_))) => Some(CopyDir::H2D),
+            (Some(Device::Gpu(_)), Some(Device::Cpu)) => Some(CopyDir::D2H),
+            _ => None,
+        }
+    }
+}
+
 /// Aggregate movement statistics (paper Fig. 16's chunk-moving bars).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct MoveStats {

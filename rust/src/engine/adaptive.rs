@@ -11,9 +11,11 @@
 //!
 //! # The feedback loop
 //!
-//! [`LookaheadController::observe`] differences three cumulative
-//! [`crate::sim::StreamTimeline`] accumulators per moment tick —
-//! compute work, H2D copy work, collective work — and folds each delta
+//! [`LookaheadController::observe`] differences three cumulative work
+//! probes per moment tick — compute work, H2D copy work, collective
+//! work, read from whatever [`crate::engine::ExecutionBackend`] is
+//! executing the session (the simulator's stream timeline, or the real
+//! trainer's measured wall-time accounting) — and folds each delta
 //! into an exponential moving average (alpha [`EMA_ALPHA`]).  The EMAs
 //! survive the iteration boundary (PTM iterations are structurally
 //! identical, so last iteration's rates are this iteration's best
@@ -63,7 +65,6 @@
 //! is exactly the pre-PR expressions, which is what keeps the
 //! adaptive-off timelines bit-identical to PR 3.
 
-use crate::sim::{CopyDir, StreamTimeline};
 use crate::tracer::{MemTracer, Moment, WARMUP_GPU_FRAC};
 
 use super::prefetch::{DEFAULT_GROUP_LOOKAHEAD, DEFAULT_LOOKAHEAD};
@@ -162,16 +163,20 @@ impl LookaheadController {
         }
     }
 
-    /// Fold this tick's per-stream work deltas into the EMAs.  Ticks
-    /// that charged no compute (the iteration's first tick) are skipped
-    /// so idle boundaries don't drag the rate estimates toward zero.
-    pub fn observe(&mut self, tl: &StreamTimeline) {
-        let dc = tl.compute_work() - self.last_compute;
-        let dh = tl.copy_busy(CopyDir::H2D) - self.last_h2d;
-        let dk = tl.collective_work() - self.last_coll;
-        self.last_compute = tl.compute_work();
-        self.last_h2d = tl.copy_busy(CopyDir::H2D);
-        self.last_coll = tl.collective_work();
+    /// Fold this tick's per-stream work deltas into the EMAs.  The
+    /// arguments are the backend's cumulative probes (`compute_work`,
+    /// `copy_busy(H2D)`, `collective_work`) — raw values, not deltas,
+    /// so the controller stays backend-agnostic.  Ticks that charged no
+    /// compute (the iteration's first tick) are skipped so idle
+    /// boundaries don't drag the rate estimates toward zero.
+    pub fn observe(&mut self, compute_work: f64, h2d_busy: f64,
+                   coll_work: f64) {
+        let dc = compute_work - self.last_compute;
+        let dh = h2d_busy - self.last_h2d;
+        let dk = coll_work - self.last_coll;
+        self.last_compute = compute_work;
+        self.last_h2d = h2d_busy;
+        self.last_coll = coll_work;
         if dc > 0.0 {
             self.ema_compute.update(dc);
             // Reclaims can drive a delta negative; the work physically
@@ -334,8 +339,18 @@ impl HeadroomLedger {
 mod tests {
     use super::*;
     use crate::chunk::ChunkId;
-    use crate::sim::Phase;
+    use crate::sim::{CopyDir, Phase, StreamTimeline};
     use crate::util::quickcheck::forall;
+
+    /// Feed a timeline's probes to the controller the way a backend
+    /// would (the production path reads them off `ExecutionBackend`).
+    fn observe_tl(ctl: &mut LookaheadController, tl: &StreamTimeline) {
+        ctl.observe(
+            tl.compute_work(),
+            tl.copy_busy(CopyDir::H2D),
+            tl.collective_work(),
+        );
+    }
 
     fn warmed(compute: f64, h2d: f64, coll: f64, ticks: u32)
         -> LookaheadController {
@@ -352,7 +367,7 @@ mod tests {
             if coll > 0.0 {
                 tl.async_collective(Phase::AllGather, coll);
             }
-            ctl.observe(&tl);
+            observe_tl(&mut ctl, &tl);
         }
         ctl
     }
@@ -444,7 +459,7 @@ mod tests {
         // And a fresh timeline does not produce phantom negative
         // deltas.
         let tl = StreamTimeline::new(true);
-        ctl.observe(&tl);
+        observe_tl(&mut ctl, &tl);
         assert_eq!(ctl.chunk_window(WindowInputs::default()), before);
     }
 
@@ -475,7 +490,7 @@ mod tests {
                     tl.charge(Phase::FwdBwd, c);
                     tl.async_copy(Phase::CpuToGpu, h, CopyDir::H2D, 0.0);
                     tl.async_collective(Phase::AllGather, k);
-                    ctl.observe(&tl);
+                    observe_tl(&mut ctl, &tl);
                 }
                 let pool_free =
                     if pf == 9 { None } else { Some(pf as u32) };

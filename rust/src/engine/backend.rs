@@ -1,0 +1,485 @@
+//! The execution backend boundary of the training session (ISSUE 5
+//! tentpole).
+//!
+//! [`super::session::TrainingSession`] owns every *policy* decision of
+//! one training iteration — prefetch walks, headroom negotiation,
+//! window sizing, staging-buffer leasing, eviction victim choice — and
+//! is deliberately ignorant of *how* work is executed and priced.
+//! That knowledge lives behind [`ExecutionBackend`]:
+//!
+//! * **execution** — `execute_moment` runs one operator's compute;
+//!   `demand_copy`/`issue_copy` move bytes across PCIe (blocking vs
+//!   enqueued); `demand_collective`/`issue_collective` put all-gathers
+//!   and reduce-scatters on the collective lane; the `sync_*` methods
+//!   park the compute lane until an issued transfer lands; the
+//!   `reclaim_*` methods un-charge work that was cancelled before
+//!   reaching the wire.
+//! * **pricing** — `copy_secs` prices a host copy on the pinned or
+//!   pageable curve; `allgather_cost`/`reduce_scatter_cost` price one
+//!   communication group's collective.  The session asks the backend
+//!   for every duration it schedules, so a backend that measures
+//!   instead of modeling simply reports what actually happened.
+//! * **probes** — cumulative per-lane work and backlog accessors, the
+//!   feedback signals of the adaptive lookahead controller.
+//!
+//! Two backends ship:
+//!
+//! * [`SimBackend`] wraps [`crate::sim::StreamTimeline`] plus the
+//!   cluster's calibrated [`Interconnect`]/[`CollectiveCost`] curves.
+//!   Every trait method is a 1:1 delegation, so a session over
+//!   `SimBackend` reproduces the pre-split engine bit-for-bit (locked
+//!   by the golden traces and `tests/session_equivalence.rs`).
+//! * [`PjrtBackend`] (behind the `pjrt` feature) is the real-training
+//!   backend: copies and operators are executed by the chunk manager
+//!   and the PJRT runtime, and the backend *records measured wall
+//!   time* into a serial timeline so the probes — and therefore the
+//!   adaptive controller — see real per-step ratios instead of modeled
+//!   ones.
+//!
+//! Adding a third backend (real CUDA streams, a latency-injecting
+//! chaos backend, a multi-node simulator) is implementing this trait;
+//! the orchestration core is untouched.
+
+use crate::dp::{CollectiveCost, CollectiveOp};
+use crate::mem::Interconnect;
+use crate::sim::{CopyDir, CopyRoute, Phase, StreamTimeline};
+
+use super::report::IterBreakdown;
+
+/// Where the training session executes and prices work.  See the
+/// module docs for the contract; all `secs` arguments are durations the
+/// session obtained from the pricing methods (a measuring backend
+/// prices at zero and accounts for real time as it is observed).
+pub trait ExecutionBackend {
+    // ------------------------------------------------------- execution
+
+    /// Run one operator (or optimizer slice) on the compute lane.
+    fn execute_moment(&mut self, phase: Phase, secs: f64);
+
+    /// Blocking host copy on the compute critical path; `ready` is an
+    /// extra start dependency (0.0 for none).
+    fn demand_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                   ready: f64);
+
+    /// Enqueue a non-blocking host copy; returns its completion time.
+    fn issue_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                  ready: f64, route: CopyRoute) -> f64;
+
+    /// Un-charge an issued copy cancelled before reaching the wire.
+    fn reclaim_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                    route: CopyRoute);
+
+    /// Park the compute lane until time `t` (an issued copy a consumer
+    /// now needs).
+    fn sync_until(&mut self, t: f64);
+
+    /// Blocking collective on the collective lane.
+    fn demand_collective(&mut self, phase: Phase, secs: f64);
+
+    /// Enqueue a non-blocking collective; returns its completion time.
+    fn issue_collective(&mut self, phase: Phase, secs: f64) -> f64;
+
+    /// Park the compute lane until collective time `t`.
+    fn sync_collective(&mut self, t: f64);
+
+    /// Un-charge an issued collective cancelled before the wire.
+    fn reclaim_collective(&mut self, phase: Phase, secs: f64);
+
+    // --------------------------------------------------------- pricing
+
+    /// Seconds one host copy of `bytes` takes on `route`'s curve.
+    fn copy_secs(&self, bytes: u64, route: CopyRoute) -> f64;
+
+    /// Wire time + per-rank byte volume of one group all-gather.
+    fn allgather_cost(&self, chunk_bytes: u64) -> CollectiveOp;
+
+    /// Wire time + per-rank byte volume of one group reduce-scatter.
+    fn reduce_scatter_cost(&self, chunk_bytes: u64) -> CollectiveOp;
+
+    // ---------------------------------------------------------- probes
+
+    /// Current compute-lane time (lease clocks, landed-copy checks).
+    fn now(&self) -> f64;
+
+    /// Cumulative compute work (stall time excluded).
+    fn compute_work(&self) -> f64;
+
+    /// Cumulative copy durations enqueued on one engine.
+    fn copy_busy(&self, dir: CopyDir) -> f64;
+
+    /// How far one copy engine's frontier runs ahead of compute.
+    fn copy_backlog(&self, dir: CopyDir) -> f64;
+
+    /// Cumulative collective durations enqueued.
+    fn collective_work(&self) -> f64;
+
+    /// How far the collective lane's frontier runs ahead of compute.
+    fn collective_backlog(&self) -> f64;
+
+    // ------------------------------------------------------- lifecycle
+
+    /// Restart the clock at zero (iteration boundary).
+    fn reset(&mut self);
+
+    /// Iteration wall time so far.
+    fn makespan(&self) -> f64;
+
+    /// Per-phase attribution of the current iteration.
+    fn breakdown(&self) -> IterBreakdown;
+
+    /// Bit-exact state snapshot (golden traces).
+    fn snapshot(&self) -> String;
+}
+
+// =====================================================================
+// SimBackend
+// =====================================================================
+
+/// The simulation backend: a [`StreamTimeline`] driven by the cluster's
+/// calibrated cost curves.  Every method is a 1:1 delegation — a
+/// session over this backend is the pre-refactor engine, bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct SimBackend {
+    tl: StreamTimeline,
+    net: Interconnect,
+    cc: CollectiveCost,
+}
+
+impl SimBackend {
+    pub fn new(overlap: bool, net: Interconnect, nproc: usize) -> Self {
+        SimBackend {
+            tl: StreamTimeline::new(overlap),
+            net,
+            cc: CollectiveCost::new(net.nvlink, nproc),
+        }
+    }
+
+    /// The wrapped timeline (report assembly, tests).
+    pub fn timeline(&self) -> &StreamTimeline {
+        &self.tl
+    }
+}
+
+impl ExecutionBackend for SimBackend {
+    fn execute_moment(&mut self, phase: Phase, secs: f64) {
+        self.tl.charge(phase, secs);
+    }
+
+    fn demand_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                   ready: f64) {
+        self.tl.demand_copy(phase, secs, dir, ready);
+    }
+
+    fn issue_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                  ready: f64, route: CopyRoute) -> f64 {
+        self.tl.async_copy_on(phase, secs, dir, ready, route)
+    }
+
+    fn reclaim_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                    route: CopyRoute) {
+        self.tl.reclaim_on(phase, secs, dir, route);
+    }
+
+    fn sync_until(&mut self, t: f64) {
+        self.tl.wait_until(t);
+    }
+
+    fn demand_collective(&mut self, phase: Phase, secs: f64) {
+        self.tl.demand_collective(phase, secs);
+    }
+
+    fn issue_collective(&mut self, phase: Phase, secs: f64) -> f64 {
+        self.tl.async_collective(phase, secs)
+    }
+
+    fn sync_collective(&mut self, t: f64) {
+        self.tl.wait_collective(t);
+    }
+
+    fn reclaim_collective(&mut self, phase: Phase, secs: f64) {
+        self.tl.reclaim_collective(phase, secs);
+    }
+
+    fn copy_secs(&self, bytes: u64, route: CopyRoute) -> f64 {
+        match route {
+            CopyRoute::Pinned => self.net.pcie.transfer_time(bytes),
+            CopyRoute::Pageable => {
+                self.net.pcie_pageable.transfer_time(bytes)
+            }
+        }
+    }
+
+    fn allgather_cost(&self, chunk_bytes: u64) -> CollectiveOp {
+        self.cc.allgather_op(chunk_bytes)
+    }
+
+    fn reduce_scatter_cost(&self, chunk_bytes: u64) -> CollectiveOp {
+        self.cc.reduce_scatter_op(chunk_bytes)
+    }
+
+    fn now(&self) -> f64 {
+        self.tl.now()
+    }
+
+    fn compute_work(&self) -> f64 {
+        self.tl.compute_work()
+    }
+
+    fn copy_busy(&self, dir: CopyDir) -> f64 {
+        self.tl.copy_busy(dir)
+    }
+
+    fn copy_backlog(&self, dir: CopyDir) -> f64 {
+        self.tl.copy_backlog(dir)
+    }
+
+    fn collective_work(&self) -> f64 {
+        self.tl.collective_work()
+    }
+
+    fn collective_backlog(&self) -> f64 {
+        self.tl.collective_backlog()
+    }
+
+    fn reset(&mut self) {
+        self.tl.reset();
+    }
+
+    fn makespan(&self) -> f64 {
+        self.tl.makespan()
+    }
+
+    fn breakdown(&self) -> IterBreakdown {
+        IterBreakdown::from_timeline(&self.tl)
+    }
+
+    fn snapshot(&self) -> String {
+        self.tl.snapshot()
+    }
+}
+
+// =====================================================================
+// PjrtBackend (real training)
+// =====================================================================
+
+/// The real-training backend: operators run through the PJRT runtime
+/// and copies through the chunk manager's real payload moves, so this
+/// backend *records measured wall time* instead of modeling it.  The
+/// recording substrate is a serial [`StreamTimeline`]: nothing queues
+/// (real host memcpys are synchronous), backlogs are honestly zero, and
+/// the cumulative work probes carry measured per-phase seconds — which
+/// is exactly what the adaptive lookahead controller differences to
+/// size the trainer's prefetch window from *real* compute/transfer
+/// ratios.
+///
+/// Pricing is zero: durations enter the timeline when the trainer
+/// observes them (`record_compute`/`record_copy`), never in advance.
+#[cfg(feature = "pjrt")]
+#[derive(Clone, Debug)]
+pub struct PjrtBackend {
+    tl: StreamTimeline,
+}
+
+#[cfg(feature = "pjrt")]
+impl Default for PjrtBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl PjrtBackend {
+    pub fn new() -> Self {
+        PjrtBackend { tl: StreamTimeline::new(false) }
+    }
+
+    /// Run `f`, measure its wall time, account it as compute work.
+    pub fn record_compute<R>(
+        &mut self,
+        phase: Phase,
+        f: impl FnOnce() -> R,
+    ) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        self.tl.charge(phase, t0.elapsed().as_secs_f64());
+        r
+    }
+
+    /// Run `f`, measure its wall time, account it as copy work on one
+    /// engine (chunk fetches, grad writeback, optimizer staging).
+    pub fn record_copy<R>(
+        &mut self,
+        phase: Phase,
+        dir: CopyDir,
+        f: impl FnOnce() -> R,
+    ) -> R {
+        let t0 = std::time::Instant::now();
+        let r = f();
+        self.tl.demand_copy(phase, t0.elapsed().as_secs_f64(), dir, 0.0);
+        r
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl ExecutionBackend for PjrtBackend {
+    fn execute_moment(&mut self, phase: Phase, secs: f64) {
+        self.tl.charge(phase, secs);
+    }
+
+    fn demand_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                   ready: f64) {
+        self.tl.demand_copy(phase, secs, dir, ready);
+    }
+
+    fn issue_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                  ready: f64, route: CopyRoute) -> f64 {
+        self.tl.async_copy_on(phase, secs, dir, ready, route)
+    }
+
+    fn reclaim_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                    route: CopyRoute) {
+        self.tl.reclaim_on(phase, secs, dir, route);
+    }
+
+    fn sync_until(&mut self, t: f64) {
+        self.tl.wait_until(t);
+    }
+
+    fn demand_collective(&mut self, phase: Phase, secs: f64) {
+        self.tl.demand_collective(phase, secs);
+    }
+
+    fn issue_collective(&mut self, phase: Phase, secs: f64) -> f64 {
+        self.tl.async_collective(phase, secs)
+    }
+
+    fn sync_collective(&mut self, t: f64) {
+        self.tl.wait_collective(t);
+    }
+
+    fn reclaim_collective(&mut self, phase: Phase, secs: f64) {
+        self.tl.reclaim_collective(phase, secs);
+    }
+
+    /// Copies are measured at the wire, never priced in advance.
+    fn copy_secs(&self, _bytes: u64, _route: CopyRoute) -> f64 {
+        0.0
+    }
+
+    /// Single-process path: collectives are free (and never issued).
+    fn allgather_cost(&self, _chunk_bytes: u64) -> CollectiveOp {
+        CollectiveOp { secs: 0.0, bytes: 0 }
+    }
+
+    fn reduce_scatter_cost(&self, _chunk_bytes: u64) -> CollectiveOp {
+        CollectiveOp { secs: 0.0, bytes: 0 }
+    }
+
+    fn now(&self) -> f64 {
+        self.tl.now()
+    }
+
+    fn compute_work(&self) -> f64 {
+        self.tl.compute_work()
+    }
+
+    fn copy_busy(&self, dir: CopyDir) -> f64 {
+        self.tl.copy_busy(dir)
+    }
+
+    fn copy_backlog(&self, dir: CopyDir) -> f64 {
+        self.tl.copy_backlog(dir)
+    }
+
+    fn collective_work(&self) -> f64 {
+        self.tl.collective_work()
+    }
+
+    fn collective_backlog(&self) -> f64 {
+        self.tl.collective_backlog()
+    }
+
+    fn reset(&mut self) {
+        self.tl.reset();
+    }
+
+    fn makespan(&self) -> f64 {
+        self.tl.makespan()
+    }
+
+    fn breakdown(&self) -> IterBreakdown {
+        IterBreakdown::from_timeline(&self.tl)
+    }
+
+    fn snapshot(&self) -> String {
+        self.tl.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterPreset;
+
+    /// The trait layer must be a zero-cost rename: driving a SimBackend
+    /// (including through `&mut dyn`) produces bit-identical snapshots
+    /// to driving the raw timeline.
+    #[test]
+    fn sim_backend_is_a_transparent_timeline() {
+        let net = ClusterPreset::yard().net;
+        for overlap in [false, true] {
+            let mut raw = StreamTimeline::new(overlap);
+            let mut b = SimBackend::new(overlap, net, 2);
+            let be: &mut dyn ExecutionBackend = &mut b;
+            raw.charge(Phase::FwdBwd, 0.1 + 0.2);
+            be.execute_moment(Phase::FwdBwd, 0.1 + 0.2);
+            let d1 = raw.async_copy_on(Phase::CpuToGpu, 1.0 / 3.0,
+                                       CopyDir::H2D, 0.0,
+                                       CopyRoute::Pageable);
+            let d2 = be.issue_copy(Phase::CpuToGpu, 1.0 / 3.0,
+                                   CopyDir::H2D, 0.0,
+                                   CopyRoute::Pageable);
+            assert_eq!(d1.to_bits(), d2.to_bits());
+            raw.demand_copy(Phase::GpuToCpu, 0.7, CopyDir::D2H, 0.1);
+            be.demand_copy(Phase::GpuToCpu, 0.7, CopyDir::D2H, 0.1);
+            let c1 = raw.async_collective(Phase::AllGather, 0.9);
+            let c2 = be.issue_collective(Phase::AllGather, 0.9);
+            assert_eq!(c1.to_bits(), c2.to_bits());
+            raw.wait_collective(c1);
+            be.sync_collective(c2);
+            raw.wait_until(d1);
+            be.sync_until(d2);
+            raw.reclaim_on(Phase::CpuToGpu, 1.0 / 3.0, CopyDir::H2D,
+                           CopyRoute::Pageable);
+            be.reclaim_copy(Phase::CpuToGpu, 1.0 / 3.0, CopyDir::H2D,
+                            CopyRoute::Pageable);
+            assert_eq!(raw.snapshot(), be.snapshot());
+            assert_eq!(raw.makespan().to_bits(),
+                       be.makespan().to_bits());
+            assert_eq!(raw.copy_backlog(CopyDir::H2D).to_bits(),
+                       be.copy_backlog(CopyDir::H2D).to_bits());
+        }
+    }
+
+    /// The pricing methods are exactly the cluster curves the engine
+    /// used to call inline.
+    #[test]
+    fn sim_backend_prices_on_the_cluster_curves() {
+        let cluster = ClusterPreset::yard();
+        let b = SimBackend::new(true, cluster.net, 4);
+        for bytes in [1u64 << 10, 1 << 20, 1 << 28] {
+            assert_eq!(
+                b.copy_secs(bytes, CopyRoute::Pinned).to_bits(),
+                cluster.net.pcie.transfer_time(bytes).to_bits()
+            );
+            assert_eq!(
+                b.copy_secs(bytes, CopyRoute::Pageable).to_bits(),
+                cluster.net.pcie_pageable.transfer_time(bytes).to_bits()
+            );
+            let cc = CollectiveCost::new(cluster.net.nvlink, 4);
+            assert_eq!(b.allgather_cost(bytes), cc.allgather_op(bytes));
+            assert_eq!(b.reduce_scatter_cost(bytes),
+                       cc.reduce_scatter_op(bytes));
+        }
+    }
+}

@@ -1,111 +1,60 @@
-//! The PatrickStar training engine (simulation backend).
+//! The PatrickStar training engine.
 //!
-//! Drives one training process (rank 0's view) through warm-up and
-//! steady-state iterations over the operator graph, using the *real*
-//! chunk manager, tensor state machine, tracer, eviction and placement
-//! code — only operator execution and data transfer are replaced by the
-//! calibrated cost model.  The multi-GPU behaviour follows Sec. 7: chunks
-//! at list position `p` belong to rank `p mod nproc`; remote chunks are
-//! all-gathered per communication group and released after use;
-//! reduce-scatter averages gradients; ADAM is rank-local.
+//! Since ISSUE 5 the engine is split into a backend-agnostic
+//! orchestration core and thin execution backends:
 //!
-//! Ablation switches (paper Fig. 16): `use_tracer=false` reproduces the
-//! "SP" static-partition plan (20% of GPU for chunks, forever);
-//! `device_aware_os=false` reproduces "OSC" (optimizer states pinned to
-//! CPU).
+//! * [`session::TrainingSession`] (`session.rs`) — the per-iteration
+//!   driver.  It owns the chunk manager, tracer, eviction policy
+//!   ([`policy`]), warm-up-guided prefetchers ([`prefetch`]), pinned
+//!   staging pool, adaptive lookahead controller and headroom ledger
+//!   ([`adaptive`]) — every *policy* decision of a training iteration.
+//! * [`ExecutionBackend`] (`backend.rs`) — where work is executed and
+//!   priced: `execute_moment`, demand/issued copies and collectives,
+//!   sync points, reclaim, and the cumulative work/backlog probes the
+//!   controller feeds on.  [`SimBackend`] wraps
+//!   [`crate::sim::StreamTimeline`] plus the cluster's calibrated cost
+//!   curves; `PjrtBackend` (feature `pjrt`) records measured wall time
+//!   for the real trainer.
+//! * [`Engine`] (this file) — the simulator driver: picks the chunk
+//!   size, builds the manager and the session over a [`SimBackend`],
+//!   replays warm-up + 2 steady iterations of the operator graph, and
+//!   assembles the [`EngineReport`].
 //!
-//! # The prefetch + overlap pipeline
-//!
-//! On top of the paper's placement machinery sits a warm-up-guided
-//! transfer pipeline (`prefetch`/`overlap` in [`OptimizationPlan`]):
-//!
-//! * **overlap** runs the iteration on a three-stream timeline
-//!   ([`crate::sim::StreamTimeline`]): compute, H2D copy and D2H copy.
-//!   Evictions and activation offload ride the async D2H stream; demand
-//!   fetches still block, but only the compute stream's *stall* —
-//!   `exposed_transfer_s` in the [`IterBreakdown`] — costs wall time,
-//!   while `overlapped_transfer_s` is hidden under compute.
-//! * **prefetch** walks the tracer's inverted moment lists
-//!   ([`prefetch::Prefetcher`]) with a lookahead window each moment and
-//!   stages upcoming chunks on the H2D stream ahead of use, guarded by
-//!   the forward-looking `chunkable_gpu` headroom budget and a Belady
-//!   victim guard (see `ChunkManager::prefetch_to`).  The optimizer
-//!   sweep is pipelined the same way in the other direction: while
-//!   group *k* updates on the CPU, group *k+1*'s grad chunk rides the
-//!   D2H stream home.  A staged chunk is *in flight* — never evicted,
-//!   only cancelled — until its first access waits out the copy.
-//! * **overlap_collectives** extends the same pipeline to the
-//!   data-parallel layer (ISSUE 2 tentpole): a fourth **collective
-//!   stream** carries all-gather/reduce-scatter, and a group-level
-//!   prefetcher ([`prefetch::GroupPrefetcher`], fed by the warm-up's
-//!   gather log) issues the all-gather for group *g+1*'s remote chunks
-//!   while group *g* computes (`group_lookahead` groups deep), with
-//!   group *g-1*'s reduce-scatter draining behind it.  Chunks being
-//!   filled by an in-flight gather are invisible to eviction and only
-//!   ever *cancelled* whole under memory pressure, with the collective's
-//!   time and bytes credited back — so total collective volume is
-//!   bit-for-bit the serial schedule's volume, only its placement on
-//!   the clock changes.
-//!
-//! * **pinned_buffers** (ISSUE 3 tentpole) prices the pipeline's host
-//!   copies honestly: a finite pool of chunk-sized pinned staging
-//!   buffers ([`crate::mem::PinnedPool`]) is leased per staged copy
-//!   (issue to completion).  Demand copies preempt (always the pinned
-//!   PCIe curve); prefetches and lookahead gathers that find the pool
-//!   dry wait until the next moment (the lookahead window throttles to
-//!   the pool-sized backlog); evictions and activation offload
-//!   downgrade to the pageable (~0.5x-peak) curve.  Pool size 0
-//!   disables the model: the single-curve timelines of PR 1/PR 2,
-//!   bit-for-bit.
-//!
-//! * **adaptive_lookahead** (ISSUE 4 tentpole) replaces both static
-//!   windows with a feedback controller
-//!   ([`adaptive::LookaheadController`]): the chunk window is sized
-//!   each moment from the EMA compute/H2D-transfer ratio, compressed by
-//!   the live H2D backlog and bounded by the free pinned buffers; the
-//!   group window from the collective/compute ratio on the fourth
-//!   stream.  The two prefetchers stop budgeting independently against
-//!   `min_chunkable_gpu` and draw from one negotiated
-//!   [`adaptive::HeadroomLedger`] (upcoming gathers earmark their bytes
-//!   before the chunk walk; demand traffic preempts both).  The static
-//!   `lookahead`/`group_lookahead` knobs become the caps the adaptive
-//!   windows never exceed.
-//!
-//! All switches default **off**: the serial path reproduces the
-//! pre-pipeline numbers exactly; the pipelined paths are ablation cells
-//! measured by `cargo bench -- prefetch_overlap collective_overlap
-//! pinned_pool adaptive_lookahead`.
+//! The multi-GPU behaviour follows Sec. 7; the ablation switches
+//! (paper Fig. 16) and the four pipeline layers stacked on top of the
+//! paper's placement machinery — prefetch+overlap (PR 1), the
+//! collective stream (PR 2), the pinned staging pool (PR 3), adaptive
+//! lookahead (PR 4) — are all selected by [`OptimizationPlan`] and
+//! documented in `engine/README.md`.  All switches default **off**:
+//! the serial path reproduces the pre-pipeline numbers exactly, and
+//! `SimBackend` reproduces the pre-split engine bit-for-bit (golden
+//! traces + `tests/session_equivalence.rs`).
 
 pub mod adaptive;
+pub mod backend;
+pub mod policy;
 pub mod prefetch;
 pub mod report;
-
-use std::collections::{BTreeSet, HashMap, HashSet};
+pub mod session;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::chunk::{ChunkId, ChunkKind, ChunkManager, ChunkRegistry,
-                   MoveKind};
+use crate::chunk::{ChunkManager, ChunkRegistry};
 use crate::config::{ClusterPreset, TrainTask};
-use crate::dp::{CollectiveCost, CollectivePipeline, CommGroups,
-                InFlightGather};
-use crate::evict::{BacklogAwareOpt, EvictionPolicy, FifoPolicy,
-                   LfuPolicy, LruPolicy, OptPolicy};
-use crate::mem::{Device, HeterogeneousSpace, PinnedLease, PinnedPool,
-                 DEFAULT_PINNED_BUFFERS};
-use crate::model::activation::{non_model_bytes, BASE_OVERHEAD};
-use crate::model::{ActivationPlan, OpGraph, OpKind};
-use crate::placement::{plan as placement_plan, PlacementPlan};
-use crate::sim::{CopyDir, CopyRoute, Phase, StreamTimeline};
-use crate::tensor::TensorState;
-use crate::tracer::{MemTracer, Moment, WARMUP_GPU_FRAC};
+use crate::mem::{Device, HeterogeneousSpace, DEFAULT_PINNED_BUFFERS};
+use crate::model::OpGraph;
+use crate::tracer::WARMUP_GPU_FRAC;
 
 pub use adaptive::{HeadroomLedger, LookaheadController, WindowInputs,
                    DEFAULT_ADAPTIVE_MAX_GROUP_LOOKAHEAD,
                    DEFAULT_ADAPTIVE_MAX_LOOKAHEAD};
+pub use backend::{ExecutionBackend, SimBackend};
+#[cfg(feature = "pjrt")]
+pub use backend::PjrtBackend;
 pub use prefetch::{GroupPrefetcher, Prefetcher, DEFAULT_GROUP_LOOKAHEAD,
                    DEFAULT_LOOKAHEAD};
 pub use report::{EngineReport, IterBreakdown};
+pub use session::{SimCost, StageOutcome, TrainingSession};
 
 /// Eviction policy selection (paper Sec. 8.3 + DBMS baselines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -246,100 +195,6 @@ impl OptimizationPlan {
     }
 }
 
-#[derive(Clone, Copy, Debug, PartialEq)]
-enum Stage {
-    Fwd,
-    Bwd,
-    Adam,
-}
-
-/// Timeline bookkeeping for one in-flight prefetch copy: when it lands,
-/// what to un-charge if it is cancelled before reaching the wire, which
-/// curve it was charged on, and the pinned staging buffer it holds.
-#[derive(Clone, Copy, Debug)]
-struct PendingCopy {
-    done: f64,
-    secs: f64,
-    dir: CopyDir,
-    phase: Phase,
-    route: CopyRoute,
-    lease: Option<PinnedLease>,
-}
-
-/// A pinned-buffer lease held by a non-prefetch async copy (eviction,
-/// activation offload).  Prefetch leases live in [`PendingCopy`] and
-/// gather leases in [`InFlightGather`]; these need the same (stream,
-/// completion) bookkeeping so queue compression after a cancelled
-/// prefetch can shift their release times with the frontier — otherwise
-/// the pool would look busier than the stream actually is.
-#[derive(Clone, Copy, Debug)]
-struct StreamLease {
-    lease: PinnedLease,
-    dir: CopyDir,
-    done: f64,
-}
-
-enum PolicySel {
-    Opt,
-    Lru(LruPolicy),
-    Fifo(FifoPolicy),
-    Lfu(LfuPolicy),
-}
-
-struct RunState {
-    mgr: ChunkManager,
-    tracer: MemTracer,
-    tl: StreamTimeline,
-    groups: CommGroups,
-    fp16_list: Vec<ChunkId>,
-    policy: PolicySel,
-    warmup: bool,
-    moment: Moment,
-    placement: PlacementPlan,
-    stage: Stage,
-    /// Inverted warm-up moment lists (built once after warm-up when the
-    /// prefetch switch is on).
-    prefetcher: Option<Prefetcher>,
-    /// In-flight prefetch copies on the timeline, by chunk.
-    inflight_done: HashMap<ChunkId, PendingCopy>,
-    /// Groups already gathered in the current phase.
-    gathered: HashSet<usize>,
-    /// Wire-volume accounting (Table 5).
-    allgather_bytes: u64,
-    reduce_scatter_bytes: u64,
-    allgather_time: f64,
-    reduce_scatter_time: f64,
-    /// Warm-up log of demand gathers: (moment, group), schedule order.
-    gather_log: Vec<(Moment, usize)>,
-    /// Group-gather schedule (built once after warm-up when the
-    /// collective-stream switch is on).
-    group_prefetcher: Option<GroupPrefetcher>,
-    /// Collective-stream pipeline: in-flight lookahead gathers and
-    /// draining reduce-scatters, by group.
-    coll: CollectivePipeline,
-    /// Pinned staging-buffer pool (capacity 0 = disabled: single-curve
-    /// charging, the pre-pool numbers bit-for-bit).
-    pool: PinnedPool,
-    /// Leases held by eviction/offload copies still queued or on the
-    /// wire (see [`StreamLease`]).  Pruned as they expire.
-    stream_leases: Vec<StreamLease>,
-    /// Lookahead gathers issued this iteration.
-    gather_prefetches: u64,
-    /// Lookahead gathers cancelled this iteration, counted per *group*
-    /// (the same unit as `gather_prefetches`; the manager's
-    /// `MoveStats::gather_cancels` counts reclaimed chunks).
-    gather_cancelled_groups: u64,
-    /// Feedback-driven window sizing (adaptive mode only; None keeps
-    /// the static windows bit-identical to PR 3).
-    ctl: Option<LookaheadController>,
-    /// Window telemetry for the measured iteration: (sum, ticks) of
-    /// the chunk and group windows actually used each moment.
-    chunk_win: (u64, u64),
-    group_win: (u64, u64),
-    /// Per-moment timeline snapshots (golden-trace tests).
-    trace: Option<Vec<String>>,
-}
-
 /// The engine: one (cluster, task, optimization plan) triple.
 pub struct Engine {
     pub cluster: ClusterPreset,
@@ -364,12 +219,6 @@ impl Engine {
     fn prefetch_enabled(&self) -> bool {
         // SP has no moment lists: the prefetcher is tracer-fed.
         self.opt.prefetch && self.opt.use_tracer
-    }
-
-    /// The collective stream is live: overlap timeline on, switch on,
-    /// and there is actually more than one process to talk to.
-    fn collectives_overlapped(&self) -> bool {
-        self.opt.overlap && self.opt.overlap_collectives && self.nproc() > 1
     }
 
     /// Pick the chunk size: task override or the paper-grid search
@@ -456,158 +305,34 @@ impl Engine {
         let space =
             HeterogeneousSpace::new(self.cluster.gpu_mem, cpu_share);
         let mgr = ChunkManager::new(reg, space);
-        let fp16_list = mgr.reg.list(ChunkKind::ParamFp16);
-        let n_chunks = mgr.reg.chunks.len();
-        let list_len = fp16_list.len();
 
-        let mut st = RunState {
-            mgr,
-            tracer: MemTracer::new(n_chunks),
-            tl: StreamTimeline::new(self.opt.overlap),
-            groups: CommGroups::new(list_len, nproc),
-            fp16_list,
-            policy: match self.opt.eviction {
-                EvictKind::Opt => PolicySel::Opt,
-                EvictKind::Lru => PolicySel::Lru(LruPolicy::default()),
-                EvictKind::Fifo => PolicySel::Fifo(FifoPolicy::default()),
-                EvictKind::Lfu => PolicySel::Lfu(LfuPolicy::default()),
-            },
-            warmup: true,
-            moment: 0,
-            placement: PlacementPlan {
-                os_groups_on_gpu: 0,
-                spilled_fp16_chunks: 0,
-                total_fp16_chunks: list_len,
-                embedding_on_cpu: true,
-            },
-            stage: Stage::Fwd,
-            prefetcher: None,
-            inflight_done: HashMap::new(),
-            gathered: HashSet::new(),
-            allgather_bytes: 0,
-            reduce_scatter_bytes: 0,
-            allgather_time: 0.0,
-            reduce_scatter_time: 0.0,
-            gather_log: Vec::new(),
-            group_prefetcher: None,
-            coll: CollectivePipeline::default(),
-            pool: {
-                let p = PinnedPool::new(self.opt.pinned_buffers as usize);
-                match self.opt.pinned_split {
-                    Some((h, d)) => p.with_split(h as usize, d as usize),
-                    None => p,
-                }
-            },
-            stream_leases: Vec::new(),
-            gather_prefetches: 0,
-            gather_cancelled_groups: 0,
-            ctl: None,
-            chunk_win: (0, 0),
-            group_win: (0, 0),
-            trace: if traced { Some(Vec::new()) } else { None },
-        };
-
+        let cost = SimCost { cluster: self.cluster, task: self.task };
+        let backend = SimBackend::new(self.opt.overlap, self.cluster.net,
+                                      nproc);
+        let mut s =
+            TrainingSession::new(self.opt, nproc, mgr, backend, traced);
         let graph = OpGraph::build(*m, self.task.batch_per_gpu);
 
         // ---- warm-up iteration (conservative 20% GPU, FIFO eviction).
-        if let Some(tr) = st.trace.as_mut() {
-            tr.push("== warmup ==".into());
-        }
-        self.iteration(&mut st, &graph).context("warm-up iteration")?;
-        st.tracer.finish_warmup();
-        st.warmup = false;
+        s.trace_mark("== warmup ==");
+        s.iteration(&cost, &graph).context("warm-up iteration")?;
 
-        // ---- placement from warm-up statistics.
-        // Without the tracer ("SP" plan) the chunkable space stays at
-        // the 20% warm-up grant forever, so the margin is computed
-        // against that grant — and eviction must fall back to chunk-list
-        // order (OPT's future-use moment lists ARE the tracer
-        // statistics, paper Sec. 8.1/8.3).
-        let (plan_gpu, plan_nm) = if self.opt.use_tracer {
-            (self.cluster.gpu_mem, st.tracer.peak_non_model())
-        } else {
-            st.policy = PolicySel::Fifo(FifoPolicy::default());
-            (
-                (self.cluster.gpu_mem as f64 * WARMUP_GPU_FRAC) as u64,
-                0,
-            )
-        };
-        st.placement = placement_plan(
-            plan_gpu,
-            plan_nm,
-            chunk_elems,
-            // Only the local share of fp16 chunks competes for this
-            // rank's GPU during FWD/BWD residency planning.
-            st.groups.owned_by(0).len(),
-            self.opt.device_aware_os,
-        );
-        if self.prefetch_enabled() {
-            st.prefetcher =
-                Some(Prefetcher::from_tracer(&st.tracer, n_chunks));
-        }
-        if self.collectives_overlapped() {
-            st.group_prefetcher = Some(GroupPrefetcher::from_log(
-                std::mem::take(&mut st.gather_log),
-            ));
-        }
-        // The adaptive controller sizes whatever prefetch lanes are
-        // live; with neither lane there is nothing to size and the
-        // static path stays untouched.
-        if self.opt.adaptive_lookahead
-            && (st.prefetcher.is_some() || st.group_prefetcher.is_some())
-        {
-            st.ctl = Some(LookaheadController::new(
-                self.opt.lookahead,
-                self.opt.group_lookahead,
-            ));
-        }
+        // ---- placement + prefetch schedules from warm-up statistics.
+        s.finish_warmup(&cost, chunk_elems, self.prefetch_enabled());
 
         // ---- steady state: 2 iterations, measure the last.
         let mut breakdown = IterBreakdown::default();
         let mut iter_time = 0.0f64;
         for it in 0..2 {
-            // Settle copies still in flight from the previous iteration:
-            // their payloads are already resident, and the fresh
-            // timeline starts at zero, so stale completion times must
-            // not leak across the boundary.  Gathers settle the same
-            // way: anything issued is consumed by its group's fetch
-            // within the iteration, but belt-and-braces.
-            while let Some(c) = st.mgr.pending_prefetch_on(Device::Gpu(0)) {
-                st.mgr.complete_prefetch(c);
-            }
-            for c in st.mgr.gathering_chunks() {
-                st.mgr.finish_gather(c);
-            }
-            st.coll.clear();
-            st.pool.clear();
-            st.stream_leases.clear();
-            st.inflight_done.clear();
-            st.tl.reset();
-            st.mgr.stats = Default::default();
-            st.allgather_bytes = 0;
-            st.reduce_scatter_bytes = 0;
-            st.allgather_time = 0.0;
-            st.reduce_scatter_time = 0.0;
-            st.gather_prefetches = 0;
-            st.gather_cancelled_groups = 0;
-            st.chunk_win = (0, 0);
-            st.group_win = (0, 0);
-            if let Some(c) = st.ctl.as_mut() {
-                // The timeline restarts at zero; the learned rates
-                // carry over (iterations are structurally identical).
-                c.iteration_boundary();
-            }
-            if let Some(tr) = st.trace.as_mut() {
-                tr.push(format!("== iter {it} =="));
-            }
-            self.iteration(&mut st, &graph)
+            s.begin_steady_iteration(it);
+            s.iteration(&cost, &graph)
                 .with_context(|| format!("steady iteration {it}"))?;
-            breakdown = IterBreakdown::from_timeline(&st.tl);
-            iter_time = st.tl.makespan();
+            breakdown = s.backend.breakdown();
+            iter_time = s.backend.makespan();
         }
 
         let iter_flops = m.iter_flops(self.task.batch_per_gpu);
-        let trace = st.trace.take();
+        let trace = s.trace.take();
         let report = EngineReport {
             system: "patrickstar".into(),
             model: m.name.into(),
@@ -617,1169 +342,38 @@ impl Engine {
             breakdown,
             iter_time_s: iter_time,
             tflops_per_gpu: iter_flops / iter_time / 1e12,
-            placement: st.placement,
-            move_stats: st.mgr.stats,
-            allgather_bytes: st.allgather_bytes,
-            reduce_scatter_bytes: st.reduce_scatter_bytes,
-            allgather_bw: if st.allgather_time > 0.0 {
-                st.allgather_bytes as f64 / st.allgather_time
+            placement: s.placement,
+            move_stats: s.mgr.stats,
+            allgather_bytes: s.allgather_bytes,
+            reduce_scatter_bytes: s.reduce_scatter_bytes,
+            allgather_bw: if s.allgather_time > 0.0 {
+                s.allgather_bytes as f64 / s.allgather_time
             } else {
                 0.0
             },
-            reduce_scatter_bw: if st.reduce_scatter_time > 0.0 {
-                st.reduce_scatter_bytes as f64 / st.reduce_scatter_time
+            reduce_scatter_bw: if s.reduce_scatter_time > 0.0 {
+                s.reduce_scatter_bytes as f64 / s.reduce_scatter_time
             } else {
                 0.0
             },
-            gather_prefetches: st.gather_prefetches,
-            gather_cancels: st.gather_cancelled_groups,
-            adaptive_lookahead: st.ctl.is_some(),
-            avg_chunk_lookahead: if st.chunk_win.1 > 0 {
-                st.chunk_win.0 as f64 / st.chunk_win.1 as f64
+            gather_prefetches: s.gather_prefetches,
+            gather_cancels: s.gather_cancelled_groups,
+            adaptive_lookahead: s.ctl.is_some(),
+            avg_chunk_lookahead: if s.chunk_win.1 > 0 {
+                s.chunk_win.0 as f64 / s.chunk_win.1 as f64
             } else {
                 0.0
             },
-            avg_group_lookahead: if st.group_win.1 > 0 {
-                st.group_win.0 as f64 / st.group_win.1 as f64
+            avg_group_lookahead: if s.group_win.1 > 0 {
+                s.group_win.0 as f64 / s.group_win.1 as f64
             } else {
                 0.0
             },
-            gpu_peak: st.mgr.space.dev(Device::Gpu(0)).peak(),
-            cpu_peak: st.mgr.space.dev(Device::Cpu).peak(),
-            non_model_peak: st.tracer.peak_non_model(),
+            gpu_peak: s.mgr.space.dev(Device::Gpu(0)).peak(),
+            cpu_peak: s.mgr.space.dev(Device::Cpu).peak(),
+            non_model_peak: s.tracer.peak_non_model(),
         };
         Ok((report, trace))
-    }
-
-    // ------------------------------------------------------------------
-    // One iteration: FWD -> BWD -> ADAM.
-    // ------------------------------------------------------------------
-
-    fn iteration(&self, st: &mut RunState, graph: &OpGraph) -> Result<()> {
-        st.moment = 0;
-        let n_layer_ops = 7usize;
-        let layer_of = |op_idx: usize| -> u32 {
-            // ops: embed, L x 7, lnf, lm_head
-            if op_idx == 0 {
-                0
-            } else {
-                (((op_idx - 1) / n_layer_ops) as u32).min(
-                    graph.spec.layers.saturating_sub(1),
-                )
-            }
-        };
-
-        // ---- FWD
-        st.stage = Stage::Fwd;
-        st.gathered.clear();
-        for (i, op) in graph.ops.iter().enumerate() {
-            let live = layer_of(i) + 1;
-            self.moment_tick(st, live)?;
-            self.exec_op(st, graph, i, op.params.clone())?;
-        }
-        st.mgr.reset_after_fwd(ChunkKind::ParamFp16)?;
-
-        // ---- BWD (reverse op order)
-        st.stage = Stage::Bwd;
-        st.gathered.clear();
-        for (i, op) in graph.ops.iter().enumerate().rev() {
-            let live = layer_of(i) + 1;
-            self.moment_tick(st, live)?;
-            self.exec_op(st, graph, i, op.params.clone())?;
-        }
-
-        // ---- ADAM (rank-local chunk groups)
-        st.stage = Stage::Adam;
-        let local = st.groups.owned_by(0);
-        for (li, pos) in local.iter().enumerate() {
-            self.moment_tick(st, 0)?;
-            // Pipeline the optimizer sweep: while group `li` computes,
-            // the next group's grad chunk rides the D2H stream home.
-            if !st.warmup && st.prefetcher.is_some() {
-                self.stage_next_adam_group(st, &local, li)?;
-            }
-            self.exec_adam(st, *pos, li)?;
-        }
-        // Embedding ADAM runs on CPU over its own (unmanaged) buffers.
-        let emb_os_bytes = 16 * graph.spec.embedding_params()
-            / self.nproc() as u64;
-        if !st.warmup {
-            let cpu = self.shared_cpu();
-            st.tl.charge(Phase::Adam, cpu.adam_time(emb_os_bytes));
-        }
-        // The optimizer step is not done until every reduce-scatter has
-        // drained off the collective stream (exec_adam waits per group;
-        // this barrier catches any group whose drain no consumer hit).
-        if !st.warmup && self.collectives_overlapped() {
-            for t in st.coll.drain_rs() {
-                st.tl.wait_collective(t);
-            }
-        }
-        Ok(())
-    }
-
-    /// Advance one moment: record/evaluate non-model footprint, re-cap the
-    /// chunkable GPU space, evict to fit, stage upcoming chunks.
-    fn moment_tick(&self, st: &mut RunState, live_layers: u32) -> Result<()> {
-        let nm = if live_layers == 0 {
-            BASE_OVERHEAD
-        } else {
-            non_model_bytes(
-                &self.task.model,
-                self.task.batch_per_gpu,
-                self.task.plan,
-                live_layers,
-            )
-        };
-        let cap = if st.warmup || !self.opt.use_tracer {
-            (self.cluster.gpu_mem as f64 * WARMUP_GPU_FRAC) as u64
-        } else {
-            self.cluster.gpu_mem.saturating_sub(nm)
-        };
-        if st.warmup {
-            let m = st.tracer.record_moment(nm);
-            debug_assert_eq!(m, st.moment);
-        }
-        // A landed lookahead gather turns its chunks back into ordinary
-        // residents *before* the cap shrink, so pressure prefers normal
-        // eviction over cancelling still-queued gathers.
-        if !st.warmup && self.collectives_overlapped() {
-            self.complete_landed_gathers(st);
-        }
-        // Feedback first: the controller differences the timeline's
-        // per-stream work accumulators against the previous tick, so
-        // this tick's window sizes reflect everything charged up to the
-        // previous operator (st.ctl is only ever Some in adaptive mode,
-        // after warm-up).
-        if let Some(c) = st.ctl.as_mut() {
-            c.observe(&st.tl);
-        }
-        st.mgr.space.dev_mut(Device::Gpu(0)).set_capacity(cap);
-        // Cap-shrink eviction.  In adaptive mode with the OPT policy a
-        // deep D2H backlog turns on the overlap-aware tie-break: a
-        // near-equal victim that can be *dropped* (all tensors FREE)
-        // beats one whose spill would queue behind the backlog.  Margin
-        // 0 (static mode, idle engine, non-OPT policy) is plain OPT.
-        let evict_margin = match (&st.ctl, &st.policy) {
-            (Some(c), PolicySel::Opt) => {
-                c.evict_margin(st.tl.copy_backlog(CopyDir::D2H))
-            }
-            _ => 0,
-        };
-        if evict_margin > 0 {
-            let droppable: HashSet<ChunkId> = st
-                .mgr
-                .reg
-                .chunks
-                .iter()
-                .filter(|c| c.device == Some(Device::Gpu(0)))
-                .map(|c| c.id)
-                .filter(|&id| st.mgr.all_free(id))
-                .collect();
-            let RunState { mgr, tracer, moment, .. } = st;
-            let mut pol = BacklogAwareOpt {
-                tracer,
-                droppable,
-                margin: evict_margin,
-            };
-            mgr.evict_to_fit(Device::Gpu(0), &mut pol, *moment)?;
-        } else {
-            let RunState { mgr, tracer, policy, moment, .. } = st;
-            with_policy(policy, tracer, |pol| {
-                mgr.evict_to_fit(Device::Gpu(0), pol, *moment)
-            })?;
-        }
-        self.charge_moves(st)?;
-        // Window sizing + the negotiated headroom ledger.  Static mode:
-        // the configured knobs and a ledger with no earmarks — whose
-        // arithmetic is exactly the PR 3 budgets, bit-for-bit.
-        let inputs = WindowInputs {
-            pool_free: if st.pool.enabled() {
-                Some(st.pool.available_at(st.tl.now(), CopyDir::H2D)
-                     as u32)
-            } else {
-                None
-            },
-            h2d_backlog_secs: st.tl.copy_backlog(CopyDir::H2D),
-            coll_backlog_secs: st.tl.collective_backlog(),
-        };
-        let chunk_la = match &st.ctl {
-            Some(c) => c.chunk_window(inputs),
-            None => self.opt.lookahead,
-        };
-        let group_la = match &st.ctl {
-            Some(c) => c.group_window(inputs),
-            None => self.opt.group_lookahead,
-        };
-        let mut ledger = HeadroomLedger::new(
-            st.moment,
-            self.cluster.gpu_mem,
-            self.opt.use_tracer,
-        );
-        if st.ctl.is_some() && st.group_prefetcher.is_some() {
-            // Negotiation: reserve the upcoming all-gathers' bytes
-            // before the chunk walk starts, so a deep chunk window
-            // cannot starve the collective lane of headroom.  (Demand
-            // traffic preempts both — it never consults the ledger.)
-            self.earmark_upcoming_gathers(st, group_la, &mut ledger);
-        }
-        if !st.warmup && st.prefetcher.is_some() {
-            st.chunk_win.0 += chunk_la as u64;
-            st.chunk_win.1 += 1;
-            self.issue_prefetches(st, chunk_la, &ledger)?;
-            self.charge_moves(st)?;
-        }
-        if !st.warmup && st.group_prefetcher.is_some() {
-            st.group_win.0 += group_la as u64;
-            st.group_win.1 += 1;
-            self.issue_group_gathers(st, group_la, &mut ledger)?;
-            self.charge_moves(st)?;
-        }
-        st.moment += 1;
-        if let Some(tr) = st.trace.as_mut() {
-            tr.push(format!("m{:05} {}", st.moment - 1, st.tl.snapshot()));
-        }
-        Ok(())
-    }
-
-    /// A gather whose collective has completed by the current compute
-    /// time holds real data: its chunks become normal resident chunks
-    /// (evictable under the usual rules — spilling landed data is
-    /// honest, spilling a half-arrived payload is not).  The in-flight
-    /// entry itself stays until the demand fetch consumes it, at zero
-    /// stall.
-    fn complete_landed_gathers(&self, st: &mut RunState) {
-        let now_t = st.tl.now();
-        for g in st.coll.landed(now_t) {
-            let members: Vec<usize> = st.groups.members(g).collect();
-            for p in members {
-                st.mgr.finish_gather(st.fp16_list[p]);
-            }
-        }
-    }
-
-    /// Record the byte needs of the next `k` scheduled group gathers as
-    /// ledger earmarks (adaptive mode).  Mirrors the walk of
-    /// [`Engine::issue_group_gathers`] up to (not including) its budget
-    /// and pool checks, so exactly the groups that *could* issue this
-    /// tick or soon after hold reservations against the chunk walk.
-    fn earmark_upcoming_gathers(
-        &self,
-        st: &RunState,
-        k: u32,
-        ledger: &mut HeadroomLedger,
-    ) {
-        let upcoming = match &st.group_prefetcher {
-            Some(gp) => gp.upcoming(st.moment, k as usize),
-            None => return,
-        };
-        let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
-        for (_, g) in upcoming {
-            if st.coll.gather_issued(g) {
-                continue; // already staged; its bytes show in used()
-            }
-            if st.gathered.contains(&g) {
-                break; // schedule-order FIFO, as in the issue walk
-            }
-            let absent = st
-                .groups
-                .members(g)
-                .map(|p| st.fp16_list[p])
-                .filter(|&c| st.mgr.chunk(c).device.is_none())
-                .count() as u64;
-            if absent == 0 {
-                break;
-            }
-            ledger.earmark_group(g, absent * chunk_bytes);
-        }
-    }
-
-    /// Issue all-gathers for the next `k` groups of the warm-up gather
-    /// schedule onto the collective stream, drawing headroom from the
-    /// negotiated ledger (statically `k = --group-lookahead`;
-    /// adaptively the controller's collective/compute window).  Issue
-    /// order strictly follows the schedule: if the next group cannot be
-    /// staged (no absent members yet, or no headroom), later groups
-    /// must not jump the queue — a demand gather must never find a
-    /// less-urgent gather ahead of it on the stream.
-    fn issue_group_gathers(
-        &self,
-        st: &mut RunState,
-        k: u32,
-        ledger: &mut HeadroomLedger,
-    ) -> Result<()> {
-        let k = k as usize;
-        if k == 0 {
-            return Ok(());
-        }
-        let now = st.moment;
-        let upcoming = match &st.group_prefetcher {
-            Some(gp) => gp.upcoming(now, k),
-            None => return Ok(()),
-        };
-        let cc = CollectiveCost::new(self.cluster.net.nvlink, self.nproc());
-        for (use_m, g) in upcoming {
-            if st.coll.gather_issued(g) {
-                continue; // already on the stream, in schedule order
-            }
-            if st.gathered.contains(&g) {
-                break; // still held from the previous stage; retry later
-            }
-            let members: Vec<usize> = st.groups.members(g).collect();
-            let absent: Vec<ChunkId> = members
-                .iter()
-                .map(|&p| st.fp16_list[p])
-                .filter(|&c| st.mgr.chunk(c).device.is_none())
-                .collect();
-            if absent.is_empty() {
-                break; // nothing to gather (yet); keep FIFO order
-            }
-            let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
-            let new_bytes = absent.len() as u64 * chunk_bytes;
-            // Headroom budget from the ledger: the tightest chunkable
-            // cap between now and the use moment, minus the *other*
-            // groups' reservations (this group's own earmark is the
-            // headroom being spent), so staging never triggers the
-            // evictions it is hiding from.
-            let budget = ledger.gather_budget(&st.tracer, use_m, g);
-            let gpu = st.mgr.space.dev(Device::Gpu(0));
-            if gpu.used() + new_bytes > budget
-                || !gpu.can_fit(new_bytes)
-            {
-                break; // no headroom; retry next moment
-            }
-            // A lookahead gather stages its local shard through one
-            // pinned buffer held for the collective's lifetime; if
-            // every buffer is leased out, the gather waits its turn
-            // (FIFO: later groups must not jump the queue either).
-            let lease = if st.pool.enabled() {
-                match st.pool.try_acquire(st.tl.now(), CopyDir::H2D) {
-                    Some(l) => Some(l),
-                    None => {
-                        st.mgr.stats.pinned_waits += 1;
-                        break; // retry next moment
-                    }
-                }
-            } else {
-                None
-            };
-            for &c in &absent {
-                st.mgr.alloc_payload(c, Device::Gpu(0))?;
-                st.mgr.begin_gather(c)?;
-                // Remote payloads arrive in HOLD (as in fetch_group).
-                st.mgr.retag_tensors(
-                    c, TensorState::Free, TensorState::Hold)?;
-            }
-            let op = cc.allgather_op(chunk_bytes);
-            let done = st.tl.async_collective(Phase::AllGather, op.secs);
-            if let Some(l) = lease {
-                st.pool.set_release(l, done);
-            }
-            st.allgather_time += op.secs;
-            st.allgather_bytes += op.bytes;
-            st.coll.issue_gather(
-                g,
-                InFlightGather {
-                    done,
-                    secs: op.secs,
-                    bytes: op.bytes,
-                    use_moment: use_m,
-                    lease,
-                },
-            );
-            st.gather_prefetches += 1;
-            // The reservation is spent: the staged bytes now show in
-            // the device's used(), so keeping the earmark would charge
-            // the remaining groups twice.
-            ledger.consume_group(g);
-        }
-        Ok(())
-    }
-
-    /// Walk the lookahead window and stage CPU-resident chunks with an
-    /// upcoming GPU use onto the H2D stream (statically `lookahead =
-    /// --lookahead`; adaptively the controller's ratio-sized,
-    /// backlog-compressed, pool-bounded window).
-    fn issue_prefetches(
-        &self,
-        st: &mut RunState,
-        lookahead: u32,
-        ledger: &HeadroomLedger,
-    ) -> Result<()> {
-        let now = st.moment;
-        let window = match &st.prefetcher {
-            Some(pf) => pf.window(now, lookahead),
-            None => return Ok(()),
-        };
-        // Staging-capacity budget (pool enabled only): each prefetch
-        // issued this tick will lease one pinned buffer when its copy is
-        // charged; once the free H2D buffers are spoken for, the rest of
-        // the window waits for the next moment — the effective lookahead
-        // is throttled to the pool-sized backlog.
-        let mut pool_budget = if st.pool.enabled() {
-            Some(st.pool.available_at(st.tl.now(), CopyDir::H2D))
-        } else {
-            None
-        };
-        for (use_moment, c) in window {
-            if st.mgr.chunk(c).device != Some(Device::Cpu) {
-                continue; // resident, in flight, or released
-            }
-            if pool_budget == Some(0) {
-                st.mgr.stats.pinned_waits += 1;
-                break; // no staging buffer free; retry next moment
-            }
-            // Headroom budget from the ledger: staying under the
-            // tightest chunkable cap between now and the use moment
-            // (minus any bytes earmarked for the collective lane)
-            // guarantees the staged bytes never cause a cap-shrink
-            // eviction of their own nor starve an imminent all-gather.
-            let limit = ledger.chunk_limit(&st.tracer, use_moment);
-            let RunState { mgr, tracer, policy, .. } = st;
-            let issued = with_policy(policy, tracer, |pol| {
-                mgr.prefetch_to(c, Device::Gpu(0), limit, pol, now, &|v| {
-                    // Belady guard: spill only chunks OPT would spill at
-                    // the use moment anyway — next use farther than the
-                    // prefetched chunk's own use.
-                    match tracer.next_use(v, now) {
-                        None => true,
-                        Some(next) => next > use_moment,
-                    }
-                })
-            })?;
-            if issued {
-                if let Some(b) = pool_budget.as_mut() {
-                    *b -= 1;
-                }
-            }
-        }
-        Ok(())
-    }
-
-    /// The ADAM-bound leg of the pipeline: stage the *next* local
-    /// group's fp16 (grad) chunk onto the CPU over the async D2H stream
-    /// while the current group's update computes.  Margin groups (ADAM
-    /// on GPU) need no staging — their chunks are already resident.
-    /// Conservative by construction: only free CPU space is used (no
-    /// evictions for staging), so the transfer set matches the serial
-    /// schedule exactly, just earlier and off the critical path.
-    fn stage_next_adam_group(
-        &self,
-        st: &mut RunState,
-        local: &[usize],
-        li: usize,
-    ) -> Result<()> {
-        let next = li + 1;
-        if next >= local.len() {
-            return Ok(());
-        }
-        let next_on_gpu = self.opt.device_aware_os
-            && next < st.placement.os_groups_on_gpu;
-        if next_on_gpu {
-            return Ok(());
-        }
-        let c = st.fp16_list[local[next]];
-        if st.mgr.chunk(c).device != Some(Device::Gpu(0)) {
-            return Ok(()); // already home (or released)
-        }
-        // The D2H staging leg competes for the pinned pool's D2H
-        // sub-pool: with no buffer free, the grad chunk waits and rides
-        // home on the demand path instead.
-        if st.pool.enabled()
-            && st.pool.available_at(st.tl.now(), CopyDir::D2H) == 0
-        {
-            st.mgr.stats.pinned_waits += 1;
-            return Ok(());
-        }
-        let limit = st.mgr.space.dev(Device::Cpu).capacity;
-        let now = st.moment.saturating_sub(1);
-        let RunState { mgr, tracer, policy, .. } = st;
-        with_policy(policy, tracer, |pol| {
-            mgr.prefetch_to(c, Device::Cpu, limit, pol, now, &|_| false)
-        })?;
-        self.charge_adam_moves(st)?;
-        Ok(())
-    }
-
-    /// If `chunk` has an in-flight prefetch, block the compute stream
-    /// until the copy lands and mark it consumed.
-    fn wait_chunk(&self, st: &mut RunState, chunk: ChunkId) {
-        if st.mgr.is_inflight(chunk) {
-            if let Some(pc) = st.inflight_done.get(&chunk).copied() {
-                st.tl.wait_until(pc.done);
-            }
-            st.mgr.complete_prefetch(chunk);
-        }
-        st.inflight_done.remove(&chunk);
-    }
-
-    /// Chunk owning the `idx`-th tensor of `kind`.
-    fn chunk_of(&self, st: &RunState, kind: ChunkKind, idx: usize)
-        -> ChunkId {
-        let ti = st.mgr.reg.tensor_index(kind, idx);
-        ChunkId(st.mgr.reg.tensors[ti].chunk as u32)
-    }
-
-    /// Execute one operator at the current moment (stage-dependent).
-    fn exec_op(
-        &self,
-        st: &mut RunState,
-        graph: &OpGraph,
-        op_idx: usize,
-        params: Vec<usize>,
-    ) -> Result<()> {
-        let op = &graph.ops[op_idx];
-        let now = st.moment.saturating_sub(1);
-
-        // Embedding ops: CPU lookup + activation traffic; LM head GEMM on
-        // GPU with the fp16 embedding streamed up (Sec. 8.2).
-        if op.kind == OpKind::Embedding {
-            if !st.warmup {
-                let cpu = self.shared_cpu();
-                let m = &graph.spec;
-                let act_bytes = 2 * self.task.batch_per_gpu * m.seq * m.hidden;
-                let pcie = self.cluster.net.pcie;
-                if op.name == "embed" {
-                    st.tl.charge(
-                        Phase::FwdBwd,
-                        cpu.op_time(OpKind::Embedding, op.fwd_flops),
-                    );
-                    let (phase, dir) = if st.stage == Stage::Fwd {
-                        (Phase::CpuToGpu, CopyDir::H2D)
-                    } else {
-                        (Phase::GpuToCpu, CopyDir::D2H)
-                    };
-                    st.tl.demand_copy(
-                        phase, pcie.transfer_time(act_bytes), dir, 0.0);
-                } else {
-                    // lm_head: GEMM on GPU; wte fp16 up in FWD, its grad
-                    // down in BWD.
-                    let gpu = self.cluster.gpu;
-                    let mult = self.bwd_mult(st.stage);
-                    st.tl.charge(
-                        Phase::FwdBwd,
-                        gpu.op_time(OpKind::ComputeIntensive,
-                                    mult * op.fwd_flops),
-                    );
-                    let wte_bytes = 2 * m.vocab * m.hidden;
-                    let (phase, dir) = if st.stage == Stage::Fwd {
-                        (Phase::CpuToGpu, CopyDir::H2D)
-                    } else {
-                        (Phase::GpuToCpu, CopyDir::D2H)
-                    };
-                    st.tl.demand_copy(
-                        phase, pcie.transfer_time(wte_bytes), dir, 0.0);
-                }
-            }
-            return Ok(());
-        }
-
-        // Distributed: fetch the communication groups of every param.
-        // BTreeSet: group order must be deterministic — HashSet
-        // iteration order varies per process, which would make the
-        // multi-GPU stream timeline (and the golden traces locked on
-        // it) run-to-run nondeterministic.
-        if self.nproc() > 1 {
-            let positions: HashSet<usize> = params
-                .iter()
-                .map(|&t| {
-                    let ti = st.mgr.reg.tensor_index(ChunkKind::ParamFp16, t);
-                    st.mgr.reg.chunks[st.mgr.reg.tensors[ti].chunk]
-                        .list_pos as usize
-                })
-                .collect();
-            let groups: BTreeSet<usize> =
-                positions.iter().map(|&p| st.groups.group_of(p)).collect();
-            for g in groups {
-                self.fetch_group(st, g, now)?;
-            }
-        }
-
-        // Access parameters (Algorithm 1), run the op, release
-        // (Algorithm 2).  A prefetched chunk's copy is waited out on the
-        // timeline before the access consumes it.
-        for &t in &params {
-            let c = self.chunk_of(st, ChunkKind::ParamFp16, t);
-            self.wait_chunk(st, c);
-            let RunState { mgr, tracer, policy, .. } = st;
-            with_policy(policy, tracer, |pol| {
-                mgr.access_tensor(ChunkKind::ParamFp16, t, Device::Gpu(0),
-                                  pol, now)
-            })?;
-            if st.warmup {
-                st.tracer.record_chunk_use_at(c, now, true);
-            }
-        }
-        self.charge_moves(st)?;
-
-        if !st.warmup {
-            let gpu = self.cluster.gpu;
-            let mult = self.bwd_mult(st.stage);
-            st.tl.charge(Phase::FwdBwd, gpu.op_time(op.kind,
-                                                    mult * op.fwd_flops));
-            // Activation offload traffic (ckpt+offload): one boundary per
-            // layer crosses PCIe each way; charge at the layer's last op.
-            // Down in FWD (async: nothing waits for it), up in BWD (the
-            // boundary op needs it: demand).
-            if self.task.plan == ActivationPlan::CheckpointingOffload
-                && op.name.ends_with(".fc2")
-            {
-                let m = &graph.spec;
-                let bytes = 2 * self.task.batch_per_gpu * m.seq * m.hidden;
-                if st.stage == Stage::Fwd {
-                    // Offload cannot wait for a buffer (the boundary is
-                    // leaving the GPU now): pinned if one is free,
-                    // pageable otherwise.
-                    let (_, done, _, lease) = self.charge_async_routed(
-                        st, Phase::ActOffload, CopyDir::D2H, 0.0, bytes);
-                    if let Some(l) = lease {
-                        st.stream_leases.push(StreamLease {
-                            lease: l,
-                            dir: CopyDir::D2H,
-                            done,
-                        });
-                    }
-                } else {
-                    // Demand reload: preempts the pool, pinned rate.
-                    let t = self.cluster.net.pcie.transfer_time(bytes);
-                    st.tl.demand_copy(Phase::ActOffload, t, CopyDir::H2D, 0.0);
-                }
-            }
-        }
-
-        let target = if st.stage == Stage::Fwd {
-            TensorState::HoldAfterFwd
-        } else {
-            TensorState::HoldAfterBwd
-        };
-        for &t in &params {
-            st.mgr.release_tensor(ChunkKind::ParamFp16, t, target)?;
-        }
-
-        // Distributed: release/reduce groups that completed this stage
-        // (deterministic order, as above).
-        if self.nproc() > 1 {
-            let positions: HashSet<usize> = params
-                .iter()
-                .map(|&t| {
-                    let ti = st.mgr.reg.tensor_index(ChunkKind::ParamFp16, t);
-                    st.mgr.reg.chunks[st.mgr.reg.tensors[ti].chunk]
-                        .list_pos as usize
-                })
-                .collect();
-            let groups: BTreeSet<usize> =
-                positions.iter().map(|&p| st.groups.group_of(p)).collect();
-            for g in groups {
-                self.release_group(st, g, target)?;
-            }
-        }
-        Ok(())
-    }
-
-    /// FetchRemoteChunks (Algorithm 1, lines 1–20): all-gather the group
-    /// if any member tensor is FREE.
-    fn fetch_group(&self, st: &mut RunState, g: usize, now: Moment)
-        -> Result<()> {
-        if st.gathered.contains(&g) {
-            return Ok(());
-        }
-        // Consume an in-flight lookahead gather: block only for
-        // whatever part of the collective compute hasn't already hidden.
-        if let Some(gi) = st.coll.take_gather(g) {
-            st.tl.wait_collective(gi.done);
-            for p in st.groups.members(g) {
-                st.mgr.finish_gather(st.fp16_list[p]);
-            }
-            st.gathered.insert(g);
-            return Ok(());
-        }
-        let members: Vec<usize> = st.groups.members(g).collect();
-        // Trigger only when some member chunk is absent (paper line 5:
-        // a FREE tensor exists).
-        let any_free = members.iter().any(|&p| {
-            let c = st.fp16_list[p];
-            st.mgr.chunk(c).device.is_none()
-        });
-        if !any_free {
-            st.gathered.insert(g);
-            return Ok(());
-        }
-        if st.warmup {
-            // The gather log *is* the steady-state gather schedule
-            // (iterations are structurally identical) — the group
-            // prefetcher is built from it after warm-up.
-            st.gather_log.push((now, g));
-        }
-        let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
-        for &p in &members {
-            let c = st.fp16_list[p];
-            self.wait_chunk(st, c);
-            let RunState { mgr, tracer, policy, .. } = st;
-            with_policy(policy, tracer, |pol| {
-                mgr.ensure_on(c, Device::Gpu(0), pol, now)
-            })?;
-            st.mgr.pin(c);
-            // Remote payloads arrive in HOLD.
-            st.mgr.retag_tensors(c, TensorState::Free, TensorState::Hold)?;
-            if st.warmup {
-                st.tracer.record_chunk_use_at(c, now, true);
-            }
-        }
-        if !st.warmup {
-            let cc = CollectiveCost::new(self.cluster.net.nvlink,
-                                         self.nproc());
-            let op = cc.allgather_op(chunk_bytes);
-            if self.collectives_overlapped() {
-                // Demand gather on the collective stream: compute
-                // stalls for queueing delay + wire time.
-                st.tl.demand_collective(Phase::AllGather, op.secs);
-            } else {
-                st.tl.charge(Phase::AllGather, op.secs);
-            }
-            st.allgather_time += op.secs;
-            st.allgather_bytes += op.bytes;
-        }
-        for &p in &members {
-            st.mgr.unpin(st.fp16_list[p]);
-        }
-        self.charge_moves(st)?;
-        st.gathered.insert(g);
-        Ok(())
-    }
-
-    /// ReleaseRemoteChunk (Algorithm 2, lines 1–30).
-    fn release_group(
-        &self,
-        st: &mut RunState,
-        g: usize,
-        target: TensorState,
-    ) -> Result<()> {
-        let members: Vec<usize> = st.groups.members(g).collect();
-        // All tensors of all member chunks must have reached `target`.
-        let done = members.iter().all(|&p| {
-            let c = st.fp16_list[p];
-            st.mgr.chunk(c).tensors.iter().all(|t| {
-                st.mgr.reg.tensors[t.0 as usize].state == target
-            })
-        });
-        if !done {
-            return Ok(());
-        }
-        if target == TensorState::HoldAfterBwd && !st.warmup {
-            // Reduce-scatter of the group's grad chunks (is_allreduce).
-            let chunk_bytes = st.mgr.chunk(st.fp16_list[0]).bytes();
-            let cc =
-                CollectiveCost::new(self.cluster.net.nvlink, self.nproc());
-            let op = cc.reduce_scatter_op(chunk_bytes);
-            if self.collectives_overlapped() {
-                // Drain behind compute (and behind queued gathers);
-                // ADAM waits it out per group.
-                let done =
-                    st.tl.async_collective(Phase::ReduceScatter, op.secs);
-                st.coll.set_rs_done(g, done);
-            } else {
-                st.tl.charge(Phase::ReduceScatter, op.secs);
-            }
-            st.reduce_scatter_time += op.secs;
-            st.reduce_scatter_bytes += op.bytes;
-        }
-        // Release remote payloads; tensors -> FREE.
-        for &p in &members {
-            if st.groups.owner_of(p) == 0 {
-                continue; // local chunk keeps its payload
-            }
-            let c = st.fp16_list[p];
-            let chunk_tensors = st.mgr.chunk(c).tensors.clone();
-            for t in chunk_tensors {
-                st.mgr.reg.tensors[t.0 as usize]
-                    .set_state(TensorState::Free)
-                    .map_err(|e| anyhow!(e))?;
-            }
-            if st.mgr.chunk(c).device.is_some() {
-                st.mgr.release_payload(c)?;
-            }
-        }
-        st.gathered.remove(&g);
-        Ok(())
-    }
-
-    /// ADAM over one local chunk group (Sec. 6.2 last paragraph + 8.2).
-    fn exec_adam(
-        &self,
-        st: &mut RunState,
-        pos: usize,
-        local_index: usize,
-    ) -> Result<()> {
-        let now = st.moment.saturating_sub(1);
-        let fp16 = st.fp16_list[pos];
-        // The group's averaged gradient must be home before the update:
-        // wait out whatever part of its reduce-scatter hasn't drained.
-        if !st.warmup && self.collectives_overlapped() {
-            let g = st.groups.group_of(pos);
-            if let Some(t) = st.coll.take_rs_done(g) {
-                st.tl.wait_collective(t);
-            }
-        }
-        let os = st.mgr.reg.os_chunks_for(fp16);
-        let on_gpu = !st.warmup
-            && self.opt.device_aware_os
-            && local_index < st.placement.os_groups_on_gpu;
-        let device = if on_gpu { Device::Gpu(0) } else { Device::Cpu };
-
-        // Bring the grad (fp16 chunk) and the OS chunks to the ADAM device.
-        for c in std::iter::once(fp16).chain(os) {
-            self.wait_chunk(st, c);
-            let RunState { mgr, tracer, policy, .. } = st;
-            with_policy(policy, tracer, |pol| {
-                mgr.ensure_on(c, device, pol, now)
-            })?;
-            if st.warmup {
-                st.tracer.record_chunk_use_at(c, now, device.is_gpu());
-            }
-        }
-        // OS tensors -> COMPUTE -> HOLD; fp16 tensors -> HOLD (updated
-        // params overwrite the grads in place, Fig. 6 reversed).
-        let n_tensors = st.mgr.chunk(fp16).tensors.len();
-        for kind in [ChunkKind::ParamFp32, ChunkKind::Momentum,
-                     ChunkKind::Variance] {
-            for i in 0..n_tensors {
-                let t = st.mgr.chunk(fp16).tensors[i];
-                let idx = t.0 as usize % st.mgr.reg.n_model_tensors;
-                let RunState { mgr, tracer, policy, .. } = st;
-                with_policy(policy, tracer, |pol| {
-                    mgr.access_tensor(kind, idx, device, pol, now)
-                })?;
-                st.mgr.release_tensor(kind, idx, TensorState::Hold)?;
-            }
-        }
-        for i in 0..n_tensors {
-            let t = st.mgr.chunk(fp16).tensors[i];
-            let idx = t.0 as usize % st.mgr.reg.n_model_tensors;
-            let ti = st.mgr.reg.tensor_index(ChunkKind::ParamFp16, idx);
-            let s = st.mgr.reg.tensors[ti].state;
-            if s.is_hold_like() {
-                st.mgr.reg.tensors[ti]
-                    .set_state(TensorState::Hold)
-                    .map_err(|e| anyhow!(e))?;
-            }
-        }
-
-        if !st.warmup {
-            let chunk_elems = st.mgr.reg.chunk_elems;
-            let prof = if on_gpu { self.cluster.gpu } else {
-                self.shared_cpu()
-            };
-            // grad fp16 -> fp32 conversion + fused update over
-            // p32/m/v (+p16 writeback): ~16 B/elem of traffic.
-            st.tl.charge(Phase::Adam, prof.cast_time(2 * chunk_elems));
-            st.tl.charge(Phase::Adam, prof.adam_time(16 * chunk_elems));
-        }
-        self.charge_adam_moves(st)?;
-        Ok(())
-    }
-
-    // ------------------------------------------------------------ helpers
-
-    /// BWD ops cost 2x FWD plus checkpoint recompute.
-    fn bwd_mult(&self, stage: Stage) -> f64 {
-        match stage {
-            Stage::Fwd => 1.0,
-            Stage::Bwd => 2.0 + self.task.plan.recompute_factor(),
-            Stage::Adam => 0.0,
-        }
-    }
-
-    /// Pick the host-memory path for an async (non-demand) PCIe copy of
-    /// `bytes` in direction `dir`: pinned while a staging buffer from
-    /// `dir`'s sub-pool is held, pageable when the pool (total or
-    /// sub-pool) is exhausted (pressure-driven copies cannot wait).
-    /// With the pool disabled everything is pinned on the single curve
-    /// — the pre-pool behaviour bit-for-bit.  The caller sets the
-    /// returned lease's release time once the copy's completion time is
-    /// known.
-    fn route_async_copy(
-        &self,
-        st: &mut RunState,
-        dir: CopyDir,
-        bytes: u64,
-    ) -> (f64, CopyRoute, Option<PinnedLease>) {
-        if !st.pool.enabled() {
-            return (
-                self.cluster.net.pcie.transfer_time(bytes),
-                CopyRoute::Pinned,
-                None,
-            );
-        }
-        match st.pool.try_acquire(st.tl.now(), dir) {
-            Some(lease) => (
-                self.cluster.net.pcie.transfer_time(bytes),
-                CopyRoute::Pinned,
-                Some(lease),
-            ),
-            None => (
-                self.cluster.net.pcie_pageable.transfer_time(bytes),
-                CopyRoute::Pageable,
-                None,
-            ),
-        }
-    }
-
-    /// Route, charge and lease one async copy in a single step: pick
-    /// the curve ([`Engine::route_async_copy`]), enqueue on `dir`, and
-    /// set the lease's release to the completion time.  The one place
-    /// the async lease protocol lives — the Evict and Prefetch drain
-    /// arms and the activation-offload path all charge through here.
-    /// Returns (wire secs, completion time, route, lease).
-    fn charge_async_routed(
-        &self,
-        st: &mut RunState,
-        phase: Phase,
-        dir: CopyDir,
-        ready: f64,
-        bytes: u64,
-    ) -> (f64, f64, CopyRoute, Option<PinnedLease>) {
-        let (t, route, lease) = self.route_async_copy(st, dir, bytes);
-        let done = st.tl.async_copy_on(phase, t, dir, ready, route);
-        if let Some(l) = lease {
-            st.pool.set_release(l, done);
-        }
-        (t, done, route, lease)
-    }
-
-    /// CPU profile with bandwidth shared across the node's nproc ranks.
-    fn shared_cpu(&self) -> crate::sim::DeviceProfile {
-        let mut p = self.cluster.cpu;
-        p.mem_bw /= self.nproc() as f64;
-        p.gemm_flops /= self.nproc() as f64;
-        p
-    }
-
-    /// Drain chunk-move events and charge PCIe time (FWD/BWD phases).
-    fn charge_moves(&self, st: &mut RunState) -> Result<()> {
-        self.charge_events(st, false)
-    }
-
-    /// Same, but attribute to the ADAM-move bar of Fig. 16.
-    fn charge_adam_moves(&self, st: &mut RunState) -> Result<()> {
-        self.charge_events(st, true)
-    }
-
-    /// Drain chunk-move events onto the timeline.  Evictions ride the
-    /// async D2H stream; prefetches the async H2D stream (their
-    /// completion time is remembered for `wait_chunk`); demand
-    /// transfers block the compute stream.  An H2D fetch issued after an
-    /// eviction in the same drain batch waits for that eviction — it is
-    /// moving into the space the eviction frees.
-    fn charge_events(&self, st: &mut RunState, adam: bool) -> Result<()> {
-        let events = st.mgr.drain_events();
-        if st.warmup {
-            return Ok(());
-        }
-        let pcie = self.cluster.net.pcie;
-        // Leases whose copies have completed need no more shifting;
-        // drop them so the compression scan stays short.
-        if st.pool.enabled() {
-            let now_t = st.tl.now();
-            st.stream_leases.retain(|sl| sl.done > now_t);
-        }
-        let mut dep = 0.0f64;
-        let mut cancelled_groups: Vec<usize> = Vec::new();
-        for ev in events {
-            if ev.kind == MoveKind::GatherCancel {
-                // Memory pressure reclaimed a mid-gather chunk: cancel
-                // the whole group's collective.  The demand path will
-                // re-gather (and re-charge) exactly once, so total
-                // collective volume stays at the serial schedule's.
-                let pos = st.mgr.reg.chunks[ev.chunk.0 as usize].list_pos
-                    as usize;
-                let g = st.groups.group_of(pos);
-                if let Some(gi) = st.coll.take_gather(g) {
-                    st.allgather_bytes =
-                        st.allgather_bytes.saturating_sub(gi.bytes);
-                    st.allgather_time =
-                        (st.allgather_time - gi.secs).max(0.0);
-                    // The cancelled gather's staging buffer frees now.
-                    if let Some(l) = gi.lease {
-                        st.pool.release(l);
-                    }
-                    let now_t = st.tl.now();
-                    if gi.done > now_t {
-                        // Un-charge only the part of the collective
-                        // that has not physically run yet: the full
-                        // wire time while still queued, the remainder
-                        // when cancelled mid-wire.  Followers compress
-                        // forward by the same amount, so no completion
-                        // time ever drops below elapsed time.
-                        let remainder = (gi.done - now_t).min(gi.secs);
-                        st.tl.reclaim_collective(
-                            Phase::AllGather, remainder);
-                        st.coll.compress_after(gi.done, remainder);
-                        // Queue compression moved the surviving
-                        // gathers' completion times; their buffer
-                        // leases release at the new times.
-                        let RunState { coll, pool, .. } = st;
-                        for g2 in coll.gathers_mut() {
-                            if let Some(l) = g2.lease {
-                                pool.set_release(l, g2.done);
-                            }
-                        }
-                    }
-                    st.gather_cancelled_groups += 1;
-                    cancelled_groups.push(g);
-                }
-                continue;
-            }
-            if ev.kind == MoveKind::PrefetchCancel {
-                if let Some(pc) = st.inflight_done.remove(&ev.chunk) {
-                    // The staging buffer frees with the cancel (a no-op
-                    // for an already-landed copy's expired lease).
-                    if let Some(l) = pc.lease {
-                        st.pool.release(l);
-                    }
-                    if pc.done > st.tl.now() {
-                        // Still queued: un-charge its time so the
-                        // timeline agrees with the credited-back
-                        // MoveStats — otherwise the later demand fetch
-                        // double-charges, and a cancel-heavy run could
-                        // look slower than serial.
-                        st.tl.reclaim_on(pc.phase, pc.secs, pc.dir,
-                                         pc.route);
-                        // Queue compression: copies FIFO-queued behind
-                        // the reclaimed one land earlier now; shift
-                        // their recorded completion times too, so later
-                        // waits and cancel classifications stay honest
-                        // — and their buffer leases (prefetch AND
-                        // eviction/offload) release earlier with them.
-                        let RunState {
-                            inflight_done, stream_leases, pool, ..
-                        } = st;
-                        for other in inflight_done.values_mut() {
-                            if other.dir == pc.dir && other.done > pc.done
-                            {
-                                other.done =
-                                    (other.done - pc.secs).max(0.0);
-                                if let Some(l) = other.lease {
-                                    pool.set_release(l, other.done);
-                                }
-                            }
-                        }
-                        for sl in stream_leases.iter_mut() {
-                            if sl.dir == pc.dir && sl.done > pc.done {
-                                sl.done = (sl.done - pc.secs).max(0.0);
-                                pool.set_release(sl.lease, sl.done);
-                            }
-                        }
-                    } else {
-                        // The copy had already landed when pressure
-                        // reclaimed the chunk: the traffic was real, so
-                        // undo the manager's byte credit (the cancel
-                        // event's `from` is the staged-on device, i.e.
-                        // the original copy's destination).
-                        match ev.from {
-                            Some(Device::Gpu(_)) => {
-                                st.mgr.stats.cpu_to_gpu_bytes += ev.bytes;
-                                st.mgr.stats.cpu_to_gpu_moves += 1;
-                            }
-                            _ => {
-                                st.mgr.stats.gpu_to_cpu_bytes += ev.bytes;
-                                st.mgr.stats.gpu_to_cpu_moves += 1;
-                            }
-                        }
-                    }
-                }
-                continue;
-            }
-            let dir = match (ev.from, ev.to) {
-                (Some(Device::Cpu), Some(Device::Gpu(_))) => CopyDir::H2D,
-                (Some(Device::Gpu(_)), Some(Device::Cpu)) => CopyDir::D2H,
-                _ => continue, // allocs and releases are free
-            };
-            let phase = if adam {
-                Phase::AdamMove
-            } else {
-                match dir {
-                    CopyDir::H2D => Phase::CpuToGpu,
-                    CopyDir::D2H => Phase::GpuToCpu,
-                }
-            };
-            match ev.kind {
-                MoveKind::Evict => {
-                    // Pressure-driven: cannot wait for a buffer, so it
-                    // downgrades to the pageable curve when the pool is
-                    // dry.
-                    let (_, done, _, lease) = self
-                        .charge_async_routed(st, phase, dir, dep,
-                                             ev.bytes);
-                    dep = done;
-                    if let Some(l) = lease {
-                        st.stream_leases
-                            .push(StreamLease { lease: l, dir, done });
-                    }
-                }
-                MoveKind::Prefetch => {
-                    // The issue paths reserve pool capacity before
-                    // staging, so this normally lands a pinned lease;
-                    // if an eviction in the same drain batch took the
-                    // last buffer, the copy downgrades rather than
-                    // un-staging the chunk.
-                    let (t, done, route, lease) = self
-                        .charge_async_routed(st, phase, dir, dep,
-                                             ev.bytes);
-                    st.inflight_done.insert(
-                        ev.chunk,
-                        PendingCopy { done, secs: t, dir, phase, route,
-                                      lease },
-                    );
-                }
-                _ => {
-                    // Demand copies preempt the pool: always charged at
-                    // the pinned rate, never queued on a buffer.
-                    st.tl.demand_copy(phase, pcie.transfer_time(ev.bytes),
-                                      dir, dep);
-                }
-            }
-        }
-        // Finish cancelling each reclaimed group: drop the remaining
-        // mid-gather member payloads and revert their tensors, so the
-        // group is back in the released state the demand path expects.
-        for g in cancelled_groups {
-            let members: Vec<usize> = st.groups.members(g).collect();
-            for p in members {
-                if st.groups.owner_of(p) == 0 {
-                    continue; // the local chunk was never gathering
-                }
-                let c = st.fp16_list[p];
-                if st.mgr.is_gathering(c) {
-                    // Emits another GatherCancel event; it finds the
-                    // group already cancelled on the next drain.
-                    st.mgr.cancel_gather(c)?;
-                }
-                if st.mgr.chunk(c).device.is_none() {
-                    st.mgr.retag_tensors(
-                        c, TensorState::Hold, TensorState::Free)?;
-                }
-            }
-            st.gathered.remove(&g);
-        }
-        Ok(())
-    }
-}
-
-/// Construct the selected eviction policy (OPT borrows the tracer) and
-/// run `f` with it.
-fn with_policy<R>(
-    sel: &mut PolicySel,
-    tracer: &MemTracer,
-    f: impl FnOnce(&mut dyn EvictionPolicy) -> R,
-) -> R {
-    match sel {
-        PolicySel::Opt => {
-            let mut p = OptPolicy { tracer };
-            f(&mut p)
-        }
-        PolicySel::Lru(p) => f(p),
-        PolicySel::Fifo(p) => f(p),
-        PolicySel::Lfu(p) => f(p),
     }
 }
 
@@ -1788,6 +382,7 @@ mod tests {
     use super::*;
     use crate::config::ClusterPreset;
     use crate::model::GptSpec;
+    use crate::sim::Phase;
 
     fn run(model: &str, batch: u64, gpus: u32) -> EngineReport {
         let task =
@@ -1849,7 +444,9 @@ mod tests {
 
     // The serial flat-clock contract and the full pipelined-vs-serial
     // comparison (volume, never-slower, overlap shares) live in
-    // tests/prefetch_overlap.rs — not duplicated here.
+    // tests/prefetch_overlap.rs — not duplicated here.  The
+    // session/backend-split equivalence properties live in
+    // tests/session_equivalence.rs.
 
     #[test]
     fn overlap_without_prefetch_still_valid() {

@@ -1,0 +1,52 @@
+//! Eviction-policy selection for the training session.
+//!
+//! The session holds one [`PolicySel`] for the run; [`with_policy`]
+//! materializes the chosen [`EvictionPolicy`] (OPT borrows the tracer
+//! per call — its future-use moment lists *are* the tracer statistics)
+//! and hands it to the manager operation.  Backend-neutral: both the
+//! simulator and the real trainer pick victims through this module.
+
+use crate::evict::{EvictionPolicy, FifoPolicy, LfuPolicy, LruPolicy,
+                   OptPolicy};
+use crate::tracer::MemTracer;
+
+use super::EvictKind;
+
+/// The run's selected eviction policy.  Stateful policies (LRU, FIFO,
+/// LFU) live here across the run; OPT is stateless and rebuilt per call
+/// around a tracer borrow.
+pub(crate) enum PolicySel {
+    Opt,
+    Lru(LruPolicy),
+    Fifo(FifoPolicy),
+    Lfu(LfuPolicy),
+}
+
+impl PolicySel {
+    pub(crate) fn new(kind: EvictKind) -> Self {
+        match kind {
+            EvictKind::Opt => PolicySel::Opt,
+            EvictKind::Lru => PolicySel::Lru(LruPolicy::default()),
+            EvictKind::Fifo => PolicySel::Fifo(FifoPolicy::default()),
+            EvictKind::Lfu => PolicySel::Lfu(LfuPolicy::default()),
+        }
+    }
+}
+
+/// Construct the selected eviction policy (OPT borrows the tracer) and
+/// run `f` with it.
+pub(crate) fn with_policy<R>(
+    sel: &mut PolicySel,
+    tracer: &MemTracer,
+    f: impl FnOnce(&mut dyn EvictionPolicy) -> R,
+) -> R {
+    match sel {
+        PolicySel::Opt => {
+            let mut p = OptPolicy { tracer };
+            f(&mut p)
+        }
+        PolicySel::Lru(p) => f(p),
+        PolicySel::Fifo(p) => f(p),
+        PolicySel::Lfu(p) => f(p),
+    }
+}

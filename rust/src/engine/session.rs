@@ -1,0 +1,1743 @@
+//! The backend-agnostic training session (ISSUE 5 tentpole).
+//!
+//! [`TrainingSession`] is the orchestration core extracted from the old
+//! `Engine::run` monolith: one per-iteration driver holding the chunk
+//! manager, tracer, prefetchers, pinned staging pool, adaptive
+//! lookahead controller, headroom ledger and eviction policy — every
+//! *policy* decision of a PatrickStar iteration — parameterized over an
+//! [`ExecutionBackend`] that executes and prices the work.
+//!
+//! * Driven by the simulator ([`super::Engine`] over
+//!   [`super::SimBackend`]): the cost-model methods (`iteration`,
+//!   `exec_op`, `exec_adam`, …) replay the operator graph on the
+//!   simulated clock.  These take a [`SimCost`] — the cluster/task cost
+//!   context — as an explicit parameter, so the session itself stays
+//!   free of simulation state.
+//! * Driven by the real trainer (`train::Trainer` over
+//!   `PjrtBackend`): the real-path methods (`real_window`,
+//!   `stage_real`, `access_real`, `ensure_real`) give the e2e path the
+//!   same pool-gated, feedback-sized staging the simulator uses, fed by
+//!   measured wall time instead of modeled time.
+//!
+//! The split is behavior-preserving by construction: every backend call
+//! is a 1:1 rename of the former inline `StreamTimeline`/cost-curve
+//! call, in the same order with the same operands — locked by the
+//! golden traces and `tests/session_equivalence.rs`.
+
+use std::collections::{BTreeSet, HashMap, HashSet};
+
+use anyhow::{anyhow, Result};
+
+use crate::chunk::{ChunkId, ChunkKind, ChunkManager, MoveKind};
+use crate::config::{ClusterPreset, TrainTask};
+use crate::dp::{CollectivePipeline, CommGroups, InFlightGather};
+use crate::evict::BacklogAwareOpt;
+use crate::mem::{Device, PinnedLease, PinnedPool};
+use crate::model::activation::{non_model_bytes, BASE_OVERHEAD};
+use crate::model::{ActivationPlan, OpGraph, OpKind};
+use crate::placement::{plan as placement_plan, PlacementPlan};
+use crate::sim::{CopyDir, CopyRoute, DeviceProfile, Phase};
+use crate::tensor::TensorState;
+use crate::tracer::{MemTracer, Moment, WARMUP_GPU_FRAC};
+
+use super::adaptive::{HeadroomLedger, LookaheadController, WindowInputs};
+use super::backend::ExecutionBackend;
+use super::policy::{with_policy, PolicySel};
+use super::prefetch::{GroupPrefetcher, Prefetcher};
+use super::OptimizationPlan;
+
+/// The iteration phase the session is currently driving.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(crate) enum Stage {
+    Fwd,
+    Bwd,
+    Adam,
+}
+
+/// Bookkeeping for one in-flight prefetch copy: when it lands, what to
+/// un-charge if it is cancelled before reaching the wire, which curve
+/// it was charged on, and the pinned staging buffer it holds.  On the
+/// real backend `done` is `f64::INFINITY` — there is no simulated
+/// completion time; the lease frees when the staged chunk is consumed.
+#[derive(Clone, Copy, Debug)]
+struct PendingCopy {
+    done: f64,
+    secs: f64,
+    dir: CopyDir,
+    phase: Phase,
+    route: CopyRoute,
+    lease: Option<PinnedLease>,
+}
+
+/// A pinned-buffer lease held by a non-prefetch async copy (eviction,
+/// activation offload).  Prefetch leases live in [`PendingCopy`] and
+/// gather leases in [`InFlightGather`]; these need the same (stream,
+/// completion) bookkeeping so queue compression after a cancelled
+/// prefetch can shift their release times with the frontier — otherwise
+/// the pool would look busier than the stream actually is.
+#[derive(Clone, Copy, Debug)]
+struct StreamLease {
+    lease: PinnedLease,
+    dir: CopyDir,
+    done: f64,
+}
+
+/// Outcome of one real-path staging attempt
+/// ([`TrainingSession::stage_real`]): the caller's walk continues over
+/// `Skipped` chunks and stops on a dry pool.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageOutcome {
+    /// The chunk is on its way to the target device.
+    Staged,
+    /// Nothing to do (already resident, in flight, or released).
+    Skipped,
+    /// No staging buffer free; the walk retries next tick.
+    PoolDry,
+}
+
+/// The simulator's cost context: which cluster executes the work and
+/// which task is being trained.  Only the simulation-driving methods
+/// take it; the policy core never sees it.
+#[derive(Clone, Copy, Debug)]
+pub struct SimCost {
+    pub cluster: ClusterPreset,
+    pub task: TrainTask,
+}
+
+impl SimCost {
+    fn nproc(&self) -> usize {
+        self.task.n_gpus as usize
+    }
+
+    /// CPU profile with bandwidth shared across the node's nproc ranks.
+    fn shared_cpu(&self) -> DeviceProfile {
+        let mut p = self.cluster.cpu;
+        p.mem_bw /= self.nproc() as f64;
+        p.gemm_flops /= self.nproc() as f64;
+        p
+    }
+
+    /// BWD ops cost 2x FWD plus checkpoint recompute.
+    fn bwd_mult(&self, stage: Stage) -> f64 {
+        match stage {
+            Stage::Fwd => 1.0,
+            Stage::Bwd => 2.0 + self.task.plan.recompute_factor(),
+            Stage::Adam => 0.0,
+        }
+    }
+}
+
+/// One training process's per-iteration driver: chunk orchestration
+/// state plus the policy that schedules it, over an execution backend.
+pub struct TrainingSession<B: ExecutionBackend> {
+    pub(crate) opt: OptimizationPlan,
+    pub(crate) nproc: usize,
+    pub(crate) backend: B,
+    pub(crate) mgr: ChunkManager,
+    pub(crate) tracer: MemTracer,
+    pub(crate) groups: CommGroups,
+    pub(crate) fp16_list: Vec<ChunkId>,
+    pub(crate) policy: PolicySel,
+    pub(crate) warmup: bool,
+    pub(crate) moment: Moment,
+    pub(crate) placement: PlacementPlan,
+    stage: Stage,
+    /// Inverted warm-up moment lists (built once after warm-up when the
+    /// prefetch switch is on).
+    pub(crate) prefetcher: Option<Prefetcher>,
+    /// In-flight prefetch copies on the timeline, by chunk.
+    inflight_done: HashMap<ChunkId, PendingCopy>,
+    /// Groups already gathered in the current phase.
+    gathered: HashSet<usize>,
+    /// Wire-volume accounting (Table 5).
+    pub(crate) allgather_bytes: u64,
+    pub(crate) reduce_scatter_bytes: u64,
+    pub(crate) allgather_time: f64,
+    pub(crate) reduce_scatter_time: f64,
+    /// Warm-up log of demand gathers: (moment, group), schedule order.
+    gather_log: Vec<(Moment, usize)>,
+    /// Group-gather schedule (built once after warm-up when the
+    /// collective-stream switch is on).
+    pub(crate) group_prefetcher: Option<GroupPrefetcher>,
+    /// Collective-stream pipeline: in-flight lookahead gathers and
+    /// draining reduce-scatters, by group.
+    coll: CollectivePipeline,
+    /// Pinned staging-buffer pool (capacity 0 = disabled: single-curve
+    /// charging, the pre-pool numbers bit-for-bit).
+    pub(crate) pool: PinnedPool,
+    /// Leases held by eviction/offload copies still queued or on the
+    /// wire (see [`StreamLease`]).  Pruned as they expire.
+    stream_leases: Vec<StreamLease>,
+    /// Lookahead gathers issued this iteration.
+    pub(crate) gather_prefetches: u64,
+    /// Lookahead gathers cancelled this iteration, counted per *group*
+    /// (the same unit as `gather_prefetches`; the manager's
+    /// `MoveStats::gather_cancels` counts reclaimed chunks).
+    pub(crate) gather_cancelled_groups: u64,
+    /// Feedback-driven window sizing (adaptive mode only; None keeps
+    /// the static windows bit-identical to the static paths).
+    pub(crate) ctl: Option<LookaheadController>,
+    /// Window telemetry for the measured iteration: (sum, ticks) of
+    /// the chunk and group windows actually used each moment.
+    pub(crate) chunk_win: (u64, u64),
+    pub(crate) group_win: (u64, u64),
+    /// Per-moment backend snapshots (golden-trace tests).
+    pub(crate) trace: Option<Vec<String>>,
+}
+
+impl<B: ExecutionBackend> TrainingSession<B> {
+    /// A fresh session at the start of warm-up.  `nproc` is the number
+    /// of data-parallel processes this rank coordinates with.
+    pub fn new(
+        opt: OptimizationPlan,
+        nproc: usize,
+        mgr: ChunkManager,
+        backend: B,
+        traced: bool,
+    ) -> Self {
+        let fp16_list = mgr.reg.list(ChunkKind::ParamFp16);
+        let n_chunks = mgr.reg.chunks.len();
+        let list_len = fp16_list.len();
+        TrainingSession {
+            policy: PolicySel::new(opt.eviction),
+            pool: {
+                let p = PinnedPool::new(opt.pinned_buffers as usize);
+                match opt.pinned_split {
+                    Some((h, d)) => p.with_split(h as usize, d as usize),
+                    None => p,
+                }
+            },
+            opt,
+            nproc,
+            backend,
+            mgr,
+            tracer: MemTracer::new(n_chunks),
+            groups: CommGroups::new(list_len, nproc),
+            fp16_list,
+            warmup: true,
+            moment: 0,
+            placement: PlacementPlan {
+                os_groups_on_gpu: 0,
+                spilled_fp16_chunks: 0,
+                total_fp16_chunks: list_len,
+                embedding_on_cpu: true,
+            },
+            stage: Stage::Fwd,
+            prefetcher: None,
+            inflight_done: HashMap::new(),
+            gathered: HashSet::new(),
+            allgather_bytes: 0,
+            reduce_scatter_bytes: 0,
+            allgather_time: 0.0,
+            reduce_scatter_time: 0.0,
+            gather_log: Vec::new(),
+            group_prefetcher: None,
+            coll: CollectivePipeline::default(),
+            stream_leases: Vec::new(),
+            gather_prefetches: 0,
+            gather_cancelled_groups: 0,
+            ctl: None,
+            chunk_win: (0, 0),
+            group_win: (0, 0),
+            trace: if traced { Some(Vec::new()) } else { None },
+        }
+    }
+
+    /// A session for the real trainer: no warm-up trace (the chunk
+    /// schedule is the parameter order itself), single process, the
+    /// adaptive controller built straight away when requested.  The
+    /// simulation-driving methods are never called on such a session.
+    pub fn new_real(opt: OptimizationPlan, mgr: ChunkManager, backend: B)
+        -> Self {
+        let mut s = Self::new(opt, 1, mgr, backend, false);
+        s.warmup = false;
+        if opt.adaptive_lookahead {
+            s.ctl = Some(LookaheadController::new(
+                opt.lookahead,
+                opt.group_lookahead,
+            ));
+        }
+        s
+    }
+
+    /// The collective stream is live: overlap timeline on, switch on,
+    /// and there is actually more than one process to talk to.
+    fn collectives_overlapped(&self) -> bool {
+        self.opt.overlap && self.opt.overlap_collectives && self.nproc > 1
+    }
+
+    /// Push a marker line into the trace (iteration boundaries).
+    pub(crate) fn trace_mark(&mut self, s: &str) {
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(s.into());
+        }
+    }
+
+    /// Promote warm-up statistics into the steady-state plan: placement
+    /// from the tracer, the prefetchers from the warm-up schedules, the
+    /// adaptive controller when requested.  `prefetch_enabled` is the
+    /// caller's `opt.prefetch && opt.use_tracer` (SP has no moment
+    /// lists: the prefetcher is tracer-fed).
+    pub(crate) fn finish_warmup(
+        &mut self,
+        cost: &SimCost,
+        chunk_elems: u64,
+        prefetch_enabled: bool,
+    ) {
+        self.tracer.finish_warmup();
+        self.warmup = false;
+
+        // Without the tracer ("SP" plan) the chunkable space stays at
+        // the 20% warm-up grant forever, so the margin is computed
+        // against that grant — and eviction must fall back to chunk-list
+        // order (OPT's future-use moment lists ARE the tracer
+        // statistics, paper Sec. 8.1/8.3).
+        let (plan_gpu, plan_nm) = if self.opt.use_tracer {
+            (cost.cluster.gpu_mem, self.tracer.peak_non_model())
+        } else {
+            self.policy = PolicySel::new(super::EvictKind::Fifo);
+            (
+                (cost.cluster.gpu_mem as f64 * WARMUP_GPU_FRAC) as u64,
+                0,
+            )
+        };
+        self.placement = placement_plan(
+            plan_gpu,
+            plan_nm,
+            chunk_elems,
+            // Only the local share of fp16 chunks competes for this
+            // rank's GPU during FWD/BWD residency planning.
+            self.groups.owned_by(0).len(),
+            self.opt.device_aware_os,
+        );
+        if prefetch_enabled {
+            let n_chunks = self.mgr.reg.chunks.len();
+            self.prefetcher =
+                Some(Prefetcher::from_tracer(&self.tracer, n_chunks));
+        }
+        if self.collectives_overlapped() {
+            self.group_prefetcher = Some(GroupPrefetcher::from_log(
+                std::mem::take(&mut self.gather_log),
+            ));
+        }
+        // The adaptive controller sizes whatever prefetch lanes are
+        // live; with neither lane there is nothing to size and the
+        // static path stays untouched.
+        if self.opt.adaptive_lookahead
+            && (self.prefetcher.is_some()
+                || self.group_prefetcher.is_some())
+        {
+            self.ctl = Some(LookaheadController::new(
+                self.opt.lookahead,
+                self.opt.group_lookahead,
+            ));
+        }
+    }
+
+    /// Reset per-iteration state at a steady-iteration boundary.
+    /// Settles copies still in flight from the previous iteration:
+    /// their payloads are already resident, and the fresh timeline
+    /// starts at zero, so stale completion times must not leak across
+    /// the boundary.  Gathers settle the same way: anything issued is
+    /// consumed by its group's fetch within the iteration, but
+    /// belt-and-braces.
+    pub(crate) fn begin_steady_iteration(&mut self, it: usize) {
+        while let Some(c) = self.mgr.pending_prefetch_on(Device::Gpu(0)) {
+            self.mgr.complete_prefetch(c);
+        }
+        for c in self.mgr.gathering_chunks() {
+            self.mgr.finish_gather(c);
+        }
+        self.coll.clear();
+        self.pool.clear();
+        self.stream_leases.clear();
+        self.inflight_done.clear();
+        self.backend.reset();
+        self.mgr.stats = Default::default();
+        self.allgather_bytes = 0;
+        self.reduce_scatter_bytes = 0;
+        self.allgather_time = 0.0;
+        self.reduce_scatter_time = 0.0;
+        self.gather_prefetches = 0;
+        self.gather_cancelled_groups = 0;
+        self.chunk_win = (0, 0);
+        self.group_win = (0, 0);
+        if let Some(c) = self.ctl.as_mut() {
+            // The timeline restarts at zero; the learned rates
+            // carry over (iterations are structurally identical).
+            c.iteration_boundary();
+        }
+        self.trace_mark(&format!("== iter {it} =="));
+    }
+
+    // ------------------------------------------------------------------
+    // One iteration: FWD -> BWD -> ADAM.
+    // ------------------------------------------------------------------
+
+    pub(crate) fn iteration(&mut self, cost: &SimCost, graph: &OpGraph)
+        -> Result<()> {
+        self.moment = 0;
+        let n_layer_ops = 7usize;
+        let layer_of = |op_idx: usize| -> u32 {
+            // ops: embed, L x 7, lnf, lm_head
+            if op_idx == 0 {
+                0
+            } else {
+                (((op_idx - 1) / n_layer_ops) as u32).min(
+                    graph.spec.layers.saturating_sub(1),
+                )
+            }
+        };
+
+        // ---- FWD
+        self.stage = Stage::Fwd;
+        self.gathered.clear();
+        for (i, op) in graph.ops.iter().enumerate() {
+            let live = layer_of(i) + 1;
+            self.moment_tick(cost, live)?;
+            self.exec_op(cost, graph, i, op.params.clone())?;
+        }
+        self.mgr.reset_after_fwd(ChunkKind::ParamFp16)?;
+
+        // ---- BWD (reverse op order)
+        self.stage = Stage::Bwd;
+        self.gathered.clear();
+        for (i, op) in graph.ops.iter().enumerate().rev() {
+            let live = layer_of(i) + 1;
+            self.moment_tick(cost, live)?;
+            self.exec_op(cost, graph, i, op.params.clone())?;
+        }
+
+        // ---- ADAM (rank-local chunk groups)
+        self.stage = Stage::Adam;
+        let local = self.groups.owned_by(0);
+        for (li, pos) in local.iter().enumerate() {
+            self.moment_tick(cost, 0)?;
+            // Pipeline the optimizer sweep: while group `li` computes,
+            // the next group's grad chunk rides the D2H stream home.
+            if !self.warmup && self.prefetcher.is_some() {
+                self.stage_next_adam_group(&local, li)?;
+            }
+            self.exec_adam(cost, *pos, li)?;
+        }
+        // Embedding ADAM runs on CPU over its own (unmanaged) buffers.
+        let emb_os_bytes = 16 * graph.spec.embedding_params()
+            / self.nproc as u64;
+        if !self.warmup {
+            let cpu = cost.shared_cpu();
+            self.backend
+                .execute_moment(Phase::Adam, cpu.adam_time(emb_os_bytes));
+        }
+        // The optimizer step is not done until every reduce-scatter has
+        // drained off the collective stream (exec_adam waits per group;
+        // this barrier catches any group whose drain no consumer hit).
+        if !self.warmup && self.collectives_overlapped() {
+            for t in self.coll.drain_rs() {
+                self.backend.sync_collective(t);
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance one moment: record/evaluate non-model footprint, re-cap
+    /// the chunkable GPU space, evict to fit, stage upcoming chunks.
+    fn moment_tick(&mut self, cost: &SimCost, live_layers: u32)
+        -> Result<()> {
+        let nm = if live_layers == 0 {
+            BASE_OVERHEAD
+        } else {
+            non_model_bytes(
+                &cost.task.model,
+                cost.task.batch_per_gpu,
+                cost.task.plan,
+                live_layers,
+            )
+        };
+        let cap = if self.warmup || !self.opt.use_tracer {
+            (cost.cluster.gpu_mem as f64 * WARMUP_GPU_FRAC) as u64
+        } else {
+            cost.cluster.gpu_mem.saturating_sub(nm)
+        };
+        if self.warmup {
+            let m = self.tracer.record_moment(nm);
+            debug_assert_eq!(m, self.moment);
+        }
+        // A landed lookahead gather turns its chunks back into ordinary
+        // residents *before* the cap shrink, so pressure prefers normal
+        // eviction over cancelling still-queued gathers.
+        if !self.warmup && self.collectives_overlapped() {
+            self.complete_landed_gathers();
+        }
+        // Feedback first: the controller differences the backend's
+        // per-stream work accumulators against the previous tick, so
+        // this tick's window sizes reflect everything charged up to the
+        // previous operator (self.ctl is only ever Some in adaptive
+        // mode, after warm-up).
+        let cw = self.backend.compute_work();
+        let hb = self.backend.copy_busy(CopyDir::H2D);
+        let kw = self.backend.collective_work();
+        if let Some(c) = self.ctl.as_mut() {
+            c.observe(cw, hb, kw);
+        }
+        self.mgr.space.dev_mut(Device::Gpu(0)).set_capacity(cap);
+        // Cap-shrink eviction.  In adaptive mode with the OPT policy a
+        // deep D2H backlog turns on the overlap-aware tie-break: a
+        // near-equal victim that can be *dropped* (all tensors FREE)
+        // beats one whose spill would queue behind the backlog.  Margin
+        // 0 (static mode, idle engine, non-OPT policy) is plain OPT.
+        let evict_margin = match (&self.ctl, &self.policy) {
+            (Some(c), PolicySel::Opt) => {
+                c.evict_margin(self.backend.copy_backlog(CopyDir::D2H))
+            }
+            _ => 0,
+        };
+        if evict_margin > 0 {
+            let droppable: HashSet<ChunkId> = self
+                .mgr
+                .reg
+                .chunks
+                .iter()
+                .filter(|c| c.device == Some(Device::Gpu(0)))
+                .map(|c| c.id)
+                .filter(|&id| self.mgr.all_free(id))
+                .collect();
+            let TrainingSession { mgr, tracer, moment, .. } = self;
+            let mut pol = BacklogAwareOpt {
+                tracer,
+                droppable,
+                margin: evict_margin,
+            };
+            mgr.evict_to_fit(Device::Gpu(0), &mut pol, *moment)?;
+        } else {
+            let TrainingSession { mgr, tracer, policy, moment, .. } = self;
+            with_policy(policy, tracer, |pol| {
+                mgr.evict_to_fit(Device::Gpu(0), pol, *moment)
+            })?;
+        }
+        self.charge_moves()?;
+        // Window sizing + the negotiated headroom ledger.  Static mode:
+        // the configured knobs and a ledger with no earmarks — whose
+        // arithmetic is exactly the pre-ledger budgets, bit-for-bit.
+        let inputs = WindowInputs {
+            pool_free: if self.pool.enabled() {
+                Some(self.pool.available_at(self.backend.now(),
+                                            CopyDir::H2D) as u32)
+            } else {
+                None
+            },
+            h2d_backlog_secs: self.backend.copy_backlog(CopyDir::H2D),
+            coll_backlog_secs: self.backend.collective_backlog(),
+        };
+        let chunk_la = match &self.ctl {
+            Some(c) => c.chunk_window(inputs),
+            None => self.opt.lookahead,
+        };
+        let group_la = match &self.ctl {
+            Some(c) => c.group_window(inputs),
+            None => self.opt.group_lookahead,
+        };
+        let mut ledger = HeadroomLedger::new(
+            self.moment,
+            cost.cluster.gpu_mem,
+            self.opt.use_tracer,
+        );
+        if self.ctl.is_some() && self.group_prefetcher.is_some() {
+            // Negotiation: reserve the upcoming all-gathers' bytes
+            // before the chunk walk starts, so a deep chunk window
+            // cannot starve the collective lane of headroom.  (Demand
+            // traffic preempts both — it never consults the ledger.)
+            self.earmark_upcoming_gathers(group_la, &mut ledger);
+        }
+        if !self.warmup && self.prefetcher.is_some() {
+            self.chunk_win.0 += chunk_la as u64;
+            self.chunk_win.1 += 1;
+            self.issue_prefetches(chunk_la, &ledger)?;
+            self.charge_moves()?;
+        }
+        if !self.warmup && self.group_prefetcher.is_some() {
+            self.group_win.0 += group_la as u64;
+            self.group_win.1 += 1;
+            self.issue_group_gathers(group_la, &mut ledger)?;
+            self.charge_moves()?;
+        }
+        self.moment += 1;
+        if let Some(tr) = self.trace.as_mut() {
+            tr.push(format!("m{:05} {}", self.moment - 1,
+                            self.backend.snapshot()));
+        }
+        Ok(())
+    }
+
+    /// A gather whose collective has completed by the current compute
+    /// time holds real data: its chunks become normal resident chunks
+    /// (evictable under the usual rules — spilling landed data is
+    /// honest, spilling a half-arrived payload is not).  The in-flight
+    /// entry itself stays until the demand fetch consumes it, at zero
+    /// stall.
+    fn complete_landed_gathers(&mut self) {
+        let now_t = self.backend.now();
+        for g in self.coll.landed(now_t) {
+            let members: Vec<usize> = self.groups.members(g).collect();
+            for p in members {
+                self.mgr.finish_gather(self.fp16_list[p]);
+            }
+        }
+    }
+
+    /// Record the byte needs of the next `k` scheduled group gathers as
+    /// ledger earmarks (adaptive mode).  Mirrors the walk of
+    /// [`TrainingSession::issue_group_gathers`] up to (not including)
+    /// its budget and pool checks, so exactly the groups that *could*
+    /// issue this tick or soon after hold reservations against the
+    /// chunk walk.
+    fn earmark_upcoming_gathers(&self, k: u32, ledger: &mut HeadroomLedger) {
+        let upcoming = match &self.group_prefetcher {
+            Some(gp) => gp.upcoming(self.moment, k as usize),
+            None => return,
+        };
+        let chunk_bytes = self.mgr.chunk(self.fp16_list[0]).bytes();
+        for (_, g) in upcoming {
+            if self.coll.gather_issued(g) {
+                continue; // already staged; its bytes show in used()
+            }
+            if self.gathered.contains(&g) {
+                break; // schedule-order FIFO, as in the issue walk
+            }
+            let absent = self
+                .groups
+                .members(g)
+                .map(|p| self.fp16_list[p])
+                .filter(|&c| self.mgr.chunk(c).device.is_none())
+                .count() as u64;
+            if absent == 0 {
+                break;
+            }
+            ledger.earmark_group(g, absent * chunk_bytes);
+        }
+    }
+
+    /// Issue all-gathers for the next `k` groups of the warm-up gather
+    /// schedule onto the collective stream, drawing headroom from the
+    /// negotiated ledger (statically `k = --group-lookahead`;
+    /// adaptively the controller's collective/compute window).  Issue
+    /// order strictly follows the schedule: if the next group cannot be
+    /// staged (no absent members yet, or no headroom), later groups
+    /// must not jump the queue — a demand gather must never find a
+    /// less-urgent gather ahead of it on the stream.
+    fn issue_group_gathers(
+        &mut self,
+        k: u32,
+        ledger: &mut HeadroomLedger,
+    ) -> Result<()> {
+        let k = k as usize;
+        if k == 0 {
+            return Ok(());
+        }
+        let now = self.moment;
+        let upcoming = match &self.group_prefetcher {
+            Some(gp) => gp.upcoming(now, k),
+            None => return Ok(()),
+        };
+        for (use_m, g) in upcoming {
+            if self.coll.gather_issued(g) {
+                continue; // already on the stream, in schedule order
+            }
+            if self.gathered.contains(&g) {
+                break; // still held from the previous stage; retry later
+            }
+            let members: Vec<usize> = self.groups.members(g).collect();
+            let absent: Vec<ChunkId> = members
+                .iter()
+                .map(|&p| self.fp16_list[p])
+                .filter(|&c| self.mgr.chunk(c).device.is_none())
+                .collect();
+            if absent.is_empty() {
+                break; // nothing to gather (yet); keep FIFO order
+            }
+            let chunk_bytes = self.mgr.chunk(self.fp16_list[0]).bytes();
+            let new_bytes = absent.len() as u64 * chunk_bytes;
+            // Headroom budget from the ledger: the tightest chunkable
+            // cap between now and the use moment, minus the *other*
+            // groups' reservations (this group's own earmark is the
+            // headroom being spent), so staging never triggers the
+            // evictions it is hiding from.
+            let budget = ledger.gather_budget(&self.tracer, use_m, g);
+            let gpu = self.mgr.space.dev(Device::Gpu(0));
+            if gpu.used() + new_bytes > budget
+                || !gpu.can_fit(new_bytes)
+            {
+                break; // no headroom; retry next moment
+            }
+            // A lookahead gather stages its local shard through one
+            // pinned buffer held for the collective's lifetime; if
+            // every buffer is leased out, the gather waits its turn
+            // (FIFO: later groups must not jump the queue either).
+            let lease = if self.pool.enabled() {
+                match self.pool.try_acquire(self.backend.now(),
+                                            CopyDir::H2D) {
+                    Some(l) => Some(l),
+                    None => {
+                        self.mgr.stats.pinned_waits += 1;
+                        break; // retry next moment
+                    }
+                }
+            } else {
+                None
+            };
+            for &c in &absent {
+                self.mgr.alloc_payload(c, Device::Gpu(0))?;
+                self.mgr.begin_gather(c)?;
+                // Remote payloads arrive in HOLD (as in fetch_group).
+                self.mgr.retag_tensors(
+                    c, TensorState::Free, TensorState::Hold)?;
+            }
+            let op = self.backend.allgather_cost(chunk_bytes);
+            let done =
+                self.backend.issue_collective(Phase::AllGather, op.secs);
+            if let Some(l) = lease {
+                self.pool.set_release(l, done);
+            }
+            self.allgather_time += op.secs;
+            self.allgather_bytes += op.bytes;
+            self.coll.issue_gather(
+                g,
+                InFlightGather {
+                    done,
+                    secs: op.secs,
+                    bytes: op.bytes,
+                    use_moment: use_m,
+                    lease,
+                },
+            );
+            self.gather_prefetches += 1;
+            // The reservation is spent: the staged bytes now show in
+            // the device's used(), so keeping the earmark would charge
+            // the remaining groups twice.
+            ledger.consume_group(g);
+        }
+        Ok(())
+    }
+
+    /// Walk the lookahead window and stage CPU-resident chunks with an
+    /// upcoming GPU use onto the H2D stream (statically `lookahead =
+    /// --lookahead`; adaptively the controller's ratio-sized,
+    /// backlog-compressed, pool-bounded window).
+    fn issue_prefetches(
+        &mut self,
+        lookahead: u32,
+        ledger: &HeadroomLedger,
+    ) -> Result<()> {
+        let now = self.moment;
+        let window = match &self.prefetcher {
+            Some(pf) => pf.window(now, lookahead),
+            None => return Ok(()),
+        };
+        // Staging-capacity budget (pool enabled only): each prefetch
+        // issued this tick will lease one pinned buffer when its copy is
+        // charged; once the free H2D buffers are spoken for, the rest of
+        // the window waits for the next moment — the effective lookahead
+        // is throttled to the pool-sized backlog.
+        let mut pool_budget = if self.pool.enabled() {
+            Some(self.pool.available_at(self.backend.now(), CopyDir::H2D))
+        } else {
+            None
+        };
+        for (use_moment, c) in window {
+            if self.mgr.chunk(c).device != Some(Device::Cpu) {
+                continue; // resident, in flight, or released
+            }
+            if pool_budget == Some(0) {
+                self.mgr.stats.pinned_waits += 1;
+                break; // no staging buffer free; retry next moment
+            }
+            // Headroom budget from the ledger: staying under the
+            // tightest chunkable cap between now and the use moment
+            // (minus any bytes earmarked for the collective lane)
+            // guarantees the staged bytes never cause a cap-shrink
+            // eviction of their own nor starve an imminent all-gather.
+            let limit = ledger.chunk_limit(&self.tracer, use_moment);
+            let TrainingSession { mgr, tracer, policy, .. } = self;
+            let issued = with_policy(policy, tracer, |pol| {
+                mgr.prefetch_to(c, Device::Gpu(0), limit, pol, now, &|v| {
+                    // Belady guard: spill only chunks OPT would spill at
+                    // the use moment anyway — next use farther than the
+                    // prefetched chunk's own use.
+                    match tracer.next_use(v, now) {
+                        None => true,
+                        Some(next) => next > use_moment,
+                    }
+                })
+            })?;
+            if issued {
+                if let Some(b) = pool_budget.as_mut() {
+                    *b -= 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// The ADAM-bound leg of the pipeline: stage the *next* local
+    /// group's fp16 (grad) chunk onto the CPU over the async D2H stream
+    /// while the current group's update computes.  Margin groups (ADAM
+    /// on GPU) need no staging — their chunks are already resident.
+    /// Conservative by construction: only free CPU space is used (no
+    /// evictions for staging), so the transfer set matches the serial
+    /// schedule exactly, just earlier and off the critical path.
+    fn stage_next_adam_group(&mut self, local: &[usize], li: usize)
+        -> Result<()> {
+        let next = li + 1;
+        if next >= local.len() {
+            return Ok(());
+        }
+        let next_on_gpu = self.opt.device_aware_os
+            && next < self.placement.os_groups_on_gpu;
+        if next_on_gpu {
+            return Ok(());
+        }
+        let c = self.fp16_list[local[next]];
+        if self.mgr.chunk(c).device != Some(Device::Gpu(0)) {
+            return Ok(()); // already home (or released)
+        }
+        // The D2H staging leg competes for the pinned pool's D2H
+        // sub-pool: with no buffer free, the grad chunk waits and rides
+        // home on the demand path instead.
+        if self.pool.enabled()
+            && self.pool.available_at(self.backend.now(), CopyDir::D2H)
+                == 0
+        {
+            self.mgr.stats.pinned_waits += 1;
+            return Ok(());
+        }
+        let limit = self.mgr.space.dev(Device::Cpu).capacity;
+        let now = self.moment.saturating_sub(1);
+        let TrainingSession { mgr, tracer, policy, .. } = self;
+        with_policy(policy, tracer, |pol| {
+            mgr.prefetch_to(c, Device::Cpu, limit, pol, now, &|_| false)
+        })?;
+        self.charge_adam_moves()?;
+        Ok(())
+    }
+
+    /// If `chunk` has an in-flight prefetch, block the compute stream
+    /// until the copy lands and mark it consumed.  On the real backend
+    /// an in-flight copy has no completion time (`done` infinite); its
+    /// staging lease frees here, at consumption.
+    fn wait_chunk(&mut self, chunk: ChunkId) {
+        if self.mgr.is_inflight(chunk) {
+            if let Some(pc) = self.inflight_done.get(&chunk).copied() {
+                if pc.done.is_finite() {
+                    self.backend.sync_until(pc.done);
+                }
+            }
+            self.mgr.complete_prefetch(chunk);
+        }
+        if let Some(pc) = self.inflight_done.remove(&chunk) {
+            // Real-backend staging leases are open-ended (`done`
+            // infinite): they free here, at consumption — also covering
+            // a chunk whose prefetch a last-resort eviction already
+            // force-completed (simulated leases expire on the clock
+            // instead, so this arm never fires for finite `done`).
+            if pc.done.is_infinite() {
+                if let Some(l) = pc.lease {
+                    self.pool.release(l);
+                }
+            }
+        }
+    }
+
+    /// Chunk owning the `idx`-th tensor of `kind`.
+    fn chunk_of(&self, kind: ChunkKind, idx: usize) -> ChunkId {
+        let ti = self.mgr.reg.tensor_index(kind, idx);
+        ChunkId(self.mgr.reg.tensors[ti].chunk as u32)
+    }
+
+    /// Execute one operator at the current moment (stage-dependent).
+    fn exec_op(
+        &mut self,
+        cost: &SimCost,
+        graph: &OpGraph,
+        op_idx: usize,
+        params: Vec<usize>,
+    ) -> Result<()> {
+        let op = &graph.ops[op_idx];
+        let now = self.moment.saturating_sub(1);
+
+        // Embedding ops: CPU lookup + activation traffic; LM head GEMM on
+        // GPU with the fp16 embedding streamed up (Sec. 8.2).
+        if op.kind == OpKind::Embedding {
+            if !self.warmup {
+                let cpu = cost.shared_cpu();
+                let m = &graph.spec;
+                let act_bytes =
+                    2 * cost.task.batch_per_gpu * m.seq * m.hidden;
+                if op.name == "embed" {
+                    self.backend.execute_moment(
+                        Phase::FwdBwd,
+                        cpu.op_time(OpKind::Embedding, op.fwd_flops),
+                    );
+                    let (phase, dir) = if self.stage == Stage::Fwd {
+                        (Phase::CpuToGpu, CopyDir::H2D)
+                    } else {
+                        (Phase::GpuToCpu, CopyDir::D2H)
+                    };
+                    let t = self
+                        .backend
+                        .copy_secs(act_bytes, CopyRoute::Pinned);
+                    self.backend.demand_copy(phase, t, dir, 0.0);
+                } else {
+                    // lm_head: GEMM on GPU; wte fp16 up in FWD, its grad
+                    // down in BWD.
+                    let gpu = cost.cluster.gpu;
+                    let mult = cost.bwd_mult(self.stage);
+                    self.backend.execute_moment(
+                        Phase::FwdBwd,
+                        gpu.op_time(OpKind::ComputeIntensive,
+                                    mult * op.fwd_flops),
+                    );
+                    let wte_bytes = 2 * m.vocab * m.hidden;
+                    let (phase, dir) = if self.stage == Stage::Fwd {
+                        (Phase::CpuToGpu, CopyDir::H2D)
+                    } else {
+                        (Phase::GpuToCpu, CopyDir::D2H)
+                    };
+                    let t = self
+                        .backend
+                        .copy_secs(wte_bytes, CopyRoute::Pinned);
+                    self.backend.demand_copy(phase, t, dir, 0.0);
+                }
+            }
+            return Ok(());
+        }
+
+        // Distributed: fetch the communication groups of every param.
+        // BTreeSet: group order must be deterministic — HashSet
+        // iteration order varies per process, which would make the
+        // multi-GPU stream timeline (and the golden traces locked on
+        // it) run-to-run nondeterministic.
+        if self.nproc > 1 {
+            let positions: HashSet<usize> = params
+                .iter()
+                .map(|&t| {
+                    let ti =
+                        self.mgr.reg.tensor_index(ChunkKind::ParamFp16, t);
+                    self.mgr.reg.chunks[self.mgr.reg.tensors[ti].chunk]
+                        .list_pos as usize
+                })
+                .collect();
+            let groups: BTreeSet<usize> = positions
+                .iter()
+                .map(|&p| self.groups.group_of(p))
+                .collect();
+            for g in groups {
+                self.fetch_group(g, now)?;
+            }
+        }
+
+        // Access parameters (Algorithm 1), run the op, release
+        // (Algorithm 2).  A prefetched chunk's copy is waited out on the
+        // timeline before the access consumes it.
+        for &t in &params {
+            let c = self.chunk_of(ChunkKind::ParamFp16, t);
+            self.wait_chunk(c);
+            let TrainingSession { mgr, tracer, policy, .. } = self;
+            with_policy(policy, tracer, |pol| {
+                mgr.access_tensor(ChunkKind::ParamFp16, t, Device::Gpu(0),
+                                  pol, now)
+            })?;
+            if self.warmup {
+                self.tracer.record_chunk_use_at(c, now, true);
+            }
+        }
+        self.charge_moves()?;
+
+        if !self.warmup {
+            let gpu = cost.cluster.gpu;
+            let mult = cost.bwd_mult(self.stage);
+            self.backend.execute_moment(
+                Phase::FwdBwd,
+                gpu.op_time(op.kind, mult * op.fwd_flops),
+            );
+            // Activation offload traffic (ckpt+offload): one boundary per
+            // layer crosses PCIe each way; charge at the layer's last op.
+            // Down in FWD (async: nothing waits for it), up in BWD (the
+            // boundary op needs it: demand).
+            if cost.task.plan == ActivationPlan::CheckpointingOffload
+                && op.name.ends_with(".fc2")
+            {
+                let m = &graph.spec;
+                let bytes = 2 * cost.task.batch_per_gpu * m.seq * m.hidden;
+                if self.stage == Stage::Fwd {
+                    // Offload cannot wait for a buffer (the boundary is
+                    // leaving the GPU now): pinned if one is free,
+                    // pageable otherwise.
+                    let (_, done, _, lease) = self.charge_async_routed(
+                        Phase::ActOffload, CopyDir::D2H, 0.0, bytes);
+                    if let Some(l) = lease {
+                        self.stream_leases.push(StreamLease {
+                            lease: l,
+                            dir: CopyDir::D2H,
+                            done,
+                        });
+                    }
+                } else {
+                    // Demand reload: preempts the pool, pinned rate.
+                    let t =
+                        self.backend.copy_secs(bytes, CopyRoute::Pinned);
+                    self.backend.demand_copy(Phase::ActOffload, t,
+                                             CopyDir::H2D, 0.0);
+                }
+            }
+        }
+
+        let target = if self.stage == Stage::Fwd {
+            TensorState::HoldAfterFwd
+        } else {
+            TensorState::HoldAfterBwd
+        };
+        for &t in &params {
+            self.mgr.release_tensor(ChunkKind::ParamFp16, t, target)?;
+        }
+
+        // Distributed: release/reduce groups that completed this stage
+        // (deterministic order, as above).
+        if self.nproc > 1 {
+            let positions: HashSet<usize> = params
+                .iter()
+                .map(|&t| {
+                    let ti =
+                        self.mgr.reg.tensor_index(ChunkKind::ParamFp16, t);
+                    self.mgr.reg.chunks[self.mgr.reg.tensors[ti].chunk]
+                        .list_pos as usize
+                })
+                .collect();
+            let groups: BTreeSet<usize> = positions
+                .iter()
+                .map(|&p| self.groups.group_of(p))
+                .collect();
+            for g in groups {
+                self.release_group(g, target)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// FetchRemoteChunks (Algorithm 1, lines 1–20): all-gather the group
+    /// if any member tensor is FREE.
+    fn fetch_group(&mut self, g: usize, now: Moment) -> Result<()> {
+        if self.gathered.contains(&g) {
+            return Ok(());
+        }
+        // Consume an in-flight lookahead gather: block only for
+        // whatever part of the collective compute hasn't already hidden.
+        if let Some(gi) = self.coll.take_gather(g) {
+            self.backend.sync_collective(gi.done);
+            for p in self.groups.members(g) {
+                self.mgr.finish_gather(self.fp16_list[p]);
+            }
+            self.gathered.insert(g);
+            return Ok(());
+        }
+        let members: Vec<usize> = self.groups.members(g).collect();
+        // Trigger only when some member chunk is absent (paper line 5:
+        // a FREE tensor exists).
+        let any_free = members.iter().any(|&p| {
+            let c = self.fp16_list[p];
+            self.mgr.chunk(c).device.is_none()
+        });
+        if !any_free {
+            self.gathered.insert(g);
+            return Ok(());
+        }
+        if self.warmup {
+            // The gather log *is* the steady-state gather schedule
+            // (iterations are structurally identical) — the group
+            // prefetcher is built from it after warm-up.
+            self.gather_log.push((now, g));
+        }
+        let chunk_bytes = self.mgr.chunk(self.fp16_list[0]).bytes();
+        for &p in &members {
+            let c = self.fp16_list[p];
+            self.wait_chunk(c);
+            let TrainingSession { mgr, tracer, policy, .. } = self;
+            with_policy(policy, tracer, |pol| {
+                mgr.ensure_on(c, Device::Gpu(0), pol, now)
+            })?;
+            self.mgr.pin(c);
+            // Remote payloads arrive in HOLD.
+            self.mgr
+                .retag_tensors(c, TensorState::Free, TensorState::Hold)?;
+            if self.warmup {
+                self.tracer.record_chunk_use_at(c, now, true);
+            }
+        }
+        if !self.warmup {
+            let op = self.backend.allgather_cost(chunk_bytes);
+            if self.collectives_overlapped() {
+                // Demand gather on the collective stream: compute
+                // stalls for queueing delay + wire time.
+                self.backend.demand_collective(Phase::AllGather, op.secs);
+            } else {
+                self.backend.execute_moment(Phase::AllGather, op.secs);
+            }
+            self.allgather_time += op.secs;
+            self.allgather_bytes += op.bytes;
+        }
+        for &p in &members {
+            self.mgr.unpin(self.fp16_list[p]);
+        }
+        self.charge_moves()?;
+        self.gathered.insert(g);
+        Ok(())
+    }
+
+    /// ReleaseRemoteChunk (Algorithm 2, lines 1–30).
+    fn release_group(&mut self, g: usize, target: TensorState)
+        -> Result<()> {
+        let members: Vec<usize> = self.groups.members(g).collect();
+        // All tensors of all member chunks must have reached `target`.
+        let done = members.iter().all(|&p| {
+            let c = self.fp16_list[p];
+            self.mgr.chunk(c).tensors.iter().all(|t| {
+                self.mgr.reg.tensors[t.0 as usize].state == target
+            })
+        });
+        if !done {
+            return Ok(());
+        }
+        if target == TensorState::HoldAfterBwd && !self.warmup {
+            // Reduce-scatter of the group's grad chunks (is_allreduce).
+            let chunk_bytes = self.mgr.chunk(self.fp16_list[0]).bytes();
+            let op = self.backend.reduce_scatter_cost(chunk_bytes);
+            if self.collectives_overlapped() {
+                // Drain behind compute (and behind queued gathers);
+                // ADAM waits it out per group.
+                let done = self
+                    .backend
+                    .issue_collective(Phase::ReduceScatter, op.secs);
+                self.coll.set_rs_done(g, done);
+            } else {
+                self.backend
+                    .execute_moment(Phase::ReduceScatter, op.secs);
+            }
+            self.reduce_scatter_time += op.secs;
+            self.reduce_scatter_bytes += op.bytes;
+        }
+        // Release remote payloads; tensors -> FREE.
+        for &p in &members {
+            if self.groups.owner_of(p) == 0 {
+                continue; // local chunk keeps its payload
+            }
+            let c = self.fp16_list[p];
+            let chunk_tensors = self.mgr.chunk(c).tensors.clone();
+            for t in chunk_tensors {
+                self.mgr.reg.tensors[t.0 as usize]
+                    .set_state(TensorState::Free)
+                    .map_err(|e| anyhow!(e))?;
+            }
+            if self.mgr.chunk(c).device.is_some() {
+                self.mgr.release_payload(c)?;
+            }
+        }
+        self.gathered.remove(&g);
+        Ok(())
+    }
+
+    /// ADAM over one local chunk group (Sec. 6.2 last paragraph + 8.2).
+    fn exec_adam(&mut self, cost: &SimCost, pos: usize, local_index: usize)
+        -> Result<()> {
+        let now = self.moment.saturating_sub(1);
+        let fp16 = self.fp16_list[pos];
+        // The group's averaged gradient must be home before the update:
+        // wait out whatever part of its reduce-scatter hasn't drained.
+        if !self.warmup && self.collectives_overlapped() {
+            let g = self.groups.group_of(pos);
+            if let Some(t) = self.coll.take_rs_done(g) {
+                self.backend.sync_collective(t);
+            }
+        }
+        let os = self.mgr.reg.os_chunks_for(fp16);
+        let on_gpu = !self.warmup
+            && self.opt.device_aware_os
+            && local_index < self.placement.os_groups_on_gpu;
+        let device = if on_gpu { Device::Gpu(0) } else { Device::Cpu };
+
+        // Bring the grad (fp16 chunk) and the OS chunks to the ADAM device.
+        for c in std::iter::once(fp16).chain(os) {
+            self.wait_chunk(c);
+            let TrainingSession { mgr, tracer, policy, .. } = self;
+            with_policy(policy, tracer, |pol| {
+                mgr.ensure_on(c, device, pol, now)
+            })?;
+            if self.warmup {
+                self.tracer.record_chunk_use_at(c, now, device.is_gpu());
+            }
+        }
+        // OS tensors -> COMPUTE -> HOLD; fp16 tensors -> HOLD (updated
+        // params overwrite the grads in place, Fig. 6 reversed).
+        let n_tensors = self.mgr.chunk(fp16).tensors.len();
+        for kind in [ChunkKind::ParamFp32, ChunkKind::Momentum,
+                     ChunkKind::Variance] {
+            for i in 0..n_tensors {
+                let t = self.mgr.chunk(fp16).tensors[i];
+                let idx = t.0 as usize % self.mgr.reg.n_model_tensors;
+                let TrainingSession { mgr, tracer, policy, .. } = self;
+                with_policy(policy, tracer, |pol| {
+                    mgr.access_tensor(kind, idx, device, pol, now)
+                })?;
+                self.mgr.release_tensor(kind, idx, TensorState::Hold)?;
+            }
+        }
+        for i in 0..n_tensors {
+            let t = self.mgr.chunk(fp16).tensors[i];
+            let idx = t.0 as usize % self.mgr.reg.n_model_tensors;
+            let ti = self.mgr.reg.tensor_index(ChunkKind::ParamFp16, idx);
+            let s = self.mgr.reg.tensors[ti].state;
+            if s.is_hold_like() {
+                self.mgr.reg.tensors[ti]
+                    .set_state(TensorState::Hold)
+                    .map_err(|e| anyhow!(e))?;
+            }
+        }
+
+        if !self.warmup {
+            let chunk_elems = self.mgr.reg.chunk_elems;
+            let prof = if on_gpu {
+                cost.cluster.gpu
+            } else {
+                cost.shared_cpu()
+            };
+            // grad fp16 -> fp32 conversion + fused update over
+            // p32/m/v (+p16 writeback): ~16 B/elem of traffic.
+            self.backend
+                .execute_moment(Phase::Adam,
+                                prof.cast_time(2 * chunk_elems));
+            self.backend
+                .execute_moment(Phase::Adam,
+                                prof.adam_time(16 * chunk_elems));
+        }
+        self.charge_adam_moves()?;
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ helpers
+
+    /// Pick the host-memory path for an async (non-demand) PCIe copy of
+    /// `bytes` in direction `dir`: pinned while a staging buffer from
+    /// `dir`'s sub-pool is held, pageable when the pool (total or
+    /// sub-pool) is exhausted (pressure-driven copies cannot wait).
+    /// With the pool disabled everything is pinned on the single curve
+    /// — the pre-pool behaviour bit-for-bit.  The caller sets the
+    /// returned lease's release time once the copy's completion time is
+    /// known.
+    fn route_async_copy(&mut self, dir: CopyDir, bytes: u64)
+        -> (f64, CopyRoute, Option<PinnedLease>) {
+        if !self.pool.enabled() {
+            return (
+                self.backend.copy_secs(bytes, CopyRoute::Pinned),
+                CopyRoute::Pinned,
+                None,
+            );
+        }
+        match self.pool.try_acquire(self.backend.now(), dir) {
+            Some(lease) => (
+                self.backend.copy_secs(bytes, CopyRoute::Pinned),
+                CopyRoute::Pinned,
+                Some(lease),
+            ),
+            None => (
+                self.backend.copy_secs(bytes, CopyRoute::Pageable),
+                CopyRoute::Pageable,
+                None,
+            ),
+        }
+    }
+
+    /// Route, charge and lease one async copy in a single step: pick
+    /// the curve ([`TrainingSession::route_async_copy`]), enqueue on
+    /// `dir`, and set the lease's release to the completion time.  The
+    /// one place the async lease protocol lives — the Evict and
+    /// Prefetch drain arms and the activation-offload path all charge
+    /// through here.  Returns (wire secs, completion time, route,
+    /// lease).
+    fn charge_async_routed(
+        &mut self,
+        phase: Phase,
+        dir: CopyDir,
+        ready: f64,
+        bytes: u64,
+    ) -> (f64, f64, CopyRoute, Option<PinnedLease>) {
+        let (t, route, lease) = self.route_async_copy(dir, bytes);
+        let done = self.backend.issue_copy(phase, t, dir, ready, route);
+        if let Some(l) = lease {
+            self.pool.set_release(l, done);
+        }
+        (t, done, route, lease)
+    }
+
+    /// Drain chunk-move events and charge PCIe time (FWD/BWD phases).
+    fn charge_moves(&mut self) -> Result<()> {
+        self.charge_events(false)
+    }
+
+    /// Same, but attribute to the ADAM-move bar of Fig. 16.
+    fn charge_adam_moves(&mut self) -> Result<()> {
+        self.charge_events(true)
+    }
+
+    /// Drain chunk-move events onto the backend.  Evictions ride the
+    /// async D2H stream; prefetches the async H2D stream (their
+    /// completion time is remembered for `wait_chunk`); demand
+    /// transfers block the compute stream.  An H2D fetch issued after an
+    /// eviction in the same drain batch waits for that eviction — it is
+    /// moving into the space the eviction frees.
+    fn charge_events(&mut self, adam: bool) -> Result<()> {
+        let events = self.mgr.drain_events();
+        if self.warmup {
+            return Ok(());
+        }
+        // Leases whose copies have completed need no more shifting;
+        // drop them so the compression scan stays short.
+        if self.pool.enabled() {
+            let now_t = self.backend.now();
+            self.stream_leases.retain(|sl| sl.done > now_t);
+        }
+        let mut dep = 0.0f64;
+        let mut cancelled_groups: Vec<usize> = Vec::new();
+        for ev in events {
+            if ev.kind == MoveKind::GatherCancel {
+                // Memory pressure reclaimed a mid-gather chunk: cancel
+                // the whole group's collective.  The demand path will
+                // re-gather (and re-charge) exactly once, so total
+                // collective volume stays at the serial schedule's.
+                let pos = self.mgr.reg.chunks[ev.chunk.0 as usize]
+                    .list_pos as usize;
+                let g = self.groups.group_of(pos);
+                if let Some(gi) = self.coll.take_gather(g) {
+                    self.allgather_bytes =
+                        self.allgather_bytes.saturating_sub(gi.bytes);
+                    self.allgather_time =
+                        (self.allgather_time - gi.secs).max(0.0);
+                    // The cancelled gather's staging buffer frees now.
+                    if let Some(l) = gi.lease {
+                        self.pool.release(l);
+                    }
+                    let now_t = self.backend.now();
+                    if gi.done > now_t {
+                        // Un-charge only the part of the collective
+                        // that has not physically run yet: the full
+                        // wire time while still queued, the remainder
+                        // when cancelled mid-wire.  Followers compress
+                        // forward by the same amount, so no completion
+                        // time ever drops below elapsed time.
+                        let remainder = (gi.done - now_t).min(gi.secs);
+                        self.backend.reclaim_collective(
+                            Phase::AllGather, remainder);
+                        self.coll.compress_after(gi.done, remainder);
+                        // Queue compression moved the surviving
+                        // gathers' completion times; their buffer
+                        // leases release at the new times.
+                        let TrainingSession { coll, pool, .. } = self;
+                        for g2 in coll.gathers_mut() {
+                            if let Some(l) = g2.lease {
+                                pool.set_release(l, g2.done);
+                            }
+                        }
+                    }
+                    self.gather_cancelled_groups += 1;
+                    cancelled_groups.push(g);
+                }
+                continue;
+            }
+            if ev.kind == MoveKind::PrefetchCancel {
+                if let Some(pc) = self.inflight_done.remove(&ev.chunk) {
+                    // The staging buffer frees with the cancel (a no-op
+                    // for an already-landed copy's expired lease).
+                    if let Some(l) = pc.lease {
+                        self.pool.release(l);
+                    }
+                    if pc.done > self.backend.now() {
+                        // Still queued: un-charge its time so the
+                        // timeline agrees with the credited-back
+                        // MoveStats — otherwise the later demand fetch
+                        // double-charges, and a cancel-heavy run could
+                        // look slower than serial.
+                        self.backend.reclaim_copy(pc.phase, pc.secs,
+                                                  pc.dir, pc.route);
+                        // Queue compression: copies FIFO-queued behind
+                        // the reclaimed one land earlier now; shift
+                        // their recorded completion times too, so later
+                        // waits and cancel classifications stay honest
+                        // — and their buffer leases (prefetch AND
+                        // eviction/offload) release earlier with them.
+                        let TrainingSession {
+                            inflight_done, stream_leases, pool, ..
+                        } = self;
+                        for other in inflight_done.values_mut() {
+                            if other.dir == pc.dir && other.done > pc.done
+                            {
+                                other.done =
+                                    (other.done - pc.secs).max(0.0);
+                                if let Some(l) = other.lease {
+                                    pool.set_release(l, other.done);
+                                }
+                            }
+                        }
+                        for sl in stream_leases.iter_mut() {
+                            if sl.dir == pc.dir && sl.done > pc.done {
+                                sl.done = (sl.done - pc.secs).max(0.0);
+                                pool.set_release(sl.lease, sl.done);
+                            }
+                        }
+                    } else {
+                        // The copy had already landed when pressure
+                        // reclaimed the chunk: the traffic was real, so
+                        // undo the manager's byte credit (the cancel
+                        // event's `from` is the staged-on device, i.e.
+                        // the original copy's destination).
+                        match ev.from {
+                            Some(Device::Gpu(_)) => {
+                                self.mgr.stats.cpu_to_gpu_bytes +=
+                                    ev.bytes;
+                                self.mgr.stats.cpu_to_gpu_moves += 1;
+                            }
+                            _ => {
+                                self.mgr.stats.gpu_to_cpu_bytes +=
+                                    ev.bytes;
+                                self.mgr.stats.gpu_to_cpu_moves += 1;
+                            }
+                        }
+                    }
+                }
+                continue;
+            }
+            let dir = match ev.copy_dir() {
+                Some(d) => d,
+                None => continue, // allocs and releases are free
+            };
+            let phase = if adam {
+                Phase::AdamMove
+            } else {
+                match dir {
+                    CopyDir::H2D => Phase::CpuToGpu,
+                    CopyDir::D2H => Phase::GpuToCpu,
+                }
+            };
+            match ev.kind {
+                MoveKind::Evict => {
+                    // Pressure-driven: cannot wait for a buffer, so it
+                    // downgrades to the pageable curve when the pool is
+                    // dry.
+                    let (_, done, _, lease) = self
+                        .charge_async_routed(phase, dir, dep, ev.bytes);
+                    dep = done;
+                    if let Some(l) = lease {
+                        self.stream_leases
+                            .push(StreamLease { lease: l, dir, done });
+                    }
+                }
+                MoveKind::Prefetch => {
+                    // The issue paths reserve pool capacity before
+                    // staging, so this normally lands a pinned lease;
+                    // if an eviction in the same drain batch took the
+                    // last buffer, the copy downgrades rather than
+                    // un-staging the chunk.
+                    let (t, done, route, lease) = self
+                        .charge_async_routed(phase, dir, dep, ev.bytes);
+                    self.inflight_done.insert(
+                        ev.chunk,
+                        PendingCopy { done, secs: t, dir, phase, route,
+                                      lease },
+                    );
+                }
+                _ => {
+                    // Demand copies preempt the pool: always charged at
+                    // the pinned rate, never queued on a buffer.
+                    let t = self
+                        .backend
+                        .copy_secs(ev.bytes, CopyRoute::Pinned);
+                    self.backend.demand_copy(phase, t, dir, dep);
+                }
+            }
+        }
+        // Finish cancelling each reclaimed group: drop the remaining
+        // mid-gather member payloads and revert their tensors, so the
+        // group is back in the released state the demand path expects.
+        for g in cancelled_groups {
+            let members: Vec<usize> = self.groups.members(g).collect();
+            for p in members {
+                if self.groups.owner_of(p) == 0 {
+                    continue; // the local chunk was never gathering
+                }
+                let c = self.fp16_list[p];
+                if self.mgr.is_gathering(c) {
+                    // Emits another GatherCancel event; it finds the
+                    // group already cancelled on the next drain.
+                    self.mgr.cancel_gather(c)?;
+                }
+                if self.mgr.chunk(c).device.is_none() {
+                    self.mgr.retag_tensors(
+                        c, TensorState::Hold, TensorState::Free)?;
+                }
+            }
+            self.gathered.remove(&g);
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // Real-backend surface (the e2e trainer's policy entry points).
+    // ------------------------------------------------------------------
+
+    /// Advance the real-path access clock by one moment and return it
+    /// (the LRU timestamp the next manager operation is stamped with).
+    pub fn bump_moment(&mut self) -> Moment {
+        self.moment += 1;
+        self.moment
+    }
+
+    /// Size this tick's staging window from the backend's measured
+    /// compute/transfer feedback (adaptive mode) or the static knob.
+    /// The e2e analogue of the window computation in `moment_tick`,
+    /// including the window telemetry.
+    pub fn real_window(&mut self) -> u32 {
+        let cw = self.backend.compute_work();
+        let hb = self.backend.copy_busy(CopyDir::H2D);
+        let kw = self.backend.collective_work();
+        if let Some(c) = self.ctl.as_mut() {
+            c.observe(cw, hb, kw);
+        }
+        let inputs = WindowInputs {
+            pool_free: if self.pool.enabled() {
+                Some(self.pool.available_at(self.backend.now(),
+                                            CopyDir::H2D) as u32)
+            } else {
+                None
+            },
+            h2d_backlog_secs: self.backend.copy_backlog(CopyDir::H2D),
+            coll_backlog_secs: self.backend.collective_backlog(),
+        };
+        let w = match &self.ctl {
+            Some(c) => c.chunk_window(inputs),
+            None => self.opt.lookahead,
+        };
+        self.chunk_win.0 += w as u64;
+        self.chunk_win.1 += 1;
+        w
+    }
+
+    /// Mean per-tick staging window actually used (telemetry).
+    pub fn avg_window(&self) -> f64 {
+        if self.chunk_win.1 > 0 {
+            self.chunk_win.0 as f64 / self.chunk_win.1 as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Pool-gated staging of one chunk toward `device` (real backend):
+    /// the e2e analogue of one `issue_prefetches` walk step.  A staged
+    /// chunk holds a pinned buffer until its access consumes it
+    /// (`wait_chunk` frees the open-ended lease); a dry pool throttles
+    /// the caller's walk instead of issuing.
+    pub fn stage_real(
+        &mut self,
+        chunk: ChunkId,
+        device: Device,
+        limit: u64,
+    ) -> Result<StageOutcome> {
+        if self.mgr.chunk(chunk).device != Some(Device::Cpu) {
+            return Ok(StageOutcome::Skipped);
+        }
+        if self.pool.enabled()
+            && self.pool.available_at(self.backend.now(), CopyDir::H2D)
+                == 0
+        {
+            self.mgr.stats.pinned_waits += 1;
+            return Ok(StageOutcome::PoolDry);
+        }
+        let now = self.bump_moment();
+        let TrainingSession { mgr, tracer, policy, .. } = self;
+        let issued = with_policy(policy, tracer, |pol| {
+            mgr.prefetch_to(chunk, device, limit, pol, now, &|_| false)
+        })?;
+        if issued {
+            let lease = if self.pool.enabled() {
+                self.pool.try_acquire(self.backend.now(), CopyDir::H2D)
+            } else {
+                None
+            };
+            let old = self.inflight_done.insert(
+                chunk,
+                PendingCopy {
+                    done: f64::INFINITY,
+                    secs: 0.0,
+                    dir: CopyDir::H2D,
+                    phase: Phase::CpuToGpu,
+                    route: CopyRoute::Pinned,
+                    lease,
+                },
+            );
+            // A stale entry (the chunk's previous staging was
+            // force-completed by a last-resort eviction, then the chunk
+            // spilled home without being accessed) must not leak its
+            // open-ended lease.
+            if let Some(pc) = old {
+                if pc.done.is_infinite() {
+                    if let Some(l) = pc.lease {
+                        self.pool.release(l);
+                    }
+                }
+            }
+            self.drain_events_real();
+            Ok(StageOutcome::Staged)
+        } else {
+            self.drain_events_real();
+            Ok(StageOutcome::Skipped)
+        }
+    }
+
+    /// Access one tensor on `device` through Algorithm 1 (real
+    /// backend): waits out (consumes) an in-flight staged copy first,
+    /// then stamps the LRU clock and drains the move events.
+    pub fn access_real(
+        &mut self,
+        kind: ChunkKind,
+        idx: usize,
+        device: Device,
+    ) -> Result<()> {
+        let c = self.chunk_of(kind, idx);
+        self.wait_chunk(c);
+        let now = self.bump_moment();
+        let TrainingSession { mgr, tracer, policy, .. } = self;
+        with_policy(policy, tracer, |pol| {
+            mgr.access_tensor(kind, idx, device, pol, now)
+        })?;
+        self.drain_events_real();
+        Ok(())
+    }
+
+    /// Bring one chunk to `device` through the eviction policy (real
+    /// backend) — the ADAM staging leg of the e2e step.
+    pub fn ensure_real(&mut self, c: ChunkId, device: Device)
+        -> Result<()> {
+        self.wait_chunk(c);
+        let now = self.bump_moment();
+        let TrainingSession { mgr, tracer, policy, .. } = self;
+        with_policy(policy, tracer, |pol| {
+            mgr.ensure_on(c, device, pol, now)
+        })?;
+        self.drain_events_real();
+        Ok(())
+    }
+
+    /// Drain manager move events on the real backend.  The moves
+    /// already happened (real memcpys, measured by the backend's
+    /// recording wrappers); only the completion protocol runs here:
+    /// a cancelled staged chunk frees its pinned buffer.
+    fn drain_events_real(&mut self) {
+        for ev in self.mgr.drain_events() {
+            if ev.kind == MoveKind::PrefetchCancel {
+                if let Some(pc) = self.inflight_done.remove(&ev.chunk) {
+                    if let Some(l) = pc.lease {
+                        self.pool.release(l);
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::backend::SimBackend;
+    use super::*;
+    use crate::chunk::ChunkRegistry;
+    use crate::chunk::TensorSpec;
+    use crate::mem::HeterogeneousSpace;
+
+    fn tiny_mgr() -> ChunkManager {
+        let specs: Vec<TensorSpec> = (0..6)
+            .map(|i| TensorSpec {
+                name: format!("w{i}"),
+                numel: 64,
+                embedding: false,
+            })
+            .collect();
+        let reg = ChunkRegistry::build(&specs, 128).unwrap();
+        let space = HeterogeneousSpace::new(2 << 10, 1 << 20);
+        ChunkManager::new(reg, space)
+    }
+
+    fn real_session(pinned: u32, adaptive: bool)
+        -> TrainingSession<SimBackend> {
+        let opt = OptimizationPlan {
+            eviction: super::super::EvictKind::Lru,
+            lookahead: 4,
+            pinned_buffers: pinned,
+            adaptive_lookahead: adaptive,
+            ..Default::default()
+        };
+        let net = crate::config::ClusterPreset::yard().net;
+        TrainingSession::new_real(opt, tiny_mgr(),
+                                  SimBackend::new(false, net, 1))
+    }
+
+    #[test]
+    fn real_session_starts_steady_with_optional_controller() {
+        let s = real_session(0, false);
+        assert!(!s.warmup);
+        assert!(s.ctl.is_none());
+        assert!(!s.pool.enabled());
+        let s = real_session(2, true);
+        assert!(s.ctl.is_some());
+        assert_eq!(s.pool.capacity(), 2);
+    }
+
+    #[test]
+    fn real_window_static_and_telemetry() {
+        let mut s = real_session(0, false);
+        assert_eq!(s.real_window(), 4);
+        assert_eq!(s.real_window(), 4);
+        assert!((s.avg_window() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stage_real_holds_a_lease_until_consumed() {
+        let mut s = real_session(1, false);
+        for id in s.mgr.reg.list(ChunkKind::ParamFp16) {
+            s.mgr.alloc_payload(id, Device::Cpu).unwrap();
+        }
+        let c = s.fp16_list[0];
+        let limit = s.mgr.space.dev(Device::Gpu(0)).capacity;
+        assert_eq!(s.stage_real(c, Device::Gpu(0), limit).unwrap(),
+                   StageOutcome::Staged);
+        assert!(s.mgr.is_inflight(c));
+        // The single buffer is held open-ended: a second stage attempt
+        // finds the pool dry and counts a throttle.
+        let c2 = s.fp16_list[1];
+        assert_eq!(s.stage_real(c2, Device::Gpu(0), limit).unwrap(),
+                   StageOutcome::PoolDry);
+        assert_eq!(s.mgr.stats.pinned_waits, 1);
+        // Consuming the staged chunk frees the buffer.
+        s.access_real(ChunkKind::ParamFp16, 0, Device::Gpu(0)).unwrap();
+        assert!(!s.mgr.is_inflight(c));
+        assert_eq!(s.stage_real(c2, Device::Gpu(0), limit).unwrap(),
+                   StageOutcome::Staged);
+    }
+
+    #[test]
+    fn stage_real_skips_non_cpu_chunks() {
+        let mut s = real_session(0, false);
+        for id in s.mgr.reg.list(ChunkKind::ParamFp16) {
+            s.mgr.alloc_payload(id, Device::Cpu).unwrap();
+        }
+        let c = s.fp16_list[0];
+        let limit = s.mgr.space.dev(Device::Gpu(0)).capacity;
+        assert_eq!(s.stage_real(c, Device::Gpu(0), limit).unwrap(),
+                   StageOutcome::Staged);
+        // Already in flight: skipped, not re-staged.
+        assert_eq!(s.stage_real(c, Device::Gpu(0), limit).unwrap(),
+                   StageOutcome::Skipped);
+    }
+}

@@ -48,6 +48,31 @@ impl Args {
         Ok(Args { cmd, flags })
     }
 
+    /// Reject flags outside `allowed` (ISSUE 5 satellite): the parser
+    /// accepts any `--key value` pair into the map, so a typo like
+    /// `--lokahead 8` used to be silently ignored — every subcommand
+    /// now declares its known-flag set and bails on the rest.
+    fn reject_unknown(&self, allowed: &[&str]) -> Result<()> {
+        let mut unknown: Vec<&str> = self
+            .flags
+            .keys()
+            .map(String::as_str)
+            .filter(|k| !allowed.contains(k))
+            .collect();
+        unknown.sort_unstable();
+        if let Some(first) = unknown.first() {
+            if allowed.is_empty() {
+                bail!("'{}' takes no flags, got --{first}", self.cmd);
+            }
+            bail!(
+                "unknown flag --{first} for '{}' (known: --{})",
+                self.cmd,
+                allowed.join(", --")
+            );
+        }
+        Ok(())
+    }
+
     fn get(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.into())
     }
@@ -171,15 +196,59 @@ fn main() {
     }
 }
 
+/// The pipeline switches of the `simulate` subcommand (parsed by
+/// `Args::opt_plan`; `breakdown` runs a fixed plan ladder and takes
+/// none of them).
+const PLAN_FLAGS: &[&str] = &[
+    "pipeline", "prefetch", "overlap", "lookahead",
+    "overlap-collectives", "group-lookahead", "pinned-buffers",
+    "pinned-split", "adaptive-lookahead",
+];
+
+fn with_flags(common: &[&'static str], extra: &[&'static str])
+    -> Vec<&'static str> {
+    let mut v = common.to_vec();
+    v.extend_from_slice(extra);
+    v
+}
+
 fn run() -> Result<()> {
     let args = Args::parse()?;
     match args.cmd.as_str() {
-        "models" => cmd_models(),
-        "chunk-search" => cmd_chunk_search(&args),
-        "simulate" => cmd_simulate(&args),
-        "breakdown" => cmd_breakdown(&args),
-        "scale" => cmd_scale(&args),
-        "train" => cmd_train(&args),
+        "models" => {
+            args.reject_unknown(&[])?;
+            cmd_models()
+        }
+        "chunk-search" => {
+            args.reject_unknown(&["model", "cluster"])?;
+            cmd_chunk_search(&args)
+        }
+        "simulate" => {
+            args.reject_unknown(&with_flags(
+                PLAN_FLAGS,
+                &["system", "cluster", "model", "gpus", "batch"],
+            ))?;
+            cmd_simulate(&args)
+        }
+        "breakdown" => {
+            // breakdown sweeps a fixed plan ladder — it does NOT read
+            // the pipeline switches, so accepting them here would be
+            // exactly the silent-ignore this validation exists to kill.
+            args.reject_unknown(&["cluster", "model", "gpus", "batch"])?;
+            cmd_breakdown(&args)
+        }
+        "scale" => {
+            args.reject_unknown(&["cluster", "gpus"])?;
+            cmd_scale(&args)
+        }
+        "train" => {
+            args.reject_unknown(&[
+                "artifacts", "steps", "gpu-mb", "cpu-mb", "lr", "wd",
+                "seed", "log-every", "prefetch-ahead", "pinned-buffers",
+                "adaptive-ahead",
+            ])?;
+            cmd_train(&args)
+        }
         "help" | "--help" | "-h" => {
             print!("{HELP}");
             Ok(())
@@ -209,7 +278,15 @@ pytorch-ddp
               prefetch windows, OSC, SP)
   patrickstar scale [--cluster yard] [--gpus 8]
   patrickstar train [--artifacts artifacts] [--steps 50] [--gpu-mb 6] \
-[--lr 0.001] [--log-every 10] [--prefetch-ahead 0]
+[--lr 0.001] [--log-every 10] [--prefetch-ahead 0|N|auto] \
+[--pinned-buffers 0] [--adaptive-ahead on|off]
+             (the real trainer drives the same TrainingSession as the
+              simulator: --pinned-buffers N gives its prefetch walk a
+              finite staging pool; --prefetch-ahead auto sizes the
+              window from measured compute/transfer ratios)
+
+Unknown flags are rejected per subcommand (a typo like --lokahead
+fails loudly instead of being silently ignored).
 ";
 
 fn cmd_models() -> Result<()> {
@@ -350,6 +427,32 @@ fn cmd_train(_args: &Args) -> Result<()> {
 
 #[cfg(feature = "pjrt")]
 fn cmd_train(args: &Args) -> Result<()> {
+    // `--prefetch-ahead auto` mirrors the simulator's `--lookahead
+    // auto`: adaptive window under a default cap of 8 tensors; a
+    // numeric value is the static window (or the adaptive cap when
+    // `--adaptive-ahead on`).
+    let pa_raw = args.get("prefetch-ahead", "0");
+    let pa_auto = pa_raw == "auto";
+    let prefetch_lookahead = if pa_auto {
+        8
+    } else {
+        pa_raw
+            .parse()
+            .map_err(|_| anyhow!("--prefetch-ahead: expected a number \
+                                  or 'auto', got '{pa_raw}'"))?
+    };
+    let adaptive = args.get_bool("adaptive-ahead", pa_auto)?;
+    if pa_auto && !adaptive {
+        bail!("--prefetch-ahead auto contradicts --adaptive-ahead off");
+    }
+    if adaptive && prefetch_lookahead == 0 {
+        // Mirror the simulator's guard: the controller sizes a staging
+        // lane; with no lane (cap 0) it would silently do nothing.
+        bail!(
+            "--adaptive-ahead sizes the staging window; give it a lane \
+             first (--prefetch-ahead N or --prefetch-ahead auto)"
+        );
+    }
     let cfg = TrainerConfig {
         artifacts_dir: args.get("artifacts", "artifacts"),
         gpu_bytes: args.get_u64("gpu-mb", 6)? << 20,
@@ -357,7 +460,9 @@ fn cmd_train(args: &Args) -> Result<()> {
         lr: args.get("lr", "0.001").parse()?,
         weight_decay: args.get("wd", "0.01").parse()?,
         seed: args.get_u64("seed", 0)?,
-        prefetch_lookahead: args.get_u64("prefetch-ahead", 0)? as usize,
+        prefetch_lookahead,
+        pinned_buffers: args.get_u64("pinned-buffers", 0)? as u32,
+        adaptive_lookahead: adaptive,
     };
     let steps = args.get_u64("steps", 50)? as usize;
     let log_every = args.get_u64("log-every", 10)? as usize;
@@ -382,5 +487,13 @@ fn cmd_train(args: &Args) -> Result<()> {
         human_bytes(report.cpu_to_gpu_bytes),
         human_bytes(report.gpu_to_cpu_bytes),
     );
+    if report.prefetches > 0 || report.pinned_waits > 0 {
+        println!(
+            "staging: {} prefetches | avg window {:.1} | {} pool waits",
+            report.prefetches,
+            report.avg_prefetch_window,
+            report.pinned_waits,
+        );
+    }
     Ok(())
 }

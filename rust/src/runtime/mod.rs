@@ -14,6 +14,13 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::util::Json;
 
+// The PJRT bindings facade: a check-only stub mirroring the slice of
+// the `xla` crate API this module uses (the real crate is not in the
+// offline cache).  All call sites — here and in `train/` — resolve
+// `xla::` through this module path, so vendoring the real bindings is
+// a one-line swap to `pub use ::xla;`.
+pub mod xla;
+
 /// One parameter tensor of the AOT model, from manifest.json.
 #[derive(Clone, Debug)]
 pub struct ParamSpec {

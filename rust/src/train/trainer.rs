@@ -10,16 +10,37 @@
 //! resident in it to feed the executable, evictions really happen (LRU)
 //! and are really counted — the orchestration path is identical to a
 //! CUDA deployment; only the arithmetic runs on the host through PJRT.
+//!
+//! Since ISSUE 5 the trainer drives the same backend-agnostic
+//! [`TrainingSession`] the simulator uses, over a [`PjrtBackend`] that
+//! records *measured* wall time per phase.  The session contributes the
+//! policy the e2e path used to lack:
+//!
+//! * the **pinned staging pool** (`TrainerConfig::pinned_buffers`) — a
+//!   staged chunk holds one buffer until its access consumes it, so the
+//!   prefetch walk throttles to real staging capacity exactly as the
+//!   simulator's does (`MoveStats::pinned_waits` counts the throttles);
+//! * the **adaptive lookahead controller**
+//!   (`TrainerConfig::adaptive_lookahead`) — the window is sized each
+//!   access from the measured compute/copy ratio, with
+//!   `prefetch_lookahead` acting as the cap, mirroring `--lookahead
+//!   auto` in the simulator.  The chunk schedule is static here (the
+//!   parameter order *is* the trace), so only the window depth adapts.
 
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::chunk::{ChunkKind, ChunkManager, ChunkRegistry, TensorSpec};
-use crate::evict::LruPolicy;
+use crate::chunk::{ChunkId, ChunkKind, ChunkManager, ChunkRegistry,
+                   TensorSpec};
+use crate::engine::{EvictKind, ExecutionBackend, OptimizationPlan,
+                    PjrtBackend, StageOutcome, TrainingSession};
 use crate::mem::{Device, HeterogeneousSpace};
+use crate::runtime::xla;
 use crate::runtime::{lit_f32, lit_f32_shaped, lit_i32_shaped, scalar_f32,
                      to_f32, PjrtRuntime};
+use crate::sim::{CopyDir, Phase};
 use crate::tensor::TensorState;
 use crate::train::data::SyntheticCorpus;
 use crate::util::rng::Rng;
@@ -35,11 +56,21 @@ pub struct TrainerConfig {
     pub lr: f32,
     pub weight_decay: f32,
     pub seed: u64,
-    /// Stage the chunk `prefetch_lookahead` tensors ahead into the GPU
-    /// pool while the current chunk streams through (0 = off).  The e2e
-    /// analogue of the simulator's warm-up-guided prefetch: chunk order
-    /// is static here, so the "trace" is the parameter order itself.
+    /// Stage chunks up to `prefetch_lookahead` tensors ahead into the
+    /// GPU pool while the current chunk streams through (0 = off).  The
+    /// e2e analogue of the simulator's warm-up-guided prefetch: chunk
+    /// order is static here, so the "trace" is the parameter order
+    /// itself.  With `adaptive_lookahead` this becomes the *cap* the
+    /// feedback-sized window never exceeds.
     pub prefetch_lookahead: usize,
+    /// Size of the pinned staging pool the prefetch walk competes for
+    /// (0 = unbounded staging, the pre-session behaviour).  Each staged
+    /// chunk holds one buffer until consumed.
+    pub pinned_buffers: u32,
+    /// Size the prefetch window from the measured compute/transfer
+    /// ratio (the simulator's `--lookahead auto`, fed by real per-step
+    /// timings) instead of the static `prefetch_lookahead` count.
+    pub adaptive_lookahead: bool,
 }
 
 impl Default for TrainerConfig {
@@ -52,6 +83,8 @@ impl Default for TrainerConfig {
             weight_decay: 0.01,
             seed: 0,
             prefetch_lookahead: 0,
+            pinned_buffers: 0,
+            adaptive_lookahead: false,
         }
     }
 }
@@ -65,6 +98,11 @@ pub struct TrainReport {
     pub cpu_to_gpu_bytes: u64,
     pub gpu_to_cpu_bytes: u64,
     pub prefetches: u64,
+    /// Prefetch issues deferred because the staging pool was dry.
+    pub pinned_waits: u64,
+    /// Mean per-access staging window actually used (the static count,
+    /// or the controller's feedback-sized window in adaptive mode).
+    pub avg_prefetch_window: f64,
 }
 
 /// Embedding parameter state (CPU-pinned, unmanaged by chunks).
@@ -82,14 +120,14 @@ struct EmbState {
 
 pub struct Trainer {
     pub rt: PjrtRuntime,
-    pub mgr: ChunkManager,
-    policy: LruPolicy,
+    /// The shared orchestration core (chunk manager + staging pool +
+    /// adaptive controller) over the measured-time backend.
+    pub session: TrainingSession<PjrtBackend>,
     emb: Vec<EmbState>,
     /// manifest param index -> Some(non-embedding ordinal) or None (emb).
     param_map: Vec<Option<usize>>,
     step_count: u64,
     cfg: TrainerConfig,
-    now: u32,
 }
 
 impl Trainer {
@@ -200,20 +238,36 @@ impl Trainer {
             }
         }
 
+        // The e2e orchestration plan: LRU eviction (no tracer on the
+        // real path), the prefetch cap, the staging pool, and the
+        // adaptive controller when asked for.
+        let opt = OptimizationPlan {
+            eviction: EvictKind::Lru,
+            lookahead: cfg.prefetch_lookahead as u32,
+            pinned_buffers: cfg.pinned_buffers,
+            adaptive_lookahead: cfg.adaptive_lookahead,
+            ..Default::default()
+        };
+        let session =
+            TrainingSession::new_real(opt, mgr, PjrtBackend::new());
+
         Ok(Trainer {
             rt,
-            mgr,
-            policy: LruPolicy::default(),
+            session,
             emb,
             param_map,
             step_count: 0,
             cfg,
-            now: 0,
         })
     }
 
     pub fn manifest(&self) -> &crate::runtime::Manifest {
         &self.rt.manifest
+    }
+
+    /// The chunk manager (telemetry, payload inspection).
+    pub fn mgr(&self) -> &ChunkManager {
+        &self.session.mgr
     }
 
     pub fn corpus(&self, seed: u64) -> SyntheticCorpus {
@@ -223,29 +277,34 @@ impl Trainer {
 
     // ------------------------------------------------------------ helpers
 
-    /// Stage the chunk owning non-embedding tensor `i + lookahead` into
-    /// the GPU pool (best-effort; the in-flight mark keeps it safe from
-    /// the LRU until its access consumes it).  Free pool space only —
-    /// never evicts for a speculative fetch, so a tight pool simply
-    /// stages nothing rather than thrashing the chunks the next few
-    /// accesses are about to need.
+    /// Stage the chunks owning the next window of non-embedding tensors
+    /// into the GPU pool (best-effort; the in-flight mark keeps a
+    /// staged chunk safe from the LRU until its access consumes it).
+    /// The window is the session's: static `prefetch_lookahead`, or the
+    /// controller's measured-ratio window bounded by the free staging
+    /// buffers.  Free pool space only — staging never evicts, so a
+    /// tight pool simply stages nothing rather than thrashing the
+    /// chunks the next few accesses are about to need.
     fn prefetch_ahead(&mut self, i: usize) -> Result<()> {
-        let look = self.cfg.prefetch_lookahead;
-        if look == 0 {
+        if self.cfg.prefetch_lookahead == 0 {
             return Ok(());
         }
-        let ahead = i + look;
-        if ahead >= self.mgr.reg.n_model_tensors {
-            return Ok(());
+        let window = self.session.real_window() as usize;
+        let limit =
+            self.session.mgr.space.dev(Device::Gpu(0)).capacity;
+        for d in 1..=window {
+            let ahead = i + d;
+            if ahead >= self.session.mgr.reg.n_model_tensors {
+                break;
+            }
+            let info =
+                self.session.mgr.reg.tensor(ChunkKind::ParamFp16, ahead);
+            let chunk = ChunkId(info.chunk as u32);
+            match self.session.stage_real(chunk, Device::Gpu(0), limit)? {
+                StageOutcome::PoolDry => break,
+                StageOutcome::Staged | StageOutcome::Skipped => {}
+            }
         }
-        let info = self.mgr.reg.tensor(ChunkKind::ParamFp16, ahead);
-        let chunk = crate::chunk::ChunkId(info.chunk as u32);
-        let limit = self.mgr.space.dev(Device::Gpu(0)).capacity;
-        self.now += 1;
-        let now = self.now;
-        self.mgr
-            .prefetch_to(chunk, Device::Gpu(0), limit, &mut self.policy,
-                         now, &|_| false)?;
         Ok(())
     }
 
@@ -255,7 +314,8 @@ impl Trainer {
     /// executable's argument literal, then released to HOLD_AFTER_FWD so
     /// the chunk may be evicted while later chunks stream through — the
     /// paper's per-operator streaming, compressed around a monolithic
-    /// AOT step function.
+    /// AOT step function.  Fetch time is measured into the backend's
+    /// H2D lane (the controller's transfer-rate signal).
     fn param_literals(&mut self) -> Result<Vec<xla::Literal>> {
         let man = self.rt.manifest.clone();
         let mut lits = Vec::with_capacity(man.params.len());
@@ -269,26 +329,34 @@ impl Trainer {
                 }
                 Some(i) => {
                     self.prefetch_ahead(i)?;
-                    self.now += 1;
-                    let now = self.now;
-                    self.mgr.access_tensor(
-                        ChunkKind::ParamFp16, i, Device::Gpu(0),
-                        &mut self.policy, now,
-                    )?;
-                    let info = self.mgr.reg.tensor(ChunkKind::ParamFp16, i);
+                    let t0 = Instant::now();
+                    self.session.access_real(
+                        ChunkKind::ParamFp16, i, Device::Gpu(0))?;
+                    let info = self
+                        .session
+                        .mgr
+                        .reg
+                        .tensor(ChunkKind::ParamFp16, i);
                     let (chunk, off, n) = (
                         crate::chunk::ChunkId(info.chunk as u32),
                         info.offset as usize,
                         info.numel as usize,
                     );
                     let buf = self
+                        .session
                         .mgr
                         .payload(chunk)
                         .ok_or_else(|| anyhow!("no payload"))?;
                     lits.push(lit_f32_shaped(&buf[off..off + n], &p.shape)?);
-                    self.mgr.release_tensor(
+                    self.session.mgr.release_tensor(
                         ChunkKind::ParamFp16, i, TensorState::HoldAfterFwd,
                     )?;
+                    self.session.backend.demand_copy(
+                        Phase::CpuToGpu,
+                        t0.elapsed().as_secs_f64(),
+                        CopyDir::H2D,
+                        0.0,
+                    );
                 }
             }
         }
@@ -324,7 +392,10 @@ impl Trainer {
         ];
         args.extend(self.param_literals()?);
         lap("param literals");
+        let t0 = Instant::now();
         let out = self.rt.run("train_step", &args)?;
+        self.session.backend.execute_moment(
+            Phase::FwdBwd, t0.elapsed().as_secs_f64());
         lap("train_step exec");
         if out.len() != 1 + man.params.len() {
             bail!("train_step returned {} values", out.len());
@@ -347,26 +418,34 @@ impl Trainer {
                 }
                 Some(i) => {
                     self.prefetch_ahead(i)?;
-                    self.now += 1;
-                    let now = self.now;
-                    self.mgr.access_tensor(
-                        ChunkKind::ParamFp16, i, Device::Gpu(0),
-                        &mut self.policy, now,
-                    )?;
-                    let info = self.mgr.reg.tensor(ChunkKind::ParamFp16, i);
+                    let t0 = Instant::now();
+                    self.session.access_real(
+                        ChunkKind::ParamFp16, i, Device::Gpu(0))?;
+                    let info = self
+                        .session
+                        .mgr
+                        .reg
+                        .tensor(ChunkKind::ParamFp16, i);
                     let (chunk, off, n) = (
                         crate::chunk::ChunkId(info.chunk as u32),
                         info.offset as usize,
                         info.numel as usize,
                     );
                     let buf = self
+                        .session
                         .mgr
                         .payload_mut(chunk)
                         .ok_or_else(|| anyhow!("no payload"))?;
                     buf[off..off + n].copy_from_slice(&g);
-                    self.mgr.release_tensor(
+                    self.session.mgr.release_tensor(
                         ChunkKind::ParamFp16, i, TensorState::HoldAfterBwd,
                     )?;
+                    self.session.backend.demand_copy(
+                        Phase::CpuToGpu,
+                        t0.elapsed().as_secs_f64(),
+                        CopyDir::H2D,
+                        0.0,
+                    );
                 }
             }
         }
@@ -377,14 +456,20 @@ impl Trainer {
         self.step_count += 1;
         let hp = self.make_hp();
         let chunk_elems = man.chunk_elems;
-        let fp16_list = self.mgr.reg.list(ChunkKind::ParamFp16);
+        let fp16_list = self.session.mgr.reg.list(ChunkKind::ParamFp16);
         for p16 in fp16_list {
-            let [p32, mom, var] = self.mgr.reg.os_chunks_for(p16);
+            let [p32, mom, var] = self.session.mgr.reg.os_chunks_for(p16);
             // ADAM runs on CPU: bring the grad chunk home (Sec. 8.2 OSC
             // default; the margin optimization lives in the simulator).
-            self.now += 1;
-            let now = self.now;
-            self.mgr.ensure_on(p16, Device::Cpu, &mut self.policy, now)?;
+            // The D2H leg is measured into the backend's copy lane.
+            let t0 = Instant::now();
+            self.session.ensure_real(p16, Device::Cpu)?;
+            self.session.backend.demand_copy(
+                Phase::AdamMove,
+                t0.elapsed().as_secs_f64(),
+                CopyDir::D2H,
+                0.0,
+            );
             let getv = |mgrr: &ChunkManager, id| -> Result<Vec<f32>> {
                 Ok(mgrr
                     .payload(id)
@@ -392,36 +477,48 @@ impl Trainer {
                     .to_vec())
             };
             let (pv, mv, vv, gv) = (
-                getv(&self.mgr, p32)?,
-                getv(&self.mgr, mom)?,
-                getv(&self.mgr, var)?,
-                getv(&self.mgr, p16)?,
+                getv(&self.session.mgr, p32)?,
+                getv(&self.session.mgr, mom)?,
+                getv(&self.session.mgr, var)?,
+                getv(&self.session.mgr, p16)?,
             );
             debug_assert_eq!(pv.len(), chunk_elems);
+            let t0 = Instant::now();
             let out = self.rt.run(
                 "adam_step",
                 &[lit_f32(&hp), lit_f32(&pv), lit_f32(&mv), lit_f32(&vv),
                   lit_f32(&gv)],
             )?;
+            self.session.backend.execute_moment(
+                Phase::Adam, t0.elapsed().as_secs_f64());
             if out.len() != 3 {
                 bail!("adam_step returned {} values", out.len());
             }
             let (np, nm, nv) =
                 (to_f32(&out[0])?, to_f32(&out[1])?, to_f32(&out[2])?);
-            self.mgr.payload_mut(p32).unwrap().copy_from_slice(&np);
-            self.mgr.payload_mut(mom).unwrap().copy_from_slice(&nm);
-            self.mgr.payload_mut(var).unwrap().copy_from_slice(&nv);
+            self.session.mgr.payload_mut(p32).unwrap()
+                .copy_from_slice(&np);
+            self.session.mgr.payload_mut(mom).unwrap()
+                .copy_from_slice(&nm);
+            self.session.mgr.payload_mut(var).unwrap()
+                .copy_from_slice(&nv);
             // fp32 master -> fp16 working copy for the next iteration.
-            self.mgr.payload_mut(p16).unwrap().copy_from_slice(&np);
+            self.session.mgr.payload_mut(p16).unwrap()
+                .copy_from_slice(&np);
             // Grad consumed; params back to HOLD.
-            let tensors = self.mgr.chunk(p16).tensors.clone();
+            let tensors = self.session.mgr.chunk(p16).tensors.clone();
             for t in tensors {
-                let i = t.0 as usize % self.mgr.reg.n_model_tensors;
-                let ti = self.mgr.reg.tensor_index(ChunkKind::ParamFp16, i);
-                if self.mgr.reg.tensors[ti].state
+                let i = t.0 as usize
+                    % self.session.mgr.reg.n_model_tensors;
+                let ti = self
+                    .session
+                    .mgr
+                    .reg
+                    .tensor_index(ChunkKind::ParamFp16, i);
+                if self.session.mgr.reg.tensors[ti].state
                     == TensorState::HoldAfterBwd
                 {
-                    self.mgr.reg.tensors[ti]
+                    self.session.mgr.reg.tensors[ti]
                         .set_state(TensorState::Hold)
                         .map_err(|e| anyhow!(e))?;
                 }
@@ -431,11 +528,14 @@ impl Trainer {
         lap("chunk adam");
 
         // ---- embedding ADAM over padded chunk-size slices --------------
+        let t0 = Instant::now();
         for e in 0..self.emb.len() {
             self.adam_embedding(e, &hp, chunk_elems)?;
         }
+        self.session.backend.execute_moment(
+            Phase::Adam, t0.elapsed().as_secs_f64());
         lap("embedding adam");
-        self.mgr.drain_events();
+        self.session.mgr.drain_events();
         Ok(loss)
     }
 
@@ -502,7 +602,7 @@ impl Trainer {
         let out = self.rt.run("eval_loss", &args)?;
         // param_literals left everything HOLD_AFTER_FWD; reset to HOLD
         // (the paper's end-of-FWD reset).
-        self.mgr.reset_after_fwd(ChunkKind::ParamFp16)?;
+        self.session.mgr.reset_after_fwd(ChunkKind::ParamFp16)?;
         scalar_f32(&out[0])
     }
 
@@ -524,10 +624,12 @@ impl Trainer {
                 );
             }
         }
-        report.evictions = self.mgr.stats.evictions;
-        report.cpu_to_gpu_bytes = self.mgr.stats.cpu_to_gpu_bytes;
-        report.gpu_to_cpu_bytes = self.mgr.stats.gpu_to_cpu_bytes;
-        report.prefetches = self.mgr.stats.prefetches;
+        report.evictions = self.session.mgr.stats.evictions;
+        report.cpu_to_gpu_bytes = self.session.mgr.stats.cpu_to_gpu_bytes;
+        report.gpu_to_cpu_bytes = self.session.mgr.stats.gpu_to_cpu_bytes;
+        report.prefetches = self.session.mgr.stats.prefetches;
+        report.pinned_waits = self.session.mgr.stats.pinned_waits;
+        report.avg_prefetch_window = self.session.avg_window();
         Ok(report)
     }
 }

@@ -22,6 +22,7 @@ fn mk_trainer(gpu_mb: u64) -> Trainer {
         lr: 1e-3,
         weight_decay: 0.01,
         seed: 7,
+        ..Default::default()
     })
     .expect("trainer init")
 }
@@ -64,11 +65,11 @@ fn e2e_eviction_under_tiny_gpu_pool_still_correct() {
         "eviction changed numerics: {l_tight} vs {l_roomy}"
     );
     assert!(
-        tight.mgr.stats.evictions > 0,
+        tight.mgr().stats.evictions > 0,
         "tight pool must actually evict"
     );
-    assert!(tight.mgr.stats.gpu_to_cpu_bytes
-            > roomy.mgr.stats.gpu_to_cpu_bytes);
+    assert!(tight.mgr().stats.gpu_to_cpu_bytes
+            > roomy.mgr().stats.gpu_to_cpu_bytes);
 }
 
 #[test]
@@ -106,12 +107,12 @@ fn e2e_grad_reuses_param_chunk_space() {
     let mut t = mk_trainer(64);
     let (toks, tgts) = t.corpus(4).next_batch();
     t.step(&toks, &tgts).unwrap();
-    let fp16_list = t.mgr.reg.list(ChunkKind::ParamFp16);
+    let fp16_list = t.mgr().reg.list(ChunkKind::ParamFp16);
     let mut checked = 0;
     for p16 in fp16_list {
-        let p32 = t.mgr.reg.os_chunks_for(p16)[0];
-        let a = t.mgr.payload(p16).unwrap();
-        let b = t.mgr.payload(p32).unwrap();
+        let p32 = t.mgr().reg.os_chunks_for(p16)[0];
+        let a = t.mgr().payload(p16).unwrap();
+        let b = t.mgr().payload(p32).unwrap();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(b.iter()) {
             assert!((x - y).abs() < 1e-6, "fp16/fp32 divergence");
@@ -128,7 +129,7 @@ fn e2e_four_chunk_lists_only_14_bytes_per_param() {
         return;
     }
     let t = mk_trainer(16);
-    let reg = &t.mgr.reg;
+    let reg = &t.mgr().reg;
     // Accounting invariant (Sec. 6.1): 14 bytes per chunked parameter.
     let stats = reg.stats();
     let managed: u64 = stats.capacity_elems;

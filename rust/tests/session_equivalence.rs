@@ -1,0 +1,267 @@
+//! Session/engine equivalence suite (ISSUE 5 satellite).
+//!
+//! The `TrainingSession`/`ExecutionBackend` split must be a pure
+//! refactor of the old `Engine::run` monolith.  Three layers pin that:
+//!
+//! 1. **Trait neutrality** — driving a `SimBackend` (including through
+//!    `&mut dyn ExecutionBackend`, the worst case for accidental
+//!    re-pricing or reordering) is bit-identical to driving the raw
+//!    `StreamTimeline`, for arbitrary operation sequences.
+//! 2. **Whole-engine determinism and observer purity** — across
+//!    randomized `OptimizationPlan`s (every toggle), model sizes and
+//!    nproc ∈ {1, 2, 4, 8}, `TrainingSession` over `SimBackend`
+//!    produces byte-identical `EngineReport`s and traces run-to-run,
+//!    and tracing never perturbs the report.
+//! 3. **Cross-refactor anchoring** — the committed golden traces
+//!    (`tests/golden/*.txt`, `GOLDEN_STRICT=1` in CI) compare today's
+//!    session against the recorded pre-refactor schedules bit-for-bit;
+//!    this file covers the configurations the three golden files
+//!    don't.
+
+use patrickstar::config::{ClusterPreset, TrainTask};
+use patrickstar::engine::{Engine, EngineReport, EvictKind,
+                          ExecutionBackend, OptimizationPlan, SimBackend};
+use patrickstar::model::GptSpec;
+use patrickstar::sim::{CopyDir, CopyRoute, Phase, StreamTimeline};
+use patrickstar::util::quickcheck::forall;
+use patrickstar::util::Rng;
+
+// ---------------------------------------------------------------------
+// 1. Trait neutrality
+// ---------------------------------------------------------------------
+
+/// One random backend operation, mirrored onto both substrates.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Execute(f64),
+    DemandCopy(f64, CopyDir),
+    IssueCopy(f64, CopyDir, CopyRoute),
+    DemandColl(f64),
+    IssueColl(f64),
+    SyncCopies,
+    SyncColl,
+}
+
+fn gen_ops(rng: &mut Rng) -> (bool, Vec<Op>) {
+    let overlap = rng.range(0, 2) == 1;
+    let n = rng.range(1, 40);
+    let mut ops = Vec::with_capacity(n);
+    for _ in 0..n {
+        let secs = rng.range(1, 1000) as f64 / 300.0;
+        let dir = if rng.range(0, 2) == 0 {
+            CopyDir::H2D
+        } else {
+            CopyDir::D2H
+        };
+        let route = if rng.range(0, 2) == 0 {
+            CopyRoute::Pinned
+        } else {
+            CopyRoute::Pageable
+        };
+        ops.push(match rng.range(0, 7) {
+            0 => Op::Execute(secs),
+            1 => Op::DemandCopy(secs, dir),
+            2 => Op::IssueCopy(secs, dir, route),
+            3 => Op::DemandColl(secs),
+            4 => Op::IssueColl(secs),
+            5 => Op::SyncCopies,
+            _ => Op::SyncColl,
+        });
+    }
+    (overlap, ops)
+}
+
+#[test]
+fn property_sim_backend_dispatch_matches_raw_timeline() {
+    let net = ClusterPreset::yard().net;
+    forall(200, gen_ops, |&(overlap, ref ops)| {
+        let mut raw = StreamTimeline::new(overlap);
+        let mut sim = SimBackend::new(overlap, net, 2);
+        let be: &mut dyn ExecutionBackend = &mut sim;
+        // Completion times issued so far, to exercise the sync paths.
+        let mut raw_copy_done = 0.0f64;
+        let mut be_copy_done = 0.0f64;
+        let mut raw_coll_done = 0.0f64;
+        let mut be_coll_done = 0.0f64;
+        for (i, op) in ops.iter().enumerate() {
+            match *op {
+                Op::Execute(s) => {
+                    raw.charge(Phase::FwdBwd, s);
+                    be.execute_moment(Phase::FwdBwd, s);
+                }
+                Op::DemandCopy(s, d) => {
+                    raw.demand_copy(Phase::CpuToGpu, s, d, 0.0);
+                    be.demand_copy(Phase::CpuToGpu, s, d, 0.0);
+                }
+                Op::IssueCopy(s, d, r) => {
+                    raw_copy_done =
+                        raw.async_copy_on(Phase::GpuToCpu, s, d, 0.0, r);
+                    be_copy_done =
+                        be.issue_copy(Phase::GpuToCpu, s, d, 0.0, r);
+                }
+                Op::DemandColl(s) => {
+                    raw.demand_collective(Phase::AllGather, s);
+                    be.demand_collective(Phase::AllGather, s);
+                }
+                Op::IssueColl(s) => {
+                    raw_coll_done =
+                        raw.async_collective(Phase::ReduceScatter, s);
+                    be_coll_done =
+                        be.issue_collective(Phase::ReduceScatter, s);
+                }
+                Op::SyncCopies => {
+                    raw.wait_until(raw_copy_done);
+                    be.sync_until(be_copy_done);
+                }
+                Op::SyncColl => {
+                    raw.wait_collective(raw_coll_done);
+                    be.sync_collective(be_coll_done);
+                }
+            }
+            if raw.snapshot() != be.snapshot() {
+                return Err(format!(
+                    "snapshot diverged at op {i} ({op:?}, overlap \
+                     {overlap})\n  raw: {}\n  sim: {}",
+                    raw.snapshot(),
+                    be.snapshot()
+                ));
+            }
+        }
+        if raw_copy_done.to_bits() != be_copy_done.to_bits()
+            || raw_coll_done.to_bits() != be_coll_done.to_bits()
+        {
+            return Err("completion times diverged".into());
+        }
+        if raw.makespan().to_bits() != be.makespan().to_bits() {
+            return Err("makespan diverged".into());
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// 2. Whole-engine determinism + observer purity over random plans
+// ---------------------------------------------------------------------
+
+fn random_plan(rng: &mut Rng) -> OptimizationPlan {
+    let overlap_collectives = rng.range(0, 2) == 1;
+    let overlap = overlap_collectives || rng.range(0, 2) == 1;
+    let pinned_buffers = [0u32, 1, 2, 4][rng.range(0, 4)];
+    OptimizationPlan {
+        use_tracer: rng.range(0, 4) != 0, // mostly on; SP cell too
+        device_aware_os: rng.range(0, 4) != 0,
+        eviction: [EvictKind::Opt, EvictKind::Lru, EvictKind::Fifo,
+                   EvictKind::Lfu][rng.range(0, 4)],
+        prefetch: rng.range(0, 2) == 1,
+        overlap,
+        lookahead: rng.range(1, 64) as u32,
+        overlap_collectives,
+        group_lookahead: rng.range(1, 4) as u32,
+        pinned_buffers,
+        pinned_split: if pinned_buffers >= 2 && rng.range(0, 2) == 1 {
+            Some((rng.range(1, pinned_buffers as usize + 1) as u32,
+                  rng.range(1, pinned_buffers as usize + 1) as u32))
+        } else {
+            None
+        },
+        adaptive_lookahead: rng.range(0, 2) == 1,
+    }
+}
+
+fn run_traced_for(
+    plan: OptimizationPlan,
+    model: &str,
+    batch: u64,
+    gpus: u32,
+) -> (EngineReport, Vec<String>) {
+    let task = TrainTask::new(GptSpec::by_name(model).unwrap(), batch,
+                              gpus);
+    Engine::new(ClusterPreset::yard(), task)
+        .with_opt(plan)
+        .run_traced()
+        .expect("engine run")
+}
+
+#[test]
+fn property_session_reports_and_traces_are_deterministic() {
+    // Fewer cases than a unit-level property — each case is a full
+    // engine run — but they sweep every plan toggle and nproc.
+    forall(
+        8,
+        |rng| {
+            (
+                random_plan(rng),
+                [1u32, 2, 4, 8][rng.range(0, 4)],
+                [2u64, 4][rng.range(0, 2)],
+            )
+        },
+        |&(plan, gpus, batch)| {
+            let (r1, t1) = run_traced_for(plan, "1B", batch, gpus);
+            let (r2, t2) = run_traced_for(plan, "1B", batch, gpus);
+            if t1 != t2 {
+                let i = t1
+                    .iter()
+                    .zip(t2.iter())
+                    .position(|(a, b)| a != b)
+                    .unwrap_or(t1.len().min(t2.len()));
+                return Err(format!(
+                    "trace not deterministic for {plan:?} gpus {gpus}: \
+                     first divergence at line {i}"
+                ));
+            }
+            let (d1, d2) = (format!("{r1:?}"), format!("{r2:?}"));
+            if d1 != d2 {
+                return Err(format!(
+                    "report not byte-identical for {plan:?} gpus \
+                     {gpus}:\n  {d1}\n  {d2}"
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn tracing_is_a_pure_observer_across_pipeline_cells() {
+    // The traced session must report exactly like the untraced one in
+    // every pipeline cell (the golden tests pin only the serial,
+    // fully-pipelined and adaptive cells; this sweeps the rest).
+    for (label, plan) in [
+        ("base", OptimizationPlan::default()),
+        ("overlap", OptimizationPlan::overlap_only()),
+        ("pipelined", OptimizationPlan::pipelined()),
+        ("collectives", OptimizationPlan::collectives_pipelined()),
+        ("pinned", OptimizationPlan::pinned_pipeline()),
+        ("adaptive", OptimizationPlan::adaptive_pipeline()),
+    ] {
+        let task =
+            TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, 2);
+        let e = Engine::new(ClusterPreset::yard(), task).with_opt(plan);
+        let plain = e.run().unwrap();
+        let (traced, trace) = e.run_traced().unwrap();
+        assert!(!trace.is_empty(), "{label}: empty trace");
+        assert_eq!(
+            plain.iter_time_s.to_bits(),
+            traced.iter_time_s.to_bits(),
+            "{label}: iter time drifted under tracing"
+        );
+        assert_eq!(format!("{plain:?}"), format!("{traced:?}"),
+                   "{label}: report drifted under tracing");
+    }
+}
+
+#[test]
+fn nproc_sweep_is_deterministic_under_the_adaptive_cell() {
+    // The heaviest policy path (adaptive controller + ledger + pinned
+    // pool + collective stream) stays bit-stable at every process
+    // count the paper sweeps.
+    for gpus in [1u32, 2, 4, 8] {
+        let plan = OptimizationPlan::adaptive_pipeline();
+        let (r1, t1) = run_traced_for(plan, "1B", 4, gpus);
+        let (r2, t2) = run_traced_for(plan, "1B", 4, gpus);
+        assert_eq!(t1, t2, "nproc {gpus}: trace not deterministic");
+        assert_eq!(format!("{r1:?}"), format!("{r2:?}"),
+                   "nproc {gpus}: report not deterministic");
+        assert!(r1.iter_time_s > 0.0);
+    }
+}

@@ -1,0 +1,90 @@
+#!/usr/bin/env python3
+"""Adaptive-lookahead bench gate (ISSUE 4 + ISSUE 5 satellites).
+
+Two checks over rust/BENCH_adaptive.json:
+
+1. Adaptive vs best-static (ISSUE 4): on every swept config the
+   feedback-sized window must be within 5% of the best static
+   (lookahead, group_lookahead) pair.
+
+2. Post-refactor vs committed baseline (ISSUE 5): when a baseline file
+   (rust/benches/baseline/BENCH_adaptive.json, committed from a
+   pre-refactor run) is present, every metric shared with the fresh run
+   must be within 5% — the session/backend split must not cost
+   simulated time.  Until a toolchain machine commits the baseline
+   (the CI artifact is upload-ready), the diff is skipped with a
+   warning; the adaptive-vs-best-static gate always runs.
+
+Exit code 1 on any regression.
+"""
+
+import json
+import os
+import sys
+
+FRESH = "rust/BENCH_adaptive.json"
+BASELINE = "rust/benches/baseline/BENCH_adaptive.json"
+TOLERANCE = 1.05
+
+
+def load(path):
+    with open(path) as f:
+        return {e["name"]: e["value"] for e in json.load(f)}
+
+
+def gate_adaptive_vs_best_static(vals):
+    bad = []
+    cases = sorted({n.rsplit("/", 1)[0] for n in vals})
+    for c in cases:
+        a = vals.get(f"{c}/adaptive_iter_s")
+        b = vals.get(f"{c}/best_static_iter_s")
+        if a is None or b is None:
+            continue
+        ratio = a / b
+        print(f"{c}: adaptive {a:.3f}s vs best static {b:.3f}s "
+              f"({ratio:.3f}x)")
+        if ratio > TOLERANCE:
+            bad.append((c, ratio))
+    for c, r in bad:
+        print(f"REGRESSION: {c} adaptive {r:.3f}x best static")
+    return not bad
+
+
+def gate_against_baseline(vals):
+    if not os.path.exists(BASELINE):
+        print(f"NOTE: no committed baseline at {BASELINE}; skipping the "
+              "pre-refactor diff (commit the bench-json CI artifact "
+              "there to arm it)")
+        return True
+    base = load(BASELINE)
+    shared = sorted(set(vals) & set(base))
+    if not shared:
+        print("WARNING: baseline shares no metric names with the fresh "
+              "run; treating as a format change, not a regression")
+        return True
+    bad = []
+    for name in shared:
+        b, v = base[name], vals[name]
+        if b <= 0:
+            continue
+        ratio = v / b
+        marker = " <-- REGRESSION" if ratio > TOLERANCE else ""
+        print(f"baseline {name}: {b:.4g} -> {v:.4g} "
+              f"({ratio:.3f}x){marker}")
+        if ratio > TOLERANCE:
+            bad.append((name, ratio))
+    return not bad
+
+
+def main():
+    vals = load(FRESH)
+    ok = gate_adaptive_vs_best_static(vals)
+    ok = gate_against_baseline(vals) and ok
+    if not ok:
+        sys.exit(1)
+    print("bench gate passed: adaptive within 5% of best static; no "
+          "baseline regression")
+
+
+if __name__ == "__main__":
+    main()
