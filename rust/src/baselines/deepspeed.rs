@@ -239,6 +239,7 @@ impl DeepSpeedSim {
             gpu_peak: gpu_need,
             cpu_peak: cpu_need,
             non_model_peak: peak_nm,
+            chaos: None,
         })
     }
 }

@@ -100,6 +100,7 @@ impl PyTorchDdpSim {
             gpu_peak: gpu_need,
             cpu_peak: 0,
             non_model_peak: peak_nm,
+            chaos: None,
         })
     }
 }

@@ -92,9 +92,15 @@ pub struct MoveStats {
     /// staging pool had no free buffer (the engine retries next moment;
     /// the effective lookahead window is throttled by pool capacity).
     pub pinned_waits: u64,
+    /// Pinned staging leases still held when an iteration ended (ISSUE
+    /// 6 satellite).  Always zero on a healthy schedule: every sim-path
+    /// lease expires by the iteration makespan or is released by its
+    /// cancel path.  Debug builds assert instead of counting.
+    pub lease_leaks: u64,
 }
 
 /// The chunk manager.
+#[derive(Clone)]
 pub struct ChunkManager {
     pub reg: ChunkRegistry,
     pub space: HeterogeneousSpace,

@@ -132,6 +132,16 @@ impl CollectivePipeline {
         self.gathers.values_mut()
     }
 
+    /// Every group with a gather in flight, in ascending group order —
+    /// the deterministic victim-selection order for injected aborts
+    /// (ISSUE 6): a chaos abort always hits the lowest-numbered
+    /// in-flight group, so same-seed replays cancel the same gathers.
+    pub fn inflight_groups(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.gathers.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
     /// Groups whose gather has landed by collective-stream time `now`,
     /// in ascending group order (deterministic iteration).
     pub fn landed(&self, now: f64) -> Vec<usize> {

@@ -44,6 +44,7 @@ use crate::dp::{CollectiveCost, CollectiveOp};
 use crate::mem::Interconnect;
 use crate::sim::{CopyDir, CopyRoute, Phase, StreamTimeline};
 
+use super::chaos::ChaosStats;
 use super::report::IterBreakdown;
 
 /// Where the training session executes and prices work.  See the
@@ -129,6 +130,23 @@ pub trait ExecutionBackend {
 
     /// Bit-exact state snapshot (golden traces).
     fn snapshot(&self) -> String;
+
+    // ----------------------------------------------------------- faults
+
+    /// Poll for an injected abort event.  The session asks once per
+    /// steady-state moment; `true` means "a transient failure killed
+    /// one in-flight transfer — cancel it now".  Well-behaved backends
+    /// never abort; only fault-injecting decorators
+    /// ([`super::chaos::ChaosBackend`]) override this.
+    fn poll_abort(&mut self) -> bool {
+        false
+    }
+
+    /// Fault/degradation counters, when this backend injects faults
+    /// (`None` from well-behaved backends keeps the report clean).
+    fn chaos_stats(&self) -> Option<ChaosStats> {
+        None
+    }
 }
 
 // =====================================================================

@@ -1,0 +1,532 @@
+//! Deterministic fault injection at the execution-backend boundary
+//! (ISSUE 6 tentpole).
+//!
+//! [`ChaosBackend`] decorates any [`ExecutionBackend`] and perturbs the
+//! *pricing* side of the trait — never the execution side — so every
+//! cancel/credit-back path in the session sees a coherent world: the
+//! session prices a copy once, charges that duration, and reclaims the
+//! same duration on cancel, whether or not chaos stretched it.  Four
+//! fault lanes, each driven by its own forked [`Rng`] stream so a seed
+//! replays bit-identically regardless of which other lanes are enabled:
+//!
+//! * **jitter** — PCIe bandwidth jitter and transient copy slowdowns:
+//!   `copy_secs` is stretched per query, with independent streams for
+//!   the pinned and pageable curves (the two host-copy directions the
+//!   pricing boundary distinguishes).
+//! * **straggler** — a slow rank stretches the ring: `allgather_cost` /
+//!   `reduce_scatter_cost` wire *time* grows; the per-rank byte volume
+//!   is never touched, so collective wire volume stays bit-for-bit
+//!   serial under chaos (locked by `tests/chaos_resume.rs`).
+//! * **pressure** — GPU memory-pressure spikes: the backlog probes the
+//!   adaptive controller feeds on report a transient queue spike, which
+//!   compresses the prefetch windows and inflates the overlap-aware
+//!   eviction margin — eviction near-misses without fake bytes.
+//! * **abort** — transient failures kill one in-flight transfer: the
+//!   session polls [`ExecutionBackend::poll_abort`] once per steady
+//!   moment and cancels its lowest-numbered in-flight gather (or
+//!   oldest pending prefetch) mid-lease, exercising the
+//!   `GatherCancel`/`PrefetchCancel` credit-back machinery.
+//!
+//! The decorator is an exact passthrough when a lane is disabled — it
+//! draws *zero* random numbers, so a `ChaosBackend` over a disabled
+//! [`ChaosPlan`] is bit-identical to the bare inner backend (locked by
+//! `tests/session_equivalence.rs`).  All lane state lives in a
+//! `RefCell` because the pricing methods take `&self`; the cell is
+//! `Clone`, so checkpointing a session (`TrainingSession::checkpoint`)
+//! captures the mid-stream RNG positions and a restored run replays
+//! the exact fault tail of the uninterrupted one.
+
+use std::cell::RefCell;
+
+use anyhow::{bail, Result};
+
+use crate::dp::CollectiveOp;
+use crate::sim::{CopyDir, CopyRoute, Phase};
+use crate::util::Rng;
+
+use super::backend::{ExecutionBackend, SimBackend};
+use super::report::IterBreakdown;
+
+/// Default per-query fault probability.
+pub const DEFAULT_CHAOS_RATE: f64 = 0.05;
+/// Default fault magnitude scale (a slowdown factor of `1 + intensity
+/// * u`, `u` uniform in `[0, 1)`).
+pub const DEFAULT_CHAOS_INTENSITY: f64 = 1.0;
+/// Synthetic queue-depth spike one pressure fault adds to a backlog
+/// probe, in seconds per intensity unit.
+const PRESSURE_SPIKE_SECS: f64 = 0.01;
+
+// ---------------------------------------------------------------- plan
+
+/// Which faults to inject, how often, how hard, and from which seed.
+///
+/// Parsed from `--chaos <spec>`: `all` or a `+`-separated subset of
+/// `jitter`, `straggler`, `pressure`, `abort`, with optional
+/// `:rate=R,intensity=I` parameters — e.g. `--chaos
+/// jitter+abort:rate=0.2,intensity=3`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ChaosPlan {
+    pub jitter: bool,
+    pub straggler: bool,
+    pub pressure: bool,
+    pub abort: bool,
+    /// Per-query fault probability in `[0, 1]`.
+    pub rate: f64,
+    /// Fault magnitude scale (> 0).
+    pub intensity: f64,
+    /// Root seed; every lane forks its own stream from it.
+    pub seed: u64,
+}
+
+impl ChaosPlan {
+    /// Every fault lane enabled at the default rate/intensity.
+    pub fn all(seed: u64) -> Self {
+        ChaosPlan {
+            jitter: true,
+            straggler: true,
+            pressure: true,
+            abort: true,
+            rate: DEFAULT_CHAOS_RATE,
+            intensity: DEFAULT_CHAOS_INTENSITY,
+            seed,
+        }
+    }
+
+    /// No fault lane enabled: the decorator is an exact passthrough
+    /// and draws zero random numbers (the chaos-off contract).
+    pub fn disabled(seed: u64) -> Self {
+        ChaosPlan {
+            jitter: false,
+            straggler: false,
+            pressure: false,
+            abort: false,
+            rate: DEFAULT_CHAOS_RATE,
+            intensity: DEFAULT_CHAOS_INTENSITY,
+            seed,
+        }
+    }
+
+    /// Whether any lane can ever fire.
+    pub fn is_active(&self) -> bool {
+        (self.jitter || self.straggler || self.pressure || self.abort)
+            && self.rate > 0.0
+    }
+
+    /// Parse a `--chaos` spec (see type docs for the grammar).
+    pub fn parse(spec: &str, seed: u64) -> Result<Self> {
+        let (kinds, params) = match spec.split_once(':') {
+            Some((k, p)) => (k, Some(p)),
+            None => (spec, None),
+        };
+        let mut plan = ChaosPlan::disabled(seed);
+        if kinds == "all" {
+            plan = ChaosPlan::all(seed);
+        } else {
+            for kind in kinds.split('+') {
+                match kind {
+                    "jitter" => plan.jitter = true,
+                    "straggler" => plan.straggler = true,
+                    "pressure" => plan.pressure = true,
+                    "abort" => plan.abort = true,
+                    _ => bail!(
+                        "unknown chaos fault kind {kind:?} (want all, \
+                         or a + of jitter/straggler/pressure/abort)"
+                    ),
+                }
+            }
+        }
+        if let Some(params) = params {
+            for kv in params.split(',') {
+                let Some((k, v)) = kv.split_once('=') else {
+                    bail!("malformed chaos parameter {kv:?} (want k=v)");
+                };
+                let x: f64 = v.parse().map_err(|_| {
+                    anyhow::anyhow!("chaos parameter {k}={v:?} is not \
+                                     a number")
+                })?;
+                match k {
+                    "rate" => {
+                        if !(0.0..=1.0).contains(&x) {
+                            bail!("chaos rate {x} outside [0, 1]");
+                        }
+                        plan.rate = x;
+                    }
+                    "intensity" => {
+                        if x <= 0.0 {
+                            bail!("chaos intensity {x} must be > 0");
+                        }
+                        plan.intensity = x;
+                    }
+                    _ => bail!(
+                        "unknown chaos parameter {k:?} (want rate or \
+                         intensity)"
+                    ),
+                }
+            }
+        }
+        Ok(plan)
+    }
+}
+
+// --------------------------------------------------------------- stats
+
+/// Cumulative fault/degradation counters, surfaced in the report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ChaosStats {
+    /// Copy pricings stretched by the jitter lane.
+    pub copy_slowdowns: u64,
+    /// Collective pricings stretched by the straggler lane.
+    pub collective_stretches: u64,
+    /// Backlog probes inflated by the pressure lane.
+    pub pressure_spikes: u64,
+    /// Abort events delivered to the session (each cancels at most one
+    /// in-flight transfer; the cancel counters in `MoveStats` say what
+    /// the session actually killed).
+    pub aborts: u64,
+}
+
+/// Per-lane RNG streams plus the counters — behind a `RefCell` because
+/// the pricing methods take `&self`.
+#[derive(Clone, Debug)]
+struct ChaosState {
+    copy_pinned: Rng,
+    copy_pageable: Rng,
+    coll: Rng,
+    pressure: Rng,
+    abort: Rng,
+    stats: ChaosStats,
+}
+
+impl ChaosState {
+    fn new(seed: u64) -> Self {
+        let mut root = Rng::new(seed);
+        ChaosState {
+            copy_pinned: root.fork(1),
+            copy_pageable: root.fork(2),
+            coll: root.fork(3),
+            pressure: root.fork(4),
+            abort: root.fork(5),
+            stats: ChaosStats::default(),
+        }
+    }
+}
+
+// ------------------------------------------------------------- backend
+
+/// Fault-injecting decorator over any execution backend (see module
+/// docs for the fault model and determinism contract).
+#[derive(Clone, Debug)]
+pub struct ChaosBackend<B: ExecutionBackend = SimBackend> {
+    inner: B,
+    plan: ChaosPlan,
+    state: RefCell<ChaosState>,
+}
+
+impl<B: ExecutionBackend> ChaosBackend<B> {
+    pub fn new(inner: B, plan: ChaosPlan) -> Self {
+        let state = RefCell::new(ChaosState::new(plan.seed));
+        ChaosBackend { inner, plan, state }
+    }
+
+    /// The wrapped backend (report assembly, tests).
+    pub fn inner(&self) -> &B {
+        &self.inner
+    }
+
+    pub fn plan(&self) -> ChaosPlan {
+        self.plan
+    }
+
+    /// Counters so far (also reachable through
+    /// [`ExecutionBackend::chaos_stats`]).
+    pub fn stats(&self) -> ChaosStats {
+        self.state.borrow().stats
+    }
+
+    /// Stretch one copy pricing on its route's jitter lane.
+    fn perturb_copy(&self, base: f64, route: CopyRoute) -> f64 {
+        if !self.plan.jitter || base <= 0.0 {
+            return base;
+        }
+        let st = &mut *self.state.borrow_mut();
+        let lane = match route {
+            CopyRoute::Pinned => &mut st.copy_pinned,
+            CopyRoute::Pageable => &mut st.copy_pageable,
+        };
+        if lane.chance(self.plan.rate) {
+            let stretch = 1.0 + self.plan.intensity * lane.f64();
+            st.stats.copy_slowdowns += 1;
+            base * stretch
+        } else {
+            base
+        }
+    }
+
+    /// Stretch one collective pricing's wire time; the byte volume is
+    /// untouched by construction (the wire-volume invariant).
+    fn perturb_collective(&self, base: CollectiveOp) -> CollectiveOp {
+        if !self.plan.straggler || base.secs <= 0.0 {
+            return base;
+        }
+        let st = &mut *self.state.borrow_mut();
+        if st.coll.chance(self.plan.rate) {
+            let stretch = 1.0 + self.plan.intensity * st.coll.f64();
+            st.stats.collective_stretches += 1;
+            CollectiveOp { secs: base.secs * stretch, bytes: base.bytes }
+        } else {
+            base
+        }
+    }
+
+    /// Inflate one backlog probe with a synthetic queue spike.
+    fn perturb_backlog(&self, base: f64) -> f64 {
+        if !self.plan.pressure {
+            return base;
+        }
+        let st = &mut *self.state.borrow_mut();
+        if st.pressure.chance(self.plan.rate) {
+            st.stats.pressure_spikes += 1;
+            base + self.plan.intensity * PRESSURE_SPIKE_SECS
+        } else {
+            base
+        }
+    }
+}
+
+impl<B: ExecutionBackend> ExecutionBackend for ChaosBackend<B> {
+    // Execution: pure delegation.  Chaos never rewrites a duration the
+    // session already holds — that would desynchronize the reclaim /
+    // credit-back paths the faults exist to exercise.
+    fn execute_moment(&mut self, phase: Phase, secs: f64) {
+        self.inner.execute_moment(phase, secs);
+    }
+
+    fn demand_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                   ready: f64) {
+        self.inner.demand_copy(phase, secs, dir, ready);
+    }
+
+    fn issue_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                  ready: f64, route: CopyRoute) -> f64 {
+        self.inner.issue_copy(phase, secs, dir, ready, route)
+    }
+
+    fn reclaim_copy(&mut self, phase: Phase, secs: f64, dir: CopyDir,
+                    route: CopyRoute) {
+        self.inner.reclaim_copy(phase, secs, dir, route);
+    }
+
+    fn sync_until(&mut self, t: f64) {
+        self.inner.sync_until(t);
+    }
+
+    fn demand_collective(&mut self, phase: Phase, secs: f64) {
+        self.inner.demand_collective(phase, secs);
+    }
+
+    fn issue_collective(&mut self, phase: Phase, secs: f64) -> f64 {
+        self.inner.issue_collective(phase, secs)
+    }
+
+    fn sync_collective(&mut self, t: f64) {
+        self.inner.sync_collective(t);
+    }
+
+    fn reclaim_collective(&mut self, phase: Phase, secs: f64) {
+        self.inner.reclaim_collective(phase, secs);
+    }
+
+    // Pricing: the fault surface.
+    fn copy_secs(&self, bytes: u64, route: CopyRoute) -> f64 {
+        self.perturb_copy(self.inner.copy_secs(bytes, route), route)
+    }
+
+    fn allgather_cost(&self, chunk_bytes: u64) -> CollectiveOp {
+        self.perturb_collective(self.inner.allgather_cost(chunk_bytes))
+    }
+
+    fn reduce_scatter_cost(&self, chunk_bytes: u64) -> CollectiveOp {
+        self.perturb_collective(
+            self.inner.reduce_scatter_cost(chunk_bytes),
+        )
+    }
+
+    // Probes: the work accumulators stay honest (the controller
+    // differences them; a fake delta could go negative), only the
+    // backlog signals spike.
+    fn now(&self) -> f64 {
+        self.inner.now()
+    }
+
+    fn compute_work(&self) -> f64 {
+        self.inner.compute_work()
+    }
+
+    fn copy_busy(&self, dir: CopyDir) -> f64 {
+        self.inner.copy_busy(dir)
+    }
+
+    fn copy_backlog(&self, dir: CopyDir) -> f64 {
+        self.perturb_backlog(self.inner.copy_backlog(dir))
+    }
+
+    fn collective_work(&self) -> f64 {
+        self.inner.collective_work()
+    }
+
+    fn collective_backlog(&self) -> f64 {
+        self.perturb_backlog(self.inner.collective_backlog())
+    }
+
+    // Lifecycle: delegation.  `reset` deliberately does NOT rewind the
+    // fault lanes — faults keep streaming across iteration boundaries,
+    // and the counters are cumulative for the report.
+    fn reset(&mut self) {
+        self.inner.reset();
+    }
+
+    fn makespan(&self) -> f64 {
+        self.inner.makespan()
+    }
+
+    fn breakdown(&self) -> IterBreakdown {
+        self.inner.breakdown()
+    }
+
+    fn snapshot(&self) -> String {
+        self.inner.snapshot()
+    }
+
+    fn poll_abort(&mut self) -> bool {
+        if !self.plan.abort {
+            return false;
+        }
+        let st = self.state.get_mut();
+        if st.abort.chance(self.plan.rate) {
+            st.stats.aborts += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn chaos_stats(&self) -> Option<ChaosStats> {
+        Some(self.stats())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterPreset;
+
+    fn sim() -> SimBackend {
+        SimBackend::new(true, ClusterPreset::yard().net, 4)
+    }
+
+    #[test]
+    fn parse_spec_grammar() {
+        let p = ChaosPlan::parse("all", 7).unwrap();
+        assert_eq!(p, ChaosPlan::all(7));
+        let p = ChaosPlan::parse("jitter+abort", 0).unwrap();
+        assert!(p.jitter && p.abort && !p.straggler && !p.pressure);
+        let p =
+            ChaosPlan::parse("straggler:rate=0.5,intensity=3", 1).unwrap();
+        assert!(p.straggler && p.rate == 0.5 && p.intensity == 3.0);
+        assert!(ChaosPlan::parse("meteor", 0).is_err());
+        assert!(ChaosPlan::parse("jitter:rate=2", 0).is_err());
+        assert!(ChaosPlan::parse("jitter:intensity=0", 0).is_err());
+        assert!(ChaosPlan::parse("jitter:rate", 0).is_err());
+        assert!(ChaosPlan::parse("jitter:depth=1", 0).is_err());
+    }
+
+    #[test]
+    fn disabled_plan_is_an_exact_passthrough() {
+        let raw = sim();
+        let be = ChaosBackend::new(sim(), ChaosPlan::disabled(99));
+        for bytes in [1u64 << 10, 1 << 20, 1 << 28] {
+            for route in [CopyRoute::Pinned, CopyRoute::Pageable] {
+                assert_eq!(be.copy_secs(bytes, route).to_bits(),
+                           raw.copy_secs(bytes, route).to_bits());
+            }
+            assert_eq!(be.allgather_cost(bytes), raw.allgather_cost(bytes));
+            assert_eq!(be.reduce_scatter_cost(bytes),
+                       raw.reduce_scatter_cost(bytes));
+        }
+        let mut be = be;
+        for _ in 0..64 {
+            assert!(!be.poll_abort());
+        }
+        assert_eq!(be.stats(), ChaosStats::default());
+    }
+
+    #[test]
+    fn same_seed_replays_bit_identically() {
+        let plan = ChaosPlan {
+            rate: 0.7,
+            intensity: 2.5,
+            ..ChaosPlan::all(42)
+        };
+        let mut a = ChaosBackend::new(sim(), plan);
+        let mut b = ChaosBackend::new(sim(), plan);
+        for i in 0..200u64 {
+            let bytes = 1 + (i * 977) % (1 << 22);
+            assert_eq!(
+                a.copy_secs(bytes, CopyRoute::Pinned).to_bits(),
+                b.copy_secs(bytes, CopyRoute::Pinned).to_bits()
+            );
+            let (ga, gb) = (a.allgather_cost(bytes), b.allgather_cost(bytes));
+            assert_eq!(ga.secs.to_bits(), gb.secs.to_bits());
+            assert_eq!(ga.bytes, gb.bytes);
+            assert_eq!(a.poll_abort(), b.poll_abort());
+            assert_eq!(
+                a.copy_backlog(CopyDir::H2D).to_bits(),
+                b.copy_backlog(CopyDir::H2D).to_bits()
+            );
+        }
+        assert_eq!(a.stats(), b.stats());
+        assert!(a.stats().copy_slowdowns > 0);
+        assert!(a.stats().aborts > 0);
+    }
+
+    #[test]
+    fn faults_only_ever_stretch_time_and_never_bytes() {
+        let plan = ChaosPlan { rate: 1.0, ..ChaosPlan::all(3) };
+        let be = ChaosBackend::new(sim(), plan);
+        let raw = sim();
+        for bytes in [1u64 << 12, 1 << 20, 1 << 26] {
+            let base = raw.copy_secs(bytes, CopyRoute::Pinned);
+            assert!(be.copy_secs(bytes, CopyRoute::Pinned) >= base);
+            let (g, g0) = (be.allgather_cost(bytes), raw.allgather_cost(bytes));
+            assert!(g.secs >= g0.secs);
+            assert_eq!(g.bytes, g0.bytes, "straggler touched wire volume");
+            assert!(be.copy_backlog(CopyDir::D2H)
+                        >= raw.copy_backlog(CopyDir::D2H));
+        }
+        let s = be.stats();
+        assert!(s.copy_slowdowns > 0 && s.collective_stretches > 0
+                    && s.pressure_spikes > 0);
+    }
+
+    #[test]
+    fn cloned_backend_replays_the_same_fault_tail() {
+        // The checkpoint/restore primitive: a clone taken mid-stream
+        // must produce the same future faults as the original.
+        let plan =
+            ChaosPlan { rate: 0.5, ..ChaosPlan::all(11) };
+        let mut a = ChaosBackend::new(sim(), plan);
+        for _ in 0..37 {
+            a.copy_secs(1 << 20, CopyRoute::Pinned);
+            a.poll_abort();
+        }
+        let mut b = a.clone();
+        for _ in 0..100 {
+            assert_eq!(
+                a.copy_secs(1 << 18, CopyRoute::Pageable).to_bits(),
+                b.copy_secs(1 << 18, CopyRoute::Pageable).to_bits()
+            );
+            assert_eq!(a.poll_abort(), b.poll_abort());
+        }
+        assert_eq!(a.stats(), b.stats());
+    }
+}

@@ -32,6 +32,7 @@
 
 pub mod adaptive;
 pub mod backend;
+pub mod chaos;
 pub mod policy;
 pub mod prefetch;
 pub mod report;
@@ -51,10 +52,11 @@ pub use adaptive::{HeadroomLedger, LookaheadController, WindowInputs,
 pub use backend::{ExecutionBackend, SimBackend};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
+pub use chaos::{ChaosBackend, ChaosPlan, ChaosStats};
 pub use prefetch::{GroupPrefetcher, Prefetcher, DEFAULT_GROUP_LOOKAHEAD,
                    DEFAULT_LOOKAHEAD};
 pub use report::{EngineReport, IterBreakdown};
-pub use session::{SimCost, StageOutcome, TrainingSession};
+pub use session::{SessionState, SimCost, StageOutcome, TrainingSession};
 
 /// Eviction policy selection (paper Sec. 8.3 + DBMS baselines).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -195,20 +197,36 @@ impl OptimizationPlan {
     }
 }
 
-/// The engine: one (cluster, task, optimization plan) triple.
+/// The engine: one (cluster, task, optimization plan) triple, plus an
+/// optional fault-injection plan (ISSUE 6).
 pub struct Engine {
     pub cluster: ClusterPreset,
     pub task: TrainTask,
     pub opt: OptimizationPlan,
+    /// When set, the session runs over a [`ChaosBackend`] wrapping the
+    /// simulator: seeded deterministic faults at the backend boundary.
+    /// None (default) runs the plain [`SimBackend`] — no wrapper in the
+    /// dispatch path at all.
+    pub chaos: Option<ChaosPlan>,
 }
 
 impl Engine {
     pub fn new(cluster: ClusterPreset, task: TrainTask) -> Self {
-        Engine { cluster, task, opt: OptimizationPlan::default() }
+        Engine {
+            cluster,
+            task,
+            opt: OptimizationPlan::default(),
+            chaos: None,
+        }
     }
 
     pub fn with_opt(mut self, opt: OptimizationPlan) -> Self {
         self.opt = opt;
+        self
+    }
+
+    pub fn with_chaos(mut self, plan: ChaosPlan) -> Self {
+        self.chaos = Some(plan);
         self
     }
 
@@ -282,6 +300,36 @@ impl Engine {
         &self,
         traced: bool,
     ) -> Result<(EngineReport, Option<Vec<String>>)> {
+        let parts = self.sim_parts()?;
+        let SimParts { mgr, cost, graph, chunk_elems } = parts;
+        let nproc = self.nproc();
+        let backend = SimBackend::new(self.opt.overlap, self.cluster.net,
+                                      nproc);
+        match self.chaos {
+            Some(plan) => {
+                let s = TrainingSession::new(
+                    self.opt,
+                    nproc,
+                    mgr,
+                    ChaosBackend::new(backend, plan),
+                    traced,
+                );
+                self.drive(s, &cost, &graph, chunk_elems)
+            }
+            None => {
+                let s = TrainingSession::new(self.opt, nproc, mgr,
+                                             backend, traced);
+                self.drive(s, &cost, &graph, chunk_elems)
+            }
+        }
+    }
+
+    /// Everything `run_inner` builds *before* choosing a backend: the
+    /// chunk manager over the per-process heterogeneous budget, the cost
+    /// model and the operator graph.  Split out so the checkpoint/resume
+    /// tests (and any external driver) can construct sessions over
+    /// arbitrary backends from the same deterministic starting state.
+    pub(crate) fn sim_parts(&self) -> Result<SimParts> {
         let m = &self.task.model;
         let nproc = self.nproc();
         let chunk_elems = self.chunk_elems()?;
@@ -307,29 +355,45 @@ impl Engine {
         let mgr = ChunkManager::new(reg, space);
 
         let cost = SimCost { cluster: self.cluster, task: self.task };
-        let backend = SimBackend::new(self.opt.overlap, self.cluster.net,
-                                      nproc);
-        let mut s =
-            TrainingSession::new(self.opt, nproc, mgr, backend, traced);
         let graph = OpGraph::build(*m, self.task.batch_per_gpu);
+        Ok(SimParts { mgr, cost, graph, chunk_elems })
+    }
+
+    /// Drive one session to a report: warm-up iteration, placement +
+    /// prefetch schedules, 2 steady iterations (measure the last).
+    /// Generic over the backend so the same loop runs the plain
+    /// simulator and its chaos-wrapped variant.
+    fn drive<B: ExecutionBackend>(
+        &self,
+        mut s: TrainingSession<B>,
+        cost: &SimCost,
+        graph: &OpGraph,
+        chunk_elems: u64,
+    ) -> Result<(EngineReport, Option<Vec<String>>)> {
+        let m = &self.task.model;
 
         // ---- warm-up iteration (conservative 20% GPU, FIFO eviction).
         s.trace_mark("== warmup ==");
-        s.iteration(&cost, &graph).context("warm-up iteration")?;
+        s.iteration(cost, graph).context("warm-up iteration")?;
 
         // ---- placement + prefetch schedules from warm-up statistics.
-        s.finish_warmup(&cost, chunk_elems, self.prefetch_enabled());
+        s.finish_warmup(cost, chunk_elems, self.prefetch_enabled());
 
         // ---- steady state: 2 iterations, measure the last.
         let mut breakdown = IterBreakdown::default();
         let mut iter_time = 0.0f64;
         for it in 0..2 {
             s.begin_steady_iteration(it);
-            s.iteration(&cost, &graph)
+            s.iteration(cost, graph)
                 .with_context(|| format!("steady iteration {it}"))?;
             breakdown = s.backend.breakdown();
             iter_time = s.backend.makespan();
         }
+        // `begin_steady_iteration` audits lease leaks for every
+        // iteration but the last (the audit runs before the stats
+        // reset); audit the final iteration here so its count reaches
+        // the report.
+        s.check_lease_leaks();
 
         let iter_flops = m.iter_flops(self.task.batch_per_gpu);
         let trace = s.trace.take();
@@ -372,9 +436,18 @@ impl Engine {
             gpu_peak: s.mgr.space.dev(Device::Gpu(0)).peak(),
             cpu_peak: s.mgr.space.dev(Device::Cpu).peak(),
             non_model_peak: s.tracer.peak_non_model(),
+            chaos: s.backend.chaos_stats(),
         };
         Ok((report, trace))
     }
+}
+
+/// Backend-independent session ingredients (see [`Engine::sim_parts`]).
+pub(crate) struct SimParts {
+    pub mgr: ChunkManager,
+    pub cost: SimCost,
+    pub graph: OpGraph,
+    pub chunk_elems: u64,
 }
 
 #[cfg(test)]
@@ -466,5 +539,103 @@ mod tests {
             Phase::ALL.iter().map(|&p| r.breakdown.get(p)).sum()
         };
         assert!((sum(&serial) - sum(&ov)).abs() < 1e-6 * sum(&serial));
+    }
+
+    // ---- ISSUE 6: kill-and-resume golden tests.  A session check-
+    // pointed after steady iteration 0, dropped ("killed"), restored
+    // and driven through iteration 1 must land bit-exactly where the
+    // uninterrupted run lands — with and without fault injection.
+
+    fn drive_steps<B: ExecutionBackend>(
+        e: &Engine,
+        s: &mut TrainingSession<B>,
+        parts: &SimParts,
+        iters: std::ops::Range<usize>,
+        warm: bool,
+    ) {
+        if warm {
+            s.trace_mark("== warmup ==");
+            s.iteration(&parts.cost, &parts.graph).unwrap();
+            s.finish_warmup(&parts.cost, parts.chunk_elems,
+                            e.prefetch_enabled());
+        }
+        for it in iters {
+            s.begin_steady_iteration(it);
+            s.iteration(&parts.cost, &parts.graph).unwrap();
+        }
+    }
+
+    /// Full per-run state digest: makespan bits, phase breakdown, move
+    /// stats, and the per-moment trace — byte-compared via Debug.
+    fn fingerprint<B: ExecutionBackend>(
+        s: &TrainingSession<B>,
+    ) -> (u64, String, String, Option<Vec<String>>) {
+        (
+            s.backend.makespan().to_bits(),
+            format!("{:?}", s.backend.breakdown()),
+            format!("{:?}", s.mgr.stats),
+            s.trace.clone(),
+        )
+    }
+
+    fn kill_resume_bit_exact<B, F>(mk: F) -> TrainingSession<B>
+    where
+        B: ExecutionBackend + Clone,
+        F: Fn() -> B,
+    {
+        let task =
+            TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, 4);
+        let e = Engine::new(ClusterPreset::yard(), task)
+            .with_opt(OptimizationPlan::pinned_pipeline());
+
+        // Reference: uninterrupted warm-up + 2 steady iterations.
+        let parts = e.sim_parts().unwrap();
+        let mut full =
+            TrainingSession::new(e.opt, e.nproc(), parts.mgr, mk(), true);
+        drive_steps(&e, &mut full, &parts, 0..2, true);
+
+        // Kill at k = 0: checkpoint after steady iteration 0, drop the
+        // live session, restore from the checkpoint, run iteration 1.
+        let parts2 = e.sim_parts().unwrap();
+        let mut live = TrainingSession::new(e.opt, e.nproc(), parts2.mgr,
+                                            mk(), true);
+        drive_steps(&e, &mut live, &parts2, 0..1, true);
+        let ckpt = live.checkpoint();
+        drop(live); // the "kill"
+        let mut resumed = ckpt.into_session();
+        drive_steps(&e, &mut resumed, &parts2, 1..2, false);
+
+        assert_eq!(fingerprint(&full), fingerprint(&resumed));
+        resumed
+    }
+
+    #[test]
+    fn kill_and_resume_is_bit_exact_without_chaos() {
+        // nproc/overlap below must match the 4-GPU pinned_pipeline task
+        // inside the helper.
+        kill_resume_bit_exact(|| {
+            SimBackend::new(true, ClusterPreset::yard().net, 4)
+        });
+    }
+
+    #[test]
+    fn kill_and_resume_is_bit_exact_under_chaos() {
+        let s = kill_resume_bit_exact(|| {
+            ChaosBackend::new(
+                SimBackend::new(true, ClusterPreset::yard().net, 4),
+                ChaosPlan::all(0xC0FFEE),
+            )
+        });
+        // The run must actually have injected something, or the test
+        // proves nothing about replaying fault state.
+        let st = s.backend.chaos_stats().unwrap();
+        assert!(
+            st.copy_slowdowns
+                + st.collective_stretches
+                + st.pressure_spikes
+                + st.aborts
+                > 0,
+            "chaos run injected no faults: {st:?}"
+        );
     }
 }

@@ -15,6 +15,7 @@ use super::EvictKind;
 /// The run's selected eviction policy.  Stateful policies (LRU, FIFO,
 /// LFU) live here across the run; OPT is stateless and rebuilt per call
 /// around a tracer borrow.
+#[derive(Clone)]
 pub(crate) enum PolicySel {
     Opt,
     Lru(LruPolicy),

@@ -1,5 +1,6 @@
 //! Engine output: the per-iteration breakdown and summary report.
 
+use super::chaos::ChaosStats;
 use crate::chunk::MoveStats;
 use crate::placement::PlacementPlan;
 use crate::sim::{Phase, SimClock, StreamTimeline};
@@ -90,6 +91,32 @@ impl IterBreakdown {
     pub fn rows(&self) -> Vec<(Phase, f64)> {
         self.secs.iter().copied().filter(|&(_, t)| t > 0.0).collect()
     }
+
+    /// The work done *since* `earlier` — both breakdowns must come from
+    /// the same accumulating backend (e.g. before/after one trainer
+    /// step, whose timeline never resets).  Every component is clamped
+    /// at zero so a reset clock degrades to the full later breakdown
+    /// instead of going negative.
+    pub fn delta_since(&self, earlier: &IterBreakdown) -> IterBreakdown {
+        let d = |a: f64, b: f64| (a - b).max(0.0);
+        IterBreakdown {
+            secs: self
+                .secs
+                .iter()
+                .map(|&(p, t)| (p, d(t, earlier.get(p))))
+                .collect(),
+            exposed_transfer_s: d(self.exposed_transfer_s,
+                                  earlier.exposed_transfer_s),
+            overlapped_transfer_s: d(self.overlapped_transfer_s,
+                                     earlier.overlapped_transfer_s),
+            exposed_collective_s: d(self.exposed_collective_s,
+                                    earlier.exposed_collective_s),
+            overlapped_collective_s: d(self.overlapped_collective_s,
+                                       earlier.overlapped_collective_s),
+            pageable_copy_s: d(self.pageable_copy_s,
+                               earlier.pageable_copy_s),
+        }
+    }
 }
 
 /// Everything one engine run reports.
@@ -125,6 +152,9 @@ pub struct EngineReport {
     pub gpu_peak: u64,
     pub cpu_peak: u64,
     pub non_model_peak: u64,
+    /// Fault-injection counters when the run went through a
+    /// [`super::chaos::ChaosBackend`]; None on a plain backend.
+    pub chaos: Option<ChaosStats>,
 }
 
 impl EngineReport {
@@ -187,6 +217,23 @@ impl EngineReport {
                 self.avg_chunk_lookahead, self.avg_group_lookahead,
             ));
         }
+        if let Some(c) = &self.chaos {
+            out.push_str(&format!(
+                "chaos: {} copy slowdowns, {} collective stretches, {} \
+                 pressure spikes, {} aborts injected\n",
+                c.copy_slowdowns,
+                c.collective_stretches,
+                c.pressure_spikes,
+                c.aborts,
+            ));
+        }
+        if self.move_stats.lease_leaks > 0 {
+            out.push_str(&format!(
+                "WARNING: {} pinned staging lease(s) still held at \
+                 iteration end (leak)\n",
+                self.move_stats.lease_leaks,
+            ));
+        }
         if self.breakdown.overlapped_collective_s > 0.0 {
             out.push_str(&format!(
                 "collectives: {} exposed / {} overlapped (stream hid \
@@ -233,5 +280,24 @@ mod tests {
         assert!((b.total() - 1.5).abs() < 1e-12);
         assert_eq!(b.get(Phase::Adam), 0.5);
         assert_eq!(b.rows().len(), 2);
+    }
+
+    #[test]
+    fn delta_since_isolates_one_step_of_an_accumulating_clock() {
+        let mut c = SimClock::new();
+        c.add(Phase::FwdBwd, 1.0);
+        c.add(Phase::Adam, 0.5);
+        let before = IterBreakdown::from_clock(&c);
+        c.add(Phase::FwdBwd, 2.0);
+        c.add(Phase::CpuToGpu, 0.25);
+        let after = IterBreakdown::from_clock(&c);
+        let d = after.delta_since(&before);
+        assert!((d.get(Phase::FwdBwd) - 2.0).abs() < 1e-12);
+        assert_eq!(d.get(Phase::Adam), 0.0);
+        assert!((d.get(Phase::CpuToGpu) - 0.25).abs() < 1e-12);
+        // A reset clock (earlier ahead of later) clamps at zero.
+        let clamped = before.delta_since(&after);
+        assert_eq!(clamped.get(Phase::FwdBwd), 0.0);
+        assert_eq!(clamped.total(), 0.0);
     }
 }

@@ -129,6 +129,14 @@ impl SimCost {
 
 /// One training process's per-iteration driver: chunk orchestration
 /// state plus the policy that schedules it, over an execution backend.
+///
+/// `Clone` (with a cloneable backend) is the checkpoint/restore
+/// primitive: every field — chunk-manager state, warm-up statistics,
+/// controller EMAs, headroom earmarks, in-flight copies and pool
+/// leases, even a chaos backend's mid-stream RNG positions — is plain
+/// data, so a clone taken at iteration `k` replays a bit-exact tail
+/// (see [`TrainingSession::checkpoint`]).
+#[derive(Clone)]
 pub struct TrainingSession<B: ExecutionBackend> {
     pub(crate) opt: OptimizationPlan,
     pub(crate) nproc: usize,
@@ -183,6 +191,36 @@ pub struct TrainingSession<B: ExecutionBackend> {
     pub(crate) group_win: (u64, u64),
     /// Per-moment backend snapshots (golden-trace tests).
     pub(crate) trace: Option<Vec<String>>,
+}
+
+/// A frozen copy of one session mid-run (ISSUE 6 tentpole): the full
+/// orchestration state — chunk-manager residency/in-flight sets,
+/// warm-up statistics and placement, controller EMAs, collective
+/// pipeline, pool leases, wire-volume counters and the backend itself
+/// (timeline position plus any chaos RNG streams).  Restoring it into
+/// any session of the same shape resumes with a bit-exact tail versus
+/// the uninterrupted run — the kill-and-resume golden test.
+pub struct SessionState<B: ExecutionBackend>(TrainingSession<B>);
+
+impl<B: ExecutionBackend + Clone> SessionState<B> {
+    /// Unwrap into a live session (resume without a pre-built one).
+    pub fn into_session(self) -> TrainingSession<B> {
+        self.0
+    }
+}
+
+impl<B: ExecutionBackend + Clone> TrainingSession<B> {
+    /// Freeze the complete session state, e.g. at an iteration
+    /// boundary before a (simulated) kill.
+    pub fn checkpoint(&self) -> SessionState<B> {
+        SessionState(self.clone())
+    }
+
+    /// Replace this session's state wholesale with a checkpoint's.
+    /// The state is copied, so one checkpoint can seed many resumes.
+    pub fn restore(&mut self, state: &SessionState<B>) {
+        *self = state.0.clone();
+    }
 }
 
 impl<B: ExecutionBackend> TrainingSession<B> {
@@ -348,6 +386,12 @@ impl<B: ExecutionBackend> TrainingSession<B> {
         for c in self.mgr.gathering_chunks() {
             self.mgr.finish_gather(c);
         }
+        // Any staging lease still held past the finished iteration's
+        // makespan is a leak (ISSUE 6 satellite): debug builds assert
+        // inside the pool; release builds count it (the engine
+        // re-checks after the final iteration, whose stats survive
+        // into the report — the reset below wipes intermediate ones).
+        self.check_lease_leaks();
         self.coll.clear();
         self.pool.clear();
         self.stream_leases.clear();
@@ -468,6 +512,13 @@ impl<B: ExecutionBackend> TrainingSession<B> {
         if !self.warmup && self.collectives_overlapped() {
             self.complete_landed_gathers();
         }
+        // Chaos abort poll: a fault-injecting backend may report that a
+        // transient failure killed one in-flight transfer this moment.
+        // Well-behaved backends always answer false (zero cost); the
+        // guard keeps warm-up identical with and without chaos.
+        if !self.warmup && self.backend.poll_abort() {
+            self.inject_abort()?;
+        }
         // Feedback first: the controller differences the backend's
         // per-stream work accumulators against the previous tick, so
         // this tick's window sizes reflect everything charged up to the
@@ -582,6 +633,60 @@ impl<B: ExecutionBackend> TrainingSession<B> {
                 self.mgr.finish_gather(self.fp16_list[p]);
             }
         }
+    }
+
+    /// Deliver one injected abort (chaos backend, ISSUE 6): cancel the
+    /// lowest-numbered group with a gather still on the wire, else the
+    /// oldest prefetch copy still queued.  Everything downstream is the
+    /// ordinary cancel machinery — the manager emits a
+    /// `GatherCancel`/`PrefetchCancel` event and the next
+    /// `charge_events` drain runs the same credit-back paths memory
+    /// pressure uses, so an abort can never drift the accounting.
+    /// Victim order is deterministic (sorted ids), so same-seed chaos
+    /// replays cancel the same transfers.  With nothing in flight the
+    /// abort hit a quiet wire and is a no-op.
+    fn inject_abort(&mut self) -> Result<()> {
+        // Landed gathers were completed just above (`is_gathering` is
+        // already false for them): only gathers genuinely mid-wire can
+        // be victims, so the demand re-gather re-charges exactly what
+        // the cancel credited back.
+        for g in self.coll.inflight_groups() {
+            for p in self.groups.members(g) {
+                let c = self.fp16_list[p];
+                if self.mgr.is_gathering(c) {
+                    self.mgr.cancel_gather(c)?;
+                    return Ok(());
+                }
+            }
+        }
+        let now_t = self.backend.now();
+        let mut queued: Vec<ChunkId> = self
+            .inflight_done
+            .iter()
+            .filter(|(_, pc)| pc.done > now_t)
+            .map(|(&c, _)| c)
+            .collect();
+        queued.sort_unstable_by_key(|c| c.0);
+        for c in queued {
+            if self.mgr.is_inflight(c) {
+                self.mgr.cancel_prefetch(c)?;
+                return Ok(());
+            }
+        }
+        Ok(())
+    }
+
+    /// Pinned-lease leak guard (ISSUE 6 satellite): every sim-path
+    /// lease must have expired by the iteration's makespan or been
+    /// released by its cancel path; a holdout means a path forgot to
+    /// release.  Debug builds assert (inside the pool); release builds
+    /// count into `MoveStats::lease_leaks` for the report.
+    pub(crate) fn check_lease_leaks(&mut self) {
+        if !self.pool.enabled() {
+            return;
+        }
+        let leaked = self.pool.leak_check(self.backend.makespan()) as u64;
+        self.mgr.stats.lease_leaks += leaked;
     }
 
     /// Record the byte needs of the next `k` scheduled group gathers as

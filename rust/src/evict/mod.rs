@@ -157,7 +157,7 @@ impl<'a> EvictionPolicy for BacklogAwareOpt<'a> {
 // --------------------------------------------------------------- FIFO
 
 /// Evict in chunk-list order (also the paper's warm-up fallback).
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct FifoPolicy {
     arrival: HashMap<ChunkId, u64>,
     clock: u64,
@@ -188,7 +188,7 @@ impl EvictionPolicy for FifoPolicy {
 
 // ---------------------------------------------------------------- LRU
 
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct LruPolicy {
     last_use: HashMap<ChunkId, u64>,
     clock: u64,
@@ -219,7 +219,7 @@ impl EvictionPolicy for LruPolicy {
 
 // ---------------------------------------------------------------- LFU
 
-#[derive(Default)]
+#[derive(Clone, Default)]
 pub struct LfuPolicy {
     uses: HashMap<ChunkId, u64>,
 }

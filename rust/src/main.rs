@@ -20,7 +20,7 @@ use anyhow::{anyhow, bail, Result};
 use patrickstar::baselines::run_system;
 use patrickstar::chunk::search_chunk_size;
 use patrickstar::config::{ClusterPreset, SystemKind, TrainTask};
-use patrickstar::engine::{Engine, OptimizationPlan};
+use patrickstar::engine::{ChaosPlan, Engine, OptimizationPlan};
 use patrickstar::model::GptSpec;
 use patrickstar::scale::max_model_scale;
 #[cfg(feature = "pjrt")]
@@ -226,7 +226,8 @@ fn run() -> Result<()> {
         "simulate" => {
             args.reject_unknown(&with_flags(
                 PLAN_FLAGS,
-                &["system", "cluster", "model", "gpus", "batch"],
+                &["system", "cluster", "model", "gpus", "batch",
+                  "chaos", "chaos-seed"],
             ))?;
             cmd_simulate(&args)
         }
@@ -270,6 +271,13 @@ pytorch-ddp
                        [--lookahead 32|auto] [--overlap-collectives on|off]
                        [--group-lookahead 1] [--pinned-buffers 0]
                        [--pinned-split h2d:d2h] [--adaptive-lookahead on|off]
+                       [--chaos all|jitter+straggler+pressure+abort\
+[:rate=R,intensity=I]] [--chaos-seed N]
+             (--chaos injects seeded deterministic faults at the backend
+              boundary — PCIe jitter, straggler ranks, memory-pressure
+              spikes, mid-flight aborts; same --chaos-seed replays the
+              same faults byte-for-byte and the report gains fault
+              counters)
   patrickstar breakdown [--cluster superpod] [--model 10B] [--gpus 8] \
 [--batch 16]
              (rows: Base, Base+PF prefetch+overlap pipeline, Base+PF+CO
@@ -342,19 +350,38 @@ fn cmd_simulate(args: &Args) -> Result<()> {
     let batch = args.get_u64("batch", 16)?;
     let task = TrainTask::new(model, batch, gpus);
     let opt = args.opt_plan()?;
+    // `--chaos <spec>` wraps the simulator in the fault-injecting
+    // backend; `--chaos-seed N` picks the replay seed (same seed, same
+    // faults, byte-identical report).
+    let chaos = match args.flags.get("chaos") {
+        None => {
+            if args.flags.contains_key("chaos-seed") {
+                bail!("--chaos-seed needs --chaos <spec>");
+            }
+            None
+        }
+        Some(spec) => {
+            Some(ChaosPlan::parse(spec, args.get_u64("chaos-seed", 0)?)?)
+        }
+    };
     let report = if system == SystemKind::PatrickStar {
-        Engine::new(cluster, task).with_opt(opt).run()?
+        let mut engine = Engine::new(cluster, task).with_opt(opt);
+        if let Some(plan) = chaos {
+            engine = engine.with_chaos(plan);
+        }
+        engine.run()?
     } else {
         if opt.prefetch
             || opt.overlap
             || opt.overlap_collectives
             || opt.pinned_buffers > 0
             || opt.adaptive_lookahead
+            || chaos.is_some()
         {
             bail!(
                 "--prefetch/--overlap/--overlap-collectives/\
-                 --pinned-buffers/--adaptive-lookahead only apply to \
-                 system patrickstar"
+                 --pinned-buffers/--adaptive-lookahead/--chaos only \
+                 apply to system patrickstar"
             );
         }
         run_system(system, cluster, task)?
@@ -494,6 +521,22 @@ fn cmd_train(args: &Args) -> Result<()> {
             report.avg_prefetch_window,
             report.pinned_waits,
         );
+    }
+    // Per-step phase breakdown (the real-path analogue of the
+    // simulator's report table): show where the last step's wall time
+    // went.
+    if let Some(b) = report.step_breakdowns.last() {
+        let work = b.total().max(f64::MIN_POSITIVE);
+        let mut t = Table::new(&["phase", "time", "share"]);
+        for (p, secs) in b.rows() {
+            t.row(vec![
+                p.name().into(),
+                patrickstar::util::fmt::human_time(secs),
+                format!("{:.1}%", 100.0 * secs / work),
+            ]);
+        }
+        println!("last step phase breakdown:");
+        print!("{}", t.render());
     }
     Ok(())
 }

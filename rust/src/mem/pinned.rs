@@ -190,6 +190,21 @@ impl PinnedPool {
     pub fn clear(&mut self) {
         self.leases.clear();
     }
+
+    /// Iteration-end leak probe (ISSUE 6 satellite): leases still held
+    /// at `now` — the iteration's makespan — are leaks, because every
+    /// sim-path lease either expires at its copy's completion time
+    /// (which the makespan bounds) or is released by a cancel path.
+    /// Debug builds fail fast; release callers count and report.
+    pub fn leak_check(&self, now: f64) -> usize {
+        let leaked = self.in_use_at(now);
+        debug_assert_eq!(
+            leaked, 0,
+            "pinned-lease leak: {leaked} lease(s) still held at \
+             iteration end (t = {now})"
+        );
+        leaked
+    }
 }
 
 #[cfg(test)]
@@ -297,6 +312,18 @@ mod tests {
         assert!(p.try_acquire(0.0, H2D).is_some());
         assert!(p.try_acquire(0.0, D2H).is_some());
         assert!(p.try_acquire(0.0, D2H).is_none(), "total exhausted");
+    }
+
+    #[test]
+    fn leak_check_passes_once_every_lease_has_expired() {
+        let mut p = PinnedPool::new(2);
+        let a = p.try_acquire(0.0, H2D).unwrap();
+        let b = p.try_acquire(0.0, D2H).unwrap();
+        p.set_release(a, 2.0);
+        p.release(b);
+        // At the makespan both leases are gone: expired and released.
+        assert_eq!(p.leak_check(2.0), 0);
+        assert_eq!(p.leak_check(5.0), 0);
     }
 
     #[test]

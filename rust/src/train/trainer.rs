@@ -34,8 +34,9 @@ use anyhow::{anyhow, bail, Context, Result};
 
 use crate::chunk::{ChunkId, ChunkKind, ChunkManager, ChunkRegistry,
                    TensorSpec};
-use crate::engine::{EvictKind, ExecutionBackend, OptimizationPlan,
-                    PjrtBackend, StageOutcome, TrainingSession};
+use crate::engine::{EvictKind, ExecutionBackend, IterBreakdown,
+                    OptimizationPlan, PjrtBackend, StageOutcome,
+                    TrainingSession};
 use crate::mem::{Device, HeterogeneousSpace};
 use crate::runtime::xla;
 use crate::runtime::{lit_f32, lit_f32_shaped, lit_i32_shaped, scalar_f32,
@@ -103,6 +104,11 @@ pub struct TrainReport {
     /// Mean per-access staging window actually used (the static count,
     /// or the controller's feedback-sized window in adaptive mode).
     pub avg_prefetch_window: f64,
+    /// Per-step phase breakdown (ISSUE 6 satellite): the measured
+    /// backend's timeline accumulates across the run, so each entry is
+    /// the before/after delta of one step
+    /// ([`IterBreakdown::delta_since`]).
+    pub step_breakdowns: Vec<IterBreakdown>,
 }
 
 /// Embedding parameter state (CPU-pinned, unmanaged by chunks).
@@ -613,9 +619,17 @@ impl Trainer {
         let mut report = TrainReport::default();
         for step in 0..steps {
             let (toks, tgts) = corpus.next_batch();
+            // The backend's timeline accumulates across steps; snapshot
+            // it around the step so the report carries a true per-step
+            // phase breakdown.
+            let before = self.session.backend.breakdown();
             let t0 = std::time::Instant::now();
             let loss = self.step(&toks, &tgts)?;
             report.step_secs.push(t0.elapsed().as_secs_f64());
+            report
+                .step_breakdowns
+                .push(self.session.backend.breakdown()
+                          .delta_since(&before));
             report.losses.push(loss);
             if log_every > 0 && step % log_every == 0 {
                 eprintln!(

@@ -1,0 +1,114 @@
+//! Chaos fault-injection integration suite (ISSUE 6).
+//!
+//! The kill-and-resume golden tests live next to the engine
+//! (`engine/mod.rs`) because they drive sessions below the public API;
+//! this file locks the *whole-engine* chaos contracts:
+//!
+//! * **Wire-volume invariance** — injected mid-flight aborts cancel
+//!   in-flight gathers and prefetches, but every cancel credits its
+//!   volume back, so the collective wire bytes of a chaos-battered
+//!   pipelined run equal the serial plan's bit-for-bit (u64 equality,
+//!   no tolerance).
+//! * **Fault counters** — a hostile plan actually injects, and the
+//!   counters reach the report.
+//! * **Robustness sweep** — every pipeline cell survives a hostile
+//!   fault plan without panicking or producing a nonsensical report.
+//!
+//! (The chaos-off passthrough and same-seed replay contracts live in
+//! `tests/session_equivalence.rs`.)
+
+use patrickstar::config::{ClusterPreset, TrainTask};
+use patrickstar::engine::{ChaosPlan, Engine, EngineReport,
+                          OptimizationPlan};
+use patrickstar::model::GptSpec;
+use patrickstar::util::quickcheck::forall;
+
+fn run(
+    plan: OptimizationPlan,
+    chaos: Option<ChaosPlan>,
+    gpus: u32,
+) -> EngineReport {
+    let task = TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, gpus);
+    let mut e = Engine::new(ClusterPreset::yard(), task).with_opt(plan);
+    if let Some(c) = chaos {
+        e = e.with_chaos(c);
+    }
+    e.run().expect("engine run")
+}
+
+/// A plan hostile enough that cancels actually happen: every lane on,
+/// firing an order of magnitude above the default rate.
+fn hostile(seed: u64) -> ChaosPlan {
+    ChaosPlan { rate: 0.5, intensity: 2.0, ..ChaosPlan::all(seed) }
+}
+
+#[test]
+fn property_chaos_cancels_preserve_collective_wire_volume() {
+    // The serial plan issues every collective on demand and cancels
+    // nothing — its wire volume is the ground truth.
+    let serial = run(OptimizationPlan::default(), None, 4);
+    assert!(serial.allgather_bytes > 0);
+    forall(
+        6,
+        |rng| rng.next_u64(),
+        |&seed| {
+            let chaotic = run(
+                OptimizationPlan::pinned_pipeline(),
+                Some(hostile(seed)),
+                4,
+            );
+            if chaotic.allgather_bytes != serial.allgather_bytes {
+                return Err(format!(
+                    "allgather volume drifted under chaos (seed {seed}): \
+                     {} != {}",
+                    chaotic.allgather_bytes, serial.allgather_bytes
+                ));
+            }
+            if chaotic.reduce_scatter_bytes != serial.reduce_scatter_bytes
+            {
+                return Err(format!(
+                    "reduce-scatter volume drifted under chaos (seed \
+                     {seed}): {} != {}",
+                    chaotic.reduce_scatter_bytes,
+                    serial.reduce_scatter_bytes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hostile_chaos_injects_and_the_report_carries_the_counters() {
+    let r = run(OptimizationPlan::pinned_pipeline(), Some(hostile(7)), 4);
+    let st = r.chaos.expect("chaos run must report fault counters");
+    assert!(st.copy_slowdowns > 0, "jitter lane never fired: {st:?}");
+    assert!(st.collective_stretches > 0,
+            "straggler lane never fired: {st:?}");
+    assert!(st.aborts > 0, "abort lane never fired: {st:?}");
+    // A chaos-free run keeps the report clean.
+    let clean = run(OptimizationPlan::pinned_pipeline(), None, 4);
+    assert_eq!(clean.chaos, None);
+}
+
+#[test]
+fn every_pipeline_cell_survives_hostile_chaos() {
+    for (label, plan) in [
+        ("base", OptimizationPlan::default()),
+        ("overlap", OptimizationPlan::overlap_only()),
+        ("pipelined", OptimizationPlan::pipelined()),
+        ("collectives", OptimizationPlan::collectives_pipelined()),
+        ("pinned", OptimizationPlan::pinned_pipeline()),
+        ("adaptive", OptimizationPlan::adaptive_pipeline()),
+    ] {
+        for gpus in [1u32, 4] {
+            let r = run(plan, Some(hostile(13)), gpus);
+            assert!(r.iter_time_s > 0.0, "{label}/{gpus}: zero iter time");
+            assert!(r.iter_time_s.is_finite(),
+                    "{label}/{gpus}: non-finite iter time");
+            assert!(r.chaos.is_some(), "{label}/{gpus}: counters missing");
+            assert_eq!(r.move_stats.lease_leaks, 0,
+                       "{label}/{gpus}: chaos leaked a pinned lease");
+        }
+    }
+}

@@ -19,8 +19,9 @@
 //!    don't.
 
 use patrickstar::config::{ClusterPreset, TrainTask};
-use patrickstar::engine::{Engine, EngineReport, EvictKind,
-                          ExecutionBackend, OptimizationPlan, SimBackend};
+use patrickstar::engine::{ChaosBackend, ChaosPlan, Engine, EngineReport,
+                          EvictKind, ExecutionBackend, OptimizationPlan,
+                          SimBackend};
 use patrickstar::model::GptSpec;
 use patrickstar::sim::{CopyDir, CopyRoute, Phase, StreamTimeline};
 use patrickstar::util::quickcheck::forall;
@@ -248,6 +249,142 @@ fn tracing_is_a_pure_observer_across_pipeline_cells() {
         assert_eq!(format!("{plain:?}"), format!("{traced:?}"),
                    "{label}: report drifted under tracing");
     }
+}
+
+// ---------------------------------------------------------------------
+// 3. Chaos determinism contracts (ISSUE 6)
+// ---------------------------------------------------------------------
+
+/// A `ChaosBackend` with every fault lane off must be an *exact*
+/// passthrough: same dispatch results, same pricing, same probes, and
+/// zero RNG draws — for arbitrary operation sequences.
+#[test]
+fn property_disabled_chaos_wrapper_is_bit_identical_to_plain_sim() {
+    let net = ClusterPreset::yard().net;
+    forall(200, gen_ops, |&(overlap, ref ops)| {
+        let mut plain = SimBackend::new(overlap, net, 2);
+        let mut wrapped = ChaosBackend::new(
+            SimBackend::new(overlap, net, 2),
+            ChaosPlan::disabled(41),
+        );
+        for (i, op) in ops.iter().enumerate() {
+            {
+                let a: &mut dyn ExecutionBackend = &mut plain;
+                let b: &mut dyn ExecutionBackend = &mut wrapped;
+                for be in [a, b] {
+                    match *op {
+                        Op::Execute(s) => {
+                            be.execute_moment(Phase::FwdBwd, s);
+                        }
+                        Op::DemandCopy(s, d) => {
+                            be.demand_copy(Phase::CpuToGpu, s, d, 0.0);
+                        }
+                        Op::IssueCopy(s, d, r) => {
+                            be.issue_copy(Phase::GpuToCpu, s, d, 0.0, r);
+                        }
+                        Op::DemandColl(s) => {
+                            be.demand_collective(Phase::AllGather, s);
+                        }
+                        Op::IssueColl(s) => {
+                            be.issue_collective(Phase::ReduceScatter, s);
+                        }
+                        Op::SyncCopies => be.sync_until(1.0),
+                        Op::SyncColl => be.sync_collective(1.0),
+                    }
+                }
+            }
+            // Dispatch state, pricing and every probe the session or
+            // controller reads must agree byte-for-byte.
+            if plain.snapshot() != wrapped.snapshot() {
+                return Err(format!("snapshot diverged at op {i}"));
+            }
+            for (bytes, route) in [(64 << 20, CopyRoute::Pinned),
+                                   (3 << 20, CopyRoute::Pageable)] {
+                if plain.copy_secs(bytes, route).to_bits()
+                    != wrapped.copy_secs(bytes, route).to_bits()
+                {
+                    return Err(format!("copy pricing diverged at {i}"));
+                }
+            }
+            let (ap, aw) =
+                (plain.allgather_cost(1 << 20), wrapped.allgather_cost(1 << 20));
+            let (rp, rw) = (plain.reduce_scatter_cost(1 << 20),
+                            wrapped.reduce_scatter_cost(1 << 20));
+            if ap.secs.to_bits() != aw.secs.to_bits()
+                || ap.bytes != aw.bytes
+                || rp.secs.to_bits() != rw.secs.to_bits()
+                || rp.bytes != rw.bytes
+            {
+                return Err(format!("collective pricing diverged at {i}"));
+            }
+            for dir in [CopyDir::H2D, CopyDir::D2H] {
+                if plain.copy_backlog(dir).to_bits()
+                    != wrapped.copy_backlog(dir).to_bits()
+                {
+                    return Err(format!("copy backlog diverged at {i}"));
+                }
+            }
+            if plain.collective_backlog().to_bits()
+                != wrapped.collective_backlog().to_bits()
+                || wrapped.poll_abort()
+            {
+                return Err(format!("collective probe diverged at {i}"));
+            }
+        }
+        if plain.makespan().to_bits() != wrapped.makespan().to_bits() {
+            return Err("makespan diverged".into());
+        }
+        let st = wrapped.chaos_stats().expect("wrapper reports stats");
+        if st != Default::default() {
+            return Err(format!("disabled plan injected faults: {st:?}"));
+        }
+        Ok(())
+    });
+}
+
+/// A whole engine run through a disabled chaos wrapper lands on the
+/// plain engine's timeline exactly (the report differs only in carrying
+/// zeroed fault counters).
+#[test]
+fn disabled_chaos_engine_run_matches_plain_engine_run() {
+    let task = TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, 4);
+    let plan = OptimizationPlan::pinned_pipeline();
+    let e = Engine::new(ClusterPreset::yard(), task).with_opt(plan);
+    let (plain, plain_trace) = e.run_traced().unwrap();
+    let (off, off_trace) = Engine::new(ClusterPreset::yard(), task)
+        .with_opt(plan)
+        .with_chaos(ChaosPlan::disabled(99))
+        .run_traced()
+        .unwrap();
+    assert_eq!(plain_trace, off_trace);
+    assert_eq!(plain.iter_time_s.to_bits(), off.iter_time_s.to_bits());
+    assert_eq!(format!("{:?}", plain.breakdown),
+               format!("{:?}", off.breakdown));
+    assert_eq!(format!("{:?}", plain.move_stats),
+               format!("{:?}", off.move_stats));
+    assert_eq!(plain.chaos, None);
+    assert_eq!(off.chaos, Some(Default::default()));
+}
+
+/// Same seed, same faults: two chaos-on engine runs are byte-identical,
+/// report and trace.
+#[test]
+fn same_seed_chaos_engine_runs_are_byte_identical() {
+    let task = TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, 4);
+    let plan = OptimizationPlan::pinned_pipeline();
+    let go = || {
+        Engine::new(ClusterPreset::yard(), task)
+            .with_opt(plan)
+            .with_chaos(ChaosPlan::all(0xBAD5EED))
+            .run_traced()
+            .unwrap()
+    };
+    let (r1, t1) = go();
+    let (r2, t2) = go();
+    assert_eq!(t1, t2, "chaos trace not replayable");
+    assert_eq!(format!("{r1:?}"), format!("{r2:?}"),
+               "chaos report not replayable");
+    assert!(r1.chaos.is_some());
 }
 
 #[test]

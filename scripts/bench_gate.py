@@ -28,8 +28,31 @@ TOLERANCE = 1.05
 
 
 def load(path):
-    with open(path) as f:
-        return {e["name"]: e["value"] for e in json.load(f)}
+    """Load a BENCH JSON file, failing with a *named* reason.
+
+    A missing, truncated or reshaped file used to surface as a bare
+    Python traceback (or, worse, a KeyError deep in a gate) — which
+    reads like a gate bug, not a bench failure.  Every malformed input
+    now exits 1 with the offending path and what was wrong with it
+    (ISSUE 6 satellite).
+    """
+    try:
+        with open(path) as f:
+            entries = json.load(f)
+    except FileNotFoundError:
+        sys.exit(f"bench gate: {path} is missing — did the bench smoke "
+                 "step run (cargo bench -- adaptive_lookahead)?")
+    except json.JSONDecodeError as e:
+        sys.exit(f"bench gate: {path} is not valid JSON ({e}) — "
+                 "truncated bench run?")
+    if not isinstance(entries, list):
+        sys.exit(f"bench gate: {path} must be a JSON array of "
+                 f"{{name, value}} entries, got {type(entries).__name__}")
+    try:
+        return {e["name"]: e["value"] for e in entries}
+    except (TypeError, KeyError) as e:
+        sys.exit(f"bench gate: {path} has an entry without the expected "
+                 f"name/value keys ({e!r})")
 
 
 def gate_adaptive_vs_best_static(vals):
