@@ -238,6 +238,7 @@ impl DeepSpeedSim {
             avg_group_lookahead: 0.0,
             gpu_peak: gpu_need,
             cpu_peak: cpu_need,
+            nvme_peak: 0,
             non_model_peak: peak_nm,
             chaos: None,
         })

@@ -10,7 +10,7 @@ pub use deepspeed::DeepSpeedSim;
 pub use pytorch::PyTorchDdpSim;
 
 use crate::config::{ClusterPreset, SystemKind, TrainTask};
-use crate::engine::{Engine, EngineReport};
+use crate::engine::{Engine, EngineReport, OptimizationPlan};
 use anyhow::Result;
 
 /// Run any system on a (cluster, task) pair.
@@ -19,8 +19,23 @@ pub fn run_system(
     cluster: ClusterPreset,
     task: TrainTask,
 ) -> Result<EngineReport> {
+    run_system_with_plan(system, cluster, task, OptimizationPlan::default())
+}
+
+/// Like [`run_system`] but threading an [`OptimizationPlan`] into the
+/// PatrickStar engine (the third-tier `--nvme-gb` budget in particular).
+/// The baselines model fixed published systems, so the plan only applies
+/// to `SystemKind::PatrickStar`; other systems run exactly as before.
+pub fn run_system_with_plan(
+    system: SystemKind,
+    cluster: ClusterPreset,
+    task: TrainTask,
+    plan: OptimizationPlan,
+) -> Result<EngineReport> {
     match system {
-        SystemKind::PatrickStar => Engine::new(cluster, task).run(),
+        SystemKind::PatrickStar => {
+            Engine::new(cluster, task).with_opt(plan).run()
+        }
         SystemKind::DeepSpeedDp => {
             DeepSpeedSim { cluster, task, mp_degree: 1 }.run()
         }

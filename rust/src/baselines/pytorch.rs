@@ -99,6 +99,7 @@ impl PyTorchDdpSim {
             avg_group_lookahead: 0.0,
             gpu_peak: gpu_need,
             cpu_peak: 0,
+            nvme_peak: 0,
             non_model_peak: peak_nm,
             chaos: None,
         })

@@ -11,7 +11,7 @@
 //! telemetry.  This keeps one orchestration code path for both backends
 //! (DESIGN.md §6.1).
 
-use std::collections::HashSet;
+use std::collections::{HashMap, HashSet};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -81,6 +81,13 @@ pub struct MoveStats {
     pub gpu_to_cpu_bytes: u64,
     pub cpu_to_gpu_moves: u64,
     pub gpu_to_cpu_moves: u64,
+    /// NVMe-tier traffic (ISSUE 7): bytes moved onto / off the NVMe
+    /// device, whatever the other endpoint (Cpu spills and staged
+    /// Gpu<->Nvme copies alike).  All zero with the tier off.
+    pub to_nvme_bytes: u64,
+    pub to_nvme_moves: u64,
+    pub from_nvme_bytes: u64,
+    pub from_nvme_moves: u64,
     pub evictions: u64,
     pub allocs: u64,
     /// Prefetches issued (cancelled ones included; their bytes are not).
@@ -107,11 +114,13 @@ pub struct ChunkManager {
     pub stats: MoveStats,
     /// Undrained movement events (consumed by the engine per operator).
     events: Vec<MoveEvent>,
-    /// Chunks with a pending (issued, not yet consumed) prefetch copy.
-    /// In-flight chunks already occupy space on their target device but
-    /// may not be evicted — only cancelled — until first access
-    /// completes the copy.
-    inflight: HashSet<ChunkId>,
+    /// Chunks with a pending (issued, not yet consumed) prefetch copy,
+    /// mapped to the *source* device the copy left (cancellation
+    /// restores there — with three tiers the source is no longer
+    /// implied by the target).  In-flight chunks already occupy space
+    /// on their target device but may not be evicted — only cancelled —
+    /// until first access completes the copy.
+    inflight: HashMap<ChunkId, Device>,
     /// Remote chunks whose payload is being filled by an in-flight
     /// lookahead all-gather on the collective stream.  Same
     /// cancel-never-victimize contract as `inflight`: invisible to
@@ -131,7 +140,7 @@ impl ChunkManager {
             space,
             stats: MoveStats::default(),
             events: Vec::new(),
-            inflight: HashSet::new(),
+            inflight: HashMap::new(),
             gathering: HashSet::new(),
             payloads: vec![None; n],
             real_mode: false,
@@ -163,7 +172,7 @@ impl ChunkManager {
         let c = self.chunk(id);
         !c.pinned
             && c.device.is_some()
-            && !self.inflight.contains(&id)
+            && !self.inflight.contains_key(&id)
             && !self.gathering.contains(&id)
             && c.tensors.iter().all(|t| {
                 self.reg.tensors[t.0 as usize].state != TensorState::Compute
@@ -195,14 +204,14 @@ impl ChunkManager {
 
     /// True while a prefetch copy for `id` is pending.
     pub fn is_inflight(&self, id: ChunkId) -> bool {
-        self.inflight.contains(&id)
+        self.inflight.contains_key(&id)
     }
 
     /// Lowest-id chunk with a pending prefetch on `device` — the victim
     /// of last resort when eviction finds no movable chunk.
     pub fn pending_prefetch_on(&self, device: Device) -> Option<ChunkId> {
         self.inflight
-            .iter()
+            .keys()
             .copied()
             .filter(|&c| self.chunk(c).device == Some(device))
             .min()
@@ -244,8 +253,21 @@ impl ChunkManager {
         match (ev.kind, ev.from, ev.to) {
             (MoveKind::Alloc, _, _) => self.stats.allocs += 1,
             // Credit back the traffic accounted when the prefetch was
-            // issued (the copy never reached the wire): a chunk now on
-            // the GPU was staged CPU->GPU, and vice versa.
+            // issued (the copy never reached the wire).  The `to` device
+            // is the recorded *source* the chunk returns to: an NVMe
+            // source means the issue charged `from_nvme`, a CPU source
+            // charged `cpu_to_gpu`, a GPU source charged `gpu_to_cpu`.
+            (
+                MoveKind::PrefetchCancel,
+                Some(Device::Gpu(_)),
+                Some(Device::Nvme),
+            ) => {
+                self.stats.from_nvme_bytes =
+                    self.stats.from_nvme_bytes.saturating_sub(ev.bytes);
+                self.stats.from_nvme_moves =
+                    self.stats.from_nvme_moves.saturating_sub(1);
+                self.stats.prefetch_cancels += 1;
+            }
             (MoveKind::PrefetchCancel, Some(Device::Gpu(_)), _) => {
                 self.stats.cpu_to_gpu_bytes =
                     self.stats.cpu_to_gpu_bytes.saturating_sub(ev.bytes);
@@ -259,6 +281,17 @@ impl ChunkManager {
                 self.stats.gpu_to_cpu_moves =
                     self.stats.gpu_to_cpu_moves.saturating_sub(1);
                 self.stats.prefetch_cancels += 1;
+            }
+            // Tier traffic: any copy that touches NVMe counts on the
+            // NVMe side regardless of the other endpoint (the PCIe hop
+            // of a staged copy is billed by phase, not here).
+            (_, Some(Device::Nvme), Some(_)) => {
+                self.stats.from_nvme_bytes += ev.bytes;
+                self.stats.from_nvme_moves += 1;
+            }
+            (_, Some(_), Some(Device::Nvme)) => {
+                self.stats.to_nvme_bytes += ev.bytes;
+                self.stats.to_nvme_moves += 1;
             }
             (_, Some(Device::Cpu), Some(Device::Gpu(_))) => {
                 self.stats.cpu_to_gpu_bytes += ev.bytes;
@@ -305,17 +338,17 @@ impl ChunkManager {
 
     /// Drop a payload (paper: release remote chunk / FREE reuse).
     pub fn release_payload(&mut self, id: ChunkId) -> Result<()> {
-        if self.inflight.remove(&id) {
+        if let Some(src) = self.inflight.remove(&id) {
             // Releasing an in-flight chunk implicitly cancels its copy;
             // reclaim the accounted traffic before dropping the payload.
-            // `from` (the chunk's current device) tells `record` which
-            // direction was charged at issue.
+            // The recorded source tells `record` which direction was
+            // charged at issue.
             let c = self.chunk(id);
             let (bytes, dev) = (c.bytes(), c.device);
             self.record(MoveEvent {
                 chunk: id,
                 from: dev,
-                to: dev.map(Self::spill_target),
+                to: Some(src),
                 bytes,
                 kind: MoveKind::PrefetchCancel,
             });
@@ -368,23 +401,79 @@ impl ChunkManager {
         Ok(())
     }
 
-    /// The device victims spill to.
-    fn spill_target(device: Device) -> Device {
+    /// True when the optimization plan granted an NVMe tier (the device
+    /// exists in the space).  Everything tier-aware gates on this so a
+    /// two-tier run takes bit-identical decisions to the pre-NVMe code.
+    pub fn has_nvme(&self) -> bool {
+        self.space.has(Device::Nvme)
+    }
+
+    /// The device victims spill to: one tier colder.  CPU victims spill
+    /// to NVMe when the tier exists, otherwise back to GPU 0 (the
+    /// two-tier ping-pong of the original design); NVMe victims climb
+    /// back to the CPU (only reachable via explicit relocation).
+    fn spill_target(&self, device: Device) -> Device {
         match device {
+            Device::Cpu if self.has_nvme() => Device::Nvme,
             Device::Cpu => Device::Gpu(0),
             Device::Gpu(_) => Device::Cpu,
+            Device::Nvme => Device::Cpu,
         }
     }
 
     /// Push `victim` off `device`: FREE chunks are dropped, not moved
-    /// (paper: reuse/release); the rest spill to the other device.
-    fn evict_one(&mut self, victim: ChunkId, device: Device) -> Result<()> {
-        if self.all_free(victim) {
-            self.release_payload(victim)
-        } else {
-            self.move_payload(victim, Self::spill_target(device),
-                              MoveKind::Evict)
+    /// (paper: reuse/release); the rest spill one tier colder.  With an
+    /// NVMe tier, a GPU victim that finds the CPU full cascades first:
+    /// room is made on the CPU (spilling *its* coldest chunks to NVMe)
+    /// before the move, so pressure flows GPU -> CPU -> NVMe instead of
+    /// failing at the middle tier.
+    /// Demote one chunk to a colder tier outside the pressure path
+    /// (post-warm-up NVMe placement).  Same safety rules as eviction:
+    /// pinned, computing, mid-gather or in-flight chunks stay put, and
+    /// the target tier must already have room.  Returns whether the
+    /// chunk actually moved.
+    pub fn demote(&mut self, id: ChunkId, to: Device) -> Result<bool> {
+        if !self.movable(id)
+            || !self.space.dev(to).can_fit(self.chunk(id).bytes())
+        {
+            return Ok(false);
         }
+        self.move_payload(id, to, MoveKind::Evict)?;
+        Ok(true)
+    }
+
+    fn evict_one(
+        &mut self,
+        victim: ChunkId,
+        device: Device,
+        policy: &mut dyn EvictionPolicy,
+        now: Moment,
+    ) -> Result<()> {
+        if self.all_free(victim) {
+            return self.release_payload(victim);
+        }
+        let to = self.spill_target(device);
+        let bytes = self.chunk(victim).bytes();
+        if to == Device::Cpu
+            && self.has_nvme()
+            && !self.space.dev(to).can_fit(bytes)
+        {
+            self.evict_until(
+                Device::Cpu,
+                policy,
+                now,
+                Some(victim),
+                |m| m.space.dev(Device::Cpu).can_fit(bytes),
+                |m| {
+                    format!(
+                        "cannot cascade chunk {victim:?} to cpu: no \
+                         evictable chunk (need {bytes} B, free {} B)",
+                        m.space.dev(Device::Cpu).free()
+                    )
+                },
+            )?;
+        }
+        self.move_payload(victim, to, MoveKind::Evict)
     }
 
     /// One pressure event: evict policy-picked victims from `device`
@@ -415,7 +504,7 @@ impl ChunkManager {
             match policy.pick(&candidates, &self.reg.chunks, now) {
                 Some(victim) => {
                     candidates.retain(|&c| c != victim);
-                    self.evict_one(victim, device)?;
+                    self.evict_one(victim, device, policy, now)?;
                 }
                 None => {
                     if let Some(c) = self.pending_prefetch_on(device) {
@@ -535,16 +624,30 @@ impl ChunkManager {
         now: Moment,
         may_evict: &dyn Fn(ChunkId) -> bool,
     ) -> Result<bool> {
-        {
+        let src = {
             let c = self.chunk(id);
-            if c.device != Some(Self::spill_target(device))
+            // Tier-aware source rule: a GPU prefetch pulls from either
+            // colder tier (CPU, or NVMe via the staged two-hop route);
+            // the ADAM-staging direction only ever stages GPU-resident
+            // chunks down to the CPU.  NVMe is never a prefetch
+            // *target* — chunks reach it by eviction or relocation.
+            let ok_source = match device {
+                Device::Gpu(_) => matches!(
+                    c.device,
+                    Some(Device::Cpu) | Some(Device::Nvme)
+                ),
+                Device::Cpu => c.device == Some(Device::Gpu(0)),
+                Device::Nvme => false,
+            };
+            if !ok_source
                 || c.embedding
-                || self.inflight.contains(&id)
+                || self.inflight.contains_key(&id)
                 || !self.movable(id)
             {
                 return Ok(false);
             }
-        }
+            c.device.unwrap()
+        };
         let bytes = self.chunk(id).bytes();
         let mut projected = self.space.dev(device).used();
         if projected + bytes <= limit_bytes {
@@ -552,7 +655,7 @@ impl ChunkManager {
             // skip the registry scan entirely (this runs for every
             // window chunk at every moment tick).
             self.move_payload(id, device, MoveKind::Prefetch)?;
-            self.inflight.insert(id);
+            self.inflight.insert(id, src);
             return Ok(true);
         }
         // Plan the full victim set first so an infeasible prefetch
@@ -560,7 +663,7 @@ impl ChunkManager {
         // that the spill device can absorb every non-FREE victim (the
         // staged chunk vacates its own slot only after the victims
         // land, so its bytes don't count as room).
-        let spill = Self::spill_target(device);
+        let spill = self.spill_target(device);
         let mut spill_free = self.space.dev(spill).free();
         let mut candidates: Vec<ChunkId> = self
             .eviction_candidates(device)
@@ -586,10 +689,10 @@ impl ChunkManager {
             }
         }
         for v in victims {
-            self.evict_one(v, device)?;
+            self.evict_one(v, device, policy, now)?;
         }
         self.move_payload(id, device, MoveKind::Prefetch)?;
-        self.inflight.insert(id);
+        self.inflight.insert(id, src);
         Ok(true)
     }
 
@@ -600,14 +703,13 @@ impl ChunkManager {
     /// host the chunk, nothing changes and the prefetch stays pending —
     /// callers fall back to completing the copy and evicting normally.
     pub fn cancel_prefetch(&mut self, id: ChunkId) -> Result<()> {
-        if !self.inflight.contains(&id) {
+        let Some(&restore) = self.inflight.get(&id) else {
             bail!("chunk {id:?} has no pending prefetch");
-        }
+        };
         let c = self.chunk(id);
         let (bytes, dev) = (c.bytes(), c.device);
         let dev = dev.ok_or_else(|| anyhow!("in-flight chunk {id:?} \
                                              lost its payload"))?;
-        let restore = Self::spill_target(dev);
         self.space.alloc(restore, bytes)?;
         self.space.dealloc(dev, bytes)?;
         self.inflight.remove(&id);
@@ -780,8 +882,8 @@ mod tests {
     use crate::chunk::layout::TensorSpec;
     use crate::evict::FifoPolicy;
 
-    fn mk(n_tensors: usize, numel: u64, chunk_elems: u64,
-          gpu: u64, cpu: u64) -> ChunkManager {
+    fn mk3(n_tensors: usize, numel: u64, chunk_elems: u64,
+           gpu: u64, cpu: u64, nvme: u64) -> ChunkManager {
         let specs: Vec<TensorSpec> = (0..n_tensors)
             .map(|i| TensorSpec {
                 name: format!("t{i}"),
@@ -790,7 +892,15 @@ mod tests {
             })
             .collect();
         let reg = ChunkRegistry::build(&specs, chunk_elems).unwrap();
-        ChunkManager::new(reg, HeterogeneousSpace::new(gpu, cpu))
+        ChunkManager::new(
+            reg,
+            HeterogeneousSpace::new(gpu, cpu).with_nvme(nvme),
+        )
+    }
+
+    fn mk(n_tensors: usize, numel: u64, chunk_elems: u64,
+          gpu: u64, cpu: u64) -> ChunkManager {
+        mk3(n_tensors, numel, chunk_elems, gpu, cpu, 0)
     }
 
     #[test]
@@ -1144,5 +1254,124 @@ mod tests {
         assert_eq!(ev[0].kind, MoveKind::Alloc);
         assert_eq!(ev[1].kind, MoveKind::Transfer);
         assert!(m.drain_events().is_empty());
+    }
+
+    // ------------------------------------------------- NVMe tier (ISSUE 7)
+
+    #[test]
+    fn gpu_pressure_cascades_through_full_cpu_to_nvme() {
+        // GPU and CPU each fit exactly one chunk (200 B).  Placing a
+        // third chunk on the GPU spills one victim to the CPU — which is
+        // full, so *its* resident first cascades down to NVMe.
+        let mut m = mk3(6, 50, 100, 200, 200, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let mut pol = FifoPolicy::default();
+        for i in 0..6usize {
+            let ti = m.reg.tensor_index(ChunkKind::ParamFp16, i);
+            m.reg.tensors[ti].set_state(TensorState::Hold).unwrap();
+        }
+        m.ensure_on(list[0], Device::Gpu(0), &mut pol, 0).unwrap();
+        m.ensure_on(list[1], Device::Gpu(0), &mut pol, 1).unwrap();
+        assert_eq!(m.chunk(list[0]).device, Some(Device::Cpu));
+        m.ensure_on(list[2], Device::Gpu(0), &mut pol, 2).unwrap();
+        assert_eq!(m.chunk(list[0]).device, Some(Device::Nvme),
+                   "cpu resident cascaded to nvme");
+        assert_eq!(m.chunk(list[1]).device, Some(Device::Cpu));
+        assert_eq!(m.chunk(list[2]).device, Some(Device::Gpu(0)));
+        assert_eq!(m.stats.to_nvme_bytes, 200);
+        assert_eq!(m.stats.to_nvme_moves, 1);
+        // The cascade hop is a real eviction, counted as one.
+        assert_eq!(m.stats.evictions, 3);
+    }
+
+    #[test]
+    fn tier_off_cpu_pressure_never_reaches_for_nvme() {
+        // Without the tier, the two-tier ping-pong still holds: a CPU
+        // victim spills back to GPU 0, and a full CPU with a full GPU is
+        // a hard error rather than a cascade.
+        let mut m = mk(4, 50, 100, 200, 200);
+        assert!(!m.has_nvme());
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let mut pol = FifoPolicy::default();
+        for i in 0..4usize {
+            let ti = m.reg.tensor_index(ChunkKind::ParamFp16, i);
+            m.reg.tensors[ti].set_state(TensorState::Hold).unwrap();
+        }
+        m.ensure_on(list[0], Device::Gpu(0), &mut pol, 0).unwrap();
+        assert!(m.ensure_on(list[1], Device::Cpu, &mut pol, 1).is_ok());
+        assert_eq!(m.stats.to_nvme_bytes, 0);
+        assert_eq!(m.stats.from_nvme_bytes, 0);
+    }
+
+    #[test]
+    fn nvme_source_prefetch_cancel_restores_to_nvme() {
+        let mut m = mk3(2, 50, 100, 10_000, 10_000, 10_000);
+        let id = m.reg.list(ChunkKind::ParamFp16)[0];
+        m.alloc_payload(id, Device::Nvme).unwrap();
+        let mut pol = FifoPolicy::default();
+        let issued = m
+            .prefetch_to(id, Device::Gpu(0), 10_000, &mut pol, 0, &|_| true)
+            .unwrap();
+        assert!(issued);
+        assert_eq!(m.chunk(id).device, Some(Device::Gpu(0)));
+        assert!(m.is_inflight(id));
+        assert_eq!(m.stats.from_nvme_bytes, 200);
+        m.cancel_prefetch(id).unwrap();
+        assert_eq!(m.chunk(id).device, Some(Device::Nvme),
+                   "restored to its recorded source tier");
+        assert_eq!(m.stats.from_nvme_bytes, 0, "nvme traffic credited");
+        assert_eq!(m.stats.cpu_to_gpu_bytes, 0);
+        assert_eq!(m.stats.prefetch_cancels, 1);
+    }
+
+    #[test]
+    fn adam_staging_cancel_restores_to_gpu_despite_nvme() {
+        // Regression guard for the source-recording fix: with the NVMe
+        // tier present, spill_target(Cpu) is Nvme — but a cancelled
+        // GPU->CPU ADAM-staging prefetch must return to the GPU it left,
+        // not to NVMe.
+        let mut m = mk3(2, 50, 100, 10_000, 10_000, 10_000);
+        let id = m.reg.list(ChunkKind::ParamFp16)[0];
+        m.alloc_payload(id, Device::Gpu(0)).unwrap();
+        let mut pol = FifoPolicy::default();
+        let issued = m
+            .prefetch_to(id, Device::Cpu, 10_000, &mut pol, 0, &|_| true)
+            .unwrap();
+        assert!(issued);
+        assert_eq!(m.stats.gpu_to_cpu_bytes, 200);
+        m.cancel_prefetch(id).unwrap();
+        assert_eq!(m.chunk(id).device, Some(Device::Gpu(0)));
+        assert_eq!(m.stats.gpu_to_cpu_bytes, 0, "g2c credited back");
+        assert_eq!(m.stats.to_nvme_bytes, 0);
+    }
+
+    #[test]
+    fn nvme_is_never_a_prefetch_target() {
+        let mut m = mk3(2, 50, 100, 10_000, 10_000, 10_000);
+        let id = m.reg.list(ChunkKind::ParamFp16)[0];
+        m.alloc_payload(id, Device::Cpu).unwrap();
+        let mut pol = FifoPolicy::default();
+        let issued = m
+            .prefetch_to(id, Device::Nvme, 10_000, &mut pol, 0, &|_| true)
+            .unwrap();
+        assert!(!issued);
+        assert_eq!(m.chunk(id).device, Some(Device::Cpu));
+    }
+
+    #[test]
+    fn releasing_inflight_nvme_prefetch_credits_nvme_traffic() {
+        let mut m = mk3(2, 50, 100, 10_000, 10_000, 10_000);
+        let id = m.reg.list(ChunkKind::ParamFp16)[0];
+        m.alloc_payload(id, Device::Nvme).unwrap();
+        let mut pol = FifoPolicy::default();
+        assert!(m
+            .prefetch_to(id, Device::Gpu(0), 10_000, &mut pol, 0, &|_| true)
+            .unwrap());
+        // Implicit cancel via release: the charged from-NVMe traffic is
+        // credited back before the payload drops.
+        m.release_payload(id).unwrap();
+        assert_eq!(m.chunk(id).device, None);
+        assert_eq!(m.stats.from_nvme_bytes, 0);
+        assert_eq!(m.stats.prefetch_cancels, 1);
     }
 }

@@ -16,4 +16,4 @@ pub mod search;
 pub use chunk::{Chunk, ChunkId, ChunkKind};
 pub use layout::{ChunkRegistry, LayoutStats, TensorSpec};
 pub use manager::{ChunkManager, MoveEvent, MoveKind, MoveStats};
-pub use search::{search_chunk_size, SearchResult};
+pub use search::{search_chunk_size, search_chunk_size_tiered, SearchResult};

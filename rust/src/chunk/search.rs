@@ -16,8 +16,12 @@ pub struct Candidate {
     pub chunk_elems: u64,
     pub utilization: f64,
     pub n_chunks: usize,
-    /// Whether overall model data fits the CPU+GPU budget.
+    /// Whether overall model data fits the byte budget (CPU+GPU, plus
+    /// the NVMe tier when one is granted).
     pub feasible: bool,
+    /// Bytes overflowing CPU+GPU that must live on the NVMe tier
+    /// (0 when the model fits two tiers or the budget is unconstrained).
+    pub nvme_spill: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -33,15 +37,35 @@ pub fn evaluate(
     chunk_elems: u64,
     budget_bytes: u64,
 ) -> Option<Candidate> {
+    evaluate_tiered(specs, chunk_elems, budget_bytes, 0)
+}
+
+/// 3-tier evaluation (ISSUE 7): `budget_bytes` is the CPU+GPU budget
+/// and `nvme_bytes` the third-tier grant.  A candidate is feasible if
+/// model data fits the *combined* budget; `nvme_spill` reports how many
+/// bytes overflow the two hot tiers onto NVMe.
+pub fn evaluate_tiered(
+    specs: &[TensorSpec],
+    chunk_elems: u64,
+    budget_bytes: u64,
+    nvme_bytes: u64,
+) -> Option<Candidate> {
     let reg = ChunkRegistry::build(specs, chunk_elems).ok()?;
     let stats = reg.stats();
+    let model = reg.model_data_bytes();
     let feasible =
-        budget_bytes == 0 || reg.model_data_bytes() <= budget_bytes;
+        budget_bytes == 0 || model <= budget_bytes + nvme_bytes;
+    let nvme_spill = if budget_bytes == 0 {
+        0
+    } else {
+        model.saturating_sub(budget_bytes)
+    };
     Some(Candidate {
         chunk_elems,
         utilization: stats.utilization(),
         n_chunks: stats.n_chunks,
         feasible,
+        nvme_spill,
     })
 }
 
@@ -53,9 +77,20 @@ pub fn search_chunk_size(
     specs: &[TensorSpec],
     budget_bytes: u64,
 ) -> Option<SearchResult> {
+    search_chunk_size_tiered(specs, budget_bytes, 0)
+}
+
+/// Paper-grid search with a third-tier grant: feasibility is judged
+/// against CPU+GPU *plus* `nvme_bytes`, and each candidate reports its
+/// `nvme_spill`.  `nvme_bytes == 0` is exactly [`search_chunk_size`].
+pub fn search_chunk_size_tiered(
+    specs: &[TensorSpec],
+    budget_bytes: u64,
+    nvme_bytes: u64,
+) -> Option<SearchResult> {
     let grid: Vec<u64> =
         (128..=512).step_by(32).map(|q| q << 20).collect();
-    search_grid(specs, &grid, budget_bytes)
+    search_grid_tiered(specs, &grid, budget_bytes, nvme_bytes)
 }
 
 /// Search an explicit grid of chunk sizes; best = feasible candidate with
@@ -65,9 +100,20 @@ pub fn search_grid(
     grid: &[u64],
     budget_bytes: u64,
 ) -> Option<SearchResult> {
+    search_grid_tiered(specs, grid, budget_bytes, 0)
+}
+
+/// Grid search under a 3-tier budget (see [`evaluate_tiered`]).
+pub fn search_grid_tiered(
+    specs: &[TensorSpec],
+    grid: &[u64],
+    budget_bytes: u64,
+    nvme_bytes: u64,
+) -> Option<SearchResult> {
     let mut all = Vec::new();
     for &c in grid {
-        if let Some(cand) = evaluate(specs, c, budget_bytes) {
+        if let Some(cand) = evaluate_tiered(specs, c, budget_bytes, nvme_bytes)
+        {
             all.push(cand);
         }
     }
@@ -117,6 +163,27 @@ mod tests {
         // 1200 elems * 14 B = 16.8 KB minimum; a 1 KB budget is infeasible
         // for every candidate.
         assert!(search_grid(&s, &[300, 400], 1000).is_none());
+    }
+
+    #[test]
+    fn nvme_grant_rescues_budget() {
+        // The same 1 KB two-tier budget becomes feasible once a 32 KB
+        // NVMe grant joins it, and the candidate reports the overflow.
+        let s = specs(&[100; 12]);
+        let r = search_grid_tiered(&s, &[300, 400], 1000, 32 << 10)
+            .expect("tiered budget must be feasible");
+        assert!(r.best.feasible);
+        assert!(r.best.nvme_spill > 0, "overflow bytes must be reported");
+        // Zero grant is exactly the two-tier search.
+        assert!(search_grid_tiered(&s, &[300, 400], 1000, 0).is_none());
+    }
+
+    #[test]
+    fn unconstrained_budget_reports_no_spill() {
+        let s = specs(&[100; 12]);
+        let r = search_grid(&s, &[300], 0).unwrap();
+        assert!(r.best.feasible);
+        assert_eq!(r.best.nvme_spill, 0);
     }
 
     #[test]

@@ -76,14 +76,35 @@ impl ClusterPreset {
         }
     }
 
+    /// A deliberately RAM-starved single-V100 box for the NVMe tier
+    /// (ISSUE 7): 6 GB of GPU memory plus 6 GB of host DRAM cannot hold
+    /// a 1B model's ~14 GB of chunked data, so training only becomes
+    /// feasible once `--nvme-gb` grants the third tier — the "infinity"
+    /// offload demonstrator used by the `nvme_offload` bench and the
+    /// CI `nvme-smoke` cell.
+    pub fn nvme_lab() -> Self {
+        ClusterPreset {
+            name: "NVME-LAB",
+            n_gpus: 1,
+            gpu_mem: 6 * GB,
+            cpu_mem: 6 * GB,
+            gpu: DeviceProfile::v100(),
+            cpu: DeviceProfile::cpu_yard(),
+            net: Interconnect::v100_node(),
+            scale_bar_tflops: 30.0,
+        }
+    }
+
     pub fn by_name(name: &str) -> Result<ClusterPreset> {
         match name.to_ascii_lowercase().as_str() {
             "yard" => Ok(Self::yard()),
             "superpod" | "spod" => Ok(Self::superpod()),
             "yard120" | "yard-120gb" => Ok(Self::yard_120gb()),
             "pc" => Ok(Self::pc()),
+            "nvme-lab" | "nvmelab" => Ok(Self::nvme_lab()),
             other => bail!(
-                "unknown cluster '{other}' (yard|superpod|yard120|pc)"
+                "unknown cluster '{other}' \
+                 (yard|superpod|yard120|pc|nvme-lab)"
             ),
         }
     }

@@ -143,10 +143,19 @@ pub struct LookaheadController {
     ema_compute: Ema,
     ema_h2d: Ema,
     ema_coll: Ema,
+    /// Per-moment NVMe-lane work (ISSUE 7); stays `None` — and the NVMe
+    /// window stays the plain chunk window — unless the engine feeds
+    /// [`LookaheadController::observe_nvme`].
+    ema_nvme: Ema,
     /// Cumulative-accumulator baselines from the previous tick.
     last_compute: f64,
     last_h2d: f64,
     last_coll: f64,
+    /// Baselines for the NVMe probe (own compute baseline: the probe is
+    /// fed by a separate call after `observe` has already re-based
+    /// `last_compute`).
+    last_nvme: f64,
+    last_nvme_compute: f64,
 }
 
 impl LookaheadController {
@@ -157,9 +166,12 @@ impl LookaheadController {
             ema_compute: Ema::default(),
             ema_h2d: Ema::default(),
             ema_coll: Ema::default(),
+            ema_nvme: Ema::default(),
             last_compute: 0.0,
             last_h2d: 0.0,
             last_coll: 0.0,
+            last_nvme: 0.0,
+            last_nvme_compute: 0.0,
         }
     }
 
@@ -186,12 +198,29 @@ impl LookaheadController {
         }
     }
 
+    /// Fold this tick's NVMe-lane work delta into its EMA (ISSUE 7).
+    /// Same contract as [`Self::observe`]: `nvme_busy` is the backend's
+    /// cumulative probe, and ticks that charged no compute are skipped.
+    /// Carries its own compute baseline because the engine calls this
+    /// *after* `observe` has re-based `last_compute` for the tick.
+    pub fn observe_nvme(&mut self, compute_work: f64, nvme_busy: f64) {
+        let dc = compute_work - self.last_nvme_compute;
+        let dn = nvme_busy - self.last_nvme;
+        self.last_nvme_compute = compute_work;
+        self.last_nvme = nvme_busy;
+        if dc > 0.0 {
+            self.ema_nvme.update(dn.max(0.0));
+        }
+    }
+
     /// The timeline restarted at zero (iteration boundary): re-base the
     /// cumulative baselines, keep the learned rates.
     pub fn iteration_boundary(&mut self) {
         self.last_compute = 0.0;
         self.last_h2d = 0.0;
         self.last_coll = 0.0;
+        self.last_nvme = 0.0;
+        self.last_nvme_compute = 0.0;
     }
 
     fn pool_bound(w: u32, pool_free: Option<u32>) -> u32 {
@@ -222,6 +251,31 @@ impl LookaheadController {
         let backlog_moments = (inp.h2d_backlog_secs / c).floor();
         let w = (want - backlog_moments).clamp(1.0, cap as f64) as u32;
         Self::pool_bound(w, inp.pool_free)
+    }
+
+    /// Chunk-prefetch window for NVMe-resident chunks, in moments
+    /// (ISSUE 7).  An NVMe fetch rides *two* sequenced hops — the NVMe
+    /// link into the pinned stage, then PCIe onto the GPU — so its copy
+    /// must be issued earlier than a CPU-resident chunk's by the extra
+    /// NVMe-lane ratio.  Until `observe_nvme` has seen traffic this is
+    /// exactly [`Self::chunk_window`], and it obeys the same static cap
+    /// and pinned-pool bound (the stage buffer is held across both
+    /// hops, so the pool is the binding resource either way).
+    pub fn nvme_window(&self, inp: WindowInputs) -> u32 {
+        let base = self.chunk_window(inp);
+        if base == 0 {
+            return 0;
+        }
+        let extra = match (self.ema_compute.get(), self.ema_nvme.get()) {
+            (Some(c), Some(n)) if c > 0.0 => {
+                (HEADSTART * n / c).ceil() as u32
+            }
+            _ => 0,
+        };
+        Self::pool_bound(
+            base.saturating_add(extra).min(self.max_lookahead),
+            inp.pool_free,
+        )
     }
 
     /// Group-gather window for this moment, in communication groups.
@@ -446,6 +500,40 @@ mod tests {
         assert_eq!(ctl.evict_margin(0.0), 0);
         assert_eq!(ctl.evict_margin(2.5), 2);
         assert_eq!(ctl.evict_margin(1e9), MAX_EVICT_MARGIN);
+    }
+
+    #[test]
+    fn nvme_traffic_deepens_the_nvme_window_only() {
+        // No NVMe observations: the NVMe window IS the chunk window
+        // (tier-off identity at the controller level).
+        let ctl = warmed(1.0, 2.0, 0.0, 16);
+        let inp = WindowInputs::default();
+        assert_eq!(ctl.nvme_window(inp), ctl.chunk_window(inp));
+        // Feed a busy NVMe lane: the NVMe window deepens past the chunk
+        // window by the measured lane ratio, the chunk window itself is
+        // untouched, and both obey cap and pool bound.
+        let mut ctl = warmed(1.0, 2.0, 0.0, 16);
+        let before = ctl.chunk_window(inp);
+        let mut tl = StreamTimeline::new(true);
+        for _ in 0..16 {
+            tl.charge(Phase::FwdBwd, 1.0);
+            tl.async_copy(Phase::CpuToGpu, 2.0, CopyDir::H2D, 0.0);
+            tl.async_copy_nvme(Phase::Nvme, 3.0, 0.0);
+            observe_tl(&mut ctl, &tl);
+            ctl.observe_nvme(tl.compute_work(), tl.nvme_busy());
+        }
+        assert_eq!(ctl.chunk_window(inp), before, "chunk window untouched");
+        let wn = ctl.nvme_window(inp);
+        assert!(wn > before, "nvme window must deepen: {wn} <= {before}");
+        assert!(wn <= DEFAULT_ADAPTIVE_MAX_LOOKAHEAD);
+        let dry = ctl.nvme_window(WindowInputs {
+            pool_free: Some(0),
+            ..Default::default()
+        });
+        assert_eq!(dry, 0, "dry pool closes the nvme walk too");
+        // Boundary keeps the learned NVMe rate.
+        ctl.iteration_boundary();
+        assert_eq!(ctl.nvme_window(inp), wn);
     }
 
     #[test]

@@ -86,6 +86,119 @@ pub trait ExecutionBackend {
     /// Un-charge an issued collective cancelled before the wire.
     fn reclaim_collective(&mut self, phase: Phase, secs: f64);
 
+    // ------------------------------------------- NVMe tier (ISSUE 7)
+    //
+    // Defaulted so existing backends compile untouched: a backend with
+    // no dedicated NVMe lane treats NVMe traffic as ordinary sequenced
+    // copies on the PCIe engine.  `SimBackend` (and the chaos
+    // decorator) override every method to ride the timeline's real
+    // NVMe lane; the session only calls them when the plan enabled the
+    // tier, so two-tier runs never reach these at all.
+
+    /// Enqueue a non-blocking two-hop NVMe<->GPU copy staged through a
+    /// pinned host buffer; returns the second hop's completion time.
+    /// `dir` is the PCIe hop's engine (H2D: NVMe hop first); the NVMe
+    /// hop is priced/attributed separately from the PCIe hop, whose
+    /// pinned/pageable attribution is `pcie_route`.
+    #[allow(clippy::too_many_arguments)]
+    fn issue_copy_staged(
+        &mut self,
+        nvme_phase: Phase,
+        nvme_secs: f64,
+        pcie_phase: Phase,
+        pcie_secs: f64,
+        dir: CopyDir,
+        ready: f64,
+        pcie_route: CopyRoute,
+    ) -> f64 {
+        let (p1, s1, r1, p2, s2, r2) = match dir {
+            CopyDir::H2D => (
+                nvme_phase, nvme_secs, CopyRoute::Pinned, pcie_phase,
+                pcie_secs, pcie_route,
+            ),
+            CopyDir::D2H => (
+                pcie_phase, pcie_secs, pcie_route, nvme_phase, nvme_secs,
+                CopyRoute::Pinned,
+            ),
+        };
+        let hop1 = self.issue_copy(p1, s1, dir, ready, r1);
+        self.issue_copy(p2, s2, dir, hop1, r2)
+    }
+
+    /// Blocking two-hop staged copy (demand fault on an NVMe-resident
+    /// chunk).
+    #[allow(clippy::too_many_arguments)]
+    fn demand_copy_staged(
+        &mut self,
+        nvme_phase: Phase,
+        nvme_secs: f64,
+        pcie_phase: Phase,
+        pcie_secs: f64,
+        dir: CopyDir,
+        ready: f64,
+        pcie_route: CopyRoute,
+    ) {
+        let done = self.issue_copy_staged(
+            nvme_phase, nvme_secs, pcie_phase, pcie_secs, dir, ready,
+            pcie_route,
+        );
+        self.sync_until(done);
+    }
+
+    /// Un-charge an issued staged copy cancelled before the wire —
+    /// both hops.
+    fn reclaim_copy_staged(
+        &mut self,
+        nvme_phase: Phase,
+        nvme_secs: f64,
+        pcie_phase: Phase,
+        pcie_secs: f64,
+        dir: CopyDir,
+        pcie_route: CopyRoute,
+    ) {
+        self.reclaim_copy(nvme_phase, nvme_secs, dir, CopyRoute::Pinned);
+        self.reclaim_copy(pcie_phase, pcie_secs, dir, pcie_route);
+    }
+
+    /// Enqueue a non-blocking single-hop CPU<->NVMe transfer (never
+    /// touches a GPU); returns its completion time.  `dir` is the
+    /// fallback engine for backends without an NVMe lane (H2D-like for
+    /// NVMe->CPU fetches, D2H-like for CPU->NVMe spills).
+    fn issue_copy_nvme(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        dir: CopyDir,
+        ready: f64,
+    ) -> f64 {
+        self.issue_copy(phase, secs, dir, ready, CopyRoute::Pinned)
+    }
+
+    /// Blocking single-hop CPU<->NVMe transfer.
+    fn demand_copy_nvme(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        dir: CopyDir,
+        ready: f64,
+    ) {
+        let done = self.issue_copy_nvme(phase, secs, dir, ready);
+        self.sync_until(done);
+    }
+
+    /// Un-charge an issued CPU<->NVMe transfer cancelled before the
+    /// drive.
+    fn reclaim_copy_nvme(&mut self, phase: Phase, secs: f64, dir: CopyDir) {
+        self.reclaim_copy(phase, secs, dir, CopyRoute::Pinned);
+    }
+
+    /// Cumulative NVMe-lane durations — the tier-aware window
+    /// controller's feedback signal.  Zero for backends without an
+    /// NVMe lane.
+    fn nvme_busy(&self) -> f64 {
+        0.0
+    }
+
     // --------------------------------------------------------- pricing
 
     /// Seconds one host copy of `bytes` takes on `route`'s curve.
@@ -218,12 +331,90 @@ impl ExecutionBackend for SimBackend {
         self.tl.reclaim_collective(phase, secs);
     }
 
+    fn issue_copy_staged(
+        &mut self,
+        nvme_phase: Phase,
+        nvme_secs: f64,
+        pcie_phase: Phase,
+        pcie_secs: f64,
+        dir: CopyDir,
+        ready: f64,
+        pcie_route: CopyRoute,
+    ) -> f64 {
+        self.tl.async_copy_staged(
+            nvme_phase, nvme_secs, pcie_phase, pcie_secs, dir, ready,
+            pcie_route,
+        )
+    }
+
+    fn demand_copy_staged(
+        &mut self,
+        nvme_phase: Phase,
+        nvme_secs: f64,
+        pcie_phase: Phase,
+        pcie_secs: f64,
+        dir: CopyDir,
+        ready: f64,
+        pcie_route: CopyRoute,
+    ) {
+        self.tl.demand_copy_staged(
+            nvme_phase, nvme_secs, pcie_phase, pcie_secs, dir, ready,
+            pcie_route,
+        );
+    }
+
+    fn reclaim_copy_staged(
+        &mut self,
+        nvme_phase: Phase,
+        nvme_secs: f64,
+        pcie_phase: Phase,
+        pcie_secs: f64,
+        dir: CopyDir,
+        pcie_route: CopyRoute,
+    ) {
+        self.tl.reclaim_staged(
+            nvme_phase, nvme_secs, pcie_phase, pcie_secs, dir, pcie_route,
+        );
+    }
+
+    fn issue_copy_nvme(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        _dir: CopyDir,
+        ready: f64,
+    ) -> f64 {
+        self.tl.async_copy_nvme(phase, secs, ready)
+    }
+
+    fn demand_copy_nvme(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        _dir: CopyDir,
+        ready: f64,
+    ) {
+        self.tl.demand_copy_nvme(phase, secs, ready);
+    }
+
+    fn reclaim_copy_nvme(&mut self, phase: Phase, secs: f64, _dir: CopyDir) {
+        self.tl.reclaim_nvme(phase, secs);
+    }
+
+    fn nvme_busy(&self) -> f64 {
+        self.tl.nvme_busy()
+    }
+
     fn copy_secs(&self, bytes: u64, route: CopyRoute) -> f64 {
         match route {
             CopyRoute::Pinned => self.net.pcie.transfer_time(bytes),
             CopyRoute::Pageable => {
                 self.net.pcie_pageable.transfer_time(bytes)
             }
+            // The NVMe-link hop of a staged copy (or a direct
+            // CPU<->NVMe spill); the caller prices the PCIe hop
+            // separately on Pinned/Pageable.
+            CopyRoute::NvmeStaged => self.net.nvme.transfer_time(bytes),
         }
     }
 
@@ -479,6 +670,50 @@ mod tests {
         }
     }
 
+    /// The NVMe methods delegate to the timeline's NVMe lane exactly
+    /// like every other trait method (ISSUE 7).
+    #[test]
+    fn sim_backend_nvme_ops_are_transparent() {
+        let net = ClusterPreset::yard().net;
+        for overlap in [false, true] {
+            let mut raw = StreamTimeline::new(overlap);
+            let mut b = SimBackend::new(overlap, net, 2);
+            let be: &mut dyn ExecutionBackend = &mut b;
+            let d1 = raw.async_copy_staged(
+                Phase::Nvme, 0.6, Phase::CpuToGpu, 0.2, CopyDir::H2D,
+                0.0, CopyRoute::Pinned,
+            );
+            let d2 = be.issue_copy_staged(
+                Phase::Nvme, 0.6, Phase::CpuToGpu, 0.2, CopyDir::H2D,
+                0.0, CopyRoute::Pinned,
+            );
+            assert_eq!(d1.to_bits(), d2.to_bits());
+            raw.demand_copy_staged(
+                Phase::Nvme, 0.3, Phase::GpuToCpu, 0.1, CopyDir::D2H,
+                0.0, CopyRoute::Pageable,
+            );
+            be.demand_copy_staged(
+                Phase::Nvme, 0.3, Phase::GpuToCpu, 0.1, CopyDir::D2H,
+                0.0, CopyRoute::Pageable,
+            );
+            let n1 = raw.async_copy_nvme(Phase::Nvme, 0.4, 0.0);
+            let n2 = be.issue_copy_nvme(Phase::Nvme, 0.4, CopyDir::D2H, 0.0);
+            assert_eq!(n1.to_bits(), n2.to_bits());
+            raw.reclaim_nvme(Phase::Nvme, 0.4);
+            be.reclaim_copy_nvme(Phase::Nvme, 0.4, CopyDir::D2H);
+            raw.reclaim_staged(
+                Phase::Nvme, 0.6, Phase::CpuToGpu, 0.2, CopyDir::H2D,
+                CopyRoute::Pinned,
+            );
+            be.reclaim_copy_staged(
+                Phase::Nvme, 0.6, Phase::CpuToGpu, 0.2, CopyDir::H2D,
+                CopyRoute::Pinned,
+            );
+            assert_eq!(raw.snapshot(), be.snapshot());
+            assert_eq!(raw.nvme_busy().to_bits(), be.nvme_busy().to_bits());
+        }
+    }
+
     /// The pricing methods are exactly the cluster curves the engine
     /// used to call inline.
     #[test]
@@ -493,6 +728,10 @@ mod tests {
             assert_eq!(
                 b.copy_secs(bytes, CopyRoute::Pageable).to_bits(),
                 cluster.net.pcie_pageable.transfer_time(bytes).to_bits()
+            );
+            assert_eq!(
+                b.copy_secs(bytes, CopyRoute::NvmeStaged).to_bits(),
+                cluster.net.nvme.transfer_time(bytes).to_bits()
             );
             let cc = CollectiveCost::new(cluster.net.nvlink, 4);
             assert_eq!(b.allgather_cost(bytes), cc.allgather_op(bytes));

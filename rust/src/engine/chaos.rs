@@ -194,6 +194,10 @@ struct ChaosState {
     coll: Rng,
     pressure: Rng,
     abort: Rng,
+    /// Jitter stream for the NVMe pricing route (ISSUE 7).  Forked
+    /// last so the first five lanes keep their pre-NVMe streams — a
+    /// two-tier chaos run replays the exact same faults as before.
+    copy_nvme: Rng,
     stats: ChaosStats,
 }
 
@@ -206,6 +210,7 @@ impl ChaosState {
             coll: root.fork(3),
             pressure: root.fork(4),
             abort: root.fork(5),
+            copy_nvme: root.fork(6),
             stats: ChaosStats::default(),
         }
     }
@@ -252,6 +257,7 @@ impl<B: ExecutionBackend> ChaosBackend<B> {
         let lane = match route {
             CopyRoute::Pinned => &mut st.copy_pinned,
             CopyRoute::Pageable => &mut st.copy_pageable,
+            CopyRoute::NvmeStaged => &mut st.copy_nvme,
         };
         if lane.chance(self.plan.rate) {
             let stretch = 1.0 + self.plan.intensity * lane.f64();
@@ -334,6 +340,85 @@ impl<B: ExecutionBackend> ExecutionBackend for ChaosBackend<B> {
 
     fn reclaim_collective(&mut self, phase: Phase, secs: f64) {
         self.inner.reclaim_collective(phase, secs);
+    }
+
+    // NVMe tier: still pure delegation on the execution side.  These
+    // must be explicit — the trait defaults decompose a staged copy
+    // into `self.issue_copy` calls, which would route around the inner
+    // backend's real NVMe lane.  Jitter on the NVMe route flows
+    // through `copy_secs` per hop like every other fault.
+    fn issue_copy_staged(
+        &mut self,
+        nvme_phase: Phase,
+        nvme_secs: f64,
+        pcie_phase: Phase,
+        pcie_secs: f64,
+        dir: CopyDir,
+        ready: f64,
+        pcie_route: CopyRoute,
+    ) -> f64 {
+        self.inner.issue_copy_staged(
+            nvme_phase, nvme_secs, pcie_phase, pcie_secs, dir, ready,
+            pcie_route,
+        )
+    }
+
+    fn demand_copy_staged(
+        &mut self,
+        nvme_phase: Phase,
+        nvme_secs: f64,
+        pcie_phase: Phase,
+        pcie_secs: f64,
+        dir: CopyDir,
+        ready: f64,
+        pcie_route: CopyRoute,
+    ) {
+        self.inner.demand_copy_staged(
+            nvme_phase, nvme_secs, pcie_phase, pcie_secs, dir, ready,
+            pcie_route,
+        );
+    }
+
+    fn reclaim_copy_staged(
+        &mut self,
+        nvme_phase: Phase,
+        nvme_secs: f64,
+        pcie_phase: Phase,
+        pcie_secs: f64,
+        dir: CopyDir,
+        pcie_route: CopyRoute,
+    ) {
+        self.inner.reclaim_copy_staged(
+            nvme_phase, nvme_secs, pcie_phase, pcie_secs, dir, pcie_route,
+        );
+    }
+
+    fn issue_copy_nvme(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        dir: CopyDir,
+        ready: f64,
+    ) -> f64 {
+        self.inner.issue_copy_nvme(phase, secs, dir, ready)
+    }
+
+    fn demand_copy_nvme(
+        &mut self,
+        phase: Phase,
+        secs: f64,
+        dir: CopyDir,
+        ready: f64,
+    ) {
+        self.inner.demand_copy_nvme(phase, secs, dir, ready);
+    }
+
+    fn reclaim_copy_nvme(&mut self, phase: Phase, secs: f64, dir: CopyDir) {
+        self.inner.reclaim_copy_nvme(phase, secs, dir);
+    }
+
+    fn nvme_busy(&self) -> f64 {
+        self.inner.nvme_busy()
     }
 
     // Pricing: the fault surface.
@@ -445,7 +530,11 @@ mod tests {
         let raw = sim();
         let be = ChaosBackend::new(sim(), ChaosPlan::disabled(99));
         for bytes in [1u64 << 10, 1 << 20, 1 << 28] {
-            for route in [CopyRoute::Pinned, CopyRoute::Pageable] {
+            for route in [
+                CopyRoute::Pinned,
+                CopyRoute::Pageable,
+                CopyRoute::NvmeStaged,
+            ] {
                 assert_eq!(be.copy_secs(bytes, route).to_bits(),
                            raw.copy_secs(bytes, route).to_bits());
             }
@@ -506,6 +595,47 @@ mod tests {
         let s = be.stats();
         assert!(s.copy_slowdowns > 0 && s.collective_stretches > 0
                     && s.pressure_spikes > 0);
+    }
+
+    #[test]
+    fn nvme_route_jitter_replays_per_seed_on_its_own_lane() {
+        // ISSUE 7: jitter on the NVMe pricing route is deterministic
+        // per seed, and draws from its own forked stream — interleaving
+        // NVMe queries must not shift the pinned lane's fault tail.
+        let plan = ChaosPlan {
+            jitter: true,
+            rate: 0.6,
+            intensity: 2.0,
+            ..ChaosPlan::disabled(21)
+        };
+        let a = ChaosBackend::new(sim(), plan);
+        let b = ChaosBackend::new(sim(), plan);
+        let mut nvme_hits = 0;
+        for i in 0..200u64 {
+            let bytes = 1 + (i * 769) % (1 << 24);
+            let (na, nb) = (
+                a.copy_secs(bytes, CopyRoute::NvmeStaged),
+                b.copy_secs(bytes, CopyRoute::NvmeStaged),
+            );
+            assert_eq!(na.to_bits(), nb.to_bits());
+            if na > sim().copy_secs(bytes, CopyRoute::NvmeStaged) {
+                nvme_hits += 1;
+            }
+        }
+        assert!(nvme_hits > 0, "jitter never fired on the NVMe route");
+        // Only b draws extra NVMe queries: the NVMe lane is its own
+        // forked stream, so a's and b's *pinned* fault tails must stay
+        // in lockstep regardless.
+        for _ in 0..50 {
+            b.copy_secs(1 << 20, CopyRoute::NvmeStaged);
+        }
+        for i in 0..50u64 {
+            let bytes = 1 + (i * 331) % (1 << 22);
+            assert_eq!(
+                a.copy_secs(bytes, CopyRoute::Pinned).to_bits(),
+                b.copy_secs(bytes, CopyRoute::Pinned).to_bits()
+            );
+        }
     }
 
     #[test]

@@ -113,6 +113,15 @@ pub struct OptimizationPlan {
     /// exceed.  Off (default): the static windows, bit-identical to
     /// PR 3 timelines.
     pub adaptive_lookahead: bool,
+    /// NVMe tier capacity in GiB, shared by the node's ranks (ISSUE 7
+    /// tentpole).  0 (default) means **no third tier at all**: no
+    /// `Device::Nvme` in the space, no NVMe lane traffic, and every
+    /// report/trace byte identical to a two-tier run — locked by
+    /// `tests/session_equivalence.rs`.
+    pub nvme_gb: u64,
+    /// NVMe link peak bandwidth override in GB/s; <= 0 keeps the
+    /// cluster preset's curve.  Ignored entirely when `nvme_gb` is 0.
+    pub nvme_gbps: f64,
 }
 
 impl Default for OptimizationPlan {
@@ -129,6 +138,8 @@ impl Default for OptimizationPlan {
             pinned_buffers: 0,
             pinned_split: None,
             adaptive_lookahead: false,
+            nvme_gb: 0,
+            nvme_gbps: 0.0,
         }
     }
 }
@@ -252,7 +263,8 @@ impl Engine {
         }
         let specs = self.task.model.tensor_specs();
         let budget = self.cluster.cpu_mem
-            + self.cluster.n_gpus as u64 * self.cluster.gpu_mem;
+            + self.cluster.n_gpus as u64 * self.cluster.gpu_mem
+            + (self.opt.nvme_gb << 30);
         let warmup_gpu =
             (self.cluster.gpu_mem as f64 * WARMUP_GPU_FRAC) as u64;
         // fp16 group bytes = 2 * chunk_elems * nproc; leave one chunk of
@@ -303,7 +315,7 @@ impl Engine {
         let parts = self.sim_parts()?;
         let SimParts { mgr, cost, graph, chunk_elems } = parts;
         let nproc = self.nproc();
-        let backend = SimBackend::new(self.opt.overlap, self.cluster.net,
+        let backend = SimBackend::new(self.opt.overlap, cost.cluster.net,
                                       nproc);
         match self.chaos {
             Some(plan) => {
@@ -350,11 +362,19 @@ impl Engine {
                     emb_bytes / nproc as u64
                 )
             })?;
+        // The third tier: per-process NVMe share, present iff the plan
+        // grants capacity (`with_nvme(0)` leaves the space two-tier).
         let space =
-            HeterogeneousSpace::new(self.cluster.gpu_mem, cpu_share);
+            HeterogeneousSpace::new(self.cluster.gpu_mem, cpu_share)
+                .with_nvme((self.opt.nvme_gb << 30) / nproc as u64);
         let mgr = ChunkManager::new(reg, space);
 
-        let cost = SimCost { cluster: self.cluster, task: self.task };
+        // The cost context carries the (possibly overridden) NVMe
+        // curve: backend pricing and tier-aware victim pricing must
+        // agree on it.
+        let mut cluster = self.cluster;
+        cluster.net = cluster.net.with_nvme_gbps(self.opt.nvme_gbps);
+        let cost = SimCost { cluster, task: self.task };
         let graph = OpGraph::build(*m, self.task.batch_per_gpu);
         Ok(SimParts { mgr, cost, graph, chunk_elems })
     }
@@ -435,6 +455,11 @@ impl Engine {
             },
             gpu_peak: s.mgr.space.dev(Device::Gpu(0)).peak(),
             cpu_peak: s.mgr.space.dev(Device::Cpu).peak(),
+            nvme_peak: if s.mgr.has_nvme() {
+                s.mgr.space.dev(Device::Nvme).peak()
+            } else {
+                0
+            },
             non_model_peak: s.tracer.peak_non_model(),
             chaos: s.backend.chaos_stats(),
         };

@@ -151,6 +151,9 @@ pub struct EngineReport {
     pub avg_group_lookahead: f64,
     pub gpu_peak: u64,
     pub cpu_peak: u64,
+    /// Peak bytes resident on the NVMe tier; 0 when the tier is off
+    /// (`--nvme-gb 0`), in which case no NVMe line renders at all.
+    pub nvme_peak: u64,
     pub non_model_peak: u64,
     /// Fault-injection counters when the run went through a
     /// [`super::chaos::ChaosBackend`]; None on a plain backend.
@@ -232,6 +235,20 @@ impl EngineReport {
                 "WARNING: {} pinned staging lease(s) still held at \
                  iteration end (leak)\n",
                 self.move_stats.lease_leaks,
+            ));
+        }
+        if self.nvme_peak > 0
+            || self.move_stats.to_nvme_bytes > 0
+            || self.move_stats.from_nvme_bytes > 0
+        {
+            out.push_str(&format!(
+                "nvme tier: peak {} | spilled down {} ({} moves) | \
+                 staged up {} ({} moves)\n",
+                human_bytes(self.nvme_peak),
+                human_bytes(self.move_stats.to_nvme_bytes),
+                self.move_stats.to_nvme_moves,
+                human_bytes(self.move_stats.from_nvme_bytes),
+                self.move_stats.from_nvme_moves,
             ));
         }
         if self.breakdown.overlapped_collective_s > 0.0 {

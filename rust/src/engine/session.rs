@@ -31,7 +31,7 @@ use anyhow::{anyhow, Result};
 use crate::chunk::{ChunkId, ChunkKind, ChunkManager, MoveKind};
 use crate::config::{ClusterPreset, TrainTask};
 use crate::dp::{CollectivePipeline, CommGroups, InFlightGather};
-use crate::evict::BacklogAwareOpt;
+use crate::evict::{BacklogAwareOpt, TierAwareOpt, TierPricing};
 use crate::mem::{Device, PinnedLease, PinnedPool};
 use crate::model::activation::{non_model_bytes, BASE_OVERHEAD};
 use crate::model::{ActivationPlan, OpGraph, OpKind};
@@ -63,6 +63,10 @@ pub(crate) enum Stage {
 struct PendingCopy {
     done: f64,
     secs: f64,
+    /// NVMe-link hop time of a two-hop staged copy (GPU<->NVMe); 0 for
+    /// plain PCIe copies.  `secs` is then the PCIe hop alone, so a
+    /// cancel can reclaim each lane by its own share.
+    nvme_secs: f64,
     dir: CopyDir,
     phase: Phase,
     route: CopyRoute,
@@ -370,6 +374,55 @@ impl<B: ExecutionBackend> TrainingSession<B> {
                 self.opt.group_lookahead,
             ));
         }
+        // Tier placement from warm-up statistics (tentpole): demote
+        // the coldest CPU residents to NVMe so the steady iterations
+        // start with CPU staging headroom instead of at the brink.
+        if self.mgr.has_nvme() && self.opt.use_tracer {
+            self.place_nvme_tier();
+        }
+    }
+
+    /// Fraction of CPU capacity the post-warm-up placement keeps
+    /// occupied; the rest is headroom for ADAM staging and eviction
+    /// landings, bought by demoting cold chunks to NVMe.
+    const CPU_TIER_HEADROOM: f64 = 0.875;
+
+    /// Warm-up-driven NVMe residency: while the CPU tier sits above its
+    /// headroom watermark, the CPU-resident chunks whose first steady
+    /// use is farthest away (never-used coldest of all) move down to
+    /// NVMe.  They return through the two-hop staged route when the
+    /// prefetch window reaches them.  Boundary traffic is not part of
+    /// any iteration's accounting, so the move events are discarded.
+    fn place_nvme_tier(&mut self) {
+        let cpu = self.mgr.space.dev(Device::Cpu);
+        let target = (cpu.capacity as f64 * Self::CPU_TIER_HEADROOM)
+            as u64;
+        if cpu.used() <= target {
+            return;
+        }
+        let mut cands: Vec<(u64, u32)> = self
+            .mgr
+            .reg
+            .chunks
+            .iter()
+            .filter(|c| c.device == Some(Device::Cpu) && !c.embedding)
+            .map(|c| {
+                let key = match self.tracer.next_use(c.id, 0) {
+                    Some(m) => m as u64,
+                    None => u64::MAX,
+                };
+                (key, c.id.0)
+            })
+            .collect();
+        // Farthest next use first; id breaks ties deterministically.
+        cands.sort_unstable_by(|a, b| b.cmp(a));
+        for (_, id) in cands {
+            if self.mgr.space.dev(Device::Cpu).used() <= target {
+                break;
+            }
+            let _ = self.mgr.demote(ChunkId(id), Device::Nvme);
+        }
+        let _ = self.mgr.drain_events();
     }
 
     /// Reset per-iteration state at a steady-iteration boundary.
@@ -527,8 +580,18 @@ impl<B: ExecutionBackend> TrainingSession<B> {
         let cw = self.backend.compute_work();
         let hb = self.backend.copy_busy(CopyDir::H2D);
         let kw = self.backend.collective_work();
+        let nb = if self.mgr.has_nvme() {
+            Some(self.backend.nvme_busy())
+        } else {
+            None
+        };
         if let Some(c) = self.ctl.as_mut() {
             c.observe(cw, hb, kw);
+            // The NVMe lane's own demand ratio (tier on only) sizes the
+            // deeper window NVMe-resident chunks are staged from.
+            if let Some(nb) = nb {
+                c.observe_nvme(cw, nb);
+            }
         }
         self.mgr.space.dev_mut(Device::Gpu(0)).set_capacity(cap);
         // Cap-shrink eviction.  In adaptive mode with the OPT policy a
@@ -552,13 +615,44 @@ impl<B: ExecutionBackend> TrainingSession<B> {
                 .map(|c| c.id)
                 .filter(|&id| self.mgr.all_free(id))
                 .collect();
-            let TrainingSession { mgr, tracer, moment, .. } = self;
-            let mut pol = BacklogAwareOpt {
-                tracer,
-                droppable,
-                margin: evict_margin,
-            };
-            mgr.evict_to_fit(Device::Gpu(0), &mut pol, *moment)?;
+            // With the NVMe tier live, the tie-break also prices where
+            // a spilled victim would land *right now*: behind a full
+            // CPU the cascade pushes it all the way to NVMe, so a
+            // near-tie victim whose round trip rides the slower curve
+            // loses to a cheaper one.  Without the tier this is the
+            // plain backlog-aware policy, decision for decision.
+            if self.mgr.has_nvme() {
+                let chunk_bytes =
+                    self.mgr.chunk(self.fp16_list[0]).bytes();
+                let spill_to = if self
+                    .mgr
+                    .space
+                    .dev(Device::Cpu)
+                    .can_fit(chunk_bytes)
+                {
+                    Device::Cpu
+                } else {
+                    Device::Nvme
+                };
+                let pricing = TierPricing::from_net(&cost.cluster.net);
+                let TrainingSession { mgr, tracer, moment, .. } = self;
+                let mut pol = TierAwareOpt {
+                    tracer,
+                    droppable,
+                    margin: evict_margin,
+                    pricing,
+                    spill_to,
+                };
+                mgr.evict_to_fit(Device::Gpu(0), &mut pol, *moment)?;
+            } else {
+                let TrainingSession { mgr, tracer, moment, .. } = self;
+                let mut pol = BacklogAwareOpt {
+                    tracer,
+                    droppable,
+                    margin: evict_margin,
+                };
+                mgr.evict_to_fit(Device::Gpu(0), &mut pol, *moment)?;
+            }
         } else {
             let TrainingSession { mgr, tracer, policy, moment, .. } = self;
             with_policy(policy, tracer, |pol| {
@@ -583,6 +677,18 @@ impl<B: ExecutionBackend> TrainingSession<B> {
             Some(c) => c.chunk_window(inputs),
             None => self.opt.lookahead,
         };
+        // NVMe-resident chunks need more headstart than CPU-resident
+        // ones (two hops on a slower curve): the controller learns how
+        // much deeper their window must reach.  Tier off: the windows
+        // coincide and the walk below is the two-tier walk exactly.
+        let nvme_la = if self.mgr.has_nvme() {
+            match &self.ctl {
+                Some(c) => c.nvme_window(inputs),
+                None => chunk_la,
+            }
+        } else {
+            chunk_la
+        };
         let group_la = match &self.ctl {
             Some(c) => c.group_window(inputs),
             None => self.opt.group_lookahead,
@@ -602,7 +708,7 @@ impl<B: ExecutionBackend> TrainingSession<B> {
         if !self.warmup && self.prefetcher.is_some() {
             self.chunk_win.0 += chunk_la as u64;
             self.chunk_win.1 += 1;
-            self.issue_prefetches(chunk_la, &ledger)?;
+            self.issue_prefetches(chunk_la, nvme_la, &ledger)?;
             self.charge_moves()?;
         }
         if !self.warmup && self.group_prefetcher.is_some() {
@@ -823,18 +929,24 @@ impl<B: ExecutionBackend> TrainingSession<B> {
         Ok(())
     }
 
-    /// Walk the lookahead window and stage CPU-resident chunks with an
-    /// upcoming GPU use onto the H2D stream (statically `lookahead =
-    /// --lookahead`; adaptively the controller's ratio-sized,
-    /// backlog-compressed, pool-bounded window).
+    /// Walk the lookahead window and stage CPU- and NVMe-resident
+    /// chunks with an upcoming GPU use onto the H2D stream (statically
+    /// `lookahead = --lookahead`; adaptively the controller's
+    /// ratio-sized, backlog-compressed, pool-bounded window).  With the
+    /// NVMe tier live the walk reaches `nvme_lookahead >= lookahead`
+    /// moments ahead, but CPU-resident chunks still only stage within
+    /// the shallower window — the extra depth exists to give two-hop
+    /// copies their headstart, not to stage PCIe copies earlier.
     fn issue_prefetches(
         &mut self,
         lookahead: u32,
+        nvme_lookahead: u32,
         ledger: &HeadroomLedger,
     ) -> Result<()> {
         let now = self.moment;
+        let walk = lookahead.max(nvme_lookahead);
         let window = match &self.prefetcher {
-            Some(pf) => pf.window(now, lookahead),
+            Some(pf) => pf.window(now, walk),
             None => return Ok(()),
         };
         // Staging-capacity budget (pool enabled only): each prefetch
@@ -848,8 +960,14 @@ impl<B: ExecutionBackend> TrainingSession<B> {
             None
         };
         for (use_moment, c) in window {
-            if self.mgr.chunk(c).device != Some(Device::Cpu) {
-                continue; // resident, in flight, or released
+            match self.mgr.chunk(c).device {
+                Some(Device::Cpu) => {
+                    if use_moment.saturating_sub(now) > lookahead {
+                        continue; // only in the NVMe window's tail
+                    }
+                }
+                Some(Device::Nvme) => {}
+                _ => continue, // resident, in flight, or released
             }
             if pool_budget == Some(0) {
                 self.mgr.stats.pinned_waits += 1;
@@ -1467,8 +1585,16 @@ impl<B: ExecutionBackend> TrainingSession<B> {
                         // MoveStats — otherwise the later demand fetch
                         // double-charges, and a cancel-heavy run could
                         // look slower than serial.
-                        self.backend.reclaim_copy(pc.phase, pc.secs,
-                                                  pc.dir, pc.route);
+                        if pc.nvme_secs > 0.0 {
+                            // Two-hop staged copy: pull both lane
+                            // frontiers back by their own shares.
+                            self.backend.reclaim_copy_staged(
+                                Phase::Nvme, pc.nvme_secs, pc.phase,
+                                pc.secs, pc.dir, pc.route);
+                        } else {
+                            self.backend.reclaim_copy(pc.phase, pc.secs,
+                                                      pc.dir, pc.route);
+                        }
                         // Queue compression: copies FIFO-queued behind
                         // the reclaimed one land earlier now; shift
                         // their recorded completion times too, so later
@@ -1498,10 +1624,17 @@ impl<B: ExecutionBackend> TrainingSession<B> {
                         // The copy had already landed when pressure
                         // reclaimed the chunk: the traffic was real, so
                         // undo the manager's byte credit (the cancel
-                        // event's `from` is the staged-on device, i.e.
-                        // the original copy's destination).
-                        match ev.from {
-                            Some(Device::Gpu(_)) => {
+                        // event's `from` is the staged-on device and
+                        // `to` the source it restores to, i.e. the
+                        // original copy's destination and origin).
+                        match (ev.from, ev.to) {
+                            (Some(Device::Gpu(_)), Some(Device::Nvme)) =>
+                            {
+                                self.mgr.stats.from_nvme_bytes +=
+                                    ev.bytes;
+                                self.mgr.stats.from_nvme_moves += 1;
+                            }
+                            (Some(Device::Gpu(_)), _) => {
                                 self.mgr.stats.cpu_to_gpu_bytes +=
                                     ev.bytes;
                                 self.mgr.stats.cpu_to_gpu_moves += 1;
@@ -1515,6 +1648,112 @@ impl<B: ExecutionBackend> TrainingSession<B> {
                     }
                 }
                 continue;
+            }
+            // NVMe-tier moves (tentpole): `copy_dir` only speaks PCIe,
+            // so the third tier's pairs are classified here first.
+            // GPU<->NVMe runs the two-hop staged route — the NVMe link
+            // and the PCIe link each billed on its own lane, with the
+            // pinned bounce buffer held across both hops.  CPU<->NVMe
+            // is a single hop on the NVMe lane (host-local, no PCIe
+            // staging, no pool lease).
+            match (ev.from, ev.to) {
+                (Some(Device::Nvme), Some(Device::Gpu(_)))
+                | (Some(Device::Gpu(_)), Some(Device::Nvme)) => {
+                    let dir = if matches!(ev.to, Some(Device::Gpu(_))) {
+                        CopyDir::H2D
+                    } else {
+                        CopyDir::D2H
+                    };
+                    let pcie_phase = if adam {
+                        Phase::AdamMove
+                    } else {
+                        match dir {
+                            CopyDir::H2D => Phase::CpuToGpu,
+                            CopyDir::D2H => Phase::GpuToCpu,
+                        }
+                    };
+                    let nvme_t = self
+                        .backend
+                        .copy_secs(ev.bytes, CopyRoute::NvmeStaged);
+                    match ev.kind {
+                        MoveKind::Evict => {
+                            let (pcie_t, route, lease) =
+                                self.route_async_copy(dir, ev.bytes);
+                            let done = self.backend.issue_copy_staged(
+                                Phase::Nvme, nvme_t, pcie_phase, pcie_t,
+                                dir, dep, route);
+                            dep = done;
+                            if let Some(l) = lease {
+                                // Held for the full two-hop duration.
+                                self.pool.set_release(l, done);
+                                self.stream_leases.push(StreamLease {
+                                    lease: l,
+                                    dir,
+                                    done,
+                                });
+                            }
+                        }
+                        MoveKind::Prefetch => {
+                            let (pcie_t, route, lease) =
+                                self.route_async_copy(dir, ev.bytes);
+                            let done = self.backend.issue_copy_staged(
+                                Phase::Nvme, nvme_t, pcie_phase, pcie_t,
+                                dir, dep, route);
+                            if let Some(l) = lease {
+                                self.pool.set_release(l, done);
+                            }
+                            self.inflight_done.insert(
+                                ev.chunk,
+                                PendingCopy {
+                                    done,
+                                    secs: pcie_t,
+                                    nvme_secs: nvme_t,
+                                    dir,
+                                    phase: pcie_phase,
+                                    route,
+                                    lease,
+                                },
+                            );
+                        }
+                        _ => {
+                            // Demand: both hops block the compute
+                            // stream, pinned rate on the PCIe hop.
+                            let pcie_t = self
+                                .backend
+                                .copy_secs(ev.bytes, CopyRoute::Pinned);
+                            self.backend.demand_copy_staged(
+                                Phase::Nvme, nvme_t, pcie_phase, pcie_t,
+                                dir, dep, CopyRoute::Pinned);
+                        }
+                    }
+                    continue;
+                }
+                (Some(Device::Cpu), Some(Device::Nvme))
+                | (Some(Device::Nvme), Some(Device::Cpu)) => {
+                    let dir = if ev.to == Some(Device::Nvme) {
+                        CopyDir::D2H
+                    } else {
+                        CopyDir::H2D
+                    };
+                    let t = self
+                        .backend
+                        .copy_secs(ev.bytes, CopyRoute::NvmeStaged);
+                    match ev.kind {
+                        MoveKind::Evict => {
+                            // A cascade's inner spill frees the CPU
+                            // space its outer eviction moves into:
+                            // chain the dependency like PCIe evictions.
+                            dep = self.backend.issue_copy_nvme(
+                                Phase::Nvme, t, dir, dep);
+                        }
+                        _ => {
+                            self.backend.demand_copy_nvme(
+                                Phase::Nvme, t, dir, dep);
+                        }
+                    }
+                    continue;
+                }
+                _ => {}
             }
             let dir = match ev.copy_dir() {
                 Some(d) => d,
@@ -1551,8 +1790,8 @@ impl<B: ExecutionBackend> TrainingSession<B> {
                         .charge_async_routed(phase, dir, dep, ev.bytes);
                     self.inflight_done.insert(
                         ev.chunk,
-                        PendingCopy { done, secs: t, dir, phase, route,
-                                      lease },
+                        PendingCopy { done, secs: t, nvme_secs: 0.0,
+                                      dir, phase, route, lease },
                     );
                 }
                 _ => {
@@ -1677,6 +1916,7 @@ impl<B: ExecutionBackend> TrainingSession<B> {
                 PendingCopy {
                     done: f64::INFINITY,
                     secs: 0.0,
+                    nvme_secs: 0.0,
                     dir: CopyDir::H2D,
                     phase: Phase::CpuToGpu,
                     route: CopyRoute::Pinned,

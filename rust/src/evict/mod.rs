@@ -15,6 +15,7 @@
 use std::collections::HashMap;
 
 use crate::chunk::{Chunk, ChunkId};
+use crate::mem::{Device, Interconnect, Link};
 use crate::tracer::{MemTracer, Moment};
 
 /// Victim selection among HOLD-like resident chunks.
@@ -151,6 +152,119 @@ impl<'a> EvictionPolicy for BacklogAwareOpt<'a> {
 
     fn name(&self) -> &'static str {
         "opt+backlog"
+    }
+}
+
+// ------------------------------------------- tier-aware pricing (NVMe)
+
+/// Cost model for spilling a victim one tier down and fetching it back
+/// (ISSUE 7).  A hop that touches NVMe is priced on the NVMe curve in
+/// *both* directions: the staged two-hop refetch (NVMe->host->GPU) is
+/// dominated end to end by its slower leg, so pricing the round trip on
+/// that curve is the honest upper envelope without simulating the hop
+/// split here.
+#[derive(Clone, Copy, Debug)]
+pub struct TierPricing {
+    /// Pinned PCIe curve (GPU<->CPU hop).
+    pub pcie: Link,
+    /// NVMe link curve (CPU<->NVMe hop, and the slow half of a staged
+    /// GPU<->NVMe copy).
+    pub nvme: Link,
+}
+
+impl TierPricing {
+    pub fn from_net(net: &Interconnect) -> Self {
+        Self { pcie: net.pcie, nvme: net.nvme }
+    }
+
+    /// Round-trip seconds to push `bytes` to `spill_to` and pull them
+    /// back on next use.
+    pub fn victim_price(&self, bytes: u64, spill_to: Device) -> f64 {
+        let link = match spill_to {
+            Device::Nvme => &self.nvme,
+            _ => &self.pcie,
+        };
+        2.0 * link.transfer_time(bytes)
+    }
+}
+
+/// Belady's OPT with *priced* near-ties (the three-tier generalization
+/// of [`BacklogAwareOpt`]): among candidates whose next use lies within
+/// `margin` moments of the OPT pick's, take the cheapest victim —
+/// droppable chunks cost nothing, everything else costs its round trip
+/// to `spill_to` under `pricing`.  With a full CPU the real spill
+/// cascades to NVMe, so the engine passes `spill_to = Nvme` whenever the
+/// next eviction would land there and the policy prefers free drops and
+/// small chunks exactly when spills are at their most expensive.
+///
+/// `margin == 0` reproduces plain [`OptPolicy`]; the policy is only
+/// constructed when the NVMe tier exists, keeping two-tier runs on the
+/// pre-existing code path decision for decision.
+pub struct TierAwareOpt<'a> {
+    pub tracer: &'a MemTracer,
+    /// Candidates evictable without a copy (all tensors FREE).
+    pub droppable: std::collections::HashSet<ChunkId>,
+    /// Near-equality window, in moments (0 = plain OPT).
+    pub margin: Moment,
+    pub pricing: TierPricing,
+    /// Where a spilled victim would land right now.
+    pub spill_to: Device,
+}
+
+impl<'a> TierAwareOpt<'a> {
+    fn key(&self, c: ChunkId, now: Moment) -> u64 {
+        match self.tracer.next_use(c, now) {
+            None => u64::MAX,
+            Some(m) => m as u64,
+        }
+    }
+
+    fn price(&self, c: ChunkId, chunks: &[Chunk]) -> f64 {
+        if self.droppable.contains(&c) {
+            0.0
+        } else {
+            self.pricing
+                .victim_price(chunks[c.0 as usize].bytes(), self.spill_to)
+        }
+    }
+}
+
+impl<'a> EvictionPolicy for TierAwareOpt<'a> {
+    fn pick(
+        &mut self,
+        candidates: &[ChunkId],
+        chunks: &[Chunk],
+        now: Moment,
+    ) -> Option<ChunkId> {
+        let mut opt = OptPolicy { tracer: self.tracer };
+        let best = opt.pick(candidates, chunks, now)?;
+        if self.margin == 0 {
+            return Some(best);
+        }
+        let best_key = self.key(best, now);
+        candidates
+            .iter()
+            .copied()
+            .filter(|&c| {
+                self.key(c, now).saturating_add(self.margin as u64)
+                    >= best_key
+            })
+            .min_by(|&a, &b| {
+                // Cheapest first; among equals the farthest next use,
+                // then the lowest id — fully deterministic.
+                self.price(a, chunks)
+                    .partial_cmp(&self.price(b, chunks))
+                    .unwrap()
+                    .then_with(|| {
+                        self.key(b, now).cmp(&self.key(a, now))
+                    })
+                    .then_with(|| a.0.cmp(&b.0))
+            })
+            .or(Some(best))
+    }
+
+    fn name(&self) -> &'static str {
+        "opt+tier"
     }
 }
 
@@ -357,5 +471,137 @@ mod tests {
         let mut p = OptPolicy { tracer: &t };
         assert_eq!(p.pick(&[], &[], 0), None);
         assert_eq!(FifoPolicy::default().pick(&[], &[], 0), None);
+    }
+
+    // -------------------------------------- NVMe tier cascade (ISSUE 7)
+
+    use crate::chunk::{ChunkKind, ChunkManager, ChunkRegistry, TensorSpec};
+    use crate::mem::HeterogeneousSpace;
+    use crate::tensor::TensorState;
+
+    /// Three-tier manager fixture: 2-tensor chunks of 200 B each.
+    fn mk3(n_tensors: usize, gpu: u64, cpu: u64, nvme: u64) -> ChunkManager {
+        let specs: Vec<TensorSpec> = (0..n_tensors)
+            .map(|i| TensorSpec {
+                name: format!("t{i}"),
+                numel: 50,
+                embedding: false,
+            })
+            .collect();
+        let reg = ChunkRegistry::build(&specs, 100).unwrap();
+        ChunkManager::new(
+            reg,
+            HeterogeneousSpace::new(gpu, cpu).with_nvme(nvme),
+        )
+    }
+
+    fn hold(m: &mut ChunkManager, tensors: std::ops::Range<usize>) {
+        for i in tensors {
+            let ti = m.reg.tensor_index(ChunkKind::ParamFp16, i);
+            m.reg.tensors[ti].set_state(TensorState::Hold).unwrap();
+        }
+    }
+
+    #[test]
+    fn gpu_pressure_spills_to_cpu_before_nvme() {
+        // The CPU has room: a GPU victim must land there, never skip a
+        // tier straight to NVMe.
+        let mut m = mk3(4, 200, 10_000, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let mut pol = FifoPolicy::default();
+        hold(&mut m, 0..4);
+        m.ensure_on(list[0], crate::mem::Device::Gpu(0), &mut pol, 0)
+            .unwrap();
+        m.ensure_on(list[1], crate::mem::Device::Gpu(0), &mut pol, 1)
+            .unwrap();
+        assert_eq!(m.chunk(list[0]).device, Some(crate::mem::Device::Cpu));
+        assert_eq!(m.stats.to_nvme_bytes, 0, "nvme untouched");
+        assert_eq!(m.stats.gpu_to_cpu_bytes, 200);
+    }
+
+    #[test]
+    fn cpu_pressure_cascades_to_nvme() {
+        let mut m = mk3(4, 10_000, 400, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let mut pol = FifoPolicy::default();
+        hold(&mut m, 0..4);
+        m.ensure_on(list[0], crate::mem::Device::Cpu, &mut pol, 0).unwrap();
+        m.ensure_on(list[1], crate::mem::Device::Cpu, &mut pol, 1).unwrap();
+        m.space.dev_mut(crate::mem::Device::Cpu).set_capacity(200);
+        m.evict_to_fit(crate::mem::Device::Cpu, &mut pol, 5).unwrap();
+        assert_eq!(m.chunk(list[0]).device, Some(crate::mem::Device::Nvme),
+                   "cpu victim spills down-tier, not back to gpu");
+        assert_eq!(m.chunk(list[1]).device, Some(crate::mem::Device::Cpu));
+        assert_eq!(m.stats.to_nvme_bytes, 200);
+        assert_eq!(m.stats.cpu_to_gpu_bytes, 0);
+    }
+
+    #[test]
+    fn inflight_and_gathering_chunks_never_cascade() {
+        // CPU holds an in-flight ADAM-staging prefetch, a mid-gather
+        // chunk and one plain HOLD chunk.  Pressure must take the HOLD
+        // chunk to NVMe and leave the protected pair untouched.
+        let mut m = mk3(6, 10_000, 600, 10_000);
+        let list = m.reg.list(ChunkKind::ParamFp16);
+        let mut pol = FifoPolicy::default();
+        m.alloc_payload(list[0], crate::mem::Device::Gpu(0)).unwrap();
+        assert!(m
+            .prefetch_to(list[0], crate::mem::Device::Cpu, 10_000, &mut pol,
+                         0, &|_| true)
+            .unwrap());
+        m.ensure_on(list[1], crate::mem::Device::Cpu, &mut pol, 1).unwrap();
+        m.alloc_payload(list[2], crate::mem::Device::Cpu).unwrap();
+        m.begin_gather(list[2]).unwrap();
+        hold(&mut m, 2..6);
+        m.space.dev_mut(crate::mem::Device::Cpu).set_capacity(400);
+        m.evict_to_fit(crate::mem::Device::Cpu, &mut pol, 9).unwrap();
+        assert_eq!(m.chunk(list[1]).device, Some(crate::mem::Device::Nvme));
+        assert_eq!(m.chunk(list[0]).device, Some(crate::mem::Device::Cpu));
+        assert!(m.is_inflight(list[0]), "prefetch survived the cascade");
+        assert_eq!(m.chunk(list[2]).device, Some(crate::mem::Device::Cpu));
+        assert!(m.is_gathering(list[2]), "gather survived the cascade");
+        assert_eq!(m.stats.prefetch_cancels, 0);
+        assert_eq!(m.stats.gather_cancels, 0);
+    }
+
+    #[test]
+    fn tier_pricing_picks_cheaper_victim() {
+        let net = Interconnect::v100_node();
+        let pricing = TierPricing::from_net(&net);
+        // An NVMe round trip costs strictly more than a PCIe one.
+        assert!(
+            pricing.victim_price(1 << 20, Device::Nvme)
+                > pricing.victim_price(1 << 20, Device::Cpu)
+        );
+        // Chunk 1 (droppable, next use 19) is free to reclaim; chunk 0
+        // (next use 20) would ride the expensive NVMe spill.  Within a
+        // 2-moment margin the free drop wins; with margin 0 the policy
+        // is plain OPT.
+        let m = mk3(6, 0, 0, 0);
+        let chunks = m.reg.chunks.clone();
+        let mut t = MemTracer::new(3);
+        t.record_chunk_use(ChunkId(0), 20);
+        t.record_chunk_use(ChunkId(1), 19);
+        t.record_chunk_use(ChunkId(2), 5);
+        t.finish_warmup();
+        let droppable: std::collections::HashSet<ChunkId> =
+            [ChunkId(1)].into_iter().collect();
+        let cands = ids(&[0, 1, 2]);
+        let mut priced = TierAwareOpt {
+            tracer: &t,
+            droppable: droppable.clone(),
+            margin: 2,
+            pricing,
+            spill_to: Device::Nvme,
+        };
+        assert_eq!(priced.pick(&cands, &chunks, 0), Some(ChunkId(1)));
+        let mut plain = TierAwareOpt {
+            tracer: &t,
+            droppable,
+            margin: 0,
+            pricing,
+            spill_to: Device::Nvme,
+        };
+        assert_eq!(plain.pick(&cands, &chunks, 0), Some(ChunkId(0)));
     }
 }

@@ -18,11 +18,11 @@ use std::collections::HashMap;
 use anyhow::{anyhow, bail, Result};
 
 use patrickstar::baselines::run_system;
-use patrickstar::chunk::search_chunk_size;
+use patrickstar::chunk::search_chunk_size_tiered;
 use patrickstar::config::{ClusterPreset, SystemKind, TrainTask};
 use patrickstar::engine::{ChaosPlan, Engine, OptimizationPlan};
 use patrickstar::model::GptSpec;
-use patrickstar::scale::max_model_scale;
+use patrickstar::scale::max_model_scale_with_plan;
 #[cfg(feature = "pjrt")]
 use patrickstar::train::{Trainer, TrainerConfig};
 use patrickstar::util::{human_bytes, Table};
@@ -164,6 +164,19 @@ impl Args {
                 Some((parse(h)?, parse(d)?))
             }
         };
+        // The NVMe third tier (ISSUE 7): 0 GiB (default) means no tier
+        // at all — bit-identical to a two-tier run.
+        let nvme_gb = self.get_u64("nvme-gb", 0)?;
+        let nvme_gbps = match self.flags.get("nvme-gbps") {
+            None => 0.0,
+            Some(v) => {
+                if nvme_gb == 0 {
+                    bail!("--nvme-gbps needs a tier: set --nvme-gb N");
+                }
+                v.parse::<f64>()
+                    .map_err(|_| anyhow!("--nvme-gbps: bad number"))?
+            }
+        };
         Ok(OptimizationPlan {
             prefetch,
             overlap,
@@ -175,6 +188,8 @@ impl Args {
             pinned_buffers,
             pinned_split,
             adaptive_lookahead: adaptive,
+            nvme_gb,
+            nvme_gbps,
             ..Default::default()
         })
     }
@@ -202,7 +217,7 @@ fn main() {
 const PLAN_FLAGS: &[&str] = &[
     "pipeline", "prefetch", "overlap", "lookahead",
     "overlap-collectives", "group-lookahead", "pinned-buffers",
-    "pinned-split", "adaptive-lookahead",
+    "pinned-split", "adaptive-lookahead", "nvme-gb", "nvme-gbps",
 ];
 
 fn with_flags(common: &[&'static str], extra: &[&'static str])
@@ -220,7 +235,7 @@ fn run() -> Result<()> {
             cmd_models()
         }
         "chunk-search" => {
-            args.reject_unknown(&["model", "cluster"])?;
+            args.reject_unknown(&["model", "cluster", "nvme-gb"])?;
             cmd_chunk_search(&args)
         }
         "simulate" => {
@@ -239,7 +254,7 @@ fn run() -> Result<()> {
             cmd_breakdown(&args)
         }
         "scale" => {
-            args.reject_unknown(&["cluster", "gpus"])?;
+            args.reject_unknown(&["cluster", "gpus", "nvme-gb"])?;
             cmd_scale(&args)
         }
         "train" => {
@@ -263,7 +278,7 @@ patrickstar — chunk-based heterogeneous training (paper reproduction)
 
 USAGE:
   patrickstar models
-  patrickstar chunk-search --model 15B [--cluster yard]
+  patrickstar chunk-search --model 15B [--cluster yard] [--nvme-gb 0]
   patrickstar simulate --system patrickstar|deepspeed-dp|deepspeed-mpN|\
 pytorch-ddp
                        [--cluster yard] [--model 10B] [--gpus 8] [--batch 16]
@@ -271,6 +286,7 @@ pytorch-ddp
                        [--lookahead 32|auto] [--overlap-collectives on|off]
                        [--group-lookahead 1] [--pinned-buffers 0]
                        [--pinned-split h2d:d2h] [--adaptive-lookahead on|off]
+                       [--nvme-gb 0] [--nvme-gbps 3.2]
                        [--chaos all|jitter+straggler+pressure+abort\
 [:rate=R,intensity=I]] [--chaos-seed N]
              (--chaos injects seeded deterministic faults at the backend
@@ -284,7 +300,13 @@ pytorch-ddp
               with the collective stream, Base+PF+CO+PIN with a finite
               pinned staging pool, Base+PF+CO+PIN+AD with feedback-sized
               prefetch windows, OSC, SP)
-  patrickstar scale [--cluster yard] [--gpus 8]
+  patrickstar scale [--cluster yard] [--gpus 8] [--nvme-gb 0]
+             (--nvme-gb N grants an N-GB NVMe third tier: chunks spill
+              GPU->CPU->NVMe and stage back through pinned host memory
+              in two hops; 0 means no tier at all — byte-identical to a
+              two-tier run.  --nvme-gbps overrides the NVMe link's peak
+              bandwidth; the --cluster nvme-lab preset is a RAM-starved
+              box where 1B only trains with the tier granted)
   patrickstar train [--artifacts artifacts] [--steps 50] [--gpu-mb 6] \
 [--lr 0.001] [--log-every 10] [--prefetch-ahead 0|N|auto] \
 [--pinned-buffers 0] [--adaptive-ahead on|off]
@@ -318,11 +340,12 @@ fn cmd_chunk_search(args: &Args) -> Result<()> {
     let cluster = args.cluster()?;
     let budget =
         cluster.cpu_mem + cluster.n_gpus as u64 * cluster.gpu_mem;
+    let nvme = args.get_u64("nvme-gb", 0)? << 30;
     let specs = model.tensor_specs();
-    let res = search_chunk_size(&specs, budget)
+    let res = search_chunk_size_tiered(&specs, budget, nvme)
         .ok_or_else(|| anyhow!("no feasible chunk size"))?;
     let mut t = Table::new(&["chunk elems", "chunk bytes (fp16)", "chunks",
-                             "util %", "feasible"]);
+                             "util %", "feasible", "nvme spill"]);
     for c in &res.all {
         t.row(vec![
             c.chunk_elems.to_string(),
@@ -330,6 +353,7 @@ fn cmd_chunk_search(args: &Args) -> Result<()> {
             c.n_chunks.to_string(),
             format!("{:.2}", 100.0 * c.utilization),
             c.feasible.to_string(),
+            human_bytes(c.nvme_spill),
         ]);
     }
     print!("{}", t.render());
@@ -376,12 +400,13 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             || opt.overlap_collectives
             || opt.pinned_buffers > 0
             || opt.adaptive_lookahead
+            || opt.nvme_gb > 0
             || chaos.is_some()
         {
             bail!(
                 "--prefetch/--overlap/--overlap-collectives/\
-                 --pinned-buffers/--adaptive-lookahead/--chaos only \
-                 apply to system patrickstar"
+                 --pinned-buffers/--adaptive-lookahead/--nvme-gb/\
+                 --chaos only apply to system patrickstar"
             );
         }
         run_system(system, cluster, task)?
@@ -417,6 +442,12 @@ fn cmd_breakdown(args: &Args) -> Result<()> {
 fn cmd_scale(args: &Args) -> Result<()> {
     let cluster = args.cluster()?;
     let gpus = args.get_u64("gpus", 8)? as u32;
+    // Third-tier grant: only lifts the PatrickStar row (baselines model
+    // fixed published systems and ignore the plan).
+    let opt = OptimizationPlan {
+        nvme_gb: args.get_u64("nvme-gb", 0)?,
+        ..Default::default()
+    };
     let mut t = Table::new(&["system", "max model", "tflops/GPU", "batch"]);
     for system in [
         SystemKind::PyTorchDdp,
@@ -424,7 +455,7 @@ fn cmd_scale(args: &Args) -> Result<()> {
         SystemKind::DeepSpeedMp(gpus.min(8)),
         SystemKind::PatrickStar,
     ] {
-        match max_model_scale(system, cluster, gpus) {
+        match max_model_scale_with_plan(system, cluster, gpus, opt) {
             Some(p) => {
                 let r = p.best.unwrap();
                 t.row(vec![

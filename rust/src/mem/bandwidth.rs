@@ -92,30 +92,58 @@ pub struct Interconnect {
     pub pcie_pageable: Link,
     /// GPU<->GPU link (NVLink) used by collectives.
     pub nvlink: Link,
+    /// CPU<->NVMe link (ZeRO-Infinity third tier).  An order of
+    /// magnitude slower than PCIe with a much deeper saturation knee
+    /// (NVMe block I/O needs multi-MB requests to stream) and a far
+    /// higher fixed latency (submission queue + flash access).  Only
+    /// consulted when the plan enables the tier; every preset still
+    /// carries a calibrated curve so `--nvme-gb` works everywhere.
+    pub nvme: Link,
 }
 
 impl Interconnect {
-    fn node(pcie: Link, nvlink: Link) -> Self {
-        Interconnect { pcie, pcie_pageable: pcie.pageable(), nvlink }
+    fn node(pcie: Link, nvlink: Link, nvme: Link) -> Self {
+        Interconnect { pcie, pcie_pageable: pcie.pageable(), nvlink, nvme }
     }
 
     /// PCIe 3.0 x16 (~16 GB/s peak) + NVLink2 (~150 GB/s per direction
     /// aggregate as seen by one GPU in a DGX-style mesh).  Saturation
     /// points from Li et al. [23]: P2P half-sat well below 4 MB, NVLink
-    /// collectives need tens of MB.
+    /// collectives need tens of MB.  NVMe: datacenter U.2 drive,
+    /// ~3.2 GB/s sequential.
     pub fn v100_node() -> Self {
-        Self::node(Link::new(16.0, 1.0, 10.0), Link::new(150.0, 32.0, 20.0))
+        Self::node(
+            Link::new(16.0, 1.0, 10.0),
+            Link::new(150.0, 32.0, 20.0),
+            Link::new(3.2, 8.0, 100.0),
+        )
     }
 
-    /// PCIe 4.0 x16 (~32 GB/s) + NVLink3 (~300 GB/s).
+    /// PCIe 4.0 x16 (~32 GB/s) + NVLink3 (~300 GB/s) + Gen4 NVMe
+    /// (~6.4 GB/s sequential).
     pub fn a100_node() -> Self {
-        Self::node(Link::new(32.0, 1.0, 10.0), Link::new(300.0, 32.0, 20.0))
+        Self::node(
+            Link::new(32.0, 1.0, 10.0),
+            Link::new(300.0, 32.0, 20.0),
+            Link::new(6.4, 8.0, 80.0),
+        )
     }
 
-    /// Consumer PC: PCIe 3.0 x16, no NVLink (collectives over PCIe).
+    /// Consumer PC: PCIe 3.0 x16, no NVLink (collectives over PCIe),
+    /// consumer NVMe (~2 GB/s sustained).
     pub fn pc() -> Self {
         let pcie = Link::new(12.0, 1.0, 15.0);
-        Self::node(pcie, pcie)
+        Self::node(pcie, pcie, Link::new(2.0, 8.0, 120.0))
+    }
+
+    /// Override the NVMe curve's peak (`--nvme-gbps`), keeping the
+    /// preset's saturation knee and latency.  `gbps <= 0` keeps the
+    /// preset curve.
+    pub fn with_nvme_gbps(mut self, gbps: f64) -> Self {
+        if gbps > 0.0 {
+            self.nvme.peak_bps = gbps * 1e9;
+        }
+        self
     }
 }
 
@@ -253,6 +281,30 @@ mod tests {
         // ones carry exactly one byte each.
         let tiny = l.transfer_time_split(3, 10);
         assert!((tiny - 3.0 * l.transfer_time(1)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn nvme_curve_slower_than_pcie_and_overridable() {
+        for net in
+            [Interconnect::v100_node(), Interconnect::a100_node(), Interconnect::pc()]
+        {
+            assert!(net.nvme.peak_bps < net.pcie_pageable.peak_bps);
+            for bytes in [64_000u64, 4_000_000, 64 << 20] {
+                assert!(
+                    net.nvme.transfer_time(bytes)
+                        > net.pcie.transfer_time(bytes)
+                );
+            }
+        }
+        let net = Interconnect::v100_node().with_nvme_gbps(7.0);
+        assert!((net.nvme.peak_bps - 7.0e9).abs() < 1e-3);
+        // Shape and latency survive the override; 0 keeps the preset.
+        assert_eq!(
+            net.nvme.half_sat_bytes,
+            Interconnect::v100_node().nvme.half_sat_bytes
+        );
+        let kept = Interconnect::v100_node().with_nvme_gbps(0.0);
+        assert_eq!(kept.nvme.peak_bps, Interconnect::v100_node().nvme.peak_bps);
     }
 
     #[test]

@@ -6,11 +6,16 @@ use thiserror::Error;
 ///
 /// `Gpu(i)` is rank-local GPU *i*; in the single-process engine only
 /// `Gpu(0)` and `Cpu` exist (the paper's per-process view: each process
-/// owns one GPU and shares the CPU, Sec. 7).
+/// owns one GPU and shares the CPU, Sec. 7).  `Nvme` is the optional
+/// ZeRO-Infinity-style third tier: present in the space only when the
+/// plan grants it capacity (`--nvme-gb`), absent otherwise so the
+/// two-tier engine never observes it.  The derived `Ord` keeps the
+/// hot-to-cold tier order Gpu < Cpu < Nvme.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Device {
     Gpu(u32),
     Cpu,
+    Nvme,
 }
 
 impl Device {
@@ -22,6 +27,7 @@ impl Device {
         match self {
             Device::Gpu(i) => format!("gpu{i}"),
             Device::Cpu => "cpu".to_string(),
+            Device::Nvme => "nvme".to_string(),
         }
     }
 }
@@ -159,6 +165,13 @@ mod tests {
     fn device_names() {
         assert_eq!(Device::Gpu(3).name(), "gpu3");
         assert_eq!(Device::Cpu.name(), "cpu");
+        assert_eq!(Device::Nvme.name(), "nvme");
         assert!(Device::Gpu(0).is_gpu() && !Device::Cpu.is_gpu());
+        assert!(!Device::Nvme.is_gpu());
+    }
+
+    #[test]
+    fn tier_order_is_hot_to_cold() {
+        assert!(Device::Gpu(0) < Device::Cpu && Device::Cpu < Device::Nvme);
     }
 }

@@ -29,6 +29,23 @@ impl HeterogeneousSpace {
         Self::new(gpu_bytes, cpu_total / nproc as u64)
     }
 
+    /// Grant the space an NVMe tier of `bytes` capacity (ZeRO-Infinity
+    /// third tier).  `bytes == 0` is a no-op: the device stays absent
+    /// and every NVMe code path (gated on `has(Device::Nvme)`) stays
+    /// dead, which is what makes `--nvme-gb 0` bit-identical.
+    pub fn with_nvme(mut self, bytes: u64) -> Self {
+        if bytes > 0 {
+            self.devices
+                .insert(Device::Nvme, DeviceMem::new(Device::Nvme, bytes));
+        }
+        self
+    }
+
+    /// Whether the space was built with this device tier.
+    pub fn has(&self, d: Device) -> bool {
+        self.devices.contains_key(&d)
+    }
+
     pub fn dev(&self, d: Device) -> &DeviceMem {
         self.devices.get(&d).expect("unknown device")
     }
@@ -84,6 +101,17 @@ mod tests {
         s.alloc(Device::Gpu(0), 50).unwrap();
         s.alloc(Device::Cpu, 150).unwrap();
         assert!((s.utilization() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn nvme_tier_is_opt_in() {
+        let two = HeterogeneousSpace::new(100, 300);
+        assert!(!two.has(Device::Nvme));
+        assert!(!two.clone().with_nvme(0).has(Device::Nvme));
+        let three = two.with_nvme(500);
+        assert!(three.has(Device::Nvme));
+        assert_eq!(three.dev(Device::Nvme).capacity, 500);
+        assert_eq!(three.total_capacity(), 900);
     }
 
     #[test]

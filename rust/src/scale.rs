@@ -6,7 +6,7 @@
 //! the largest model whose best batch clears the bar.
 
 use crate::config::{ClusterPreset, SystemKind, TrainTask};
-use crate::engine::EngineReport;
+use crate::engine::{EngineReport, OptimizationPlan};
 use crate::model::{ActivationPlan, GptSpec};
 
 /// Batch sizes the paper sweeps (Sec. 9.1).
@@ -30,6 +30,27 @@ pub fn best_over_batches(
     model: GptSpec,
     n_gpus: u32,
 ) -> Probe {
+    best_over_batches_with_plan(
+        system,
+        cluster,
+        model,
+        n_gpus,
+        OptimizationPlan::default(),
+    )
+}
+
+/// [`best_over_batches`] with an [`OptimizationPlan`] threaded into the
+/// PatrickStar probes — in particular `nvme_gb`, which grants the
+/// third tier and can turn an otherwise infeasible (model, cluster)
+/// pair feasible (baseline systems ignore the plan; see
+/// `baselines::run_system_with_plan`).
+pub fn best_over_batches_with_plan(
+    system: SystemKind,
+    cluster: ClusterPreset,
+    model: GptSpec,
+    n_gpus: u32,
+    opt: OptimizationPlan,
+) -> Probe {
     let mut best: Option<EngineReport> = None;
     let mut fail = None;
     for batch in BATCHES {
@@ -39,7 +60,9 @@ pub fn best_over_batches(
         ] {
             let task =
                 TrainTask::new(model, batch, n_gpus).with_plan(plan);
-            match crate::baselines::run_system(system, cluster, task) {
+            match crate::baselines::run_system_with_plan(
+                system, cluster, task, opt,
+            ) {
                 Ok(r) => {
                     if best
                         .as_ref()
@@ -65,6 +88,23 @@ pub fn max_model_scale(
     max_model_scale_ladder(system, cluster, n_gpus, &GptSpec::table2())
 }
 
+/// [`max_model_scale`] with a plan (3-tier `nvme_gb` budgets raise the
+/// PatrickStar ceiling; baselines are unaffected).
+pub fn max_model_scale_with_plan(
+    system: SystemKind,
+    cluster: ClusterPreset,
+    n_gpus: u32,
+    opt: OptimizationPlan,
+) -> Option<Probe> {
+    max_model_scale_ladder_with_plan(
+        system,
+        cluster,
+        n_gpus,
+        &GptSpec::table2(),
+        opt,
+    )
+}
+
 /// Same, over an explicit model ladder (e.g. `GptSpec::pc_models()` for
 /// the 700$-PC experiment of Sec. 9.2.5).
 pub fn max_model_scale_ladder(
@@ -73,9 +113,27 @@ pub fn max_model_scale_ladder(
     n_gpus: u32,
     ladder: &[GptSpec],
 ) -> Option<Probe> {
+    max_model_scale_ladder_with_plan(
+        system,
+        cluster,
+        n_gpus,
+        ladder,
+        OptimizationPlan::default(),
+    )
+}
+
+/// Ladder walk with an explicit plan (the most general scale entry).
+pub fn max_model_scale_ladder_with_plan(
+    system: SystemKind,
+    cluster: ClusterPreset,
+    n_gpus: u32,
+    ladder: &[GptSpec],
+    opt: OptimizationPlan,
+) -> Option<Probe> {
     let mut winner = None;
     for &model in ladder {
-        let probe = best_over_batches(system, cluster, model, n_gpus);
+        let probe =
+            best_over_batches_with_plan(system, cluster, model, n_gpus, opt);
         let clears = probe
             .best
             .as_ref()
@@ -106,6 +164,37 @@ mod tests {
         )
         .expect("some scale");
         assert_eq!(p.model, "1B");
+    }
+
+    #[test]
+    fn nvme_tier_rescues_infeasible_model() {
+        // ISSUE 7 acceptance: on NVME-LAB (6 GB GPU + 6 GB DRAM) the 1B
+        // model's ~14 GB of chunked data cannot fit two tiers — every
+        // batch fails — yet the same probe with a 64 GB NVMe budget
+        // trains.
+        let cluster = ClusterPreset::nvme_lab();
+        let model = GptSpec::by_name("1B").unwrap();
+        let two_tier = best_over_batches_with_plan(
+            SystemKind::PatrickStar,
+            cluster,
+            model,
+            1,
+            OptimizationPlan::default(),
+        );
+        assert!(
+            two_tier.best.is_none(),
+            "1B unexpectedly fits CPU+GPU on NVME-LAB"
+        );
+        assert!(two_tier.fail.is_some());
+        let three_tier = best_over_batches_with_plan(
+            SystemKind::PatrickStar,
+            cluster,
+            model,
+            1,
+            OptimizationPlan { nvme_gb: 64, ..Default::default() },
+        );
+        let r = three_tier.best.expect("1B must train with the NVMe tier");
+        assert!(r.nvme_peak > 0, "third tier granted but never used");
     }
 
     #[test]

@@ -23,10 +23,14 @@ pub enum Phase {
     AdamMove,
     /// Activation offload traffic (ckpt+offload plan).
     ActOffload,
+    /// CPU<->NVMe tier traffic: the NVMe-link hop of a staged
+    /// NVMe<->GPU copy plus direct CPU<->NVMe spills/fetches.  The
+    /// PCIe hop of a staged copy keeps its CpuToGpu/GpuToCpu phase.
+    Nvme,
 }
 
 impl Phase {
-    pub const ALL: [Phase; 8] = [
+    pub const ALL: [Phase; 9] = [
         Phase::FwdBwd,
         Phase::Adam,
         Phase::AllGather,
@@ -35,6 +39,7 @@ impl Phase {
         Phase::GpuToCpu,
         Phase::AdamMove,
         Phase::ActOffload,
+        Phase::Nvme,
     ];
 
     pub fn name(&self) -> &'static str {
@@ -47,6 +52,7 @@ impl Phase {
             Phase::GpuToCpu => "gpu->cpu",
             Phase::AdamMove => "adam-move",
             Phase::ActOffload => "act-offload",
+            Phase::Nvme => "nvme",
         }
     }
 }

@@ -24,6 +24,7 @@ import sys
 
 FRESH = "rust/BENCH_adaptive.json"
 BASELINE = "rust/benches/baseline/BENCH_adaptive.json"
+NVME = "rust/BENCH_nvme.json"
 TOLERANCE = 1.05
 
 
@@ -99,10 +100,44 @@ def gate_against_baseline(vals):
     return not bad
 
 
+def gate_nvme():
+    """ISSUE 7 gate over rust/BENCH_nvme.json (optional: skipped with a
+    note when the nvme_offload bench did not run).
+
+    Hard requirements when present:
+      * infeasible_without_nvme == 1 — the lab config must REFUSE to
+        train on CPU+GPU alone, or the "provably cannot fit" headline
+        is void;
+      * every 3-tier cell trained (iter_s present and > 0) and moved
+        bytes through the tier.
+    """
+    if not os.path.exists(NVME):
+        print(f"NOTE: no {NVME}; skipping the NVMe gate (run "
+              "cargo bench -- nvme_offload to arm it)")
+        return True
+    vals = load(NVME)
+    bad = []
+    for name, v in sorted(vals.items()):
+        if name.endswith("/infeasible_without_nvme") and v != 1.0:
+            bad.append(f"{name}: two-tier run trained — the lab box "
+                       "no longer proves the tier is required")
+        if name.endswith("_iter_s") and v <= 0:
+            bad.append(f"{name}: 3-tier run did not train ({v})")
+        if name.endswith("_nvme_moved_bytes") and v <= 0:
+            bad.append(f"{name}: no bytes crossed the NVMe tier ({v})")
+    for b in bad:
+        print(f"REGRESSION: {b}")
+    if not bad:
+        print("nvme gate passed: two-tier refusal held and every "
+              "3-tier cell trained through the tier")
+    return not bad
+
+
 def main():
     vals = load(FRESH)
     ok = gate_adaptive_vs_best_static(vals)
     ok = gate_against_baseline(vals) and ok
+    ok = gate_nvme() and ok
     if not ok:
         sys.exit(1)
     print("bench gate passed: adaptive within 5% of best static; no "
