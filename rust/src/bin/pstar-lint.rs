@@ -1,0 +1,45 @@
+//! `cargo run --bin pstar-lint` — the determinism & layering lint
+//! pass over `src/` (ISSUE 8).  Prints `file:line: [rule] message`
+//! diagnostics and exits nonzero on any finding, so CI can gate on it
+//! directly.  The same pass also runs under plain `cargo test` via
+//! `tests/lint_clean.rs`; see `rust/docs/INVARIANTS.md` for the rules.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use patrickstar::lint::{lint_tree, Rule};
+
+fn main() -> ExitCode {
+    // Lint the crate we were built from: src/ next to Cargo.toml.
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = match lint_tree(&root) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("pstar-lint: cannot walk {}: {e}", root.display());
+            return ExitCode::FAILURE;
+        }
+    };
+    if report.findings.is_empty() {
+        println!(
+            "pstar-lint: {} files clean ({})",
+            report.files,
+            Rule::ALL
+                .iter()
+                .map(|r| r.name())
+                .collect::<Vec<_>>()
+                .join(", "),
+        );
+        return ExitCode::SUCCESS;
+    }
+    for f in &report.findings {
+        println!("{f}");
+    }
+    eprintln!(
+        "pstar-lint: {} finding(s) in {} files scanned; waive a line \
+         with `// lint:allow(<rule>): <reason>` only with a reviewed \
+         justification",
+        report.findings.len(),
+        report.files,
+    );
+    ExitCode::FAILURE
+}

@@ -11,7 +11,7 @@
 //! telemetry.  This keeps one orchestration code path for both backends
 //! (DESIGN.md §6.1).
 
-use std::collections::{HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -120,13 +120,13 @@ pub struct ChunkManager {
     /// implied by the target).  In-flight chunks already occupy space
     /// on their target device but may not be evicted — only cancelled —
     /// until first access completes the copy.
-    inflight: HashMap<ChunkId, Device>,
+    inflight: BTreeMap<ChunkId, Device>,
     /// Remote chunks whose payload is being filled by an in-flight
     /// lookahead all-gather on the collective stream.  Same
     /// cancel-never-victimize contract as `inflight`: invisible to
     /// eviction, reclaimed whole (the payload is dropped) as the victim
     /// of last resort.
-    gathering: HashSet<ChunkId>,
+    gathering: BTreeSet<ChunkId>,
     /// Real payloads (e2e mode): one optional f32 buffer per chunk.
     payloads: Vec<Option<Vec<f32>>>,
     real_mode: bool,
@@ -140,8 +140,8 @@ impl ChunkManager {
             space,
             stats: MoveStats::default(),
             events: Vec::new(),
-            inflight: HashMap::new(),
-            gathering: HashSet::new(),
+            inflight: BTreeMap::new(),
+            gathering: BTreeSet::new(),
             payloads: vec![None; n],
             real_mode: false,
         }

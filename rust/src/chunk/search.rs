@@ -121,9 +121,7 @@ pub fn search_grid_tiered(
         .iter()
         .filter(|c| c.feasible)
         .max_by(|a, b| {
-            a.utilization
-                .partial_cmp(&b.utilization)
-                .unwrap()
+            crate::util::total_cmp(a.utilization, b.utilization)
                 .then(b.chunk_elems.cmp(&a.chunk_elems))
         })
         .copied()?;

@@ -13,7 +13,7 @@
 //! compute — the distributed analogue of the chunk manager's in-flight
 //! prefetch set.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use crate::mem::PinnedLease;
 use crate::tracer::Moment;
@@ -85,8 +85,8 @@ pub struct InFlightGather {
 /// draining reduce-scatters, keyed by group index.
 #[derive(Clone, Debug, Default)]
 pub struct CollectivePipeline {
-    gathers: HashMap<usize, InFlightGather>,
-    rs_done: HashMap<usize, f64>,
+    gathers: BTreeMap<usize, InFlightGather>,
+    rs_done: BTreeMap<usize, f64>,
 }
 
 impl CollectivePipeline {
@@ -136,23 +136,19 @@ impl CollectivePipeline {
     /// the deterministic victim-selection order for injected aborts
     /// (ISSUE 6): a chaos abort always hits the lowest-numbered
     /// in-flight group, so same-seed replays cancel the same gathers.
+    /// (BTreeMap keys iterate in ascending order already.)
     pub fn inflight_groups(&self) -> Vec<usize> {
-        let mut v: Vec<usize> = self.gathers.keys().copied().collect();
-        v.sort_unstable();
-        v
+        self.gathers.keys().copied().collect()
     }
 
     /// Groups whose gather has landed by collective-stream time `now`,
     /// in ascending group order (deterministic iteration).
     pub fn landed(&self, now: f64) -> Vec<usize> {
-        let mut v: Vec<usize> = self
-            .gathers
+        self.gathers
             .iter()
             .filter(|(_, gi)| gi.done <= now)
             .map(|(&g, _)| g)
-            .collect();
-        v.sort_unstable();
-        v
+            .collect()
     }
 
     /// FIFO queue compression after a queued gather (completing at
@@ -185,11 +181,12 @@ impl CollectivePipeline {
     }
 
     /// Outstanding reduce-scatter completion times (end-of-iteration
-    /// barrier), in deterministic group order.
+    /// barrier), in deterministic group order (BTreeMap iteration is
+    /// already key-ascending; `mem::take` is the BTreeMap `drain`).
     pub fn drain_rs(&mut self) -> Vec<f64> {
-        let mut v: Vec<(usize, f64)> = self.rs_done.drain().collect();
-        v.sort_unstable_by_key(|&(g, _)| g);
-        v.into_iter().map(|(_, t)| t).collect()
+        std::mem::take(&mut self.rs_done)
+            .into_values()
+            .collect()
     }
 }
 

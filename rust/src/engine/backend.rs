@@ -262,6 +262,28 @@ pub trait ExecutionBackend {
     }
 }
 
+/// Measured-iteration breakdown from a four-stream timeline.
+///
+/// This constructor lives here rather than in `report.rs` because the
+/// `StreamTimeline` is the execution-backend layer's substrate
+/// (timeline-layering lint rule, ISSUE 8): the report module is a pure
+/// formatter and must not read timelines.
+impl IterBreakdown {
+    pub fn from_timeline(tl: &StreamTimeline) -> Self {
+        IterBreakdown {
+            secs: Phase::ALL
+                .iter()
+                .map(|&p| (p, tl.get(p)))
+                .collect(),
+            exposed_transfer_s: tl.exposed_transfer(),
+            overlapped_transfer_s: tl.overlapped_transfer(),
+            exposed_collective_s: tl.exposed_collective(),
+            overlapped_collective_s: tl.overlapped_collective(),
+            pageable_copy_s: tl.pageable_transfer(),
+        }
+    }
+}
+
 // =====================================================================
 // SimBackend
 // =====================================================================

@@ -475,6 +475,31 @@ pub(crate) struct SimParts {
     pub chunk_elems: u64,
 }
 
+/// Compile-time `Send` audit of the planner core (ISSUE 8).
+///
+/// A future multi-rank driver will move whole sessions across worker
+/// threads, so the planner state must never grow an `Rc`, raw pointer
+/// or other `!Send` member — this function fails to *compile* the day
+/// one appears, which is a much earlier tripwire than a runtime test.
+///
+/// Deliberate exception: [`ChaosBackend`] keeps its fault-arrival
+/// state in a `RefCell` (interior mutability behind `&self` probe
+/// methods).  `RefCell<T: Send>` is still `Send` — sessions migrate
+/// between threads fine — but it is **not** `Sync`: a chaos-wrapped
+/// session must not be *shared* across threads, and nothing here
+/// asserts `Sync` for exactly that reason.
+#[allow(dead_code)]
+fn assert_planner_core_is_send() {
+    fn assert_send<T: Send>() {}
+    assert_send::<ChunkManager>();
+    assert_send::<OptimizationPlan>();
+    assert_send::<ChaosPlan>();
+    assert_send::<crate::placement::PlacementPlan>();
+    assert_send::<SimBackend>();
+    assert_send::<TrainingSession<SimBackend>>();
+    assert_send::<TrainingSession<ChaosBackend<SimBackend>>>();
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -3,7 +3,7 @@
 use super::chaos::ChaosStats;
 use crate::chunk::MoveStats;
 use crate::placement::PlacementPlan;
-use crate::sim::{Phase, SimClock, StreamTimeline};
+use crate::sim::{Phase, SimClock};
 use crate::util::fmt::human_time;
 use crate::util::{human_bytes, Table};
 
@@ -17,7 +17,10 @@ use crate::util::{human_bytes, Table};
 /// copy time, overlapped = 0, sum = iter time.
 #[derive(Clone, Debug, Default)]
 pub struct IterBreakdown {
-    secs: Vec<(Phase, f64)>,
+    /// `pub(super)`: the backend layer (`backend.rs`) assembles this
+    /// from its timeline; the report module itself never reads one
+    /// (timeline-layering rule, ISSUE 8).
+    pub(super) secs: Vec<(Phase, f64)>,
     /// Copy time on the compute critical path (stalls).
     pub exposed_transfer_s: f64,
     /// Copy time hidden under compute by the dual-stream pipeline.
@@ -49,19 +52,9 @@ impl IterBreakdown {
         }
     }
 
-    pub fn from_timeline(tl: &StreamTimeline) -> Self {
-        IterBreakdown {
-            secs: Phase::ALL
-                .iter()
-                .map(|&p| (p, tl.get(p)))
-                .collect(),
-            exposed_transfer_s: tl.exposed_transfer(),
-            overlapped_transfer_s: tl.overlapped_transfer(),
-            exposed_collective_s: tl.exposed_collective(),
-            overlapped_collective_s: tl.overlapped_collective(),
-            pageable_copy_s: tl.pageable_transfer(),
-        }
-    }
+    // `from_timeline` lives in `backend.rs`: constructing a breakdown
+    // from a `StreamTimeline` is the backend layer's job, and this
+    // module stays a pure formatter (timeline-layering rule).
 
     /// Collective time on the compute critical path, in every mode:
     /// with the collective stream off, the phase clocks themselves;

@@ -24,7 +24,7 @@
 //! call, in the same order with the same operands — locked by the
 //! golden traces and `tests/session_equivalence.rs`.
 
-use std::collections::{BTreeSet, HashMap, HashSet};
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::{anyhow, Result};
 
@@ -158,9 +158,9 @@ pub struct TrainingSession<B: ExecutionBackend> {
     /// prefetch switch is on).
     pub(crate) prefetcher: Option<Prefetcher>,
     /// In-flight prefetch copies on the timeline, by chunk.
-    inflight_done: HashMap<ChunkId, PendingCopy>,
+    inflight_done: BTreeMap<ChunkId, PendingCopy>,
     /// Groups already gathered in the current phase.
-    gathered: HashSet<usize>,
+    gathered: BTreeSet<usize>,
     /// Wire-volume accounting (Table 5).
     pub(crate) allgather_bytes: u64,
     pub(crate) reduce_scatter_bytes: u64,
@@ -266,8 +266,8 @@ impl<B: ExecutionBackend> TrainingSession<B> {
             },
             stage: Stage::Fwd,
             prefetcher: None,
-            inflight_done: HashMap::new(),
-            gathered: HashSet::new(),
+            inflight_done: BTreeMap::new(),
+            gathered: BTreeSet::new(),
             allgather_bytes: 0,
             reduce_scatter_bytes: 0,
             allgather_time: 0.0,
@@ -606,7 +606,7 @@ impl<B: ExecutionBackend> TrainingSession<B> {
             _ => 0,
         };
         if evict_margin > 0 {
-            let droppable: HashSet<ChunkId> = self
+            let droppable: BTreeSet<ChunkId> = self
                 .mgr
                 .reg
                 .chunks
@@ -1134,12 +1134,12 @@ impl<B: ExecutionBackend> TrainingSession<B> {
         }
 
         // Distributed: fetch the communication groups of every param.
-        // BTreeSet: group order must be deterministic — HashSet
-        // iteration order varies per process, which would make the
-        // multi-GPU stream timeline (and the golden traces locked on
-        // it) run-to-run nondeterministic.
+        // BTreeSet throughout: group order must be deterministic —
+        // unordered-set iteration varies per process, which would make
+        // the multi-GPU stream timeline (and the golden traces locked
+        // on it) run-to-run nondeterministic.
         if self.nproc > 1 {
-            let positions: HashSet<usize> = params
+            let positions: BTreeSet<usize> = params
                 .iter()
                 .map(|&t| {
                     let ti =
@@ -1225,7 +1225,7 @@ impl<B: ExecutionBackend> TrainingSession<B> {
         // Distributed: release/reduce groups that completed this stage
         // (deterministic order, as above).
         if self.nproc > 1 {
-            let positions: HashSet<usize> = params
+            let positions: BTreeSet<usize> = params
                 .iter()
                 .map(|&t| {
                     let ti =

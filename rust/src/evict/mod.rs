@@ -12,7 +12,7 @@
 //! no policy can victimize them (property-tested in
 //! `tests/prefetch_overlap.rs`).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use crate::chunk::{Chunk, ChunkId};
 use crate::mem::{Device, Interconnect, Link};
@@ -70,11 +70,17 @@ impl<'a> EvictionPolicy for OptPolicy<'a> {
         _chunks: &[Chunk],
         now: Moment,
     ) -> Option<ChunkId> {
+        // The id tie-break makes the pick a pure function of the
+        // candidate *set* (ISSUE 8): among equally-far victims the
+        // highest id wins no matter how the slice is ordered.  For the
+        // id-sorted slices the manager passes this is exactly the old
+        // last-max-wins behaviour, bit for bit.
         candidates.iter().copied().max_by_key(|&c| {
-            match self.tracer.next_use(c, now) {
+            let key = match self.tracer.next_use(c, now) {
                 None => u64::MAX, // never used again: perfect victim
                 Some(m) => m as u64,
-            }
+            };
+            (key, c.0)
         })
     }
 
@@ -106,7 +112,7 @@ pub struct BacklogAwareOpt<'a> {
     pub tracer: &'a MemTracer,
     /// Candidates evictable without a copy (all tensors FREE — the
     /// manager drops these instead of spilling them).
-    pub droppable: std::collections::HashSet<ChunkId>,
+    pub droppable: BTreeSet<ChunkId>,
     /// Near-equality window, in moments (0 = plain OPT).
     pub margin: Moment,
 }
@@ -134,8 +140,8 @@ impl<'a> EvictionPolicy for BacklogAwareOpt<'a> {
         }
         let best_key = self.key(best, now);
         // Among droppable candidates within `margin` of the OPT pick,
-        // keep the farthest next use (same max_by_key tie rules as OPT,
-        // so the choice stays deterministic).
+        // keep the farthest next use (same (key, id) tie rules as OPT,
+        // so the choice is insertion-order invariant).
         candidates
             .iter()
             .copied()
@@ -146,7 +152,7 @@ impl<'a> EvictionPolicy for BacklogAwareOpt<'a> {
                         .saturating_add(self.margin as u64)
                         >= best_key
             })
-            .max_by_key(|&c| self.key(c, now))
+            .max_by_key(|&c| (self.key(c, now), c.0))
             .or(Some(best))
     }
 
@@ -203,7 +209,7 @@ impl TierPricing {
 pub struct TierAwareOpt<'a> {
     pub tracer: &'a MemTracer,
     /// Candidates evictable without a copy (all tensors FREE).
-    pub droppable: std::collections::HashSet<ChunkId>,
+    pub droppable: BTreeSet<ChunkId>,
     /// Near-equality window, in moments (0 = plain OPT).
     pub margin: Moment,
     pub pricing: TierPricing,
@@ -251,10 +257,12 @@ impl<'a> EvictionPolicy for TierAwareOpt<'a> {
             })
             .min_by(|&a, &b| {
                 // Cheapest first; among equals the farthest next use,
-                // then the lowest id — fully deterministic.
-                self.price(a, chunks)
-                    .partial_cmp(&self.price(b, chunks))
-                    .unwrap()
+                // then the lowest id — fully deterministic (total_cmp:
+                // a NaN price sorts last instead of panicking).
+                crate::util::total_cmp(
+                    self.price(a, chunks),
+                    self.price(b, chunks),
+                )
                     .then_with(|| {
                         self.key(b, now).cmp(&self.key(a, now))
                     })
@@ -273,7 +281,7 @@ impl<'a> EvictionPolicy for TierAwareOpt<'a> {
 /// Evict in chunk-list order (also the paper's warm-up fallback).
 #[derive(Clone, Default)]
 pub struct FifoPolicy {
-    arrival: HashMap<ChunkId, u64>,
+    arrival: BTreeMap<ChunkId, u64>,
     clock: u64,
 }
 
@@ -304,7 +312,7 @@ impl EvictionPolicy for FifoPolicy {
 
 #[derive(Clone, Default)]
 pub struct LruPolicy {
-    last_use: HashMap<ChunkId, u64>,
+    last_use: BTreeMap<ChunkId, u64>,
     clock: u64,
 }
 
@@ -335,7 +343,7 @@ impl EvictionPolicy for LruPolicy {
 
 #[derive(Clone, Default)]
 pub struct LfuPolicy {
-    uses: HashMap<ChunkId, u64>,
+    uses: BTreeMap<ChunkId, u64>,
 }
 
 impl EvictionPolicy for LfuPolicy {
@@ -433,7 +441,7 @@ mod tests {
         t.record_chunk_use(ChunkId(1), 18);
         t.record_chunk_use(ChunkId(2), 5);
         t.finish_warmup();
-        let droppable: std::collections::HashSet<ChunkId> =
+        let droppable: BTreeSet<ChunkId> =
             [ChunkId(1)].into_iter().collect();
         let cands = ids(&[0, 1, 2]);
         let mut idle = BacklogAwareOpt {
@@ -458,8 +466,7 @@ mod tests {
         };
         assert_eq!(narrow.pick(&cands, &[], 0), Some(ChunkId(0)));
         // A droppable OPT winner needs no tie-break at all.
-        let all: std::collections::HashSet<ChunkId> =
-            cands.iter().copied().collect();
+        let all: BTreeSet<ChunkId> = cands.iter().copied().collect();
         let mut free_best =
             BacklogAwareOpt { tracer: &t, droppable: all, margin: 8 };
         assert_eq!(free_best.pick(&cands, &[], 0), Some(ChunkId(0)));
@@ -584,7 +591,7 @@ mod tests {
         t.record_chunk_use(ChunkId(1), 19);
         t.record_chunk_use(ChunkId(2), 5);
         t.finish_warmup();
-        let droppable: std::collections::HashSet<ChunkId> =
+        let droppable: BTreeSet<ChunkId> =
             [ChunkId(1)].into_iter().collect();
         let cands = ids(&[0, 1, 2]);
         let mut priced = TierAwareOpt {

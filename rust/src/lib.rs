@@ -22,6 +22,7 @@ pub mod config;
 pub mod dp;
 pub mod engine;
 pub mod evict;
+pub mod lint;
 pub mod mem;
 pub mod model;
 pub mod placement;

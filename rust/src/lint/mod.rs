@@ -1,0 +1,666 @@
+//! `pstar-lint`: the determinism & layering lint pass (ISSUE 8).
+//!
+//! The repo's determinism contract — bit-exact golden traces, chaos
+//! replay, checkpoint/restore, volume invariance — rests on a handful
+//! of coding rules that `rustc` cannot check.  This module is a
+//! zero-dependency, line-based enforcement pass over `src/`, run three
+//! ways: `cargo run --bin pstar-lint` (CI `lint` job), the
+//! `tests/lint_clean.rs` gate under plain `cargo test`, and the
+//! embedded fixture self-tests below.
+//!
+//! ## Rules
+//!
+//! * **`unordered-collection`** — no `HashMap`/`HashSet` in the
+//!   deterministic-state modules (`sim/`, `engine/`, `chunk/`,
+//!   `evict/`, `dp/`, `mem/`).  Unordered-map iteration varies per
+//!   process (`RandomState`), so any policy decision derived from it
+//!   diverges across ranks and replays.  Use `BTreeMap`/`BTreeSet`.
+//! * **`nan-unwrap`** — no `partial_cmp` anywhere in `src/`: the
+//!   `.unwrap()` idiom panics on NaN and `sort_by` falls back to
+//!   unspecified order.  Use [`crate::util::total_cmp`] (IEEE-754
+//!   totalOrder: NaN sorts above every real, deterministically).
+//! * **`wallclock`** — `Instant::now`/`SystemTime` only in `train/`
+//!   and the pjrt half of `engine/backend.rs`: wall-clock reads inside
+//!   the planner would leak real time into simulated schedules.
+//! * **`timeline-layering`** — the `StreamTimeline` identifier only in
+//!   `sim/` and `engine/backend.rs`: all timeline mutation goes
+//!   through the `ExecutionBackend` boundary, so no policy module may
+//!   name the substrate type.
+//!
+//! ## Mechanics
+//!
+//! There is no `syn` in the offline crate cache, so this is a
+//! hand-rolled scanner, deliberately conservative:
+//!
+//! * string literals (plain, raw, multi-line), char literals and
+//!   comments (line, nested block) are masked out before matching, so
+//!   prose mentioning `HashMap` never trips a rule;
+//! * everything from the first `#[cfg(test)]` line to end-of-file is
+//!   skipped — by repo convention the unit-test module trails the file
+//!   (enforced loosely: each `src/` file has at most one);
+//! * in `engine/backend.rs`, lines after the first
+//!   `#[cfg(feature = "pjrt")]` are the measuring backend and are
+//!   exempt from `unordered-collection` and `wallclock`;
+//! * a finding on line *L* is suppressed by
+//!   `// lint:allow(<rule>): <reason>` on *L* or on a comment line
+//!   directly above — the escape hatch is deliberately per-line and
+//!   per-rule so waivers stay auditable;
+//! * the `lint/` subtree itself is skipped (its fixtures are positive
+//!   examples by construction).
+//!
+//! See `rust/docs/INVARIANTS.md` for the contract this enforces.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One enforced rule.  `ALL` is the report order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    UnorderedCollection,
+    NanUnwrap,
+    Wallclock,
+    TimelineLayering,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 4] = [
+        Rule::UnorderedCollection,
+        Rule::NanUnwrap,
+        Rule::Wallclock,
+        Rule::TimelineLayering,
+    ];
+
+    /// The name used in diagnostics and `lint:allow(...)` annotations.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::UnorderedCollection => "unordered-collection",
+            Rule::NanUnwrap => "nan-unwrap",
+            Rule::Wallclock => "wallclock",
+            Rule::TimelineLayering => "timeline-layering",
+        }
+    }
+
+    /// Why the rule exists, one line (shown with every finding).
+    pub fn message(self) -> &'static str {
+        match self {
+            Rule::UnorderedCollection => {
+                "HashMap/HashSet iteration order varies per process; \
+                 use BTreeMap/BTreeSet in deterministic-state modules"
+            }
+            Rule::NanUnwrap => {
+                "partial_cmp panics (unwrap) or mis-sorts on NaN; \
+                 use util::total_cmp"
+            }
+            Rule::Wallclock => {
+                "wall-clock reads outside train/ and the pjrt backend \
+                 leak real time into simulated schedules"
+            }
+            Rule::TimelineLayering => {
+                "StreamTimeline is backend substrate; go through \
+                 ExecutionBackend instead"
+            }
+        }
+    }
+}
+
+/// One diagnostic: `file:line: [rule] message: excerpt`.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    /// Path relative to the linted root, '/'-separated.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    pub rule: Rule,
+    /// The offending source line, trimmed and truncated.
+    pub excerpt: String,
+}
+
+impl fmt::Display for Finding {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}:{}: [{}] {}: `{}`",
+            self.file,
+            self.line,
+            self.rule.name(),
+            self.rule.message(),
+            self.excerpt,
+        )
+    }
+}
+
+/// Result of linting a whole tree.
+#[derive(Clone, Debug, Default)]
+pub struct LintReport {
+    /// Number of `.rs` files scanned.
+    pub files: usize,
+    /// All findings, sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+}
+
+// ---------------------------------------------------------------- masking
+
+/// Blank out comments, string literals and char literals, preserving
+/// newlines (and therefore line numbers) exactly.  Handles nested block
+/// comments, escapes, multi-line strings and `r#"..."#` raw strings.
+fn mask_code(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    // Push a masked char: newlines survive, everything else blanks.
+    fn blank(out: &mut String, c: char) {
+        out.push(if c == '\n' { '\n' } else { ' ' });
+    }
+    while i < n {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                blank(&mut out, b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust nests them).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            blank(&mut out, b[i]);
+            blank(&mut out, b[i + 1]);
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"..." / r#"..."# (prev char must not be part of
+        // an identifier, so `writer"` never false-positives).
+        if c == 'r'
+            && (i == 0
+                || !(b[i - 1].is_alphanumeric() || b[i - 1] == '_'))
+        {
+            let mut j = i + 1;
+            while j < n && b[j] == '#' {
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                let hashes = j - (i + 1);
+                for k in i..=j {
+                    blank(&mut out, b[k]);
+                }
+                i = j + 1;
+                // Scan for `"` followed by `hashes` '#'s.
+                while i < n {
+                    if b[i] == '"'
+                        && i + hashes < n
+                        && (1..=hashes).all(|h| b[i + h] == '#')
+                    {
+                        for k in i..=i + hashes {
+                            blank(&mut out, b[k]);
+                        }
+                        i += hashes + 1;
+                        break;
+                    }
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Plain string literal (may span lines, may contain escapes).
+        if c == '"' {
+            blank(&mut out, c);
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                let done = b[i] == '"';
+                blank(&mut out, b[i]);
+                i += 1;
+                if done {
+                    break;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal: '\n', '\'', '\\', '\x41',
+                // '\u{1F600}'.
+                let mut j = i + 2;
+                if j < n && b[j] == 'u' && j + 1 < n && b[j + 1] == '{'
+                {
+                    j += 2;
+                    while j < n && b[j] != '}' {
+                        j += 1;
+                    }
+                    j += 1;
+                } else if j < n && b[j] == 'x' {
+                    j += 3;
+                } else {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' {
+                    for k in i..=j {
+                        blank(&mut out, b[k]);
+                    }
+                    i = j + 1;
+                    continue;
+                }
+            } else if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\''
+            {
+                // Simple char literal like '"' or 'x'.
+                for k in i..=i + 2 {
+                    blank(&mut out, b[k]);
+                }
+                i += 3;
+                continue;
+            }
+            // Lifetime: keep as code.
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+// ------------------------------------------------------------- rule logic
+
+/// Modules whose state feeds deterministic decisions (the
+/// `unordered-collection` scope).
+fn ordered_state_scope(rel: &str) -> bool {
+    ["sim/", "engine/", "chunk/", "evict/", "dp/", "mem/"]
+        .iter()
+        .any(|p| rel.starts_with(p))
+}
+
+/// Parse `lint:allow(<rule>)` out of a raw line, if present.
+fn allow_annotation(raw: &str) -> Option<Rule> {
+    let i = raw.find("lint:allow(")?;
+    let rest = &raw[i + "lint:allow(".len()..];
+    let j = rest.find(')')?;
+    let name = rest[..j].trim();
+    Rule::ALL.iter().copied().find(|r| r.name() == name)
+}
+
+/// Is `rule` waived on 0-based line `idx`?  An annotation suppresses
+/// the line it sits on and, when it is a whole-line comment, the line
+/// directly below it.
+fn waived(raw_lines: &[&str], idx: usize, rule: Rule) -> bool {
+    if allow_annotation(raw_lines[idx]) == Some(rule) {
+        return true;
+    }
+    if idx > 0 {
+        let above = raw_lines[idx - 1].trim_start();
+        if above.starts_with("//")
+            && allow_annotation(above) == Some(rule)
+        {
+            return true;
+        }
+    }
+    false
+}
+
+/// Lint one file's source.  `rel` is the path relative to `src/`,
+/// '/'-separated (it selects which rules apply where).
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let rel = rel.replace('\\', "/");
+    // The linter's own subtree holds positive fixtures by design.
+    if rel.starts_with("lint/") || rel == "lint.rs" {
+        return Vec::new();
+    }
+    let masked = mask_code(src);
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let masked_lines: Vec<&str> = masked.lines().collect();
+    debug_assert_eq!(raw_lines.len(), masked_lines.len());
+
+    let is_backend = rel == "engine/backend.rs";
+    let mut pjrt_half = false;
+    let mut findings = Vec::new();
+    let mut push = |idx: usize, rule: Rule, raw: &str| {
+        if waived(&raw_lines, idx, rule) {
+            return;
+        }
+        let mut excerpt: String =
+            raw.trim().chars().take(80).collect();
+        if raw.trim().chars().count() > 80 {
+            excerpt.push('…');
+        }
+        findings.push(Finding {
+            file: rel.clone(),
+            line: idx + 1,
+            rule,
+            excerpt,
+        });
+    };
+
+    for (idx, (&raw, &m)) in
+        raw_lines.iter().zip(masked_lines.iter()).enumerate()
+    {
+        let trimmed = raw.trim_start();
+        // Repo convention: the unit-test module trails the file, so
+        // everything from the first #[cfg(test)] on is out of scope.
+        if trimmed.starts_with("#[cfg(test)]") {
+            break;
+        }
+        if is_backend
+            && trimmed.starts_with("#[cfg(feature = \"pjrt\")]")
+        {
+            pjrt_half = true;
+        }
+        let exec_exempt = is_backend && pjrt_half;
+
+        if ordered_state_scope(&rel)
+            && !exec_exempt
+            && (m.contains("HashMap") || m.contains("HashSet"))
+        {
+            push(idx, Rule::UnorderedCollection, raw);
+        }
+        if m.contains("partial_cmp") {
+            push(idx, Rule::NanUnwrap, raw);
+        }
+        if !rel.starts_with("train/")
+            && !exec_exempt
+            && (m.contains("Instant::now") || m.contains("SystemTime"))
+        {
+            push(idx, Rule::Wallclock, raw);
+        }
+        if !rel.starts_with("sim/")
+            && !is_backend
+            && m.contains("StreamTimeline")
+        {
+            push(idx, Rule::TimelineLayering, raw);
+        }
+    }
+    findings
+}
+
+// --------------------------------------------------------------- the walk
+
+fn walk(
+    root: &Path,
+    dir: &Path,
+    report: &mut LintReport,
+) -> io::Result<()> {
+    let mut entries: Vec<_> =
+        fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    // Sorted walk: the report is byte-identical across filesystems.
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        let name = e.file_name();
+        if path.is_dir() {
+            if name == "lint" {
+                continue;
+            }
+            walk(root, &path, report)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .to_string_lossy()
+                .replace('\\', "/");
+            let src = fs::read_to_string(&path)?;
+            report.files += 1;
+            report.findings.extend(lint_source(&rel, &src));
+        }
+    }
+    Ok(())
+}
+
+/// Lint every `.rs` file under `root` (normally `rust/src`), skipping
+/// the `lint/` subtree.  Findings come back sorted.
+pub fn lint_tree(root: &Path) -> io::Result<LintReport> {
+    let mut report = LintReport::default();
+    walk(root, root, &mut report)?;
+    report
+        .findings
+        .sort_by(|a, b| {
+            (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+        });
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(found: &[Finding]) -> Vec<Rule> {
+        found.iter().map(|f| f.rule).collect()
+    }
+
+    // ------------------------------------------- unordered-collection
+
+    #[test]
+    fn unordered_collection_flagged_in_state_modules() {
+        let src = "use std::collections::HashMap;\n";
+        for rel in
+            ["sim/a.rs", "engine/b.rs", "chunk/c.rs", "evict/mod.rs",
+             "dp/group.rs", "mem/device.rs"]
+        {
+            let f = lint_source(rel, src);
+            assert_eq!(
+                rules(&f),
+                vec![Rule::UnorderedCollection],
+                "{rel}"
+            );
+            assert_eq!(f[0].line, 1);
+        }
+        // HashSet too.
+        let f = lint_source("evict/mod.rs", "let s = HashSet::new();\n");
+        assert_eq!(rules(&f), vec![Rule::UnorderedCollection]);
+    }
+
+    #[test]
+    fn unordered_collection_ignored_outside_scope() {
+        let src = "use std::collections::HashMap;\n";
+        for rel in ["util/mod.rs", "runtime/mod.rs", "main.rs",
+                    "train/trainer.rs"]
+        {
+            assert!(lint_source(rel, src).is_empty(), "{rel}");
+        }
+    }
+
+    #[test]
+    fn backend_pjrt_half_is_exempt_from_state_and_clock_rules() {
+        let src = "\
+use std::collections::BTreeMap;
+#[cfg(feature = \"pjrt\")]
+use std::collections::HashMap;
+fn measure() { let t0 = std::time::Instant::now(); }
+";
+        assert!(lint_source("engine/backend.rs", src).is_empty());
+        // ... but only in backend.rs; other engine files get no pass.
+        let f = lint_source("engine/session.rs", src);
+        assert_eq!(
+            rules(&f),
+            vec![Rule::UnorderedCollection, Rule::Wallclock]
+        );
+        // And before the marker backend.rs is scoped like the rest.
+        let early = "use std::collections::HashMap;\n\
+                     #[cfg(feature = \"pjrt\")]\n";
+        let f = lint_source("engine/backend.rs", early);
+        assert_eq!(rules(&f), vec![Rule::UnorderedCollection]);
+    }
+
+    // ----------------------------------------------------- nan-unwrap
+
+    #[test]
+    fn nan_unwrap_flagged_everywhere() {
+        let src =
+            "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n";
+        for rel in ["util/mod.rs", "chunk/search.rs", "main.rs"] {
+            assert_eq!(
+                rules(&lint_source(rel, src)),
+                vec![Rule::NanUnwrap],
+                "{rel}"
+            );
+        }
+    }
+
+    #[test]
+    fn nan_unwrap_ignores_comments_and_strings() {
+        let src = "\
+// the old partial_cmp().unwrap() panicked here
+let msg = \"partial_cmp is banned\";
+/* partial_cmp in a block comment */
+";
+        assert!(lint_source("evict/mod.rs", src).is_empty());
+    }
+
+    // ------------------------------------------------------ wallclock
+
+    #[test]
+    fn wallclock_flagged_outside_train() {
+        let src = "let t0 = std::time::Instant::now();\n";
+        assert_eq!(
+            rules(&lint_source("engine/session.rs", src)),
+            vec![Rule::Wallclock]
+        );
+        assert_eq!(
+            rules(&lint_source("util/mod.rs",
+                               "let t = SystemTime::now();\n")),
+            vec![Rule::Wallclock]
+        );
+        assert!(lint_source("train/trainer.rs", src).is_empty());
+    }
+
+    // ----------------------------------------------- timeline-layering
+
+    #[test]
+    fn timeline_layering_scopes_to_sim_and_backend() {
+        let src = "use crate::sim::StreamTimeline;\n";
+        assert_eq!(
+            rules(&lint_source("engine/report.rs", src)),
+            vec![Rule::TimelineLayering]
+        );
+        assert_eq!(
+            rules(&lint_source("chunk/manager.rs", src)),
+            vec![Rule::TimelineLayering]
+        );
+        assert!(lint_source("sim/stream.rs", src).is_empty());
+        assert!(lint_source("engine/backend.rs", src).is_empty());
+    }
+
+    // ------------------------------------------------ allow annotations
+
+    #[test]
+    fn allow_suppresses_same_line_and_line_above() {
+        let same = "use std::collections::HashMap; \
+                    // lint:allow(unordered-collection): fixture\n";
+        assert!(lint_source("evict/mod.rs", same).is_empty());
+
+        let above = "\
+// lint:allow(wallclock): measuring the linter itself
+let t0 = std::time::Instant::now();
+";
+        assert!(lint_source("engine/session.rs", above).is_empty());
+    }
+
+    #[test]
+    fn allow_is_per_rule_and_per_line() {
+        // Wrong rule name: no waiver.
+        let wrong = "use std::collections::HashMap; \
+                     // lint:allow(wallclock): wrong rule\n";
+        assert_eq!(
+            rules(&lint_source("evict/mod.rs", wrong)),
+            vec![Rule::UnorderedCollection]
+        );
+        // A waiver two lines up does not reach.
+        let far = "\
+// lint:allow(unordered-collection): too far away
+let x = 1;
+use std::collections::HashMap;
+";
+        assert_eq!(
+            rules(&lint_source("evict/mod.rs", far)),
+            vec![Rule::UnorderedCollection]
+        );
+    }
+
+    // ------------------------------------------------- masking & scope
+
+    #[test]
+    fn trailing_test_module_is_skipped() {
+        let src = "\
+let a = 1;
+#[cfg(test)]
+mod tests {
+    use std::collections::HashMap;
+    use crate::sim::StreamTimeline;
+}
+";
+        assert!(lint_source("evict/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn masking_handles_multiline_and_raw_strings() {
+        let src = "\
+let s = \"multi
+line HashMap string\";
+let r = r#\"raw HashMap \"quoted\" string\"#;
+let c = '\"';
+let still_code = HashMap::new();
+";
+        let f = lint_source("evict/mod.rs", src);
+        assert_eq!(rules(&f), vec![Rule::UnorderedCollection]);
+        assert_eq!(f[0].line, 5, "only the real code line flags");
+    }
+
+    #[test]
+    fn masking_handles_nested_block_comments_and_lifetimes() {
+        let src = "\
+/* outer /* nested HashMap */ still comment */
+fn f<'a>(x: &'a str) -> &'a str { x }
+let esc = '\\'';
+let m = HashMap::new();
+";
+        let f = lint_source("chunk/c.rs", src);
+        assert_eq!(rules(&f), vec![Rule::UnorderedCollection]);
+        assert_eq!(f[0].line, 4);
+    }
+
+    #[test]
+    fn finding_display_has_file_line_rule() {
+        let f = &lint_source(
+            "evict/mod.rs",
+            "use std::collections::HashMap;\n",
+        )[0];
+        let s = f.to_string();
+        assert!(s.starts_with("evict/mod.rs:1: [unordered-collection]"),
+                "{s}");
+        assert!(s.contains("BTreeMap"), "{s}");
+    }
+
+    #[test]
+    fn lint_subtree_is_skipped() {
+        assert!(lint_source(
+            "lint/mod.rs",
+            "use std::collections::HashMap;\n"
+        )
+        .is_empty());
+    }
+}

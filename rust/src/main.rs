@@ -13,7 +13,7 @@
 //!
 //! Flags use `--key value`; defaults match the paper's setups.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -28,15 +28,17 @@ use patrickstar::train::{Trainer, TrainerConfig};
 use patrickstar::util::{human_bytes, Table};
 
 struct Args {
+    // BTreeMap (ISSUE 8): flag iteration feeds error messages, and
+    // diagnostics must not vary run to run with hash order.
+    flags: BTreeMap<String, String>,
     cmd: String,
-    flags: HashMap<String, String>,
 }
 
 impl Args {
     fn parse() -> Result<Args> {
         let mut it = std::env::args().skip(1);
         let cmd = it.next().unwrap_or_else(|| "help".into());
-        let mut flags = HashMap::new();
+        let mut flags = BTreeMap::new();
         while let Some(k) = it.next() {
             let key = k
                 .strip_prefix("--")
@@ -53,21 +55,25 @@ impl Args {
     /// `--lokahead 8` used to be silently ignored — every subcommand
     /// now declares its known-flag set and bails on the rest.
     fn reject_unknown(&self, allowed: &[&str]) -> Result<()> {
-        let mut unknown: Vec<&str> = self
+        // `flags` is a BTreeMap, so `unknown` comes out sorted; sort
+        // the declared set too — the error message is identical no
+        // matter how a subcommand orders its `allowed` slice.
+        let unknown: Vec<&str> = self
             .flags
             .keys()
             .map(String::as_str)
             .filter(|k| !allowed.contains(k))
             .collect();
-        unknown.sort_unstable();
         if let Some(first) = unknown.first() {
             if allowed.is_empty() {
                 bail!("'{}' takes no flags, got --{first}", self.cmd);
             }
+            let mut known: Vec<&str> = allowed.to_vec();
+            known.sort_unstable();
             bail!(
                 "unknown flag --{first} for '{}' (known: --{})",
                 self.cmd,
-                allowed.join(", --")
+                known.join(", --")
             );
         }
         Ok(())

@@ -99,7 +99,7 @@ impl SimClock {
         let mut v: Vec<(Phase, f64)> =
             self.acc.iter().map(|(&p, &t)| (p, t)).collect();
         v.retain(|&(_, t)| t > 0.0);
-        v.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        v.sort_by(|a, b| crate::util::total_cmp(b.1, a.1));
         v
     }
 }

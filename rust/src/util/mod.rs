@@ -14,3 +14,15 @@ pub mod rng;
 pub use fmt::{human_bytes, Table};
 pub use json::Json;
 pub use rng::Rng;
+
+/// Total order over `f64` for sorts, binary searches and min/max picks
+/// in policy code (ISSUE 8).  `partial_cmp().unwrap()` panics on NaN —
+/// and a NaN that slips into a cost or CDF table should pick a
+/// deterministic branch, not kill the run.  IEEE-754 `totalOrder`
+/// semantics (`f64::total_cmp`): every NaN compares greater than every
+/// real value (and -NaN less), so degenerate inputs sort last instead
+/// of panicking.  The `nan-unwrap` lint rule rejects `partial_cmp` in
+/// favour of this helper.
+pub fn total_cmp(a: f64, b: f64) -> std::cmp::Ordering {
+    a.total_cmp(&b)
+}

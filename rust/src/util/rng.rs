@@ -105,7 +105,14 @@ impl ZipfTable {
 
     pub fn sample(&self, rng: &mut Rng) -> usize {
         let u = rng.f64();
-        match self.cdf.binary_search_by(|c| c.partial_cmp(&u).unwrap()) {
+        // total_cmp: a degenerate exponent (s = NaN/inf) fills the CDF
+        // with NaNs, and partial_cmp().unwrap() here used to panic on
+        // the first draw.  Under the total order every NaN sorts above
+        // u in [0,1), so the search lands on index 0 deterministically.
+        match self
+            .cdf
+            .binary_search_by(|c| crate::util::total_cmp(*c, u))
+        {
             Ok(i) | Err(i) => i.min(self.cdf.len() - 1),
         }
     }
@@ -178,6 +185,32 @@ mod tests {
         }
         // Top-10 of a 1000-token Zipf(1.1) carries far more than 10/1000.
         assert!(head > n / 4, "head {head}");
+    }
+
+    #[test]
+    fn zipf_degenerate_weights_never_panic() {
+        // A NaN/inf exponent poisons the whole CDF.  The old
+        // partial_cmp().unwrap() search panicked on the first draw;
+        // under total_cmp every NaN sorts above u, so sampling is a
+        // deterministic index-0 pick — same seed, same answer.
+        for s in [f64::NAN, f64::INFINITY] {
+            let t = ZipfTable::new(16, s);
+            let mut a = Rng::new(21);
+            let mut b = Rng::new(21);
+            for _ in 0..1000 {
+                let x = t.sample(&mut a);
+                assert!(x < 16);
+                assert_eq!(x, t.sample(&mut b));
+            }
+        }
+        // And an all-equal (s = 0) table still covers the full range.
+        let t = ZipfTable::new(16, 0.0);
+        let mut r = Rng::new(5);
+        let mut seen = [false; 16];
+        for _ in 0..10_000 {
+            seen[t.sample(&mut r)] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "uniform table skipped an index");
     }
 
     #[test]

@@ -1,0 +1,31 @@
+//! The lint gate (ISSUE 8): plain `cargo test` fails if `src/` picks
+//! up a determinism or layering violation, so the contract holds even
+//! where CI's dedicated `lint` job is not wired up.
+
+use std::path::Path;
+
+use patrickstar::lint::lint_tree;
+
+#[test]
+fn src_tree_is_lint_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let report = lint_tree(&root).expect("walk src/");
+    // Sanity: the walk really covered the crate, not an empty dir.
+    assert!(
+        report.files > 30,
+        "only {} files scanned under {} — wrong root?",
+        report.files,
+        root.display(),
+    );
+    if !report.findings.is_empty() {
+        let mut msg = format!(
+            "{} lint finding(s) — fix or add a reviewed \
+             `// lint:allow(<rule>): <reason>`:\n",
+            report.findings.len()
+        );
+        for f in &report.findings {
+            msg.push_str(&format!("  {f}\n"));
+        }
+        panic!("{msg}");
+    }
+}

@@ -535,3 +535,155 @@ fn nproc_sweep_is_deterministic_under_the_adaptive_cell() {
         assert!(r1.iter_time_s > 0.0);
     }
 }
+
+// ---------------------------------------------------------------------
+// 5. Eviction order invariance (ISSUE 8 satellite)
+// ---------------------------------------------------------------------
+//
+// A policy's victim must be a pure function of the candidate *set*:
+// the manager happens to pass id-sorted slices today, but nothing in
+// the `EvictionPolicy` contract promises that, and a pick that depends
+// on slice order (or on the insertion order of the droppable set)
+// would silently diverge the moment a caller builds candidates
+// differently.  Every policy is therefore driven over random
+// permutations of the same set and must return the same victim.
+
+use patrickstar::chunk::{ChunkId, ChunkRegistry, TensorSpec};
+use patrickstar::evict::{BacklogAwareOpt, EvictionPolicy, FifoPolicy,
+                         LfuPolicy, LruPolicy, OptPolicy, TierAwareOpt,
+                         TierPricing};
+use patrickstar::mem::{Device, Interconnect};
+use patrickstar::tracer::MemTracer;
+use std::collections::BTreeSet;
+
+#[test]
+fn property_eviction_pick_is_candidate_order_invariant() {
+    forall(
+        150,
+        |rng| {
+            let n = rng.range(2, 24);
+            // Random next-use schedule with deliberate collisions
+            // (range 0..n/2 forces equal keys) so tie-breaks are
+            // actually exercised, plus some never-used-again chunks.
+            let uses: Vec<Option<u32>> = (0..n)
+                .map(|_| {
+                    if rng.chance(0.2) {
+                        None
+                    } else {
+                        Some((rng.range(1, 2 + n / 2) * 3) as u32)
+                    }
+                })
+                .collect();
+            // Droppable subset, in random insertion order.
+            let mut drop_order: Vec<u32> =
+                (0..n as u32).filter(|_| rng.chance(0.4)).collect();
+            rng.shuffle(&mut drop_order);
+            let margin = rng.range(0, 7) as u32;
+            let now = rng.range(0, 4) as u32;
+            let seed = rng.next_u64();
+            (uses, drop_order, margin, now, seed)
+        },
+        |(uses, drop_order, margin, now, seed)| {
+            let n = uses.len();
+            let mut t = MemTracer::new(n);
+            for (i, u) in uses.iter().enumerate() {
+                if let Some(m) = u {
+                    t.record_chunk_use(ChunkId(i as u32), *m);
+                }
+            }
+            t.finish_warmup();
+            let droppable: BTreeSet<ChunkId> =
+                drop_order.iter().map(|&i| ChunkId(i)).collect();
+            // Real chunk metadata for the priced policy (uniform
+            // sizes: the price tie-chain falls through to next-use
+            // then id, the hardest case for order dependence).
+            let specs: Vec<TensorSpec> = (0..n)
+                .map(|i| TensorSpec {
+                    name: format!("t{i}"),
+                    numel: 50,
+                    embedding: false,
+                })
+                .collect();
+            let chunks =
+                ChunkRegistry::build(&specs, 50).unwrap().chunks;
+            let pricing =
+                TierPricing::from_net(&Interconnect::v100_node());
+
+            // History-based policies see accesses in random order too.
+            let mut rng = patrickstar::util::Rng::new(*seed);
+            let mut access: Vec<u32> = (0..n as u32).collect();
+            rng.shuffle(&mut access);
+            let mut fifo = FifoPolicy::default();
+            let mut lru = LruPolicy::default();
+            let mut lfu = LfuPolicy::default();
+            for (k, &c) in access.iter().enumerate() {
+                // Collide LRU stamps/LFU counts across chunks by
+                // re-accessing: k % 3 extra touches.
+                for _ in 0..=(k % 3) {
+                    fifo.on_access(ChunkId(c), k as u32);
+                    lru.on_access(ChunkId(c), k as u32);
+                    lfu.on_access(ChunkId(c), k as u32);
+                }
+            }
+
+            let base: Vec<ChunkId> =
+                (0..n as u32).map(ChunkId).collect();
+            let mut policies: Vec<(&str, Box<dyn FnMut(&[ChunkId])
+                -> Option<ChunkId> + '_>)> = vec![
+                ("opt", Box::new(|c: &[ChunkId]| {
+                    OptPolicy { tracer: &t }.pick(c, &chunks, *now)
+                })),
+                ("opt+backlog", Box::new(|c: &[ChunkId]| {
+                    BacklogAwareOpt {
+                        tracer: &t,
+                        droppable: droppable.clone(),
+                        margin: *margin,
+                    }
+                    .pick(c, &chunks, *now)
+                })),
+                ("opt+tier", Box::new(|c: &[ChunkId]| {
+                    TierAwareOpt {
+                        tracer: &t,
+                        droppable: droppable.clone(),
+                        margin: *margin,
+                        pricing,
+                        spill_to: Device::Nvme,
+                    }
+                    .pick(c, &chunks, *now)
+                })),
+                ("fifo", Box::new(|c: &[ChunkId]| {
+                    fifo.pick(c, &chunks, *now)
+                })),
+                ("lru", Box::new(|c: &[ChunkId]| {
+                    lru.pick(c, &chunks, *now)
+                })),
+                ("lfu", Box::new(|c: &[ChunkId]| {
+                    lfu.pick(c, &chunks, *now)
+                })),
+            ];
+
+            for (name, pick) in policies.iter_mut() {
+                let reference = pick(&base);
+                if reference.is_none() {
+                    return Err(format!(
+                        "{name}: no victim from {n} candidates"
+                    ));
+                }
+                let mut perm = base.clone();
+                for _ in 0..6 {
+                    rng.shuffle(&mut perm);
+                    let got = pick(&perm);
+                    if got != reference {
+                        return Err(format!(
+                            "{name}: pick {got:?} != {reference:?} \
+                             for permutation {perm:?} of {base:?} \
+                             (droppable {droppable:?}, margin \
+                             {margin}, now {now})"
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}

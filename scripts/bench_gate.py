@@ -16,16 +16,29 @@ Two checks over rust/BENCH_adaptive.json:
    warning; the adaptive-vs-best-static gate always runs.
 
 Exit code 1 on any regression.
+
+A third mode (ISSUE 8 satellite) publishes bench history instead of
+gating: `bench_gate.py --emit-dashboard [outdir]` folds every
+rust/BENCH_*.json into `<outdir>/data.js` (default dev/bench/) in the
+github-action-benchmark "customSmallerIsBetter" format, appending one
+dated entry per suite so the committed file accumulates a browsable
+time series (see ROADMAP: simulator-as-a-planner dashboards).
 """
 
+import glob
 import json
 import os
+import subprocess
 import sys
+import time
 
 FRESH = "rust/BENCH_adaptive.json"
 BASELINE = "rust/benches/baseline/BENCH_adaptive.json"
 NVME = "rust/BENCH_nvme.json"
 TOLERANCE = 1.05
+DASHBOARD_DIR = "dev/bench"
+# Entries kept per suite in data.js (oldest dropped first).
+DASHBOARD_MAX_ENTRIES = 100
 
 
 def load(path):
@@ -133,7 +146,110 @@ def gate_nvme():
     return not bad
 
 
+def load_raw(path):
+    """Load a BENCH JSON file keeping units (the gates only need the
+    name->value map; the dashboard keeps each entry's unit string)."""
+    try:
+        with open(path) as f:
+            entries = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        sys.exit(f"bench gate: cannot read {path} ({e})")
+    if not isinstance(entries, list):
+        sys.exit(f"bench gate: {path} must be a JSON array, got "
+                 f"{type(entries).__name__}")
+    out = []
+    for e in entries:
+        if not isinstance(e, dict) or "name" not in e or "value" not in e:
+            sys.exit(f"bench gate: {path} has an entry without "
+                     f"name/value keys: {e!r}")
+        out.append({"name": e["name"], "value": e["value"],
+                    "unit": e.get("unit", "")})
+    return out
+
+
+def git_head():
+    """HEAD metadata for a dashboard entry; degrades to placeholders
+    outside a git checkout (the dashboard is still valid)."""
+    try:
+        raw = subprocess.check_output(
+            ["git", "log", "-1",
+             "--format=%H%x1f%an%x1f%ae%x1f%cI%x1f%s"],
+            text=True).strip()
+        sha, name, email, stamp, subject = raw.split("\x1f")
+    except (OSError, subprocess.CalledProcessError, ValueError):
+        sha, name, email, stamp, subject = (
+            "unknown", "unknown", "", "", "(no git metadata)")
+    who = {"name": name, "email": email}
+    return {"author": who, "committer": who, "id": sha,
+            "message": subject, "timestamp": stamp, "url": ""}
+
+
+def read_dashboard(path):
+    """Parse an existing data.js (everything after the first '=' is
+    JSON).  A malformed file is a named failure, not a silent reset —
+    the history it holds is the whole point of the file."""
+    if not os.path.exists(path):
+        return {"lastUpdate": 0, "repoUrl": "", "entries": {}}
+    with open(path) as f:
+        text = f.read()
+    eq = text.find("=")
+    if eq < 0:
+        sys.exit(f"bench gate: {path} is not a data.js assignment")
+    try:
+        data = json.loads(text[eq + 1:].rstrip().rstrip(";"))
+    except json.JSONDecodeError as e:
+        sys.exit(f"bench gate: {path} holds invalid JSON ({e}); "
+                 "refusing to overwrite bench history")
+    if not isinstance(data.get("entries"), dict):
+        sys.exit(f"bench gate: {path} has no entries map; refusing to "
+                 "overwrite bench history")
+    return data
+
+
+def emit_dashboard(outdir):
+    """Fold every rust/BENCH_*.json into <outdir>/data.js
+    (github-action-benchmark customSmallerIsBetter format, one suite
+    per BENCH file, one dated entry appended per invocation)."""
+    files = sorted(glob.glob("rust/BENCH_*.json"))
+    if not files:
+        sys.exit("bench gate: no rust/BENCH_*.json to publish — run "
+                 "the bench smokes first (cargo bench)")
+    out_path = os.path.join(outdir, "data.js")
+    data = read_dashboard(out_path)
+    now_ms = int(time.time() * 1000)
+    commit = git_head()
+    data["lastUpdate"] = now_ms
+    for path in files:
+        # rust/BENCH_adaptive.json -> suite "adaptive"
+        suite = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        entry = {
+            "commit": commit,
+            "date": now_ms,
+            "tool": "customSmallerIsBetter",
+            "benches": load_raw(path),
+        }
+        series = data["entries"].setdefault(suite, [])
+        series.append(entry)
+        del series[:-DASHBOARD_MAX_ENTRIES]
+        print(f"dashboard: {suite}: +1 entry "
+              f"({len(entry['benches'])} benches, "
+              f"{len(series)} kept) from {path}")
+    os.makedirs(outdir, exist_ok=True)
+    with open(out_path, "w") as f:
+        f.write("window.BENCHMARK_DATA = ")
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"dashboard: wrote {out_path} @ commit {commit['id'][:12]}")
+
+
 def main():
+    if len(sys.argv) > 1 and sys.argv[1] == "--emit-dashboard":
+        emit_dashboard(sys.argv[2] if len(sys.argv) > 2
+                       else DASHBOARD_DIR)
+        return
+    if len(sys.argv) > 1:
+        sys.exit(f"bench gate: unknown argument {sys.argv[1]!r} "
+                 "(only --emit-dashboard [outdir] is accepted)")
     vals = load(FRESH)
     ok = gate_adaptive_vs_best_static(vals)
     ok = gate_against_baseline(vals) and ok
