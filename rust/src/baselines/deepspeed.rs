@@ -241,6 +241,7 @@ impl DeepSpeedSim {
             nvme_peak: 0,
             non_model_peak: peak_nm,
             chaos: None,
+            rescales: Vec::new(),
         })
     }
 }

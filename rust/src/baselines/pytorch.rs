@@ -102,6 +102,7 @@ impl PyTorchDdpSim {
             nvme_peak: 0,
             non_model_peak: peak_nm,
             chaos: None,
+            rescales: Vec::new(),
         })
     }
 }

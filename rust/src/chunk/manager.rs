@@ -153,6 +153,27 @@ impl ChunkManager {
         self
     }
 
+    /// Re-derive the shared (host-sharded) tier budgets after an
+    /// elastic rescale (ISSUE 9): each rank sees `cpu_total/nproc` of
+    /// host memory and `nvme_total/nproc` of the NVMe tier, so a
+    /// world-size change re-caps both.  GPU capacity is per-device and
+    /// untouched.  A shrink *grows* the per-rank shares (resident
+    /// payloads always still fit); a grow may leave a tier transiently
+    /// over-capacity, which the same `evict_to_fit` pass that settles
+    /// warm-up cap-shrinks restores.
+    pub fn resize_shared_tiers(
+        &mut self,
+        cpu_bytes: u64,
+        nvme_bytes: Option<u64>,
+    ) {
+        self.space.dev_mut(Device::Cpu).set_capacity(cpu_bytes);
+        if let Some(nb) = nvme_bytes {
+            if self.space.has(Device::Nvme) {
+                self.space.dev_mut(Device::Nvme).set_capacity(nb);
+            }
+        }
+    }
+
     // ------------------------------------------------------------ queries
 
     pub fn chunk(&self, id: ChunkId) -> &Chunk {
@@ -901,6 +922,21 @@ mod tests {
     fn mk(n_tensors: usize, numel: u64, chunk_elems: u64,
           gpu: u64, cpu: u64) -> ChunkManager {
         mk3(n_tensors, numel, chunk_elems, gpu, cpu, 0)
+    }
+
+    #[test]
+    fn resize_shared_tiers_recaps_cpu_and_nvme_only() {
+        let mut m = mk3(2, 50, 100, 1_000, 10_000, 4_000);
+        m.resize_shared_tiers(20_000, Some(8_000));
+        assert_eq!(m.space.dev(Device::Cpu).capacity, 20_000);
+        assert_eq!(m.space.dev(Device::Nvme).capacity, 8_000);
+        assert_eq!(m.space.dev(Device::Gpu(0)).capacity, 1_000);
+        // A two-tier manager ignores the NVMe share (the device is
+        // absent, not zero-capacity — the --nvme-gb 0 contract).
+        let mut two = mk(2, 50, 100, 1_000, 10_000);
+        two.resize_shared_tiers(5_000, Some(8_000));
+        assert_eq!(two.space.dev(Device::Cpu).capacity, 5_000);
+        assert!(!two.space.has(Device::Nvme));
     }
 
     #[test]

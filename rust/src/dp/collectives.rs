@@ -105,6 +105,26 @@ impl CollectiveCost {
         6.0 * self.ratio() * m_params as f64
     }
 
+    /// One elastic re-shard transfer (ISSUE 9): `total_bytes` of owned
+    /// state crossing the wire in `n_shards` point-to-point messages
+    /// when the comm world re-partitions.  Each moved shard travels
+    /// exactly once, priced at the link's effective bandwidth for the
+    /// per-shard message size plus one link latency per shard — no
+    /// ring amplification: this is a permutation route, not a
+    /// collective, so wire bytes equal payload bytes exactly (the
+    /// conservation invariant the re-shard property tests lock).
+    pub fn reshard_op(&self, total_bytes: u64, n_shards: usize) -> CollectiveOp {
+        if n_shards == 0 || total_bytes == 0 {
+            return CollectiveOp { secs: 0.0, bytes: 0 };
+        }
+        let msg = (total_bytes / n_shards as u64).max(1);
+        CollectiveOp {
+            secs: total_bytes as f64 / self.link.effective_bps(msg)
+                + self.link.latency_s * n_shards as f64,
+            bytes: total_bytes,
+        }
+    }
+
     /// Broadcast-based baseline = 10(p-1)/p·M.
     pub fn broadcast_iter_bytes(&self, m_params: u64) -> f64 {
         10.0 * self.ratio() * m_params as f64
@@ -214,6 +234,30 @@ mod tests {
             }
         }
         assert_eq!(cost(1).allgather_op(1 << 20).secs, 0.0);
+    }
+
+    #[test]
+    fn reshard_op_bytes_equal_payload() {
+        // A re-shard is a permutation route: wire bytes == payload
+        // bytes, with no (p-1)/p ring amplification at either world
+        // size, and an empty plan is free.
+        for p in [1usize, 2, 4, 8] {
+            let c = cost(p);
+            let op = c.reshard_op(96 << 20, 6);
+            assert_eq!(op.bytes, 96 << 20);
+            assert!(op.secs > 0.0);
+        }
+        assert_eq!(cost(4).reshard_op(0, 0), CollectiveOp {
+            secs: 0.0,
+            bytes: 0,
+        });
+        assert_eq!(cost(4).reshard_op(1 << 20, 0).bytes, 0);
+        // More, smaller messages cost more time for the same payload
+        // (latency per shard + worse effective bandwidth).
+        let c = cost(4);
+        let few = c.reshard_op(64 << 20, 4).secs;
+        let many = c.reshard_op(64 << 20, 64).secs;
+        assert!(many > few, "{many} <= {few}");
     }
 
     #[test]

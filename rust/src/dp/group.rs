@@ -62,6 +62,40 @@ impl CommGroups {
     pub fn owned_by(&self, r: usize) -> Vec<usize> {
         (0..self.list_len).filter(|&p| self.owner_of(p) == r).collect()
     }
+
+    /// Re-shard plan to a different comm world (elastic re-scaling,
+    /// ISSUE 9): the position-ascending list of shards whose owner
+    /// changes between `self` (p ranks) and `to` (p' ranks).  Positions
+    /// with `pos % p == pos % p'` stay put and move zero bytes; every
+    /// other position crosses the wire exactly once, from its old owner
+    /// to its new one.  Both worlds partition the same chunk list, so
+    /// the plan is total by construction: applying every move to
+    /// `self`'s ownership map yields exactly `to`'s.
+    pub fn reshard_moves(&self, to: &CommGroups) -> Vec<ShardMove> {
+        assert_eq!(
+            self.list_len, to.list_len,
+            "re-shard must keep the chunk list: {} vs {}",
+            self.list_len, to.list_len
+        );
+        (0..self.list_len)
+            .filter_map(|pos| {
+                let from = self.owner_of(pos);
+                let dst = to.owner_of(pos);
+                (from != dst).some(ShardMove { pos, from, to: dst })
+            })
+            .collect()
+    }
+}
+
+/// One shard whose owner changes when the comm world re-partitions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardMove {
+    /// Chunk-list position of the moving shard.
+    pub pos: usize,
+    /// Owner rank in the old world.
+    pub from: usize,
+    /// Owner rank in the new world.
+    pub to: usize,
 }
 
 /// One group all-gather in flight on the collective stream.
@@ -285,6 +319,91 @@ mod tests {
         p.set_rs_done(5, 1.0);
         p.clear();
         assert_eq!(p.take_rs_done(5), None);
+    }
+
+    #[test]
+    fn reshard_identity_is_empty() {
+        let g = CommGroups::new(10, 4);
+        assert_eq!(g.reshard_moves(&CommGroups::new(10, 4)), vec![]);
+    }
+
+    #[test]
+    fn reshard_shrink_four_to_two() {
+        // 6 chunks, 4 -> 2 ranks: positions keep owner iff
+        // pos % 4 == pos % 2, i.e. pos in {0, 1, 4, 5}.
+        let from = CommGroups::new(6, 4);
+        let to = CommGroups::new(6, 2);
+        assert_eq!(
+            from.reshard_moves(&to),
+            vec![
+                ShardMove { pos: 2, from: 2, to: 0 },
+                ShardMove { pos: 3, from: 3, to: 1 },
+            ]
+        );
+    }
+
+    #[test]
+    fn property_reshard_conserves_coverage() {
+        // Over random (len, p, p') triples: applying the move list to
+        // the old ownership map yields exactly the new one — every
+        // shard lands exactly once, none is lost or duplicated, and
+        // both worlds remain a partition of the same chunk list.
+        forall(
+            100,
+            |rng| {
+                (rng.range(1, 120), rng.range(1, 13), rng.range(1, 13))
+            },
+            |&(len, p, p2)| {
+                let from = CommGroups::new(len, p);
+                let to = CommGroups::new(len, p2);
+                let moves = from.reshard_moves(&to);
+                let mut owner: Vec<usize> =
+                    (0..len).map(|pos| from.owner_of(pos)).collect();
+                let mut moved = vec![false; len];
+                for m in &moves {
+                    if moved[m.pos] {
+                        return Err(format!(
+                            "position {} moved twice",
+                            m.pos
+                        ));
+                    }
+                    moved[m.pos] = true;
+                    if owner[m.pos] != m.from {
+                        return Err(format!(
+                            "move at {} claims owner {} but old world \
+                             says {}",
+                            m.pos, m.from, owner[m.pos]
+                        ));
+                    }
+                    if m.from == m.to {
+                        return Err(format!(
+                            "no-op move at {} ({} -> {})",
+                            m.pos, m.from, m.to
+                        ));
+                    }
+                    owner[m.pos] = m.to;
+                }
+                for pos in 0..len {
+                    if owner[pos] != to.owner_of(pos) {
+                        return Err(format!(
+                            "after re-shard, {pos} owned by {} not {}",
+                            owner[pos],
+                            to.owner_of(pos)
+                        ));
+                    }
+                }
+                // Symmetry: the reverse plan moves the same positions.
+                let back = to.reshard_moves(&from);
+                if back.len() != moves.len() {
+                    return Err(format!(
+                        "reverse plan moves {} shards, forward {}",
+                        back.len(),
+                        moves.len()
+                    ));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

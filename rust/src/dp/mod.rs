@@ -18,4 +18,4 @@ pub mod collectives;
 pub mod group;
 
 pub use collectives::{CollectiveCost, CollectiveOp, RealCollectives};
-pub use group::{CollectivePipeline, CommGroups, InFlightGather};
+pub use group::{CollectivePipeline, CommGroups, InFlightGather, ShardMove};

@@ -210,6 +210,17 @@ pub trait ExecutionBackend {
     /// Wire time + per-rank byte volume of one group reduce-scatter.
     fn reduce_scatter_cost(&self, chunk_bytes: u64) -> CollectiveOp;
 
+    /// Wire time + byte volume of one elastic re-shard transfer:
+    /// `total_bytes` of owned state crossing the wire in `n_shards`
+    /// point-to-point messages when the comm world re-partitions
+    /// (ISSUE 9).  Defaulted free so backends that never rescale (and
+    /// measuring backends, which price everything at zero) compile
+    /// untouched; `SimBackend` prices it on the collective link.
+    fn reshard_cost(&self, total_bytes: u64, n_shards: usize) -> CollectiveOp {
+        let _ = (total_bytes, n_shards);
+        CollectiveOp { secs: 0.0, bytes: 0 }
+    }
+
     // ---------------------------------------------------------- probes
 
     /// Current compute-lane time (lease clocks, landed-copy checks).
@@ -235,6 +246,15 @@ pub trait ExecutionBackend {
     /// Restart the clock at zero (iteration boundary).
     fn reset(&mut self);
 
+    /// The comm world re-partitioned to `nproc` ranks (elastic rescale,
+    /// ISSUE 9): re-derive any world-size-dependent pricing state.
+    /// Defaulted no-op for backends whose pricing is world-agnostic;
+    /// `SimBackend` rebuilds its `CollectiveCost` ring, and the chaos
+    /// decorator additionally updates its straggler-rank bound.
+    fn rescale_world(&mut self, nproc: usize) {
+        let _ = nproc;
+    }
+
     /// Iteration wall time so far.
     fn makespan(&self) -> f64;
 
@@ -252,6 +272,14 @@ pub trait ExecutionBackend {
     /// never abort; only fault-injecting decorators
     /// ([`super::chaos::ChaosBackend`]) override this.
     fn poll_abort(&mut self) -> bool {
+        false
+    }
+
+    /// Poll for an injected rank failure.  The engine asks once per
+    /// iteration boundary; `true` means "one rank left the comm world
+    /// — shrink and re-shard now".  Only the chaos decorator's
+    /// opt-in `rank-fail` lane ever returns `true` (ISSUE 9).
+    fn poll_rank_fail(&mut self) -> bool {
         false
     }
 
@@ -448,6 +476,10 @@ impl ExecutionBackend for SimBackend {
         self.cc.reduce_scatter_op(chunk_bytes)
     }
 
+    fn reshard_cost(&self, total_bytes: u64, n_shards: usize) -> CollectiveOp {
+        self.cc.reshard_op(total_bytes, n_shards)
+    }
+
     fn now(&self) -> f64 {
         self.tl.now()
     }
@@ -474,6 +506,12 @@ impl ExecutionBackend for SimBackend {
 
     fn reset(&mut self) {
         self.tl.reset();
+    }
+
+    fn rescale_world(&mut self, nproc: usize) {
+        // CollectiveCost is pinned at construction; a rescale rebuilds
+        // the ring over the same link at the new world size.
+        self.cc = CollectiveCost::new(self.net.nvlink, nproc);
     }
 
     fn makespan(&self) -> f64 {
@@ -759,6 +797,21 @@ mod tests {
             assert_eq!(b.allgather_cost(bytes), cc.allgather_op(bytes));
             assert_eq!(b.reduce_scatter_cost(bytes),
                        cc.reduce_scatter_op(bytes));
+            assert_eq!(b.reshard_cost(bytes, 2), cc.reshard_op(bytes, 2));
+        }
+    }
+
+    /// A rescale rebuilds the collective ring at the new world size:
+    /// post-rescale prices match a backend constructed there (ISSUE 9).
+    #[test]
+    fn sim_backend_rescale_rebuilds_the_ring() {
+        let cluster = ClusterPreset::yard();
+        let mut b = SimBackend::new(true, cluster.net, 4);
+        b.rescale_world(2);
+        let cc = CollectiveCost::new(cluster.net.nvlink, 2);
+        for bytes in [1u64 << 10, 1 << 20, 1 << 28] {
+            assert_eq!(b.allgather_cost(bytes), cc.allgather_op(bytes));
+            assert_eq!(b.reshard_cost(bytes, 3), cc.reshard_op(bytes, 3));
         }
     }
 }

@@ -61,33 +61,61 @@ const PRESSURE_SPIKE_SECS: f64 = 0.01;
 /// Which faults to inject, how often, how hard, and from which seed.
 ///
 /// Parsed from `--chaos <spec>`: `all` or a `+`-separated subset of
-/// `jitter`, `straggler`, `pressure`, `abort`, with optional
-/// `:rate=R,intensity=I` parameters — e.g. `--chaos
-/// jitter+abort:rate=0.2,intensity=3`.
+/// `jitter`, `straggler`, `pressure`, `abort`, `burst`, `rank-fail`,
+/// with optional `:rate=R,intensity=I,rank=N` parameters — e.g.
+/// `--chaos jitter+abort:rate=0.2,intensity=3` or `--chaos
+/// straggler:rank=2,intensity=1.5`.  Each kind and each parameter may
+/// appear at most once; duplicates and out-of-range values are named
+/// parse errors, never silent last-write-wins (ISSUE 9 satellite).
+///
+/// `all` deliberately remains the original four lanes: `burst` (a
+/// correlated-window *shape* over jitter/straggler/pressure faults)
+/// and `rank-fail` (a world-size-changing event) are opt-in, so every
+/// pre-existing `--chaos all` trace replays unchanged.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ChaosPlan {
     pub jitter: bool,
     pub straggler: bool,
     pub pressure: bool,
     pub abort: bool,
+    /// Correlated burst windows (ISSUE 9): when a jitter/straggler/
+    /// pressure fault fires, the same perturbation repeats for a
+    /// window of consecutive pricings on that lane instead of fading
+    /// immediately — one seed draw correlates several moments.
+    pub burst: bool,
+    /// Rank-failure lane (ISSUE 9): `poll_rank_fail` may report a lost
+    /// rank at an iteration boundary, driving the engine's elastic
+    /// shrink-and-re-shard path.
+    pub rank_fail: bool,
     /// Per-query fault probability in `[0, 1]`.
     pub rate: f64,
     /// Fault magnitude scale (> 0).
     pub intensity: f64,
+    /// Named straggler rank (`rank=N`): instead of uniform per-query
+    /// collective jitter, rank N persistently stretches *every*
+    /// collective it participates in; once an elastic shrink drops the
+    /// world at or below N, the straggler leaves with it.
+    pub straggler_rank: Option<u32>,
     /// Root seed; every lane forks its own stream from it.
     pub seed: u64,
 }
 
 impl ChaosPlan {
-    /// Every fault lane enabled at the default rate/intensity.
+    /// The original four fault lanes at the default rate/intensity.
+    /// Deliberately NOT every lane: burst and rank-fail are opt-in so
+    /// `--chaos all` traces (and the wire-volume invariance tests,
+    /// which a world-size change would void) replay unchanged.
     pub fn all(seed: u64) -> Self {
         ChaosPlan {
             jitter: true,
             straggler: true,
             pressure: true,
             abort: true,
+            burst: false,
+            rank_fail: false,
             rate: DEFAULT_CHAOS_RATE,
             intensity: DEFAULT_CHAOS_INTENSITY,
+            straggler_rank: None,
             seed,
         }
     }
@@ -100,16 +128,27 @@ impl ChaosPlan {
             straggler: false,
             pressure: false,
             abort: false,
+            burst: false,
+            rank_fail: false,
             rate: DEFAULT_CHAOS_RATE,
             intensity: DEFAULT_CHAOS_INTENSITY,
+            straggler_rank: None,
             seed,
         }
     }
 
-    /// Whether any lane can ever fire.
+    /// Whether any lane can ever fire.  A named straggler rank fires
+    /// on every collective (no chance draw), so it activates the plan
+    /// even at rate 0.
     pub fn is_active(&self) -> bool {
-        (self.jitter || self.straggler || self.pressure || self.abort)
-            && self.rate > 0.0
+        let lanes = self.jitter
+            || self.straggler
+            || self.pressure
+            || self.abort
+            || self.rank_fail;
+        lanes
+            && (self.rate > 0.0
+                || (self.straggler && self.straggler_rank.is_some()))
     }
 
     /// Parse a `--chaos` spec (see type docs for the grammar).
@@ -123,46 +162,94 @@ impl ChaosPlan {
             plan = ChaosPlan::all(seed);
         } else {
             for kind in kinds.split('+') {
-                match kind {
-                    "jitter" => plan.jitter = true,
-                    "straggler" => plan.straggler = true,
-                    "pressure" => plan.pressure = true,
-                    "abort" => plan.abort = true,
+                let lane = match kind {
+                    "jitter" => &mut plan.jitter,
+                    "straggler" => &mut plan.straggler,
+                    "pressure" => &mut plan.pressure,
+                    "abort" => &mut plan.abort,
+                    "burst" => &mut plan.burst,
+                    "rank-fail" => &mut plan.rank_fail,
                     _ => bail!(
                         "unknown chaos fault kind {kind:?} (want all, \
-                         or a + of jitter/straggler/pressure/abort)"
+                         or a + of jitter/straggler/pressure/abort/\
+                         burst/rank-fail)"
                     ),
+                };
+                if *lane {
+                    bail!(
+                        "duplicate chaos fault kind {kind:?} (each \
+                         lane may appear once)"
+                    );
                 }
+                *lane = true;
             }
         }
         if let Some(params) = params {
+            let mut seen: Vec<&str> = Vec::new();
             for kv in params.split(',') {
                 let Some((k, v)) = kv.split_once('=') else {
                     bail!("malformed chaos parameter {kv:?} (want k=v)");
                 };
-                let x: f64 = v.parse().map_err(|_| {
-                    anyhow::anyhow!("chaos parameter {k}={v:?} is not \
-                                     a number")
-                })?;
+                if seen.contains(&k) {
+                    bail!(
+                        "duplicate chaos parameter {k:?} (each \
+                         parameter may appear once)"
+                    );
+                }
+                seen.push(k);
                 match k {
-                    "rate" => {
-                        if !(0.0..=1.0).contains(&x) {
-                            bail!("chaos rate {x} outside [0, 1]");
+                    "rate" | "intensity" => {
+                        let x: f64 = v.parse().map_err(|_| {
+                            anyhow::anyhow!(
+                                "chaos parameter {k}={v:?} is not a \
+                                 number"
+                            )
+                        })?;
+                        if k == "rate" {
+                            if !(0.0..=1.0).contains(&x) {
+                                bail!("chaos rate {x} outside [0, 1]");
+                            }
+                            plan.rate = x;
+                        } else {
+                            if !(x.is_finite() && x > 0.0) {
+                                bail!(
+                                    "chaos intensity {x} must be a \
+                                     finite number > 0"
+                                );
+                            }
+                            plan.intensity = x;
                         }
-                        plan.rate = x;
                     }
-                    "intensity" => {
-                        if x <= 0.0 {
-                            bail!("chaos intensity {x} must be > 0");
-                        }
-                        plan.intensity = x;
+                    "rank" => {
+                        let r: u32 = v.parse().map_err(|_| {
+                            anyhow::anyhow!(
+                                "chaos parameter rank={v:?} is not a \
+                                 rank index"
+                            )
+                        })?;
+                        plan.straggler_rank = Some(r);
                     }
                     _ => bail!(
-                        "unknown chaos parameter {k:?} (want rate or \
-                         intensity)"
+                        "unknown chaos parameter {k:?} (want rate, \
+                         intensity, or rank)"
                     ),
                 }
             }
+        }
+        if plan.straggler_rank.is_some() && !plan.straggler {
+            bail!(
+                "chaos parameter rank=N names a straggler rank; it \
+                 needs the straggler lane enabled"
+            );
+        }
+        if plan.burst
+            && !(plan.jitter || plan.straggler || plan.pressure)
+        {
+            bail!(
+                "chaos kind \"burst\" is a correlation shape over \
+                 jitter/straggler/pressure; enable at least one of \
+                 those lanes with it"
+            );
         }
         Ok(plan)
     }
@@ -185,6 +272,18 @@ pub struct ChaosStats {
     pub aborts: u64,
 }
 
+/// Extra correlated pricings one burst window carries beyond the
+/// fault that opened it: `2 + burst_lane.range(0, BURST_EXTRA_MAX)`.
+const BURST_EXTRA_MAX: usize = 5;
+
+/// One open burst window on a pricing lane: how many more pricings it
+/// covers, and the frozen stretch factor they all repeat.
+#[derive(Clone, Copy, Debug, Default)]
+struct BurstWindow {
+    left: u32,
+    stretch: f64,
+}
+
 /// Per-lane RNG streams plus the counters — behind a `RefCell` because
 /// the pricing methods take `&self`.
 #[derive(Clone, Debug)]
@@ -198,6 +297,25 @@ struct ChaosState {
     /// last so the first five lanes keep their pre-NVMe streams — a
     /// two-tier chaos run replays the exact same faults as before.
     copy_nvme: Rng,
+    /// Burst-window lengths (ISSUE 9, lane 7): drawn only when a fault
+    /// fires with the burst shape enabled, so burst-off runs draw zero
+    /// numbers here and every earlier lane keeps its stream.
+    burst: Rng,
+    /// Named-straggler magnitudes (ISSUE 9, lane 8): one draw per
+    /// collective the named rank stretches.
+    straggler_profile: Rng,
+    /// Rank-failure events (ISSUE 9, lane 9): one draw per iteration
+    /// boundary poll when the rank-fail lane is enabled.
+    rank_fail: Rng,
+    /// Open burst windows per copy route (pinned, pageable, nvme).
+    burst_copy: [BurstWindow; 3],
+    /// Open burst window on the collective lane.
+    burst_coll: BurstWindow,
+    /// Remaining pressure-spike pricings in the open burst window.
+    burst_pressure: u32,
+    /// Current comm world size, updated by `rescale_world`; `None`
+    /// until the first rescale (every configured rank present).
+    world: Option<u32>,
     stats: ChaosStats,
 }
 
@@ -211,8 +329,21 @@ impl ChaosState {
             pressure: root.fork(4),
             abort: root.fork(5),
             copy_nvme: root.fork(6),
+            burst: root.fork(7),
+            straggler_profile: root.fork(8),
+            rank_fail: root.fork(9),
+            burst_copy: [BurstWindow::default(); 3],
+            burst_coll: BurstWindow::default(),
+            burst_pressure: 0,
+            world: None,
             stats: ChaosStats::default(),
         }
+    }
+
+    /// Burst-window length for a fault that just fired (>= 2 extra
+    /// pricings, so a burst is always observably correlated).
+    fn draw_burst_len(&mut self) -> u32 {
+        (2 + self.burst.range(0, BURST_EXTRA_MAX)) as u32
     }
 }
 
@@ -248,12 +379,25 @@ impl<B: ExecutionBackend> ChaosBackend<B> {
         self.state.borrow().stats
     }
 
-    /// Stretch one copy pricing on its route's jitter lane.
+    /// Stretch one copy pricing on its route's jitter lane.  With the
+    /// burst shape, a firing fault freezes its stretch for a window of
+    /// consecutive pricings on the same route — correlated slowdowns
+    /// from one seed draw, no fresh chance draws inside the window.
     fn perturb_copy(&self, base: f64, route: CopyRoute) -> f64 {
         if !self.plan.jitter || base <= 0.0 {
             return base;
         }
         let st = &mut *self.state.borrow_mut();
+        let idx = match route {
+            CopyRoute::Pinned => 0,
+            CopyRoute::Pageable => 1,
+            CopyRoute::NvmeStaged => 2,
+        };
+        if self.plan.burst && st.burst_copy[idx].left > 0 {
+            st.burst_copy[idx].left -= 1;
+            st.stats.copy_slowdowns += 1;
+            return base * st.burst_copy[idx].stretch;
+        }
         let lane = match route {
             CopyRoute::Pinned => &mut st.copy_pinned,
             CopyRoute::Pageable => &mut st.copy_pageable,
@@ -262,6 +406,10 @@ impl<B: ExecutionBackend> ChaosBackend<B> {
         if lane.chance(self.plan.rate) {
             let stretch = 1.0 + self.plan.intensity * lane.f64();
             st.stats.copy_slowdowns += 1;
+            if self.plan.burst {
+                let left = st.draw_burst_len();
+                st.burst_copy[idx] = BurstWindow { left, stretch };
+            }
             base * stretch
         } else {
             base
@@ -269,15 +417,42 @@ impl<B: ExecutionBackend> ChaosBackend<B> {
     }
 
     /// Stretch one collective pricing's wire time; the byte volume is
-    /// untouched by construction (the wire-volume invariant).
+    /// untouched by construction (the wire-volume invariant).  A named
+    /// straggler rank (`rank=N`) stretches *every* collective the rank
+    /// participates in — no chance draw, magnitude from its own lane —
+    /// until an elastic shrink drops the world at or below N.
     fn perturb_collective(&self, base: CollectiveOp) -> CollectiveOp {
         if !self.plan.straggler || base.secs <= 0.0 {
             return base;
         }
         let st = &mut *self.state.borrow_mut();
+        if let Some(r) = self.plan.straggler_rank {
+            if st.world.is_none_or(|w| r < w) {
+                let stretch = 1.0
+                    + self.plan.intensity * st.straggler_profile.f64();
+                st.stats.collective_stretches += 1;
+                return CollectiveOp {
+                    secs: base.secs * stretch,
+                    bytes: base.bytes,
+                };
+            }
+            return base;
+        }
+        if self.plan.burst && st.burst_coll.left > 0 {
+            st.burst_coll.left -= 1;
+            st.stats.collective_stretches += 1;
+            return CollectiveOp {
+                secs: base.secs * st.burst_coll.stretch,
+                bytes: base.bytes,
+            };
+        }
         if st.coll.chance(self.plan.rate) {
             let stretch = 1.0 + self.plan.intensity * st.coll.f64();
             st.stats.collective_stretches += 1;
+            if self.plan.burst {
+                let left = st.draw_burst_len();
+                st.burst_coll = BurstWindow { left, stretch };
+            }
             CollectiveOp { secs: base.secs * stretch, bytes: base.bytes }
         } else {
             base
@@ -290,8 +465,16 @@ impl<B: ExecutionBackend> ChaosBackend<B> {
             return base;
         }
         let st = &mut *self.state.borrow_mut();
+        if self.plan.burst && st.burst_pressure > 0 {
+            st.burst_pressure -= 1;
+            st.stats.pressure_spikes += 1;
+            return base + self.plan.intensity * PRESSURE_SPIKE_SECS;
+        }
         if st.pressure.chance(self.plan.rate) {
             st.stats.pressure_spikes += 1;
+            if self.plan.burst {
+                st.burst_pressure = st.draw_burst_len();
+            }
             base + self.plan.intensity * PRESSURE_SPIKE_SECS
         } else {
             base
@@ -436,6 +619,14 @@ impl<B: ExecutionBackend> ExecutionBackend for ChaosBackend<B> {
         )
     }
 
+    // Re-shard pricing is a pure delegation: the rescale event itself
+    // is the fault — perturbing its pricing would entangle the
+    // conservation property tests with the jitter lanes for no extra
+    // coverage (time stretches elsewhere already exercise the paths).
+    fn reshard_cost(&self, total_bytes: u64, n_shards: usize) -> CollectiveOp {
+        self.inner.reshard_cost(total_bytes, n_shards)
+    }
+
     // Probes: the work accumulators stay honest (the controller
     // differences them; a fake delta could go negative), only the
     // backlog signals spike.
@@ -470,6 +661,14 @@ impl<B: ExecutionBackend> ExecutionBackend for ChaosBackend<B> {
         self.inner.reset();
     }
 
+    fn rescale_world(&mut self, nproc: usize) {
+        // Track the world so a named straggler rank stops firing once
+        // a shrink drops the world at or below it; the fault lanes are
+        // deliberately NOT rewound (same contract as `reset`).
+        self.state.get_mut().world = Some(nproc as u32);
+        self.inner.rescale_world(nproc);
+    }
+
     fn makespan(&self) -> f64 {
         self.inner.makespan()
     }
@@ -493,6 +692,14 @@ impl<B: ExecutionBackend> ExecutionBackend for ChaosBackend<B> {
         } else {
             false
         }
+    }
+
+    fn poll_rank_fail(&mut self) -> bool {
+        if !self.plan.rank_fail {
+            return false;
+        }
+        let st = self.state.get_mut();
+        st.rank_fail.chance(self.plan.rate)
     }
 
     fn chaos_stats(&self) -> Option<ChaosStats> {
@@ -523,6 +730,152 @@ mod tests {
         assert!(ChaosPlan::parse("jitter:intensity=0", 0).is_err());
         assert!(ChaosPlan::parse("jitter:rate", 0).is_err());
         assert!(ChaosPlan::parse("jitter:depth=1", 0).is_err());
+    }
+
+    #[test]
+    fn parse_rejects_duplicates_with_named_errors() {
+        // ISSUE 9 satellite: duplicate lanes and repeated parameters
+        // are named errors, never silent last-write-wins.
+        let e = ChaosPlan::parse("jitter+jitter", 0).unwrap_err();
+        assert!(e.to_string().contains("duplicate chaos fault kind"),
+                "{e}");
+        let e = ChaosPlan::parse("jitter:rate=0.1,rate=0.9", 0)
+            .unwrap_err();
+        assert!(e.to_string().contains("duplicate chaos parameter"),
+                "{e}");
+        assert!(ChaosPlan::parse(
+            "jitter:intensity=1,intensity=2", 0).is_err());
+        // NaN/inf magnitudes are out-of-range, not accepted-and-weird.
+        assert!(ChaosPlan::parse("jitter:rate=nan", 0).is_err());
+        assert!(ChaosPlan::parse("jitter:intensity=nan", 0).is_err());
+        assert!(ChaosPlan::parse("jitter:intensity=inf", 0).is_err());
+    }
+
+    #[test]
+    fn parse_new_fault_shapes() {
+        // burst and rank-fail are opt-in kinds; rank=N names the
+        // straggler and requires its lane.
+        let p = ChaosPlan::parse("jitter+burst", 0).unwrap();
+        assert!(p.jitter && p.burst && !p.rank_fail);
+        let p = ChaosPlan::parse("rank-fail:rate=0.3", 0).unwrap();
+        assert!(p.rank_fail && !p.jitter && p.rate == 0.3);
+        let p = ChaosPlan::parse("straggler:rank=2", 0).unwrap();
+        assert_eq!(p.straggler_rank, Some(2));
+        assert!(p.is_active(), "named straggler fires without rate");
+        assert!(ChaosPlan::parse("jitter:rank=1", 0).is_err());
+        assert!(ChaosPlan::parse("straggler:rank=-1", 0).is_err());
+        assert!(ChaosPlan::parse("burst", 0).is_err());
+        assert!(ChaosPlan::parse("burst+abort", 0).is_err());
+        // `all` stays the original four lanes: pre-existing traces
+        // must not grow new fault draws.
+        let p = ChaosPlan::parse("all", 7).unwrap();
+        assert!(!p.burst && !p.rank_fail && p.straggler_rank.is_none());
+    }
+
+    #[test]
+    fn burst_correlates_consecutive_pricings() {
+        // Once a jitter fault fires with the burst shape, the *same*
+        // stretch factor repeats for >= 2 further pricings on that
+        // route — a correlated window, not independent draws.
+        let plan = ChaosPlan {
+            jitter: true,
+            burst: true,
+            rate: 0.3,
+            intensity: 2.0,
+            ..ChaosPlan::disabled(13)
+        };
+        let be = ChaosBackend::new(sim(), plan);
+        let base = sim().copy_secs(1 << 20, CopyRoute::Pinned);
+        let ratios: Vec<f64> = (0..400)
+            .map(|_| be.copy_secs(1 << 20, CopyRoute::Pinned) / base)
+            .collect();
+        let mut windows = 0;
+        let mut i = 0;
+        while i < ratios.len() {
+            if ratios[i] > 1.0 {
+                let mut run = 1;
+                while i + run < ratios.len()
+                    && ratios[i + run].to_bits() == ratios[i].to_bits()
+                {
+                    run += 1;
+                }
+                assert!(
+                    run >= 3,
+                    "burst window at {i} repeated only {run}x"
+                );
+                windows += 1;
+                i += run;
+            } else {
+                i += 1;
+            }
+        }
+        assert!(windows > 0, "no burst ever fired");
+        // Same seed replays the same windows.
+        let b2 = ChaosBackend::new(sim(), plan);
+        for &r in &ratios {
+            let got = b2.copy_secs(1 << 20, CopyRoute::Pinned) / base;
+            assert_eq!(got.to_bits(), r.to_bits());
+        }
+    }
+
+    #[test]
+    fn named_straggler_rank_stretches_until_it_leaves() {
+        // rank=2 stretches every collective (no chance draw) while
+        // rank 2 is in the world; after a shrink to world size 2 the
+        // straggler left, and collectives price clean again.
+        let plan = ChaosPlan {
+            straggler: true,
+            straggler_rank: Some(2),
+            rate: 0.0,
+            intensity: 1.5,
+            ..ChaosPlan::disabled(31)
+        };
+        let mut be = ChaosBackend::new(sim(), plan);
+        let raw = sim();
+        for i in 1..50u64 {
+            let bytes = i << 12;
+            let (g, g0) = (be.allgather_cost(bytes), raw.allgather_cost(bytes));
+            assert!(g.secs > g0.secs, "straggler skipped a collective");
+            assert_eq!(g.bytes, g0.bytes);
+        }
+        assert!(be.stats().collective_stretches >= 49);
+        be.rescale_world(2);
+        let raw2 = SimBackend::new(true, ClusterPreset::yard().net, 2);
+        let before = be.stats().collective_stretches;
+        for i in 1..50u64 {
+            let bytes = i << 12;
+            let (g, g0) =
+                (be.allgather_cost(bytes), raw2.allgather_cost(bytes));
+            assert_eq!(g.secs.to_bits(), g0.secs.to_bits());
+        }
+        assert_eq!(be.stats().collective_stretches, before);
+    }
+
+    #[test]
+    fn rank_fail_lane_is_deterministic_and_opt_in() {
+        // `all` never reports a rank failure; an enabled lane replays
+        // the same failure sequence per seed.
+        let mut all = ChaosBackend::new(
+            sim(),
+            ChaosPlan { rate: 1.0, ..ChaosPlan::all(5) },
+        );
+        for _ in 0..32 {
+            assert!(!all.poll_rank_fail());
+        }
+        let plan = ChaosPlan {
+            rank_fail: true,
+            rate: 0.4,
+            ..ChaosPlan::disabled(17)
+        };
+        let mut a = ChaosBackend::new(sim(), plan);
+        let mut b = ChaosBackend::new(sim(), plan);
+        let mut fails = 0;
+        for _ in 0..64 {
+            let fa = a.poll_rank_fail();
+            assert_eq!(fa, b.poll_rank_fail());
+            fails += fa as u32;
+        }
+        assert!(fails > 0, "rank-fail lane never fired at rate 0.4");
     }
 
     #[test]

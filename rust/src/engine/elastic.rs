@@ -1,0 +1,215 @@
+//! Elastic re-scaling plans (ISSUE 9 tentpole).
+//!
+//! An [`ElasticPlan`] schedules world-size changes at steady-iteration
+//! boundaries: `--elastic shrink@iter=1:to=2,grow@iter=3:to=4`.  At
+//! each named boundary the engine checkpoints the session state it
+//! already holds (the session *is* the checkpoint — see
+//! [`super::session::SessionState`]), re-partitions every chunk group
+//! across the new comm world, prices the re-shard traffic on the real
+//! collective curves, and remaps the warm-up carry-over state onto the
+//! survivors instead of paying a fresh warm-up iteration
+//! ([`super::session::TrainingSession::rescale`]).
+//!
+//! The second trigger is the chaos `rank-fail` lane
+//! ([`super::chaos::ChaosPlan`]): when
+//! [`super::ExecutionBackend::poll_rank_fail`] reports a lost rank at a
+//! boundary with no planned event, the engine shrinks the world by one.
+//! Both triggers produce a [`RescaleEvent`] row in the report, and both
+//! are deterministic: the plan is static and the chaos lane draws from
+//! its own seeded stream, so the same CLI invocation replays the same
+//! rescale sequence byte-for-byte.
+//!
+//! Parsing is hardened the same way as `ChaosPlan::parse` (ISSUE 9
+//! satellite): unknown kinds/parameters, duplicates, missing fields and
+//! out-of-range values are *named* errors, never silent clamping or
+//! last-write-wins.  Direction (shrink must decrease, grow must
+//! increase) is validated at application time, when the current world
+//! size is known.
+
+use anyhow::{anyhow, bail, Result};
+
+/// Which way one planned rescale moves the world size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElasticKind {
+    Shrink,
+    Grow,
+}
+
+impl ElasticKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ElasticKind::Shrink => "shrink",
+            ElasticKind::Grow => "grow",
+        }
+    }
+}
+
+/// One planned world-size change: at the boundary *before* steady
+/// iteration `at_iter`, rescale to `to` ranks.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ElasticEvent {
+    pub kind: ElasticKind,
+    pub at_iter: usize,
+    pub to: usize,
+}
+
+/// A schedule of world-size changes, at most one per iteration
+/// boundary, sorted by iteration.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ElasticPlan {
+    pub events: Vec<ElasticEvent>,
+}
+
+impl ElasticPlan {
+    /// Parse an `--elastic` spec: comma-separated
+    /// `<shrink|grow>@iter=K:to=P` events (see module docs).
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut events = Vec::new();
+        for part in spec.split(',') {
+            let part = part.trim();
+            let (kind_s, params) = part.split_once('@').ok_or_else(|| {
+                anyhow!(
+                    "elastic event {part:?}: expected \
+                     <shrink|grow>@iter=K:to=P"
+                )
+            })?;
+            let kind = match kind_s {
+                "shrink" => ElasticKind::Shrink,
+                "grow" => ElasticKind::Grow,
+                other => bail!(
+                    "unknown elastic event kind {other:?} (want \
+                     shrink or grow)"
+                ),
+            };
+            let mut at_iter: Option<usize> = None;
+            let mut to: Option<usize> = None;
+            for kv in params.split(':') {
+                let Some((k, v)) = kv.split_once('=') else {
+                    bail!(
+                        "malformed elastic parameter {kv:?} (want k=v)"
+                    );
+                };
+                let n: usize = v.parse().map_err(|_| {
+                    anyhow!(
+                        "elastic parameter {k}={v:?} is not a number"
+                    )
+                })?;
+                let slot = match k {
+                    "iter" => &mut at_iter,
+                    "to" => &mut to,
+                    other => bail!(
+                        "unknown elastic parameter {other:?} (want \
+                         iter or to)"
+                    ),
+                };
+                if slot.replace(n).is_some() {
+                    bail!(
+                        "duplicate elastic parameter {k:?} in {part:?} \
+                         (each parameter may appear once)"
+                    );
+                }
+            }
+            let at_iter = at_iter.ok_or_else(|| {
+                anyhow!("elastic event {part:?} is missing iter=K")
+            })?;
+            let to = to.ok_or_else(|| {
+                anyhow!("elastic event {part:?} is missing to=P")
+            })?;
+            if to == 0 {
+                bail!(
+                    "elastic event {part:?}: the world cannot rescale \
+                     to 0 ranks"
+                );
+            }
+            events.push(ElasticEvent { kind, at_iter, to });
+        }
+        events.sort_by_key(|e| e.at_iter);
+        if let Some(w) =
+            events.windows(2).find(|w| w[0].at_iter == w[1].at_iter)
+        {
+            bail!(
+                "two elastic events at iteration {} (at most one \
+                 rescale per boundary)",
+                w[0].at_iter
+            );
+        }
+        Ok(ElasticPlan { events })
+    }
+
+    /// The planned event at the boundary before steady iteration `it`.
+    pub fn event_at(&self, it: usize) -> Option<ElasticEvent> {
+        self.events.iter().copied().find(|e| e.at_iter == it)
+    }
+}
+
+/// What one applied rescale did — the report row and the replay
+/// fingerprint of the elastic path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RescaleEvent {
+    /// Boundary it fired at (before steady iteration `at_iter`).
+    pub at_iter: usize,
+    /// World size before / after.
+    pub from: usize,
+    pub to: usize,
+    /// True when the chaos rank-fail lane triggered the shrink; false
+    /// for planned `--elastic` events.
+    pub rank_fail: bool,
+    /// Chunk-list positions whose owner changed (each crosses the wire
+    /// exactly once — the conservation invariant).
+    pub moved_shards: usize,
+    /// Owned state re-sharded: fp16 + fp32 param/momentum/variance,
+    /// 14 B per moved parameter.  Wire bytes equal payload bytes — a
+    /// re-shard is a permutation route, not a ring collective, so
+    /// there is no (p-1)/p amplification.
+    pub moved_bytes: u64,
+    /// Wire time of the re-shard on the collective link's curves.
+    pub reshard_secs: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_single_and_multi_event_specs() {
+        let p = ElasticPlan::parse("shrink@iter=1:to=2").unwrap();
+        assert_eq!(
+            p.events,
+            vec![ElasticEvent {
+                kind: ElasticKind::Shrink,
+                at_iter: 1,
+                to: 2,
+            }]
+        );
+        assert_eq!(p.event_at(1).unwrap().to, 2);
+        assert_eq!(p.event_at(0), None);
+        // Params in either order; events sorted by iteration.
+        let p = ElasticPlan::parse(
+            "grow@to=8:iter=3,shrink@iter=1:to=2",
+        )
+        .unwrap();
+        assert_eq!(p.events.len(), 2);
+        assert_eq!(p.events[0].at_iter, 1);
+        assert_eq!(p.events[1].kind, ElasticKind::Grow);
+        assert_eq!(p.events[1].to, 8);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs_with_named_errors() {
+        let err = |s: &str| ElasticPlan::parse(s).unwrap_err().to_string();
+        assert!(err("shrink").contains("expected"));
+        assert!(err("explode@iter=1:to=2")
+            .contains("unknown elastic event kind"));
+        assert!(err("shrink@iter=1").contains("missing to=P"));
+        assert!(err("shrink@to=2").contains("missing iter=K"));
+        assert!(err("shrink@iter=1:to=x").contains("not a number"));
+        assert!(err("shrink@iter=1:to=2:to=3")
+            .contains("duplicate elastic parameter"));
+        assert!(err("shrink@iter=1:depth=2")
+            .contains("unknown elastic parameter"));
+        assert!(err("shrink@iter=1:to=0").contains("0 ranks"));
+        assert!(err("shrink@iter=1:to").contains("malformed"));
+        assert!(err("shrink@iter=1:to=2,grow@iter=1:to=8")
+            .contains("two elastic events at iteration 1"));
+    }
+}

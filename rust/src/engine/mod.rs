@@ -33,6 +33,7 @@
 pub mod adaptive;
 pub mod backend;
 pub mod chaos;
+pub mod elastic;
 pub mod policy;
 pub mod prefetch;
 pub mod report;
@@ -53,6 +54,7 @@ pub use backend::{ExecutionBackend, SimBackend};
 #[cfg(feature = "pjrt")]
 pub use backend::PjrtBackend;
 pub use chaos::{ChaosBackend, ChaosPlan, ChaosStats};
+pub use elastic::{ElasticEvent, ElasticKind, ElasticPlan, RescaleEvent};
 pub use prefetch::{GroupPrefetcher, Prefetcher, DEFAULT_GROUP_LOOKAHEAD,
                    DEFAULT_LOOKAHEAD};
 pub use report::{EngineReport, IterBreakdown};
@@ -219,6 +221,10 @@ pub struct Engine {
     /// None (default) runs the plain [`SimBackend`] — no wrapper in the
     /// dispatch path at all.
     pub chaos: Option<ChaosPlan>,
+    /// When set, the drive loop rescales the comm world at the planned
+    /// iteration boundaries (ISSUE 9).  None (default) keeps the world
+    /// fixed; the chaos `rank-fail` lane can still shrink it.
+    pub elastic: Option<ElasticPlan>,
 }
 
 impl Engine {
@@ -228,6 +234,7 @@ impl Engine {
             task,
             opt: OptimizationPlan::default(),
             chaos: None,
+            elastic: None,
         }
     }
 
@@ -238,6 +245,11 @@ impl Engine {
 
     pub fn with_chaos(mut self, plan: ChaosPlan) -> Self {
         self.chaos = Some(plan);
+        self
+    }
+
+    pub fn with_elastic(mut self, plan: ElasticPlan) -> Self {
+        self.elastic = Some(plan);
         self
     }
 
@@ -399,12 +411,67 @@ impl Engine {
         // ---- placement + prefetch schedules from warm-up statistics.
         s.finish_warmup(cost, chunk_elems, self.prefetch_enabled());
 
-        // ---- steady state: 2 iterations, measure the last.
+        // ---- steady state: 2 iterations, measure the last.  The cost
+        // context is a local copy: an elastic rescale changes the world
+        // size mid-run, and everything downstream (shared-CPU split,
+        // collective sizing, per-rank ADAM share) prices on it.
+        let mut cost = *cost;
+        let mut rescales: Vec<RescaleEvent> = Vec::new();
+        if let Some(plan) = &self.elastic {
+            if let Some(ev) =
+                plan.events.iter().find(|e| e.at_iter >= 2)
+            {
+                bail!(
+                    "elastic {} at iter {} is past the run: the engine \
+                     drives 2 steady iterations (boundaries 0 and 1)",
+                    ev.kind.name(),
+                    ev.at_iter
+                );
+            }
+        }
         let mut breakdown = IterBreakdown::default();
         let mut iter_time = 0.0f64;
         for it in 0..2 {
+            // Boundary rescale triggers, in precedence order: the
+            // planned elastic event, else a chaos rank failure (the
+            // poll is a no-op drawing zero randoms unless the
+            // rank-fail lane is armed).
+            let failed = s.backend.poll_rank_fail();
+            let planned =
+                self.elastic.as_ref().and_then(|p| p.event_at(it));
+            let target = if let Some(ev) = planned {
+                match ev.kind {
+                    ElasticKind::Shrink if ev.to >= s.nproc => bail!(
+                        "elastic shrink at iter {it} targets {} ranks \
+                         but the world is already {}",
+                        ev.to,
+                        s.nproc
+                    ),
+                    ElasticKind::Grow if ev.to <= s.nproc => bail!(
+                        "elastic grow at iter {it} targets {} ranks \
+                         but the world is already {}",
+                        ev.to,
+                        s.nproc
+                    ),
+                    _ => Some(ev.to),
+                }
+            } else if failed && s.nproc > 1 {
+                Some(s.nproc - 1)
+            } else {
+                None
+            };
+            if let Some(to) = target {
+                rescales.push(s.rescale(
+                    &cost,
+                    chunk_elems,
+                    to,
+                    it,
+                    planned.is_none(),
+                )?);
+                cost.task.n_gpus = to as u32;
+            }
             s.begin_steady_iteration(it);
-            s.iteration(cost, graph)
+            s.iteration(&cost, graph)
                 .with_context(|| format!("steady iteration {it}"))?;
             breakdown = s.backend.breakdown();
             iter_time = s.backend.makespan();
@@ -462,6 +529,7 @@ impl Engine {
             },
             non_model_peak: s.tracer.peak_non_model(),
             chaos: s.backend.chaos_stats(),
+            rescales,
         };
         Ok((report, trace))
     }
@@ -686,6 +754,214 @@ mod tests {
                 + st.aborts
                 > 0,
             "chaos run injected no faults: {st:?}"
+        );
+    }
+
+    // ---- ISSUE 9: elastic re-scaling.
+
+    /// Small chunks so the fp16 list has enough positions for a
+    /// shrink's re-shard set to be non-empty (list_len >= 3).
+    fn elastic_engine(gpus: u32, spec: &str) -> Engine {
+        let task =
+            TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, gpus)
+                .with_chunk_elems(32 << 20);
+        Engine::new(ClusterPreset::yard(), task)
+            .with_opt(OptimizationPlan::pinned_pipeline())
+            .with_elastic(ElasticPlan::parse(spec).unwrap())
+    }
+
+    #[test]
+    fn elastic_shrink_completes_and_replays_byte_identically() {
+        let e = elastic_engine(4, "shrink@iter=1:to=2");
+        let (r1, t1) = e.run_traced().unwrap();
+        let (r2, t2) = e.run_traced().unwrap();
+        assert_eq!(t1, t2, "elastic replay diverged");
+        assert_eq!(format!("{r1:?}"), format!("{r2:?}"));
+        assert_eq!(r1.rescales.len(), 1);
+        let rs = &r1.rescales[0];
+        assert_eq!((rs.at_iter, rs.from, rs.to), (1, 4, 2));
+        assert!(!rs.rank_fail);
+        assert!(rs.moved_shards > 0, "shrink moved no shards");
+        assert!(rs.moved_bytes > 0 && rs.reshard_secs > 0.0);
+        // Every moved shard ships its full owned state (7x its fp16
+        // chunk bytes) exactly once — conservation at the report level.
+        assert_eq!(
+            rs.moved_bytes,
+            rs.moved_shards as u64 * 7 * 2 * (32 << 20),
+        );
+        assert!(t1.iter().any(|l| l.contains("rescale @ iter 1: 4 -> 2")),
+                "trace has no rescale marker");
+        assert!(r1.render().contains("rescale @ iter 1: 4 -> 2 ranks"));
+        assert!(r1.iter_time_s > 0.0);
+    }
+
+    #[test]
+    fn elastic_grow_completes_and_direction_errors_are_named() {
+        let (r, t) = elastic_engine(2, "grow@iter=1:to=4")
+            .run_traced()
+            .unwrap();
+        assert_eq!(r.rescales.len(), 1);
+        assert_eq!((r.rescales[0].from, r.rescales[0].to), (2, 4));
+        assert!(t.iter().any(|l| l.contains("rescale @ iter 1: 2 -> 4")));
+        // Wrong-direction and out-of-run events fail loudly.
+        let err = elastic_engine(4, "shrink@iter=0:to=8")
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already"), "{err}");
+        let err = elastic_engine(4, "grow@iter=0:to=2")
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("already"), "{err}");
+        let err = elastic_engine(4, "shrink@iter=2:to=2")
+            .run()
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("past the run"), "{err}");
+    }
+
+    #[test]
+    fn elastic_kill_and_resume_is_bit_exact() {
+        // The elastic path must compose with ISSUE 6 checkpoint/
+        // restore: checkpoint right before the rescale boundary, kill,
+        // restore, rescale, run iteration 1 — bit-identical to the
+        // uninterrupted elastic run.
+        let task =
+            TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, 4)
+                .with_chunk_elems(32 << 20);
+        let e = Engine::new(ClusterPreset::yard(), task)
+            .with_opt(OptimizationPlan::pinned_pipeline());
+        let mk = || SimBackend::new(true, ClusterPreset::yard().net, 4);
+
+        let run_tail =
+            |s: &mut TrainingSession<SimBackend>, parts: &SimParts| {
+                let mut cost = parts.cost;
+                let ev = s
+                    .rescale(&cost, parts.chunk_elems, 2, 1, false)
+                    .unwrap();
+                cost.task.n_gpus = 2;
+                s.begin_steady_iteration(1);
+                s.iteration(&cost, &parts.graph).unwrap();
+                ev
+            };
+
+        // Reference: uninterrupted warm-up + iter 0 + rescale + iter 1.
+        let parts = e.sim_parts().unwrap();
+        let mut full =
+            TrainingSession::new(e.opt, e.nproc(), parts.mgr, mk(), true);
+        drive_steps(&e, &mut full, &parts, 0..1, true);
+        let ev_full = run_tail(&mut full, &parts);
+
+        // Kill at the boundary, restore, rescale, iter 1.
+        let parts2 = e.sim_parts().unwrap();
+        let mut live = TrainingSession::new(e.opt, e.nproc(), parts2.mgr,
+                                            mk(), true);
+        drive_steps(&e, &mut live, &parts2, 0..1, true);
+        let ckpt = live.checkpoint();
+        drop(live);
+        let mut resumed = ckpt.into_session();
+        let ev_resumed = run_tail(&mut resumed, &parts2);
+
+        assert_eq!(fingerprint(&full), fingerprint(&resumed));
+        assert_eq!(ev_full, ev_resumed);
+    }
+
+    #[test]
+    fn rank_fail_chaos_lane_drives_shrinks_deterministically() {
+        let mk = |gpus: u32| {
+            let task =
+                TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, gpus)
+                    .with_chunk_elems(32 << 20);
+            Engine::new(ClusterPreset::yard(), task)
+                .with_opt(OptimizationPlan::pinned_pipeline())
+                .with_chaos(
+                    ChaosPlan::parse("rank-fail:rate=1", 7).unwrap(),
+                )
+        };
+        // rate=1 fires at every boundary: 4 -> 3 at iter 0, 3 -> 2 at
+        // iter 1, all flagged as rank failures, and the whole run
+        // replays byte-identically.
+        let (r1, t1) = mk(4).run_traced().unwrap();
+        let (r2, t2) = mk(4).run_traced().unwrap();
+        assert_eq!(t1, t2);
+        assert_eq!(format!("{r1:?}"), format!("{r2:?}"));
+        let shape: Vec<_> = r1
+            .rescales
+            .iter()
+            .map(|r| (r.at_iter, r.from, r.to, r.rank_fail))
+            .collect();
+        assert_eq!(shape, vec![(0, 4, 3, true), (1, 3, 2, true)]);
+        // A single-rank world has no one to lose: the poll may fire
+        // but the engine never shrinks below 1.
+        let (r, _) = mk(1).run_traced().unwrap();
+        assert!(r.rescales.is_empty());
+    }
+
+    // ---- ISSUE 9 satellite: PinnedPool::leak_check on the restore
+    // path.  Restoring a checkpoint and driving on must never leave a
+    // dangling staging lease, even when hostile chaos aborts copies
+    // mid-flight and the NVMe tier routes them through the two-hop
+    // staged path (each hop holds the lease until the second lands).
+
+    #[test]
+    fn property_restore_path_never_leaks_leases_under_nvme_chaos() {
+        use crate::util::quickcheck::forall;
+        let task =
+            TrainTask::new(GptSpec::by_name("1B").unwrap(), 4, 2)
+                .with_chunk_elems(32 << 20);
+        let opt = OptimizationPlan {
+            nvme_gb: 64,
+            ..OptimizationPlan::pinned_pipeline()
+        };
+        let e = Engine::new(ClusterPreset::nvme_lab(), task).with_opt(opt);
+        forall(
+            6,
+            |rng| rng.next_u64(),
+            |&seed| {
+                let plan = ChaosPlan {
+                    rate: 0.5,
+                    intensity: 2.0,
+                    ..ChaosPlan::all(seed)
+                };
+                let mk = || {
+                    ChaosBackend::new(
+                        SimBackend::new(
+                            true,
+                            ClusterPreset::nvme_lab().net,
+                            2,
+                        ),
+                        plan,
+                    )
+                };
+                let parts = e.sim_parts().unwrap();
+                let mut live = TrainingSession::new(
+                    e.opt, e.nproc(), parts.mgr, mk(), true,
+                );
+                drive_steps(&e, &mut live, &parts, 0..1, true);
+                let ckpt = live.checkpoint();
+                drop(live);
+                let mut resumed = ckpt.into_session();
+                drive_steps(&e, &mut resumed, &parts, 1..2, false);
+                // The boundary audits counted every iteration but the
+                // last; audit it too, then the whole run's count must
+                // be zero.
+                resumed.check_lease_leaks();
+                if resumed.mgr.stats.lease_leaks != 0 {
+                    return Err(format!(
+                        "seed {seed}: restore path leaked {} pinned \
+                         lease(s)",
+                        resumed.mgr.stats.lease_leaks
+                    ));
+                }
+                if resumed.mgr.stats.from_nvme_bytes == 0 {
+                    return Err(format!(
+                        "seed {seed}: run never exercised the two-hop \
+                         staged NVMe route"
+                    ));
+                }
+                Ok(())
+            },
         );
     }
 }

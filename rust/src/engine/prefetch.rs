@@ -128,6 +128,31 @@ impl GroupPrefetcher {
         self.fetches.is_empty()
     }
 
+    /// Remap the warm-up gather log onto a re-partitioned comm world
+    /// (elastic rescale, ISSUE 9).  Group indices are world-size
+    /// relative — group g covers chunk positions `g*p..(g+1)*p` — so a
+    /// logged gather of old group g becomes a gather of every new
+    /// group overlapping the same chunk positions, at the same moment.
+    /// The carried-over log keeps the *schedule shape* the warm-up
+    /// learned (which moments demand which chunks) instead of paying a
+    /// fresh warm-up iteration at the new world size.
+    pub fn remap(
+        &self,
+        old: &crate::dp::CommGroups,
+        new: &crate::dp::CommGroups,
+    ) -> GroupPrefetcher {
+        let mut fetches: Vec<(Moment, usize)> = Vec::new();
+        for &(m, g) in &self.fetches {
+            for pos in old.members(g) {
+                let ng = new.group_of(pos);
+                if !fetches.contains(&(m, ng)) {
+                    fetches.push((m, ng));
+                }
+            }
+        }
+        GroupPrefetcher::from_log(fetches)
+    }
+
     /// The next `k` distinct groups gathered at or after `now`, each
     /// paired with its gather moment, in schedule order.  Inclusive of
     /// `now` on purpose: the engine ticks the moment *before* the op
@@ -215,6 +240,29 @@ mod tests {
         // Past the end: empty, not a panic.
         assert_eq!(gp.upcoming(17, 4), vec![]);
         assert!(GroupPrefetcher::from_log(vec![]).is_empty());
+    }
+
+    #[test]
+    fn group_prefetcher_remap_covers_the_same_chunks() {
+        use crate::dp::CommGroups;
+        // 8 chunks on 4 ranks: groups {0..4} and {4..8}.  Shrinking to
+        // 2 ranks splits each old group into two new ones at the same
+        // logged moment; the remapped log is sorted and deduped.
+        let gp = GroupPrefetcher::from_log(vec![(2, 0), (9, 1), (12, 0)]);
+        let old = CommGroups::new(8, 4);
+        let new = CommGroups::new(8, 2);
+        let r = gp.remap(&old, &new);
+        assert_eq!(
+            r.upcoming(0, 8),
+            vec![(2, 0), (2, 1), (9, 2), (9, 3)]
+        );
+        // Past the FWD entries, the BWD refetch of old group 0 shows
+        // up as both of its new halves.
+        assert_eq!(r.upcoming(10, 8), vec![(12, 0), (12, 1)]);
+        // Growing back is lossy only in group granularity, never in
+        // chunk coverage: remapping to the identity world is identity.
+        let same = gp.remap(&old, &old);
+        assert_eq!(same.upcoming(0, 8), gp.upcoming(0, 8));
     }
 
     #[test]

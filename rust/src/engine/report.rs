@@ -1,6 +1,7 @@
 //! Engine output: the per-iteration breakdown and summary report.
 
 use super::chaos::ChaosStats;
+use super::elastic::RescaleEvent;
 use crate::chunk::MoveStats;
 use crate::placement::PlacementPlan;
 use crate::sim::{Phase, SimClock};
@@ -151,6 +152,10 @@ pub struct EngineReport {
     /// Fault-injection counters when the run went through a
     /// [`super::chaos::ChaosBackend`]; None on a plain backend.
     pub chaos: Option<ChaosStats>,
+    /// Elastic world-size changes applied at iteration boundaries
+    /// (ISSUE 9): planned `--elastic` events and chaos rank failures,
+    /// in firing order.  Empty on a fixed-world run.
+    pub rescales: Vec<RescaleEvent>,
 }
 
 impl EngineReport {
@@ -221,6 +226,19 @@ impl EngineReport {
                 c.collective_stretches,
                 c.pressure_spikes,
                 c.aborts,
+            ));
+        }
+        for r in &self.rescales {
+            out.push_str(&format!(
+                "rescale @ iter {}: {} -> {} ranks{} | {} shard \
+                 moves, {} re-sharded in {}\n",
+                r.at_iter,
+                r.from,
+                r.to,
+                if r.rank_fail { " (rank-fail)" } else { "" },
+                r.moved_shards,
+                human_bytes(r.moved_bytes),
+                human_time(r.reshard_secs),
             ));
         }
         if self.move_stats.lease_leaks > 0 {

@@ -26,7 +26,7 @@
 
 use std::collections::{BTreeMap, BTreeSet};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
 use crate::chunk::{ChunkId, ChunkKind, ChunkManager, MoveKind};
 use crate::config::{ClusterPreset, TrainTask};
@@ -42,6 +42,7 @@ use crate::tracer::{MemTracer, Moment, WARMUP_GPU_FRAC};
 
 use super::adaptive::{HeadroomLedger, LookaheadController, WindowInputs};
 use super::backend::ExecutionBackend;
+use super::elastic::RescaleEvent;
 use super::policy::{with_policy, PolicySel};
 use super::prefetch::{GroupPrefetcher, Prefetcher};
 use super::OptimizationPlan;
@@ -465,6 +466,135 @@ impl<B: ExecutionBackend> TrainingSession<B> {
             c.iteration_boundary();
         }
         self.trace_mark(&format!("== iter {it} =="));
+    }
+
+    /// Elastic re-scale at an iteration boundary (ISSUE 9 tentpole):
+    /// re-partition every chunk group across a `to`-rank comm world and
+    /// carry the warm-up state over to the survivors.
+    ///
+    /// Four-step protocol:
+    ///
+    /// 1. **Settle the boundary** — land in-flight prefetches and
+    ///    gathers, clear the collective pipeline (same discipline as
+    ///    [`Self::begin_steady_iteration`], which runs right after).
+    /// 2. **Plan and price the re-shard** — the moved positions are
+    ///    exactly those whose owner changes (`pos % p != pos % p'`);
+    ///    each carries its full owned state (fp16 + three fp32 lists,
+    ///    14 B/param = 7x the fp16 chunk bytes) across the wire once.
+    ///    A re-shard is a permutation route, so wire bytes equal
+    ///    payload bytes — the conservation invariant the property
+    ///    tests lock.
+    /// 3. **Swap the comm world** — new [`CommGroups`], new ring cost
+    ///    curve via [`ExecutionBackend::rescale_world`].
+    /// 4. **Warm-up carry-over** — remap the group-gather log onto the
+    ///    new groups, re-plan placement for the new per-rank owned set,
+    ///    and re-split the shared CPU/NVMe tiers `to` ways.  The
+    ///    chunk-indexed state (tracer moment lists, chunk prefetcher,
+    ///    controller EMAs, tier residency) is world-size independent
+    ///    and carries over untouched.
+    ///
+    /// Like `place_nvme_tier`, this is boundary traffic: the re-shard
+    /// cost is reported in the returned [`RescaleEvent`], not charged
+    /// to any iteration's timeline (`begin_steady_iteration` resets
+    /// the backend clock anyway).
+    pub(crate) fn rescale(
+        &mut self,
+        cost: &SimCost,
+        chunk_elems: u64,
+        to: usize,
+        at_iter: usize,
+        rank_fail: bool,
+    ) -> Result<RescaleEvent> {
+        let from = self.nproc;
+        // The chunk grid was sized for the original world; a grown
+        // world needs `to` chunks of a communication group resident at
+        // once, which the warm-up GPU grant may no longer hold.
+        let warmup_gpu =
+            (cost.cluster.gpu_mem as f64 * WARMUP_GPU_FRAC) as u64;
+        let max_chunk = warmup_gpu / (2 * (to as u64 + 1));
+        if chunk_elems > max_chunk {
+            bail!(
+                "elastic rescale to {to} ranks cannot hold a {to}-chunk \
+                 communication group in the warm-up GPU grant: chunk \
+                 {chunk_elems} elems > {max_chunk}"
+            );
+        }
+
+        // (1) boundary settle.
+        while let Some(c) = self.mgr.pending_prefetch_on(Device::Gpu(0)) {
+            self.mgr.complete_prefetch(c);
+        }
+        for c in self.mgr.gathering_chunks() {
+            self.mgr.finish_gather(c);
+        }
+        self.gathered.clear();
+        self.coll.clear();
+
+        // (2) re-shard plan: every position whose owner changes ships
+        // its owned state exactly once.
+        let new_groups = CommGroups::new(self.groups.list_len, to);
+        let moves = self.groups.reshard_moves(&new_groups);
+        let moved_bytes: u64 = moves
+            .iter()
+            .map(|mv| 7 * self.mgr.chunk(self.fp16_list[mv.pos]).bytes())
+            .sum();
+        let op = self.backend.reshard_cost(moved_bytes, moves.len());
+
+        // (3) swap the comm world.
+        let old_groups = std::mem::replace(&mut self.groups, new_groups);
+        self.nproc = to;
+        self.backend.rescale_world(to);
+
+        // (4) warm-up carry-over.
+        if let Some(gp) = self.group_prefetcher.take() {
+            self.group_prefetcher =
+                Some(gp.remap(&old_groups, &self.groups));
+        }
+        let (plan_gpu, plan_nm) = if self.opt.use_tracer {
+            (cost.cluster.gpu_mem, self.tracer.peak_non_model())
+        } else {
+            (warmup_gpu, 0)
+        };
+        self.placement = placement_plan(
+            plan_gpu,
+            plan_nm,
+            chunk_elems,
+            self.groups.owned_by(0).len(),
+            self.opt.device_aware_os,
+        );
+        let emb_bytes = 14 * cost.task.model.embedding_params();
+        let cpu_share = (cost.cluster.cpu_mem / to as u64)
+            .checked_sub(emb_bytes / to as u64)
+            .ok_or_else(|| {
+                anyhow!(
+                    "elastic rescale to {to} ranks: the CPU share \
+                     cannot hold the embedding slice"
+                )
+            })?;
+        let nvme_share = if self.mgr.has_nvme() {
+            Some((self.opt.nvme_gb << 30) / to as u64)
+        } else {
+            None
+        };
+        self.mgr.resize_shared_tiers(cpu_share, nvme_share);
+
+        self.trace_mark(&format!(
+            "== rescale @ iter {at_iter}: {from} -> {to} ({} shards, \
+             {} B, {:.6}s){} ==",
+            moves.len(),
+            moved_bytes,
+            op.secs,
+            if rank_fail { " [rank-fail]" } else { "" },
+        ));
+        Ok(RescaleEvent {
+            at_iter,
+            from,
+            to,
+            rank_fail,
+            moved_shards: moves.len(),
+            moved_bytes,
+            reshard_secs: op.secs,
+        })
     }
 
     // ------------------------------------------------------------------

@@ -26,6 +26,12 @@
 //!   `sim/` and `engine/backend.rs`: all timeline mutation goes
 //!   through the `ExecutionBackend` boundary, so no policy module may
 //!   name the substrate type.
+//! * **`cfg-test-placement`** — `#[cfg(test)]` must introduce the
+//!   single trailing test module.  The scanner skips everything from
+//!   the first `#[cfg(test)]` to end-of-file (see Mechanics), so a
+//!   mid-file test item or a second test block would silently exempt
+//!   all code below it from every other rule; this rule turns that
+//!   blind spot into a finding.
 //!
 //! ## Mechanics
 //!
@@ -62,14 +68,16 @@ pub enum Rule {
     NanUnwrap,
     Wallclock,
     TimelineLayering,
+    CfgTestPlacement,
 }
 
 impl Rule {
-    pub const ALL: [Rule; 4] = [
+    pub const ALL: [Rule; 5] = [
         Rule::UnorderedCollection,
         Rule::NanUnwrap,
         Rule::Wallclock,
         Rule::TimelineLayering,
+        Rule::CfgTestPlacement,
     ];
 
     /// The name used in diagnostics and `lint:allow(...)` annotations.
@@ -79,6 +87,7 @@ impl Rule {
             Rule::NanUnwrap => "nan-unwrap",
             Rule::Wallclock => "wallclock",
             Rule::TimelineLayering => "timeline-layering",
+            Rule::CfgTestPlacement => "cfg-test-placement",
         }
     }
 
@@ -100,6 +109,10 @@ impl Rule {
             Rule::TimelineLayering => {
                 "StreamTimeline is backend substrate; go through \
                  ExecutionBackend instead"
+            }
+            Rule::CfgTestPlacement => {
+                "#[cfg(test)] must introduce the single trailing test \
+                 module; code after it escapes every other rule"
             }
         }
     }
@@ -363,7 +376,39 @@ pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
         let trimmed = raw.trim_start();
         // Repo convention: the unit-test module trails the file, so
         // everything from the first #[cfg(test)] on is out of scope.
+        // `cfg-test-placement` (ISSUE 9) makes that convention a rule
+        // rather than a blind spot: the attribute must introduce the
+        // single trailing test module — a mid-file #[cfg(test)] item
+        // or a second test block would silently exempt everything
+        // below it from every other rule.
         if trimmed.starts_with("#[cfg(test)]") {
+            let mut j = idx + 1;
+            while j < masked_lines.len() {
+                let mt = masked_lines[j].trim();
+                if mt.is_empty() || mt.starts_with("#[") {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            let introduces_module = masked_lines
+                .get(j)
+                .map(|l| l.trim_start())
+                .is_some_and(|l| {
+                    l.starts_with("mod ") || l.starts_with("pub mod ")
+                });
+            if !introduces_module {
+                push(idx, Rule::CfgTestPlacement, raw);
+            }
+            // Scan the masked tail (strings blanked) for a second
+            // test block.
+            for (k, &later) in
+                masked_lines.iter().enumerate().skip(idx + 1)
+            {
+                if later.trim_start().starts_with("#[cfg(test)]") {
+                    push(k, Rule::CfgTestPlacement, raw_lines[k]);
+                }
+            }
             break;
         }
         if is_backend
@@ -602,6 +647,57 @@ use std::collections::HashMap;
     }
 
     // ------------------------------------------------- masking & scope
+
+    // ------------------------------------------- cfg-test-placement
+
+    #[test]
+    fn cfg_test_must_introduce_the_trailing_test_module() {
+        let good = "let a = 1;\n#[cfg(test)]\nmod tests {}\n";
+        assert!(lint_source("evict/mod.rs", good).is_empty());
+        // Stacked attributes between the cfg and the module are fine,
+        // and a pub test-support module counts too.
+        let stacked = "\
+let a = 1;
+#[cfg(test)]
+#[allow(dead_code)]
+pub mod testutil {}
+";
+        assert!(lint_source("evict/mod.rs", stacked).is_empty());
+        // A mid-file #[cfg(test)] item hides everything below it from
+        // the other rules — exactly what the rule exists to catch.
+        let item = "\
+#[cfg(test)]
+fn helper() {}
+use std::collections::HashMap;
+";
+        let f = lint_source("evict/mod.rs", item);
+        assert_eq!(rules(&f), vec![Rule::CfgTestPlacement]);
+        assert_eq!(f[0].line, 1);
+    }
+
+    #[test]
+    fn second_cfg_test_block_is_flagged() {
+        let src = "\
+#[cfg(test)]
+mod tests {}
+fn hidden_from_every_other_rule() {}
+#[cfg(test)]
+mod more_tests {}
+";
+        let f = lint_source("chunk/c.rs", src);
+        assert_eq!(rules(&f), vec![Rule::CfgTestPlacement]);
+        assert_eq!(f[0].line, 4);
+        // In a string it is prose, not a block.
+        let masked = "\
+#[cfg(test)]
+mod tests {
+    const S: &str = \"
+#[cfg(test)]
+\";
+}
+";
+        assert!(lint_source("chunk/c.rs", masked).is_empty());
+    }
 
     #[test]
     fn trailing_test_module_is_skipped() {

@@ -20,7 +20,8 @@ use anyhow::{anyhow, bail, Result};
 use patrickstar::baselines::run_system;
 use patrickstar::chunk::search_chunk_size_tiered;
 use patrickstar::config::{ClusterPreset, SystemKind, TrainTask};
-use patrickstar::engine::{ChaosPlan, Engine, OptimizationPlan};
+use patrickstar::engine::{ChaosPlan, ElasticPlan, Engine,
+                          OptimizationPlan};
 use patrickstar::model::GptSpec;
 use patrickstar::scale::max_model_scale_with_plan;
 #[cfg(feature = "pjrt")]
@@ -248,7 +249,7 @@ fn run() -> Result<()> {
             args.reject_unknown(&with_flags(
                 PLAN_FLAGS,
                 &["system", "cluster", "model", "gpus", "batch",
-                  "chaos", "chaos-seed"],
+                  "chaos", "chaos-seed", "elastic"],
             ))?;
             cmd_simulate(&args)
         }
@@ -295,11 +296,17 @@ pytorch-ddp
                        [--nvme-gb 0] [--nvme-gbps 3.2]
                        [--chaos all|jitter+straggler+pressure+abort\
 [:rate=R,intensity=I]] [--chaos-seed N]
+                       [--elastic shrink@iter=K:to=P[,grow@iter=K:to=P]]
              (--chaos injects seeded deterministic faults at the backend
               boundary — PCIe jitter, straggler ranks, memory-pressure
-              spikes, mid-flight aborts; same --chaos-seed replays the
-              same faults byte-for-byte and the report gains fault
-              counters)
+              spikes, mid-flight aborts, correlated burst windows, a
+              named straggler rank, rank failures; same --chaos-seed
+              replays the same faults byte-for-byte and the report gains
+              fault counters)
+             (--elastic rescales the comm world at an iteration
+              boundary: chunk groups re-shard across the new world and
+              the warm-up state carries over to the survivors; the
+              chaos rank-fail lane drives the same path unplanned)
   patrickstar breakdown [--cluster superpod] [--model 10B] [--gpus 8] \
 [--batch 16]
              (rows: Base, Base+PF prefetch+overlap pipeline, Base+PF+CO
@@ -394,10 +401,21 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             Some(ChaosPlan::parse(spec, args.get_u64("chaos-seed", 0)?)?)
         }
     };
+    // `--elastic <spec>` schedules world-size changes at iteration
+    // boundaries (shrink/grow with chunk re-sharding and warm-up
+    // carry-over); replaying the same spec is byte-identical.
+    let elastic = args
+        .flags
+        .get("elastic")
+        .map(|spec| ElasticPlan::parse(spec))
+        .transpose()?;
     let report = if system == SystemKind::PatrickStar {
         let mut engine = Engine::new(cluster, task).with_opt(opt);
         if let Some(plan) = chaos {
             engine = engine.with_chaos(plan);
+        }
+        if let Some(plan) = elastic {
+            engine = engine.with_elastic(plan);
         }
         engine.run()?
     } else {
@@ -408,11 +426,12 @@ fn cmd_simulate(args: &Args) -> Result<()> {
             || opt.adaptive_lookahead
             || opt.nvme_gb > 0
             || chaos.is_some()
+            || elastic.is_some()
         {
             bail!(
                 "--prefetch/--overlap/--overlap-collectives/\
                  --pinned-buffers/--adaptive-lookahead/--nvme-gb/\
-                 --chaos only apply to system patrickstar"
+                 --chaos/--elastic only apply to system patrickstar"
             );
         }
         run_system(system, cluster, task)?

@@ -687,3 +687,108 @@ fn property_eviction_pick_is_candidate_order_invariant() {
         },
     );
 }
+
+// ---------------------------------------------------------------------
+// 6. Elastic re-scaling (ISSUE 9)
+// ---------------------------------------------------------------------
+//
+// A shrink re-shards every chunk group across the smaller world at an
+// iteration boundary.  Two conservation contracts pin it down:
+//
+// * **Payload conservation** — every moved shard ships its full owned
+//   state (fp16 + three fp32 lists = 7x the fp16 chunk bytes) exactly
+//   once; the re-shard is a permutation route, so the event's wire
+//   bytes equal the payload sum with no ring amplification.
+// * **Steady-state wire volume** — after the rescale, the measured
+//   iteration's collective volume is bit-identical to a run that was
+//   *born* at the new world size with the same chunk layout: volume
+//   is a function of (layout, world) alone, never of the path taken
+//   to reach that world.
+//
+// (Chunk-coverage conservation of the re-shard map itself — every
+// position owned exactly once at both world sizes — is a pure-function
+// property and lives next to `CommGroups::reshard_moves` in
+// `dp/group.rs`.)
+
+use patrickstar::engine::ElasticPlan;
+
+#[test]
+fn property_elastic_shrink_conserves_payload_and_wire_volume() {
+    forall(
+        6,
+        |rng| {
+            let model = ["1B", "2B"][rng.range(0, 2)];
+            let p = [2u32, 4, 8][rng.range(0, 3)];
+            let to = rng.range(1, p as usize) as u32;
+            (model, p, to)
+        },
+        |&(model, p, to)| {
+            let chunk = 32u64 << 20;
+            let task = TrainTask::new(
+                GptSpec::by_name(model).unwrap(), 4, p)
+                .with_chunk_elems(chunk);
+            let spec = format!("shrink@iter=1:to={to}");
+            let go = || {
+                Engine::new(ClusterPreset::yard(), task)
+                    .with_opt(OptimizationPlan::pinned_pipeline())
+                    .with_elastic(ElasticPlan::parse(&spec).unwrap())
+                    .run()
+                    .map_err(|e| format!("elastic {model} {p}->{to}: {e}"))
+            };
+            let r1 = go()?;
+            let r2 = go()?;
+            if format!("{r1:?}") != format!("{r2:?}") {
+                return Err(format!(
+                    "elastic {model} {p}->{to}: replay diverged"
+                ));
+            }
+            if r1.rescales.len() != 1 {
+                return Err(format!(
+                    "elastic {model} {p}->{to}: {} rescale events",
+                    r1.rescales.len()
+                ));
+            }
+            let ev = &r1.rescales[0];
+            if (ev.from, ev.to) != (p as usize, to as usize) {
+                return Err(format!(
+                    "elastic {model}: event {} -> {}, want {p} -> {to}",
+                    ev.from, ev.to
+                ));
+            }
+            if ev.moved_bytes != ev.moved_shards as u64 * 7 * 2 * chunk {
+                return Err(format!(
+                    "elastic {model} {p}->{to}: {} shards moved {} B, \
+                     payload conservation wants {} B",
+                    ev.moved_shards,
+                    ev.moved_bytes,
+                    ev.moved_shards as u64 * 7 * 2 * chunk
+                ));
+            }
+            // The measured iteration ran at world `to`: its collective
+            // wire volume must match a run born at `to` ranks.
+            let native = Engine::new(
+                ClusterPreset::yard(),
+                TrainTask::new(GptSpec::by_name(model).unwrap(), 4, to)
+                    .with_chunk_elems(chunk),
+            )
+            .with_opt(OptimizationPlan::pinned_pipeline())
+            .run()
+            .map_err(|e| format!("native {model} @ {to}: {e}"))?;
+            if r1.allgather_bytes != native.allgather_bytes {
+                return Err(format!(
+                    "elastic {model} {p}->{to}: allgather volume {} != \
+                     native {}",
+                    r1.allgather_bytes, native.allgather_bytes
+                ));
+            }
+            if r1.reduce_scatter_bytes != native.reduce_scatter_bytes {
+                return Err(format!(
+                    "elastic {model} {p}->{to}: reduce-scatter volume \
+                     {} != native {}",
+                    r1.reduce_scatter_bytes, native.reduce_scatter_bytes
+                ));
+            }
+            Ok(())
+        },
+    );
+}
