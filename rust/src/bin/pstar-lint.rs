@@ -1,7 +1,10 @@
-//! `cargo run --bin pstar-lint` — the determinism & layering lint
-//! pass over `src/` (ISSUE 8).  Prints `file:line: [rule] message`
-//! diagnostics and exits nonzero on any finding, so CI can gate on it
-//! directly.  The same pass also runs under plain `cargo test` via
+//! `cargo run --bin pstar-lint` — the determinism & layering
+//! static-analysis pass over `src/` (ISSUE 8/10).  Prints
+//! `file:line: [rule] message` diagnostics and exits nonzero on any
+//! finding, so CI can gate on it directly; `--json` emits the
+//! machine-readable report CI archives as an artifact and diffs
+//! against the Python port (`scripts/pstar_lint.py --json`).  The
+//! same pass also runs under plain `cargo test` via
 //! `tests/lint_clean.rs`; see `rust/docs/INVARIANTS.md` for the rules.
 
 use std::path::Path;
@@ -10,6 +13,7 @@ use std::process::ExitCode;
 use patrickstar::lint::{lint_tree, Rule};
 
 fn main() -> ExitCode {
+    let as_json = std::env::args().any(|a| a == "--json");
     // Lint the crate we were built from: src/ next to Cargo.toml.
     let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
     let report = match lint_tree(&root) {
@@ -19,6 +23,14 @@ fn main() -> ExitCode {
             return ExitCode::FAILURE;
         }
     };
+    if as_json {
+        println!("{}", report.to_json());
+        return if report.findings.is_empty() {
+            ExitCode::SUCCESS
+        } else {
+            ExitCode::FAILURE
+        };
+    }
     if report.findings.is_empty() {
         println!(
             "pstar-lint: {} files clean ({})",

@@ -166,12 +166,21 @@ impl ChunkManager {
         cpu_bytes: u64,
         nvme_bytes: Option<u64>,
     ) {
-        self.space.dev_mut(Device::Cpu).set_capacity(cpu_bytes);
+        self.set_device_capacity(Device::Cpu, cpu_bytes);
         if let Some(nb) = nvme_bytes {
             if self.space.has(Device::Nvme) {
-                self.space.dev_mut(Device::Nvme).set_capacity(nb);
+                self.set_device_capacity(Device::Nvme, nb);
             }
         }
+    }
+
+    /// Re-cap one tier.  The only sanctioned mutable path to
+    /// `MemSpace` capacities from outside the manager: policy code
+    /// (the session's warm-up cap schedule, the elastic rescale path)
+    /// calls this instead of reaching through `space.dev_mut`, which
+    /// the `dev-mut-layering` lint rule enforces.
+    pub fn set_device_capacity(&mut self, d: Device, bytes: u64) {
+        self.space.dev_mut(d).set_capacity(bytes);
     }
 
     // ------------------------------------------------------------ queries
@@ -937,6 +946,16 @@ mod tests {
         two.resize_shared_tiers(5_000, Some(8_000));
         assert_eq!(two.space.dev(Device::Cpu).capacity, 5_000);
         assert!(!two.space.has(Device::Nvme));
+    }
+
+    #[test]
+    fn set_device_capacity_recaps_one_tier() {
+        let mut m = mk(2, 50, 100, 1_000, 10_000);
+        m.set_device_capacity(Device::Gpu(0), 2_500);
+        assert_eq!(m.space.dev(Device::Gpu(0)).capacity, 2_500);
+        assert_eq!(m.space.dev(Device::Cpu).capacity, 10_000);
+        // Capacity is a cap, not an allocation: used bytes untouched.
+        assert_eq!(m.space.dev(Device::Gpu(0)).used(), 0);
     }
 
     #[test]

@@ -723,7 +723,7 @@ impl<B: ExecutionBackend> TrainingSession<B> {
                 c.observe_nvme(cw, nb);
             }
         }
-        self.mgr.space.dev_mut(Device::Gpu(0)).set_capacity(cap);
+        self.mgr.set_device_capacity(Device::Gpu(0), cap);
         // Cap-shrink eviction.  In adaptive mode with the OPT policy a
         // deep D2H backlog turns on the overlap-aware tie-break: a
         // near-equal victim that can be *dropped* (all tensors FREE)

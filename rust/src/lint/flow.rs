@@ -1,0 +1,681 @@
+//! Flow-sensitive lease-balance pass (ISSUE 10): the static twin of
+//! `PinnedPool::leak_check`.
+//!
+//! Within every function of the files in [`FLOW_SCOPE`] (the only
+//! modules that acquire pinned-buffer leases), a brace-scoped walk
+//! over the token stream proves each `pool.try_acquire(..)` result
+//! reaches a release sink on **every** match/if arm:
+//!
+//! * `pool.release(l)` / `pool.set_release(l, t)`;
+//! * storage in a lease-carrying struct field or call argument
+//!   (`StreamLease`, `PendingCopy`, `InFlightGather` — a move to an
+//!   owner whose drain path releases);
+//! * an explicit `return` (the caller inherits the obligation);
+//! * a diverging arm (`break`/`continue`/`return`/`panic!` — the
+//!   lease never existed on that path).
+//!
+//! The pass is deliberately *move-generous*: a lease moved into any
+//! call or literal counts as consumed, so it proves the **no-leak**
+//! direction only.  A finding is always a real dropped-on-some-path
+//! hazard; a clean pass does not prove the eventual owner releases —
+//! that stays `leak_check`'s job at runtime.
+//!
+//! Mirrored by `scripts/pstar_lint.py` (`flow_pass` and friends).
+
+use super::lex::{
+    at, ident_at, lex, match_brace, match_paren, tok_is, Kind, Tok,
+};
+use super::{excerpt_of, Finding, Rule};
+
+/// Files audited: the only modules that call `try_acquire` outside
+/// the pool's own unit tests.
+pub const FLOW_SCOPE: [&str; 2] = ["engine/session.rs", "dp/group.rs"];
+
+/// `(name, body_start, body_end)` for each `fn` with a body; the span
+/// excludes the outer braces.
+pub fn functions(toks: &[Tok]) -> Vec<(String, usize, usize)> {
+    let mut fns = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if tok_is(toks, i, Kind::Ident, "fn") {
+            if let Some(name) = ident_at(toks, i + 1) {
+                let name = name.to_string();
+                // Find the body `{`, bailing at `;` (bodyless decl)
+                // at paren/bracket depth 0.
+                let mut j = i + 2;
+                let mut depth = 0i64;
+                let mut body = None;
+                while j < toks.len() {
+                    let t = &toks[j];
+                    if t.kind == Kind::Punct {
+                        match t.text.as_str() {
+                            "(" | "[" => depth += 1,
+                            ")" | "]" => depth -= 1,
+                            ";" if depth == 0 => break,
+                            "{" if depth == 0 => {
+                                body = Some(j);
+                                break;
+                            }
+                            _ => {}
+                        }
+                    }
+                    j += 1;
+                }
+                if let Some(j) = body {
+                    let close = match_brace(toks, j);
+                    fns.push((name, j + 1, close));
+                    i = j + 1;
+                    continue;
+                }
+                i += 2;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    fns
+}
+
+/// `j` indexes a closing `)]}`: return the index before its opener.
+fn skip_group_back(toks: &[Tok], lo: usize, j: usize) -> Option<usize> {
+    let close = toks[j].text.as_str();
+    let opener = match close {
+        ")" => "(",
+        "]" => "[",
+        "}" => "{",
+        _ => return Some(j),
+    };
+    let mut depth = 0i64;
+    let mut j = j as i64;
+    while j >= lo as i64 {
+        let t = &toks[j as usize];
+        if t.kind == Kind::Punct {
+            if t.text == close {
+                depth += 1;
+            } else if t.text == opener {
+                depth -= 1;
+                if depth == 0 {
+                    return (j - 1).try_into().ok();
+                }
+            }
+        }
+        j -= 1;
+    }
+    None
+}
+
+/// How a `try_acquire` call site binds its result.
+enum Shape {
+    /// Scrutinee of a value-escaping match (match token index).
+    Match(usize),
+    /// `let VAR = ... match try_acquire ...` (var, match index).
+    LetMatch(String, usize),
+    /// Initializer of `let VAR = ...` (or a reassignment).
+    Let(String),
+    /// `if let Some(VAR) = ... try_acquire(..)` / while-let.
+    IfLet(String),
+    /// Moved straight into a call / return: obligation discharged.
+    Consumed,
+    /// Statement-level: the `Option` result is discarded.
+    Dropped,
+}
+
+/// Walk backwards from the `.try_acquire` at `i` to the construct
+/// that owns its result.  The walk skips balanced groups and
+/// ordinary expression tokens, and crosses unmatched `{` upward (a
+/// value-position block).  On finding `match` it keeps walking: if
+/// the match is itself the initializer of a `let`, the obligation
+/// continues on the binding ([`Shape::LetMatch`]).
+fn classify_site(toks: &[Tok], lo: usize, i: usize) -> Shape {
+    let mut j = i as i64 - 1;
+    let lo = lo as i64;
+    let mut match_idx: Option<usize> = None;
+    while j >= lo {
+        let t = &toks[j as usize];
+        if t.kind == Kind::Punct && matches!(t.text.as_str(), ")" | "]" | "}")
+        {
+            match skip_group_back(toks, lo as usize, j as usize) {
+                Some(k) => {
+                    j = k as i64;
+                    continue;
+                }
+                None => break,
+            }
+        }
+        if t.kind == Kind::Punct && t.text == ";" {
+            break;
+        }
+        if t.kind == Kind::Punct
+            && t.text == ">"
+            && j >= 1
+            && tok_is(toks, j as usize - 1, Kind::Punct, "=")
+        {
+            // `=>`: arm-valued expression; the value escapes upward.
+            return Shape::Consumed;
+        }
+        if t.kind == Kind::Punct && t.text == "=" {
+            let ju = j as usize;
+            let nxt_gt = tok_is(toks, ju + 1, Kind::Punct, ">");
+            let prv_op = ju >= 1
+                && at(toks, ju - 1).is_some_and(|p| {
+                    p.kind == Kind::Punct
+                        && "=!<>+-*/&|^%".contains(&p.text)
+                });
+            if nxt_gt || prv_op {
+                j -= 1; // `=>` tail / comparison / compound op
+                continue;
+            }
+            // `let VAR =` / `[if|while] let Some ( VAR ) =` / `VAR =`.
+            let k = ju.wrapping_sub(1);
+            if ju >= 5
+                && tok_is(toks, k, Kind::Punct, ")")
+                && tok_is(toks, k - 2, Kind::Punct, "(")
+                && tok_is(toks, k - 3, Kind::Ident, "Some")
+                && tok_is(toks, k - 4, Kind::Ident, "let")
+                && ident_at(toks, k - 1).is_some()
+            {
+                return Shape::IfLet(
+                    ident_at(toks, k - 1).unwrap().to_string(),
+                );
+            }
+            if ju >= 1 {
+                if let Some(var) = ident_at(toks, k) {
+                    let var = var.to_string();
+                    return match match_idx {
+                        Some(m) => Shape::LetMatch(var, m),
+                        None => Shape::Let(var),
+                    };
+                }
+            }
+            break;
+        }
+        if t.kind == Kind::Ident {
+            if t.text == "match" {
+                if match_idx.is_none() {
+                    match_idx = Some(j as usize);
+                }
+                j -= 1;
+                continue;
+            }
+            if t.text == "return" {
+                return Shape::Consumed;
+            }
+            j -= 1;
+            continue;
+        }
+        if t.kind == Kind::Punct && t.text == "{" {
+            j -= 1; // value-position block: continue into its header
+            continue;
+        }
+        if t.kind == Kind::Punct && (t.text == "," || t.text == "(") {
+            // Argument / field value: moved into the enclosing call.
+            return Shape::Consumed;
+        }
+        // `.` `::` `&` `?` `!` operators: expression glue.
+        j -= 1;
+    }
+    match match_idx {
+        Some(m) => Shape::Match(m),
+        None => Shape::Dropped,
+    }
+}
+
+/// Split the `{...}` of a match starting at `lbrace` into arms:
+/// `(pat_lo, pat_hi, body_lo, body_hi)` token index ranges.
+fn match_arms(toks: &[Tok], lbrace: usize) -> Vec<(usize, usize, usize, usize)> {
+    let close = match_brace(toks, lbrace);
+    let mut arms = Vec::new();
+    let mut i = lbrace + 1;
+    while i < close {
+        // Pattern: up to `=>` at depth 0.
+        let pat_lo = i;
+        let mut depth = 0i64;
+        while i < close {
+            let t = &toks[i];
+            if t.kind == Kind::Punct {
+                match t.text.as_str() {
+                    "(" | "[" | "{" => depth += 1,
+                    ")" | "]" | "}" => depth -= 1,
+                    "=" if depth == 0
+                        && tok_is(toks, i + 1, Kind::Punct, ">") =>
+                    {
+                        break;
+                    }
+                    _ => {}
+                }
+            }
+            i += 1;
+        }
+        if i >= close {
+            break;
+        }
+        let pat_hi = i;
+        i += 2; // past =>
+        let body_lo = i;
+        let body_hi;
+        if tok_is(toks, i, Kind::Punct, "{") {
+            body_hi = match_brace(toks, i) + 1;
+            i = body_hi;
+            if tok_is(toks, i, Kind::Punct, ",") {
+                i += 1;
+            }
+        } else {
+            let mut depth = 0i64;
+            while i < close {
+                let t = &toks[i];
+                if t.kind == Kind::Punct {
+                    match t.text.as_str() {
+                        "(" | "[" | "{" => depth += 1,
+                        ")" | "]" | "}" => depth -= 1,
+                        "," if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                i += 1;
+            }
+            body_hi = i;
+            if i < close {
+                i += 1; // past ,
+            }
+        }
+        arms.push((pat_lo, pat_hi, body_lo, body_hi));
+    }
+    arms
+}
+
+/// `Some ( ident )` over exactly `[lo, hi)` -> the ident.
+fn some_binding(toks: &[Tok], lo: usize, hi: usize) -> Option<&str> {
+    if hi - lo == 4
+        && tok_is(toks, lo, Kind::Ident, "Some")
+        && tok_is(toks, lo + 1, Kind::Punct, "(")
+        && tok_is(toks, lo + 3, Kind::Punct, ")")
+    {
+        return ident_at(toks, lo + 2);
+    }
+    None
+}
+
+/// The region `[lo, hi)` escapes the enclosing scope on every path
+/// end (break/continue/return/panic-family).
+fn diverges(toks: &[Tok], lo: usize, hi: usize) -> bool {
+    let mut i = lo;
+    while i < hi {
+        let t = &toks[i];
+        if t.kind == Kind::Ident {
+            if matches!(t.text.as_str(), "break" | "continue" | "return") {
+                return true;
+            }
+            if matches!(
+                t.text.as_str(),
+                "bail" | "panic" | "unreachable" | "todo"
+            ) && tok_is(toks, i + 1, Kind::Punct, "!")
+            {
+                return true;
+            }
+        }
+        i += 1;
+    }
+    false
+}
+
+/// Token `i` (the tracked ident) sits in a consuming position:
+/// * first argument of `.release(` / `.set_release(` / `Some(`;
+/// * moved into a literal/call: preceded by one of `{ , : (` and
+///   followed by one of `, } )` (field value, shorthand, argument);
+/// * `return`ed within the same statement prefix.
+fn consuming_position(toks: &[Tok], i: usize) -> bool {
+    if i >= 2
+        && tok_is(toks, i - 1, Kind::Punct, "(")
+        && matches!(
+            ident_at(toks, i - 2),
+            Some("release") | Some("set_release") | Some("Some")
+        )
+    {
+        return true;
+    }
+    let prev_in = i >= 1
+        && at(toks, i - 1).is_some_and(|t| {
+            t.kind == Kind::Punct && matches!(t.text.as_str(), "{" | "," | ":" | "(")
+        });
+    let next_in = at(toks, i + 1).is_some_and(|t| {
+        t.kind == Kind::Punct && matches!(t.text.as_str(), "," | "}" | ")")
+    });
+    if prev_in && next_in {
+        return true;
+    }
+    // `return ... X`: scan back a short window to the statement edge.
+    let floor = i.saturating_sub(12);
+    let mut j = i as i64 - 1;
+    while j >= floor as i64 {
+        let t = &toks[j as usize];
+        if t.kind == Kind::Punct
+            && matches!(t.text.as_str(), ";" | "{" | "}")
+        {
+            break;
+        }
+        if t.kind == Kind::Ident && t.text == "return" {
+            return true;
+        }
+        j -= 1;
+    }
+    false
+}
+
+/// Must-consume analysis of `var` over the straight-line region
+/// `[lo, hi)` with branch awareness.  Returns
+/// `(consumed_on_all_paths, consumed_on_some_path)`.
+fn consumed(toks: &[Tok], lo: usize, hi: usize, var: &str) -> (bool, bool) {
+    let mut partial = false;
+    let mut i = lo;
+    while i < hi {
+        let t = &toks[i];
+        // `if let Some ( Y ) = var {` — the Some-arm discharges the
+        // whole obligation (the None side carries nothing).
+        if tok_is(toks, i, Kind::Ident, "if")
+            && tok_is(toks, i + 1, Kind::Ident, "let")
+            && tok_is(toks, i + 2, Kind::Ident, "Some")
+            && tok_is(toks, i + 3, Kind::Punct, "(")
+            && ident_at(toks, i + 4).is_some()
+            && tok_is(toks, i + 5, Kind::Punct, ")")
+            && tok_is(toks, i + 6, Kind::Punct, "=")
+            && tok_is(toks, i + 7, Kind::Ident, var)
+            && tok_is(toks, i + 8, Kind::Punct, "{")
+        {
+            let inner = ident_at(toks, i + 4).unwrap().to_string();
+            let close = match_brace(toks, i + 8);
+            let (ok, _) = consumed(toks, i + 9, close, &inner);
+            if ok {
+                return (true, partial);
+            }
+            i = close + 1;
+            continue;
+        }
+        // `match var {` with Some-arms.
+        if tok_is(toks, i, Kind::Ident, "match")
+            && tok_is(toks, i + 1, Kind::Ident, var)
+            && tok_is(toks, i + 2, Kind::Punct, "{")
+        {
+            for (pl, ph, bl, bh) in match_arms(toks, i + 2) {
+                if let Some(y) = some_binding(toks, pl, ph) {
+                    let y = y.to_string();
+                    let (ok, _) = consumed(toks, bl, bh, &y);
+                    if ok {
+                        return (true, partial);
+                    }
+                }
+            }
+            i = match_brace(toks, i + 2) + 1;
+            continue;
+        }
+        // Plain `if cond { A } [else { B }]`.
+        if tok_is(toks, i, Kind::Ident, "if")
+            && !tok_is(toks, i + 1, Kind::Ident, "let")
+        {
+            let mut j = i + 1;
+            let mut depth = 0i64;
+            while j < hi {
+                let tt = &toks[j];
+                if tt.kind == Kind::Punct {
+                    match tt.text.as_str() {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        "{" if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            if j >= hi {
+                break;
+            }
+            let a_close = match_brace(toks, j);
+            let (mut ca, pa) = consumed(toks, j + 1, a_close, var);
+            ca = ca || diverges(toks, j + 1, a_close);
+            partial = partial || pa;
+            let k = a_close + 1;
+            if tok_is(toks, k, Kind::Ident, "else")
+                && tok_is(toks, k + 1, Kind::Punct, "{")
+            {
+                let b_close = match_brace(toks, k + 1);
+                let (mut cb, pb) = consumed(toks, k + 2, b_close, var);
+                cb = cb || diverges(toks, k + 2, b_close);
+                partial = partial || pb;
+                if ca && cb {
+                    return (true, partial);
+                }
+                if ca || cb {
+                    partial = true;
+                }
+                i = b_close + 1;
+                continue;
+            }
+            if ca {
+                partial = true;
+            }
+            i = k;
+            continue;
+        }
+        // `match other { ... }`: all arms must consume or diverge.
+        if tok_is(toks, i, Kind::Ident, "match")
+            && !tok_is(toks, i + 1, Kind::Ident, var)
+        {
+            let mut j = i + 1;
+            let mut depth = 0i64;
+            while j < hi {
+                let tt = &toks[j];
+                if tt.kind == Kind::Punct {
+                    match tt.text.as_str() {
+                        "(" | "[" => depth += 1,
+                        ")" | "]" => depth -= 1,
+                        "{" if depth == 0 => break,
+                        _ => {}
+                    }
+                }
+                j += 1;
+            }
+            if j >= hi {
+                break;
+            }
+            let arms = match_arms(toks, j);
+            let mut results = Vec::new();
+            for (_pl, _ph, bl, bh) in &arms {
+                let (ok, pb) = consumed(toks, *bl, *bh, var);
+                partial = partial || pb;
+                results.push(ok || diverges(toks, *bl, *bh));
+            }
+            if !arms.is_empty() && results.iter().all(|&r| r) {
+                return (true, partial);
+            }
+            if results.iter().any(|&r| r) {
+                partial = true;
+            }
+            i = match_brace(toks, j) + 1;
+            continue;
+        }
+        if t.kind == Kind::Ident
+            && t.text == var
+            && consuming_position(toks, i)
+        {
+            return (true, partial);
+        }
+        i += 1;
+    }
+    (false, partial)
+}
+
+/// Innermost `{...}` span (exclusive of braces) within the function
+/// body containing token index `i`; the body itself if none.
+fn enclosing_block(
+    toks: &[Tok],
+    body_lo: usize,
+    body_hi: usize,
+    i: usize,
+) -> (usize, usize) {
+    let mut best = (body_lo, body_hi);
+    let mut j = body_lo;
+    while j < body_hi {
+        if tok_is(toks, j, Kind::Punct, "{") {
+            let close = match_brace(toks, j);
+            if j < i && i < close {
+                best = (j + 1, close);
+                j += 1;
+                continue;
+            }
+            j = close + 1;
+            continue;
+        }
+        j += 1;
+    }
+    best
+}
+
+/// End of the statement containing a call whose `)` closed at
+/// `call_close`: the next `;` at non-positive relative depth (value
+/// -position blocks may close before it).
+fn stmt_end(toks: &[Tok], body_hi: usize, from: usize) -> usize {
+    let mut depth = 0i64;
+    let mut k = from;
+    while k < body_hi {
+        let tt = &toks[k];
+        if tt.kind == Kind::Punct {
+            match tt.text.as_str() {
+                "(" | "[" | "{" => depth += 1,
+                ")" | "]" | "}" => depth -= 1,
+                ";" if depth <= 0 => break,
+                _ => {}
+            }
+        }
+        k += 1;
+    }
+    k
+}
+
+/// Lease-balance audit over one file.
+pub fn flow_pass(rel: &str, src: &str) -> Vec<Finding> {
+    if !FLOW_SCOPE.contains(&rel) {
+        return Vec::new();
+    }
+    let mut toks = lex(src);
+    if let (Some(cut), _) = super::cfg_cutoff(&toks) {
+        toks.retain(|t| t.line < cut);
+    }
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let mut findings = Vec::new();
+    let mut leak = |line: usize| {
+        let raw = raw_lines.get(line - 1).copied().unwrap_or("");
+        findings.push(Finding {
+            file: rel.to_string(),
+            line,
+            rule: Rule::LeaseFlow,
+            excerpt: excerpt_of(raw),
+        });
+    };
+
+    for (_name, body_lo, body_hi) in functions(&toks) {
+        let mut i = body_lo;
+        while i < body_hi {
+            if !(tok_is(&toks, i, Kind::Punct, ".")
+                && tok_is(&toks, i + 1, Kind::Ident, "try_acquire")
+                && tok_is(&toks, i + 2, Kind::Punct, "("))
+            {
+                i += 1;
+                continue;
+            }
+            let call_line = toks[i + 1].line;
+            let call_close = match_paren(&toks, i + 2);
+            match classify_site(&toks, body_lo, i) {
+                Shape::Let(var) => {
+                    // Obligation on the binding over the rest of the
+                    // enclosing block, after the statement's `;`.
+                    let k = stmt_end(&toks, body_hi, call_close + 1);
+                    let (_, blk_hi) =
+                        enclosing_block(&toks, body_lo, body_hi, k);
+                    let (ok, _) = consumed(&toks, k + 1, blk_hi, &var);
+                    if !ok {
+                        leak(call_line);
+                    }
+                    i = call_close + 1;
+                }
+                Shape::IfLet(var) => {
+                    // Obligation inside the then-block.
+                    let mut j = call_close + 1;
+                    while j < body_hi && !tok_is(&toks, j, Kind::Punct, "{")
+                    {
+                        j += 1;
+                    }
+                    let close = match_brace(&toks, j);
+                    let (ok, _) = consumed(&toks, j + 1, close, &var);
+                    if !ok {
+                        leak(call_line);
+                    }
+                    i = call_close + 1;
+                }
+                shape @ (Shape::Match(_) | Shape::LetMatch(..)) => {
+                    // Scrutinee: every Some-arm must consume, diverge
+                    // or (letmatch) pass through as the match value
+                    // `Some(y)` — then the obligation moves to the
+                    // let binding over the rest of its block.
+                    let pass_var = match shape {
+                        Shape::LetMatch(v, _) => Some(v),
+                        _ => None,
+                    };
+                    let mut j = call_close + 1;
+                    while j < body_hi && !tok_is(&toks, j, Kind::Punct, "{")
+                    {
+                        j += 1;
+                    }
+                    let arms = match_arms(&toks, j);
+                    let mut bad = false;
+                    let mut saw_some = false;
+                    let mut passed_through = false;
+                    for (pl, ph, bl, bh) in &arms {
+                        let Some(y) = some_binding(&toks, *pl, *ph) else {
+                            continue;
+                        };
+                        let y = y.to_string();
+                        saw_some = true;
+                        if pass_var.is_some()
+                            && some_binding(&toks, *bl, *bh)
+                                == Some(y.as_str())
+                        {
+                            // Arm body is exactly `Some(y)`.
+                            passed_through = true;
+                            continue;
+                        }
+                        let (ok, _) = consumed(&toks, *bl, *bh, &y);
+                        if !(ok || diverges(&toks, *bl, *bh)) {
+                            bad = true;
+                        }
+                    }
+                    if bad || !saw_some {
+                        leak(call_line);
+                    } else if passed_through {
+                        let var = pass_var.unwrap();
+                        let k = stmt_end(
+                            &toks,
+                            body_hi,
+                            match_brace(&toks, j) + 1,
+                        );
+                        let (_, blk_hi) =
+                            enclosing_block(&toks, body_lo, body_hi, k);
+                        let (ok, _) =
+                            consumed(&toks, k + 1, blk_hi, &var);
+                        if !ok {
+                            leak(call_line);
+                        }
+                    }
+                    i = match_brace(&toks, j) + 1;
+                }
+                Shape::Consumed => {
+                    i = call_close + 1;
+                }
+                Shape::Dropped => {
+                    // Statement-level call: the result is discarded.
+                    leak(call_line);
+                    i = call_close + 1;
+                }
+            }
+        }
+    }
+    findings
+}

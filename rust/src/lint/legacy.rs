@@ -1,0 +1,282 @@
+//! The retired masked-line scanner (ISSUE 8/9), kept verbatim as the
+//! **differential oracle** for the token-stream engine (ISSUE 10).
+//!
+//! The port contract: on every fixture the old scanner handled
+//! correctly, the new engine in [`super`] must emit byte-identical
+//! diagnostics for the five original rules.  The differential suite in
+//! `super::tests::differential_fixture_parity` locks that in — this
+//! module has no other callers and no CLI entry point.
+//!
+//! (The known divergence classes the rewrite fixed — substring
+//! matching flags `HashMap` buried inside a longer identifier, and
+//! misses a spaced-out `Instant :: now` path — are asserted
+//! separately as intentional divergences, see
+//! `differential_lexer_improvements`.)
+
+use super::{Finding, Rule};
+
+/// Blank out comments, string literals and char literals, preserving
+/// newlines (and therefore line numbers) exactly.  Handles nested
+/// block comments, escapes, multi-line strings and `r#"..."#` raw
+/// strings.
+pub fn mask_code(src: &str) -> String {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut out = String::with_capacity(src.len());
+    let mut i = 0;
+    // Push a masked char: newlines survive, everything else blanks.
+    fn blank(out: &mut String, c: char) {
+        out.push(if c == '\n' { '\n' } else { ' ' });
+    }
+    while i < n {
+        let c = b[i];
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                blank(&mut out, b[i]);
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust nests them).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            blank(&mut out, b[i]);
+            blank(&mut out, b[i + 1]);
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                } else {
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"..." / r#"..."# (prev char must not be part of
+        // an identifier, so `writer"` never false-positives).
+        if c == 'r'
+            && (i == 0 || !(b[i - 1].is_alphanumeric() || b[i - 1] == '_'))
+        {
+            let mut j = i + 1;
+            while j < n && b[j] == '#' {
+                j += 1;
+            }
+            if j < n && b[j] == '"' {
+                let hashes = j - (i + 1);
+                for k in i..=j {
+                    blank(&mut out, b[k]);
+                }
+                i = j + 1;
+                // Scan for `"` followed by `hashes` '#'s.
+                while i < n {
+                    if b[i] == '"'
+                        && i + hashes < n
+                        && (1..=hashes).all(|h| b[i + h] == '#')
+                    {
+                        for k in i..=i + hashes {
+                            blank(&mut out, b[k]);
+                        }
+                        i += hashes + 1;
+                        break;
+                    }
+                    blank(&mut out, b[i]);
+                    i += 1;
+                }
+                continue;
+            }
+        }
+        // Plain string literal (may span lines, may contain escapes).
+        if c == '"' {
+            blank(&mut out, c);
+            i += 1;
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    blank(&mut out, b[i]);
+                    blank(&mut out, b[i + 1]);
+                    i += 2;
+                    continue;
+                }
+                let done = b[i] == '"';
+                blank(&mut out, b[i]);
+                i += 1;
+                if done {
+                    break;
+                }
+            }
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char literal: '\n', '\'', '\\', '\x41',
+                // '\u{1F600}'.
+                let mut j = i + 2;
+                if j < n && b[j] == 'u' && j + 1 < n && b[j + 1] == '{' {
+                    j += 2;
+                    while j < n && b[j] != '}' {
+                        j += 1;
+                    }
+                    j += 1;
+                } else if j < n && b[j] == 'x' {
+                    j += 3;
+                } else {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' {
+                    for k in i..=j {
+                        blank(&mut out, b[k]);
+                    }
+                    i = j + 1;
+                    continue;
+                }
+            } else if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                // Simple char literal like '"' or 'x'.
+                for k in i..=i + 2 {
+                    blank(&mut out, b[k]);
+                }
+                i += 3;
+                continue;
+            }
+            // Lifetime: keep as code.
+            out.push(c);
+            i += 1;
+            continue;
+        }
+        out.push(c);
+        i += 1;
+    }
+    out
+}
+
+/// The five original rules, in the legacy report order.
+const LEGACY_RULES: [Rule; 5] = [
+    Rule::UnorderedCollection,
+    Rule::NanUnwrap,
+    Rule::Wallclock,
+    Rule::TimelineLayering,
+    Rule::CfgTestPlacement,
+];
+
+fn allow_annotation(raw: &str) -> Option<Rule> {
+    let i = raw.find("lint:allow(")?;
+    let rest = &raw[i + "lint:allow(".len()..];
+    let j = rest.find(')')?;
+    let name = rest[..j].trim();
+    LEGACY_RULES.iter().copied().find(|r| r.name() == name)
+}
+
+fn waived(raw_lines: &[&str], idx: usize, rule: Rule) -> bool {
+    if allow_annotation(raw_lines[idx]) == Some(rule) {
+        return true;
+    }
+    if idx > 0 {
+        let above = raw_lines[idx - 1].trim_start();
+        if above.starts_with("//") && allow_annotation(above) == Some(rule) {
+            return true;
+        }
+    }
+    false
+}
+
+/// The ISSUE 8/9 masked-line pass, verbatim: five rules, per-line
+/// substring matching on masked source.
+pub fn lint_source(rel: &str, src: &str) -> Vec<Finding> {
+    let rel = rel.replace('\\', "/");
+    if rel.starts_with("lint/") || rel == "lint.rs" {
+        return Vec::new();
+    }
+    let masked = mask_code(src);
+    let raw_lines: Vec<&str> = src.lines().collect();
+    let masked_lines: Vec<&str> = masked.lines().collect();
+    debug_assert_eq!(raw_lines.len(), masked_lines.len());
+
+    let is_backend = rel == "engine/backend.rs";
+    let mut pjrt_half = false;
+    let mut findings = Vec::new();
+    let mut push = |idx: usize, rule: Rule, raw: &str| {
+        if waived(&raw_lines, idx, rule) {
+            return;
+        }
+        let mut excerpt: String = raw.trim().chars().take(80).collect();
+        if raw.trim().chars().count() > 80 {
+            excerpt.push('…');
+        }
+        findings.push(Finding {
+            file: rel.clone(),
+            line: idx + 1,
+            rule,
+            excerpt,
+        });
+    };
+
+    for (idx, (&raw, &m)) in
+        raw_lines.iter().zip(masked_lines.iter()).enumerate()
+    {
+        let trimmed = raw.trim_start();
+        if trimmed.starts_with("#[cfg(test)]") {
+            let mut j = idx + 1;
+            while j < masked_lines.len() {
+                let mt = masked_lines[j].trim();
+                if mt.is_empty() || mt.starts_with("#[") {
+                    j += 1;
+                    continue;
+                }
+                break;
+            }
+            let introduces_module = masked_lines
+                .get(j)
+                .map(|l| l.trim_start())
+                .is_some_and(|l| {
+                    l.starts_with("mod ") || l.starts_with("pub mod ")
+                });
+            if !introduces_module {
+                push(idx, Rule::CfgTestPlacement, raw);
+            }
+            for (k, &later) in
+                masked_lines.iter().enumerate().skip(idx + 1)
+            {
+                if later.trim_start().starts_with("#[cfg(test)]") {
+                    push(k, Rule::CfgTestPlacement, raw_lines[k]);
+                }
+            }
+            break;
+        }
+        if is_backend && trimmed.starts_with("#[cfg(feature = \"pjrt\")]") {
+            pjrt_half = true;
+        }
+        let exec_exempt = is_backend && pjrt_half;
+
+        if super::ordered_state_scope(&rel)
+            && !exec_exempt
+            && (m.contains("HashMap") || m.contains("HashSet"))
+        {
+            push(idx, Rule::UnorderedCollection, raw);
+        }
+        if m.contains("partial_cmp") {
+            push(idx, Rule::NanUnwrap, raw);
+        }
+        if !rel.starts_with("train/")
+            && !exec_exempt
+            && (m.contains("Instant::now") || m.contains("SystemTime"))
+        {
+            push(idx, Rule::Wallclock, raw);
+        }
+        if !rel.starts_with("sim/")
+            && !is_backend
+            && m.contains("StreamTimeline")
+        {
+            push(idx, Rule::TimelineLayering, raw);
+        }
+    }
+    findings
+}

@@ -1,0 +1,386 @@
+//! A zero-dependency Rust token lexer for the lint pass (ISSUE 10).
+//!
+//! `syn` is not in the offline crate cache, so this is hand-rolled —
+//! but unlike the retired masked-line scanner (`super::legacy`,
+//! test-only) it
+//! produces a real token stream: comments are dropped, string/char
+//! literal *contents* can never be mistaken for code, lifetimes are
+//! distinguished from char literals, and a multi-line string inside a
+//! macro body cannot hide the code on the lines after it.
+//!
+//! The grammar subset is deliberately small: identifiers (keywords are
+//! just identifiers here), lifetimes, numbers, string/char literals
+//! (plain, raw `r#"…"#`, byte), and single-char punctuation.  That is
+//! enough for every rule and pass in `lint/` — multi-char operators
+//! like `::` or `=>` are matched as adjacent punct tokens.
+//!
+//! Mirrored line-for-line by `scripts/pstar_lint.py` (`lex`) for
+//! toolchain-less validation; keep the two in sync.
+
+/// Token kind.  `Str` keeps its content (the spec pass matches the
+/// `"pjrt"` feature string); the others keep their text.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Ident,
+    Lifetime,
+    Num,
+    Str,
+    Char,
+    Punct,
+}
+
+/// One token with its source position.
+#[derive(Clone, Debug)]
+pub struct Tok {
+    pub kind: Kind,
+    pub text: String,
+    /// 1-based source line the token starts on.
+    pub line: usize,
+    /// Whether this is the first token on its line (comments and
+    /// whitespace do not count) — the token-stream analogue of the
+    /// old `trim_start().starts_with(..)` line checks.
+    pub first: bool,
+}
+
+fn is_id_start(c: char) -> bool {
+    c.is_alphabetic() || c == '_'
+}
+
+fn is_id_cont(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Lex `src` into a token stream.  Never fails: unrecognized bytes
+/// become single punct tokens, unterminated literals run to EOF.
+pub fn lex(src: &str) -> Vec<Tok> {
+    let b: Vec<char> = src.chars().collect();
+    let n = b.len();
+    let mut toks: Vec<Tok> = Vec::new();
+    let mut i = 0usize;
+    let mut line = 1usize;
+    let mut line_had_tok = false;
+
+    macro_rules! push {
+        ($kind:expr, $text:expr, $line:expr) => {{
+            toks.push(Tok {
+                kind: $kind,
+                text: $text,
+                line: $line,
+                first: !line_had_tok,
+            });
+            line_had_tok = true;
+        }};
+    }
+
+    while i < n {
+        let c = b[i];
+        if c == '\n' {
+            line += 1;
+            line_had_tok = false;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        // Line comment.
+        if c == '/' && i + 1 < n && b[i + 1] == '/' {
+            while i < n && b[i] != '\n' {
+                i += 1;
+            }
+            continue;
+        }
+        // Block comment (Rust nests them).
+        if c == '/' && i + 1 < n && b[i + 1] == '*' {
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if b[i] == '/' && i + 1 < n && b[i + 1] == '*' {
+                    depth += 1;
+                    i += 2;
+                } else if b[i] == '*' && i + 1 < n && b[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    if b[i] == '\n' {
+                        line += 1;
+                        line_had_tok = false;
+                    }
+                    i += 1;
+                }
+            }
+            continue;
+        }
+        // Raw string r"..." / r#"..."# (optionally b-prefixed).
+        if c == 'r' || c == 'b' {
+            let mut j = i;
+            if b[j] == 'b' && j + 1 < n && b[j + 1] == 'r' {
+                j += 1;
+            }
+            if b[j] == 'r' {
+                let mut k = j + 1;
+                while k < n && b[k] == '#' {
+                    k += 1;
+                }
+                if k < n && b[k] == '"' {
+                    let hashes = k - (j + 1);
+                    let start_line = line;
+                    k += 1;
+                    let mut content = String::new();
+                    while k < n {
+                        if b[k] == '"'
+                            && k + hashes < n + 1
+                            && (1..=hashes).all(|h| {
+                                k + h < n && b[k + h] == '#'
+                            })
+                        {
+                            k += 1 + hashes;
+                            break;
+                        }
+                        if b[k] == '\n' {
+                            line += 1;
+                            line_had_tok = false;
+                        }
+                        content.push(b[k]);
+                        k += 1;
+                    }
+                    push!(Kind::Str, content, start_line);
+                    i = k;
+                    continue;
+                }
+            }
+        }
+        // Byte string b"..." — fold into the plain-string case.
+        let c = if c == 'b' && i + 1 < n && b[i + 1] == '"' {
+            i += 1;
+            b[i]
+        } else {
+            c
+        };
+        // Plain string literal (escapes, may span lines).
+        if c == '"' {
+            let start_line = line;
+            i += 1;
+            let mut content = String::new();
+            while i < n {
+                if b[i] == '\\' && i + 1 < n {
+                    content.push(b[i]);
+                    content.push(b[i + 1]);
+                    if b[i + 1] == '\n' {
+                        line += 1;
+                        line_had_tok = false;
+                    }
+                    i += 2;
+                    continue;
+                }
+                if b[i] == '"' {
+                    i += 1;
+                    break;
+                }
+                if b[i] == '\n' {
+                    line += 1;
+                    line_had_tok = false;
+                }
+                content.push(b[i]);
+                i += 1;
+            }
+            push!(Kind::Str, content, start_line);
+            continue;
+        }
+        // Char literal vs lifetime.
+        if c == '\'' {
+            if i + 1 < n && b[i + 1] == '\\' {
+                // Escaped char: '\n', '\'', '\x41', '\u{1F600}'.
+                let mut j = i + 2;
+                if j < n && b[j] == 'u' && j + 1 < n && b[j + 1] == '{' {
+                    j += 2;
+                    while j < n && b[j] != '}' {
+                        j += 1;
+                    }
+                    j += 1;
+                } else if j < n && b[j] == 'x' {
+                    j += 3;
+                } else {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' {
+                    push!(Kind::Char, b[i..=j].iter().collect(), line);
+                    i = j + 1;
+                    continue;
+                }
+            }
+            if i + 1 < n && is_id_start(b[i + 1]) {
+                // `'a'` is a char, `'a` (no closing quote) a lifetime.
+                let mut j = i + 1;
+                while j < n && is_id_cont(b[j]) {
+                    j += 1;
+                }
+                if j < n && b[j] == '\'' && j == i + 2 {
+                    push!(Kind::Char, b[i..=j].iter().collect(), line);
+                    i = j + 1;
+                    continue;
+                }
+                push!(Kind::Lifetime, b[i + 1..j].iter().collect(), line);
+                i = j;
+                continue;
+            }
+            if i + 2 < n && b[i + 2] == '\'' && b[i + 1] != '\'' {
+                // Simple non-alphanumeric char literal like '"'.
+                push!(Kind::Char, b[i..=i + 2].iter().collect(), line);
+                i += 3;
+                continue;
+            }
+            push!(Kind::Punct, "'".to_string(), line);
+            i += 1;
+            continue;
+        }
+        // Identifier / keyword.
+        if is_id_start(c) {
+            let mut j = i;
+            while j < n && is_id_cont(b[j]) {
+                j += 1;
+            }
+            push!(Kind::Ident, b[i..j].iter().collect(), line);
+            i = j;
+            continue;
+        }
+        // Number (digits plus trailing alphanumerics/underscore/dot —
+        // good enough for 0x41, 1_000, 1.5e3, 2f64; `0..n` ranges stop
+        // before the second consecutive dot).
+        if c.is_ascii_digit() {
+            let mut j = i;
+            while j < n && (is_id_cont(b[j]) || b[j] == '.') {
+                if b[j] == '.' && j + 1 < n && b[j + 1] == '.' {
+                    break;
+                }
+                j += 1;
+            }
+            push!(Kind::Num, b[i..j].iter().collect(), line);
+            i = j;
+            continue;
+        }
+        push!(Kind::Punct, c.to_string(), line);
+        i += 1;
+    }
+    toks
+}
+
+// ------------------------------------------------------- stream helpers
+
+/// `toks[i]`, if in range.
+pub fn at(toks: &[Tok], i: usize) -> Option<&Tok> {
+    toks.get(i)
+}
+
+/// Token at `i` matches `(kind, text)`.
+pub fn tok_is(toks: &[Tok], i: usize, kind: Kind, text: &str) -> bool {
+    toks.get(i).is_some_and(|t| t.kind == kind && t.text == text)
+}
+
+/// Token at `i` is an identifier (any text).
+pub fn ident_at(toks: &[Tok], i: usize) -> Option<&str> {
+    toks.get(i)
+        .filter(|t| t.kind == Kind::Ident)
+        .map(|t| t.text.as_str())
+}
+
+/// `::` (two adjacent `:` puncts) at `i`.
+pub fn path_sep(toks: &[Tok], i: usize) -> bool {
+    tok_is(toks, i, Kind::Punct, ":") && tok_is(toks, i + 1, Kind::Punct, ":")
+}
+
+/// Index of the `}` matching the `{` at `i` (or `toks.len()`).
+pub fn match_brace(toks: &[Tok], i: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = i;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == Kind::Punct {
+            if t.text == "{" {
+                depth += 1;
+            } else if t.text == "}" {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Index of the `)` matching the `(` at `i` (or `toks.len()`).
+pub fn match_paren(toks: &[Tok], i: usize) -> usize {
+    let mut depth = 0i64;
+    let mut j = i;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == Kind::Punct {
+            if t.text == "(" {
+                depth += 1;
+            } else if t.text == ")" {
+                depth -= 1;
+                if depth == 0 {
+                    return j;
+                }
+            }
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// Attribute group `# [ ... ]` starting at `i`: index after the `]`.
+pub fn skip_attr(toks: &[Tok], i: usize) -> usize {
+    if !(tok_is(toks, i, Kind::Punct, "#")
+        && tok_is(toks, i + 1, Kind::Punct, "["))
+    {
+        return i;
+    }
+    let mut depth = 0i64;
+    let mut j = i + 1;
+    while j < toks.len() {
+        let t = &toks[j];
+        if t.kind == Kind::Punct {
+            if t.text == "[" {
+                depth += 1;
+            } else if t.text == "]" {
+                depth -= 1;
+                if depth == 0 {
+                    return j + 1;
+                }
+            }
+        }
+        j += 1;
+    }
+    toks.len()
+}
+
+/// `# [ cfg ( test ) ]` at `i`, with the `#` first on its line.
+pub fn cfg_test_at(toks: &[Tok], i: usize) -> bool {
+    tok_is(toks, i, Kind::Punct, "#")
+        && toks[i].first
+        && tok_is(toks, i + 1, Kind::Punct, "[")
+        && tok_is(toks, i + 2, Kind::Ident, "cfg")
+        && tok_is(toks, i + 3, Kind::Punct, "(")
+        && tok_is(toks, i + 4, Kind::Ident, "test")
+        && tok_is(toks, i + 5, Kind::Punct, ")")
+        && tok_is(toks, i + 6, Kind::Punct, "]")
+}
+
+/// `# [ cfg ( feature = "pjrt" ) ]` at `i`, `#` first on its line.
+pub fn cfg_pjrt_at(toks: &[Tok], i: usize) -> bool {
+    tok_is(toks, i, Kind::Punct, "#")
+        && toks[i].first
+        && tok_is(toks, i + 1, Kind::Punct, "[")
+        && tok_is(toks, i + 2, Kind::Ident, "cfg")
+        && tok_is(toks, i + 3, Kind::Punct, "(")
+        && tok_is(toks, i + 4, Kind::Ident, "feature")
+        && tok_is(toks, i + 5, Kind::Punct, "=")
+        && at(toks, i + 6)
+            .is_some_and(|t| t.kind == Kind::Str && t.text == "pjrt")
+        && tok_is(toks, i + 7, Kind::Punct, ")")
+        && tok_is(toks, i + 8, Kind::Punct, "]")
+}

@@ -1,0 +1,240 @@
+//! Tensor-state-machine spec check (ISSUE 10).
+//!
+//! `TensorState` transitions live in three places that can drift:
+//! the declared table in `docs/INVARIANTS.md` (the single source of
+//! truth, delimited by `transition-spec` markers), the runtime guard
+//! `transition_allowed` in `tensor/mod.rs`, and the literal
+//! `retag_tensors(..)` call sites that actually drive chunks through
+//! the machine.  This pass diffs all three:
+//!
+//! * implemented-but-undeclared — an edge `transition_allowed`
+//!   accepts that the doc table does not list (fires at the
+//!   `tensor/mod.rs` line);
+//! * declared-but-absent — a table row the implementation rejects
+//!   (fires at the doc line);
+//! * undeclared retag — a literal `retag_tensors(From, To)` call
+//!   whose edge is missing from the table (fires at the call site).
+//!
+//! Mirrored by `scripts/pstar_lint.py` (`spec_pass` and friends).
+
+use std::collections::BTreeMap;
+
+use super::flow::functions;
+use super::lex::{at, ident_at, lex, match_paren, path_sep, tok_is, Kind, Tok};
+use super::{excerpt_of, Finding, Rule};
+
+pub const SPEC_BEGIN: &str = "<!-- transition-spec:begin -->";
+pub const SPEC_END: &str = "<!-- transition-spec:end -->";
+/// Path the doc findings are reported under (relative to `rust/`).
+pub const SPEC_DOC: &str = "docs/INVARIANTS.md";
+
+pub const STATES: [&str; 5] =
+    ["Free", "Compute", "Hold", "HoldAfterFwd", "HoldAfterBwd"];
+
+fn is_state(s: &str) -> bool {
+    STATES.contains(&s)
+}
+
+/// Declared `(from, to) -> 0-based doc line` from the marker-delimited
+/// markdown table, plus `(line0, raw)` pairs for malformed rows.
+/// `None` if the markers are missing.
+#[allow(clippy::type_complexity)]
+pub fn parse_table(
+    doc: &str,
+) -> Option<(BTreeMap<(String, String), usize>, Vec<(usize, String)>)> {
+    let lines: Vec<&str> = doc.split('\n').collect();
+    let mut lo = None;
+    let mut hi = None;
+    for (i, l) in lines.iter().enumerate() {
+        if l.contains(SPEC_BEGIN) && lo.is_none() {
+            lo = Some(i);
+        } else if l.contains(SPEC_END) && lo.is_some() {
+            hi = Some(i);
+            break;
+        }
+    }
+    let (lo, hi) = (lo?, hi?);
+    let mut edges = BTreeMap::new();
+    let mut errors = Vec::new();
+    for (i, raw) in lines.iter().enumerate().take(hi).skip(lo + 1) {
+        let l = raw.trim();
+        if !l.starts_with('|') {
+            continue;
+        }
+        let cells: Vec<&str> = l
+            .trim_matches('|')
+            .split('|')
+            .map(str::trim)
+            .collect();
+        if cells.len() < 2 {
+            continue;
+        }
+        let (frm, to) = (cells[0], cells[1]);
+        if frm == "From"
+            || frm.is_empty()
+            || frm.chars().all(|c| "-: ".contains(c))
+        {
+            continue; // header / separator row
+        }
+        if !is_state(frm) || !is_state(to) {
+            errors.push((i, raw.to_string()));
+            continue;
+        }
+        edges
+            .entry((frm.to_string(), to.to_string()))
+            .or_insert(i);
+    }
+    Some((edges, errors))
+}
+
+/// `(from, to) -> 1-based line` pairs inside `fn transition_allowed`.
+pub fn allowed_edges(toks: &[Tok]) -> BTreeMap<(String, String), usize> {
+    let mut edges = BTreeMap::new();
+    for (name, lo, hi) in functions(toks) {
+        if name != "transition_allowed" {
+            continue;
+        }
+        let mut i = lo;
+        while i < hi {
+            let frm = ident_at(toks, i + 1).filter(|x| is_state(x));
+            let to = ident_at(toks, i + 3).filter(|x| is_state(x));
+            if let (Some(frm), Some(to)) = (frm, to) {
+                if tok_is(toks, i, Kind::Punct, "(")
+                    && tok_is(toks, i + 2, Kind::Punct, ",")
+                    && tok_is(toks, i + 4, Kind::Punct, ")")
+                {
+                    edges
+                        .entry((frm.to_string(), to.to_string()))
+                        .or_insert(toks[i + 1].line);
+                    i += 5;
+                    continue;
+                }
+            }
+            i += 1;
+        }
+    }
+    edges
+}
+
+/// `(from, to, line)` triples from `retag_tensors(..)` call sites:
+/// the first two `TensorState :: X` literals inside the parens.
+pub fn retag_pairs(toks: &[Tok]) -> Vec<(String, String, usize)> {
+    let mut pairs = Vec::new();
+    let mut i = 0;
+    while i < toks.len() {
+        if tok_is(toks, i, Kind::Ident, "retag_tensors")
+            && tok_is(toks, i + 1, Kind::Punct, "(")
+        {
+            let close = match_paren(toks, i + 1);
+            let mut states: Vec<(String, usize)> = Vec::new();
+            let mut j = i + 2;
+            while j < close {
+                if tok_is(toks, j, Kind::Ident, "TensorState")
+                    && path_sep(toks, j + 1)
+                    && at(toks, j + 3).is_some_and(|t| {
+                        t.kind == Kind::Ident && is_state(&t.text)
+                    })
+                {
+                    states.push((toks[j + 3].text.clone(), toks[j].line));
+                    j += 4;
+                    continue;
+                }
+                j += 1;
+            }
+            if states.len() >= 2 {
+                pairs.push((
+                    states[0].0.clone(),
+                    states[1].0.clone(),
+                    states[0].1,
+                ));
+            }
+            i = close + 1;
+            continue;
+        }
+        i += 1;
+    }
+    pairs
+}
+
+fn mk(file: &str, line: usize, excerpt: String) -> Finding {
+    Finding {
+        file: file.to_string(),
+        line,
+        rule: Rule::StateSpec,
+        excerpt,
+    }
+}
+
+/// Diff the declared table against the implementation and the retag
+/// call sites.  `files` is the sorted in-memory tree; `doc` is the
+/// INVARIANTS.md text if present.
+pub fn spec_pass(files: &[(String, String)], doc: Option<&str>) -> Vec<Finding> {
+    let mut findings = Vec::new();
+    let Some(doc) = doc else {
+        findings.push(mk(SPEC_DOC, 1, "missing docs/INVARIANTS.md".into()));
+        return findings;
+    };
+    let Some((declared, errors)) = parse_table(doc) else {
+        findings.push(mk(SPEC_DOC, 1, "missing transition-spec markers".into()));
+        return findings;
+    };
+    let doc_lines: Vec<&str> = doc.split('\n').collect();
+    for (idx, raw) in &errors {
+        findings.push(mk(SPEC_DOC, idx + 1, excerpt_of(raw)));
+    }
+    let Some(tensor_src) = files
+        .iter()
+        .find(|(rel, _)| rel == "tensor/mod.rs")
+        .map(|(_, src)| src.as_str())
+    else {
+        findings.push(mk("tensor/mod.rs", 1, "missing tensor/mod.rs".into()));
+        return findings;
+    };
+
+    let mut ttoks = lex(tensor_src);
+    if let (Some(cut), _) = super::cfg_cutoff(&ttoks) {
+        ttoks.retain(|t| t.line < cut);
+    }
+    let allowed = allowed_edges(&ttoks);
+    let tensor_lines: Vec<&str> = tensor_src.split('\n').collect();
+
+    // Implemented-but-undeclared (delete a row from the doc table and
+    // this fires at the guard line).
+    let mut by_line: Vec<_> = allowed.iter().collect();
+    by_line.sort_by_key(|(_, line)| **line);
+    for (edge, line) in by_line {
+        if !declared.contains_key(edge) {
+            let raw = tensor_lines.get(line - 1).copied().unwrap_or("");
+            findings.push(mk("tensor/mod.rs", *line, excerpt_of(raw)));
+        }
+    }
+    // Declared-but-absent.
+    let mut by_doc: Vec<_> = declared.iter().collect();
+    by_doc.sort_by_key(|(_, idx)| **idx);
+    for (edge, idx) in by_doc {
+        if !allowed.contains_key(edge) {
+            let raw = doc_lines.get(*idx).copied().unwrap_or("");
+            findings.push(mk(SPEC_DOC, idx + 1, excerpt_of(raw)));
+        }
+    }
+    // Every literal retag site must use a declared edge.
+    for (rel, src) in files {
+        let mut toks = lex(src);
+        if let (Some(cut), _) = super::cfg_cutoff(&toks) {
+            toks.retain(|t| t.line < cut);
+        }
+        let src_lines: Vec<&str> = src.split('\n').collect();
+        for (frm, to, line) in retag_pairs(&toks) {
+            if !declared.contains_key(&(frm, to)) {
+                let raw = src_lines.get(line - 1).copied().unwrap_or("");
+                findings.push(Finding {
+                    file: rel.clone(),
+                    line,
+                    rule: Rule::StateSpec,
+                    excerpt: excerpt_of(raw),
+                });
+            }
+        }
+    }
+    findings
+}

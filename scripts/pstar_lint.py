@@ -1,0 +1,2038 @@
+#!/usr/bin/env python3
+"""Line-faithful Python port of `pstar-lint` v2 (rust/src/lint/).
+
+This container class of CI runner has no Rust toolchain, so the lint
+pass ships twice: the canonical Rust implementation under
+`rust/src/lint/` (lex.rs / mod.rs / flow.rs / spec.rs) and this port,
+kept function-for-function parallel so a toolchain-less session can
+still validate a migration, and CI can diff the two `--json` outputs
+for parity (the `lint` job does exactly that).
+
+Usage:
+    python3 scripts/pstar_lint.py [--root rust/src] [--json]
+    python3 scripts/pstar_lint.py --self-test
+
+Exit status: 0 clean, 1 findings (or self-test failure).
+
+Keep edits synchronized with the Rust side: every function here names
+its Rust twin in its docstring.
+"""
+
+import os
+import sys
+
+# --------------------------------------------------------------------------
+# Rules (Rust: lint::Rule)
+# --------------------------------------------------------------------------
+
+# Report order == this order (Rust derives Ord from variant order).
+RULES = [
+    "unordered-collection",
+    "nan-unwrap",
+    "wallclock",
+    "timeline-layering",
+    "cfg-test-placement",
+    "unseeded-entropy",
+    "thread-spawn",
+    "dev-mut-layering",
+    "unused-waiver",
+    "lease-flow",
+    "state-spec",
+]
+
+MESSAGES = {
+    "unordered-collection": (
+        "HashMap/HashSet iteration order varies per process; "
+        "use BTreeMap/BTreeSet in deterministic-state modules"
+    ),
+    "nan-unwrap": (
+        "partial_cmp panics (unwrap) or mis-sorts on NaN; "
+        "use util::total_cmp"
+    ),
+    "wallclock": (
+        "wall-clock reads outside train/ and the pjrt backend "
+        "leak real time into simulated schedules"
+    ),
+    "timeline-layering": (
+        "StreamTimeline is backend substrate; go through "
+        "ExecutionBackend instead"
+    ),
+    "cfg-test-placement": (
+        "#[cfg(test)] must introduce the single trailing test "
+        "module; code after it escapes every other rule"
+    ),
+    "unseeded-entropy": (
+        "ambient entropy (thread_rng/rand::random/RandomState) breaks "
+        "seeded replay; fork a SplitMix64 stream instead"
+    ),
+    "thread-spawn": (
+        "std::thread in policy modules makes scheduling racy; "
+        "planner state must stay single-threaded per rank"
+    ),
+    "dev-mut-layering": (
+        "space.dev_mut bypasses the chunk manager's accounting; "
+        "use a ChunkManager API (e.g. set_device_capacity)"
+    ),
+    "unused-waiver": (
+        "lint:allow annotation suppresses no finding; stale waivers "
+        "hide future violations — delete it"
+    ),
+    "lease-flow": (
+        "a pool.try_acquire lease must reach a release sink "
+        "(release/set_release/lease field/return) on every path"
+    ),
+    "state-spec": (
+        "tensor state transition disagrees with the declared table in "
+        "docs/INVARIANTS.md (transition-spec)"
+    ),
+}
+
+RULE_ORDER = {r: i for i, r in enumerate(RULES)}
+
+STATES = ("Free", "Compute", "Hold", "HoldAfterFwd", "HoldAfterBwd")
+
+# Files audited by the lease-flow pass (Rust: flow::FLOW_SCOPE).
+FLOW_SCOPE = ("engine/session.rs", "dp/group.rs")
+
+SPEC_BEGIN = "<!-- transition-spec:begin -->"
+SPEC_END = "<!-- transition-spec:end -->"
+SPEC_DOC = "docs/INVARIANTS.md"
+
+
+# --------------------------------------------------------------------------
+# Token lexer (Rust: lint::lex)
+# --------------------------------------------------------------------------
+
+# Token kinds.
+ID, LIFE, NUM, STR, CH, PUNCT = "id", "life", "num", "str", "ch", "punct"
+
+
+class Tok:
+    """Rust: lex::Tok {kind, text, line, first}."""
+
+    __slots__ = ("kind", "text", "line", "first")
+
+    def __init__(self, kind, text, line, first):
+        self.kind = kind
+        self.text = text
+        self.line = line        # 1-based
+        self.first = first      # first token on its line?
+
+    def __repr__(self):
+        return f"{self.kind}:{self.text}@{self.line}"
+
+
+def _is_id_start(c):
+    return c.isalpha() or c == "_"
+
+
+def _is_id_cont(c):
+    return c.isalnum() or c == "_"
+
+
+def lex(src):
+    """Rust: lex::lex.  Comments dropped; strings/chars kept as single
+    tokens (their content never produces idents/puncts); newlines only
+    advance the line counter."""
+    toks = []
+    b = src
+    n = len(b)
+    i = 0
+    line = 1
+    line_had_tok = False
+
+    def push(kind, text, at_line):
+        nonlocal line_had_tok
+        toks.append(Tok(kind, text, at_line, not line_had_tok))
+        line_had_tok = True
+
+    def count_nl(s):
+        return s.count("\n")
+
+    while i < n:
+        c = b[i]
+        if c == "\n":
+            line += 1
+            line_had_tok = False
+            i += 1
+            continue
+        if c.isspace():
+            i += 1
+            continue
+        # Line comment.
+        if c == "/" and i + 1 < n and b[i + 1] == "/":
+            while i < n and b[i] != "\n":
+                i += 1
+            continue
+        # Block comment (nested).
+        if c == "/" and i + 1 < n and b[i + 1] == "*":
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if b[i] == "/" and i + 1 < n and b[i + 1] == "*":
+                    depth += 1
+                    i += 2
+                elif b[i] == "*" and i + 1 < n and b[i + 1] == "/":
+                    depth -= 1
+                    i += 2
+                else:
+                    if b[i] == "\n":
+                        line += 1
+                        line_had_tok = False
+                    i += 1
+            continue
+        # Raw string r"..." / r#"..."# (optionally b-prefixed).
+        if c in ("r", "b"):
+            j = i
+            if b[j] == "b" and j + 1 < n and b[j + 1] == "r":
+                j += 1
+            if b[j] == "r":
+                k = j + 1
+                while k < n and b[k] == "#":
+                    k += 1
+                if k < n and b[k] == '"':
+                    hashes = k - (j + 1)
+                    start_line = line
+                    k += 1
+                    content = []
+                    while k < n:
+                        if b[k] == '"' and b[k + 1 : k + 1 + hashes] == "#" * hashes:
+                            k += 1 + hashes
+                            break
+                        if b[k] == "\n":
+                            line += 1
+                            line_had_tok = False
+                        content.append(b[k])
+                        k += 1
+                    push(STR, "".join(content), start_line)
+                    i = k
+                    continue
+        # Byte string b"...".
+        if c == "b" and i + 1 < n and b[i + 1] == '"':
+            i += 1
+            c = b[i]
+            # fall through to plain-string case below
+        # Plain string literal (escapes, may span lines).
+        if c == '"':
+            start_line = line
+            i += 1
+            content = []
+            while i < n:
+                if b[i] == "\\" and i + 1 < n:
+                    content.append(b[i : i + 2])
+                    if b[i + 1] == "\n":
+                        line += 1
+                        line_had_tok = False
+                    i += 2
+                    continue
+                if b[i] == '"':
+                    i += 1
+                    break
+                if b[i] == "\n":
+                    line += 1
+                    line_had_tok = False
+                content.append(b[i])
+                i += 1
+            push(STR, "".join(content), start_line)
+            continue
+        # Char literal vs lifetime.
+        if c == "'":
+            if i + 1 < n and b[i + 1] == "\\":
+                # Escaped char literal: '\n', '\'', '\x41', '\u{..}'.
+                j = i + 2
+                if j < n and b[j] == "u" and j + 1 < n and b[j + 1] == "{":
+                    j += 2
+                    while j < n and b[j] != "}":
+                        j += 1
+                    j += 1
+                elif j < n and b[j] == "x":
+                    j += 3
+                else:
+                    j += 1
+                if j < n and b[j] == "'":
+                    push(CH, b[i : j + 1], line)
+                    i = j + 1
+                    continue
+            if i + 1 < n and _is_id_start(b[i + 1]):
+                # 'a' is a char, 'a (no closing quote) a lifetime.
+                j = i + 1
+                while j < n and _is_id_cont(b[j]):
+                    j += 1
+                if j < n and b[j] == "'" and j == i + 2:
+                    push(CH, b[i : j + 1], line)
+                    i = j + 1
+                    continue
+                push(LIFE, b[i + 1 : j], line)
+                i = j
+                continue
+            if i + 2 < n and b[i + 2] == "'" and b[i + 1] != "'":
+                # Simple non-alphanumeric char literal like '"'.
+                push(CH, b[i : i + 3], line)
+                i += 3
+                continue
+            push(PUNCT, "'", line)
+            i += 1
+            continue
+        # Identifier / keyword.
+        if _is_id_start(c):
+            j = i
+            while j < n and _is_id_cont(b[j]):
+                j += 1
+            push(ID, b[i:j], line)
+            i = j
+            continue
+        # Number (digits plus following alphanumerics/underscore/dot:
+        # good enough for 0x41, 1_000, 1.5e3, 2f64).
+        if c.isdigit():
+            j = i
+            while j < n and (_is_id_cont(b[j]) or b[j] == "."):
+                # `0..n` range: stop before a second consecutive dot.
+                if b[j] == "." and j + 1 < n and b[j + 1] == ".":
+                    break
+                j += 1
+            push(NUM, b[i:j], line)
+            i = j
+            continue
+        push(PUNCT, c, line)
+        i += 1
+    return toks
+
+
+# --------------------------------------------------------------------------
+# Token helpers shared by the rule engine and the passes
+# --------------------------------------------------------------------------
+
+
+def tok_is(t, kind, text):
+    return t is not None and t.kind == kind and t.text == text
+
+
+def at(toks, i):
+    return toks[i] if 0 <= i < len(toks) else None
+
+
+def seq_is(toks, i, spec):
+    """spec: list of (kind, text) — text None matches any."""
+    for k, (kind, text) in enumerate(spec):
+        t = at(toks, i + k)
+        if t is None or t.kind != kind:
+            return False
+        if text is not None and t.text != text:
+            return False
+    return True
+
+
+def is_path_sep(toks, i):
+    """`::` at token index i (two adjacent ':' puncts)."""
+    return tok_is(at(toks, i), PUNCT, ":") and tok_is(at(toks, i + 1), PUNCT, ":")
+
+
+def match_brace(toks, i):
+    """Index of the `}` matching the `{` at i (or len(toks))."""
+    depth = 0
+    j = i
+    while j < len(toks):
+        t = toks[j]
+        if t.kind == PUNCT and t.text == "{":
+            depth += 1
+        elif t.kind == PUNCT and t.text == "}":
+            depth -= 1
+            if depth == 0:
+                return j
+        j += 1
+    return len(toks)
+
+
+def match_paren(toks, i):
+    """Index of the `)` matching the `(` at i (or len(toks))."""
+    depth = 0
+    j = i
+    while j < len(toks):
+        t = toks[j]
+        if t.kind == PUNCT and t.text == "(":
+            depth += 1
+        elif t.kind == PUNCT and t.text == ")":
+            depth -= 1
+            if depth == 0:
+                return j
+        j += 1
+    return len(toks)
+
+
+# Attribute group `# [ ... ]` starting at i: return index after `]`.
+def skip_attr(toks, i):
+    if not (tok_is(at(toks, i), PUNCT, "#") and tok_is(at(toks, i + 1), PUNCT, "[")):
+        return i
+    depth = 0
+    j = i + 1
+    while j < len(toks):
+        t = toks[j]
+        if t.kind == PUNCT and t.text == "[":
+            depth += 1
+        elif t.kind == PUNCT and t.text == "]":
+            depth -= 1
+            if depth == 0:
+                return j + 1
+        j += 1
+    return len(toks)
+
+
+def cfg_test_at(toks, i):
+    """`# [ cfg ( test ) ]` with `#` first on its line."""
+    return (
+        tok_is(at(toks, i), PUNCT, "#")
+        and at(toks, i).first
+        and tok_is(at(toks, i + 1), PUNCT, "[")
+        and tok_is(at(toks, i + 2), ID, "cfg")
+        and tok_is(at(toks, i + 3), PUNCT, "(")
+        and tok_is(at(toks, i + 4), ID, "test")
+        and tok_is(at(toks, i + 5), PUNCT, ")")
+        and tok_is(at(toks, i + 6), PUNCT, "]")
+    )
+
+
+def cfg_pjrt_at(toks, i):
+    """`# [ cfg ( feature = "pjrt" ) ]` with `#` first on its line."""
+    return (
+        tok_is(at(toks, i), PUNCT, "#")
+        and at(toks, i).first
+        and tok_is(at(toks, i + 1), PUNCT, "[")
+        and tok_is(at(toks, i + 2), ID, "cfg")
+        and tok_is(at(toks, i + 3), PUNCT, "(")
+        and tok_is(at(toks, i + 4), ID, "feature")
+        and tok_is(at(toks, i + 5), PUNCT, "=")
+        and at(toks, i + 6) is not None
+        and at(toks, i + 6).kind == STR
+        and at(toks, i + 6).text == "pjrt"
+        and tok_is(at(toks, i + 7), PUNCT, ")")
+        and tok_is(at(toks, i + 8), PUNCT, "]")
+    )
+
+
+# --------------------------------------------------------------------------
+# Findings (Rust: lint::Finding)
+# --------------------------------------------------------------------------
+
+
+def excerpt_of(raw_line):
+    t = raw_line.strip()
+    if len(t) > 80:
+        return t[:80] + "\u2026"
+    return t
+
+
+def finding(file, line, rule, excerpt):
+    return {"file": file, "line": line, "rule": rule, "excerpt": excerpt}
+
+
+def render(f):
+    return "{}:{}: [{}] {}: `{}`".format(
+        f["file"], f["line"], f["rule"], MESSAGES[f["rule"]], f["excerpt"]
+    )
+
+
+def sort_key(f):
+    return (f["file"], f["line"], RULE_ORDER[f["rule"]])
+
+
+# --------------------------------------------------------------------------
+# Waivers (Rust: lint::allow_annotation / waived)
+# --------------------------------------------------------------------------
+
+
+def allow_annotation(raw):
+    i = raw.find("lint:allow(")
+    if i < 0:
+        return None
+    rest = raw[i + len("lint:allow(") :]
+    j = rest.find(")")
+    if j < 0:
+        return None
+    name = rest[:j].strip()
+    return name if name in RULE_ORDER else None
+
+
+def waived(raw_lines, idx, rule, fired):
+    """idx 0-based.  Records the annotation line that fired in `fired`."""
+    if allow_annotation(raw_lines[idx]) == rule:
+        fired.add(idx)
+        return True
+    if idx > 0:
+        above = raw_lines[idx - 1].lstrip()
+        if above.startswith("//") and allow_annotation(above) == rule:
+            fired.add(idx - 1)
+            return True
+    return False
+
+
+# --------------------------------------------------------------------------
+# Scope predicates (Rust: lint::ordered_state_scope etc.)
+# --------------------------------------------------------------------------
+
+
+def ordered_state_scope(rel):
+    return rel.startswith(("sim/", "engine/", "chunk/", "evict/", "dp/", "mem/"))
+
+
+# --------------------------------------------------------------------------
+# Per-file token rules (Rust: lint::lint_source)
+# --------------------------------------------------------------------------
+
+
+def cfg_cutoff(toks):
+    """(cutoff_line, cfg_findings): the first-on-line `#[cfg(test)]`
+    cutoff plus cfg-test-placement candidates (Rust: lint::cfg_scan).
+    Findings come back as (line0, rule) candidates."""
+    cands = []
+    first = None
+    i = 0
+    while i < len(toks):
+        if cfg_test_at(toks, i):
+            if first is None:
+                first = toks[i].line
+                # Skip stacked attributes; the next item must be a
+                # (pub) module.
+                j = i + 7
+                while tok_is(at(toks, j), PUNCT, "#") and tok_is(
+                    at(toks, j + 1), PUNCT, "["
+                ):
+                    j = skip_attr(toks, j)
+                introduces = tok_is(at(toks, j), ID, "mod") or (
+                    tok_is(at(toks, j), ID, "pub")
+                    and tok_is(at(toks, j + 1), ID, "mod")
+                )
+                if not introduces:
+                    cands.append((toks[i].line - 1, "cfg-test-placement"))
+            else:
+                cands.append((toks[i].line - 1, "cfg-test-placement"))
+            i += 7
+            continue
+        i += 1
+    return (first, cands)
+
+
+def token_rule_candidates(rel, toks, cutoff_line, pjrt_line):
+    """Per-line (line0, rule) candidates from the token stream
+    (Rust: lint::token_rules)."""
+    cands = set()
+    in_scope = ordered_state_scope(rel)
+    is_backend = rel == "engine/backend.rs"
+
+    def exec_exempt(line):
+        return pjrt_line is not None and line >= pjrt_line
+
+    for i, t in enumerate(toks):
+        line = t.line
+        if cutoff_line is not None and line >= cutoff_line:
+            continue
+        if t.kind != ID:
+            continue
+        x = t.text
+        if (
+            in_scope
+            and x in ("HashMap", "HashSet")
+            and not exec_exempt(line)
+        ):
+            cands.add((line - 1, "unordered-collection"))
+        if x == "partial_cmp":
+            cands.add((line - 1, "nan-unwrap"))
+        if not rel.startswith("train/") and not exec_exempt(line):
+            if x == "SystemTime":
+                cands.add((line - 1, "wallclock"))
+            if x == "Instant" and is_path_sep(toks, i + 1) and tok_is(
+                at(toks, i + 3), ID, "now"
+            ):
+                cands.add((line - 1, "wallclock"))
+        if (
+            x == "StreamTimeline"
+            and not rel.startswith("sim/")
+            and not is_backend
+        ):
+            cands.add((line - 1, "timeline-layering"))
+        if x in ("thread_rng", "RandomState", "from_entropy"):
+            cands.add((line - 1, "unseeded-entropy"))
+        if x == "rand" and is_path_sep(toks, i + 1) and tok_is(
+            at(toks, i + 3), ID, "random"
+        ):
+            cands.add((line - 1, "unseeded-entropy"))
+        if in_scope:
+            if x == "std" and is_path_sep(toks, i + 1) and tok_is(
+                at(toks, i + 3), ID, "thread"
+            ):
+                cands.add((line - 1, "thread-spawn"))
+            if x == "thread" and is_path_sep(toks, i + 1) and tok_is(
+                at(toks, i + 3), ID, "spawn"
+            ):
+                cands.add((line - 1, "thread-spawn"))
+        if x == "dev_mut" and rel not in ("chunk/manager.rs", "mem/space.rs"):
+            cands.add((line - 1, "dev-mut-layering"))
+    return cands
+
+
+def lint_source(rel, src):
+    """Per-file pass: token rules + cfg placement + waivers +
+    unused-waiver (Rust: lint::lint_source)."""
+    rel = rel.replace("\\", "/")
+    if rel.startswith("lint/") or rel == "lint.rs":
+        return []
+    toks = lex(src)
+    raw_lines = src.split("\n")
+    if raw_lines and raw_lines[-1] == "":
+        raw_lines.pop()
+
+    cutoff_line, cands = cfg_cutoff(toks)
+    pjrt_line = None
+    if rel == "engine/backend.rs":
+        for i in range(len(toks)):
+            if cfg_pjrt_at(toks, i):
+                pjrt_line = toks[i].line
+                break
+    cands = set(cands)
+    cands |= token_rule_candidates(rel, toks, cutoff_line, pjrt_line)
+
+    fired = set()
+    findings = []
+    for (idx, rule) in sorted(cands, key=lambda c: (c[0], RULE_ORDER[c[1]])):
+        if idx >= len(raw_lines):
+            continue
+        if waived(raw_lines, idx, rule, fired):
+            continue
+        findings.append(finding(rel, idx + 1, rule, excerpt_of(raw_lines[idx])))
+
+    # Unused-waiver: an annotation (before the test tail) that
+    # suppressed nothing is itself a finding.
+    limit = (cutoff_line - 1) if cutoff_line is not None else len(raw_lines)
+    for idx in range(min(limit, len(raw_lines))):
+        rule = allow_annotation(raw_lines[idx])
+        if rule is not None and idx not in fired:
+            findings.append(
+                finding(rel, idx + 1, "unused-waiver", excerpt_of(raw_lines[idx]))
+            )
+    findings.sort(key=sort_key)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Flow-sensitive lease-balance pass (Rust: lint::flow)
+# --------------------------------------------------------------------------
+
+
+def flow_functions(toks):
+    """(name, body_start, body_end) for each `fn` with a body; body
+    span excludes the outer braces (Rust: flow::functions)."""
+    fns = []
+    i = 0
+    while i < len(toks):
+        if tok_is(toks[i], ID, "fn") and at(toks, i + 1) is not None and at(
+            toks, i + 1
+        ).kind == ID:
+            name = toks[i + 1].text
+            j = i + 2
+            # Find the body `{`, bailing at `;` (bodyless decl) at
+            # paren/bracket depth 0.
+            depth = 0
+            while j < len(toks):
+                t = toks[j]
+                if t.kind == PUNCT and t.text in "([":
+                    depth += 1
+                elif t.kind == PUNCT and t.text in ")]":
+                    depth -= 1
+                elif t.kind == PUNCT and t.text == ";" and depth == 0:
+                    j = None
+                    break
+                elif t.kind == PUNCT and t.text == "{" and depth == 0:
+                    break
+                j += 1
+            if j is None or j >= len(toks):
+                i += 2
+                continue
+            close = match_brace(toks, j)
+            fns.append((name, j + 1, close))
+            i = j + 1
+            continue
+        i += 1
+    return fns
+
+
+# Keywords that introduce a block header the classifier may cross
+# while walking out of a value-position block (`let x = if c { HERE }`).
+HEADER_KEYWORDS = ("if", "else", "loop", "while", "for", "in")
+
+
+def skip_group_back(toks, lo, j):
+    """j indexes a closing `)]}`; return the index before its opener
+    (Rust: flow::skip_group_back)."""
+    pairs = {")": "(", "]": "[", "}": "{"}
+    close = toks[j].text
+    opener = pairs[close]
+    depth = 0
+    while j >= lo:
+        t = toks[j]
+        if t.kind == PUNCT and t.text == close:
+            depth += 1
+        elif t.kind == PUNCT and t.text == opener:
+            depth -= 1
+            if depth == 0:
+                return j - 1
+        j -= 1
+    return lo - 1
+
+
+def classify_site(toks, lo, i):
+    """Walk backwards from the `.try_acquire` at i to the construct
+    that owns its result (Rust: flow::classify_site).  Returns one of:
+      ('match',    match_idx)     scrutinee of a value-escaping match
+      ('letmatch', (var, m_idx))  `let VAR = ... match try_acquire ...`
+      ('let',      var)           initializer of `let VAR = ...`
+      ('iflet',    var)           `if let Some(VAR) = ...` / while let
+      ('consumed', None)          moved straight into a call/return
+      ('dropped',  None)          statement-level: result discarded
+    The walk skips balanced groups and ordinary expression tokens, and
+    crosses unmatched `{` upward (a value-position block).  On finding
+    `match` it keeps walking: if the match is itself the initializer of
+    a `let`, the obligation continues on the binding ('letmatch')."""
+    j = i - 1
+    match_idx = None
+    while j >= lo:
+        t = toks[j]
+        if t.kind == PUNCT and t.text in ")]}":
+            j = skip_group_back(toks, lo, j)
+            continue
+        if t.kind == PUNCT and t.text == ";":
+            break
+        if t.kind == PUNCT and t.text == ">" and tok_is(at(toks, j - 1), PUNCT, "="):
+            # `=>`: arm-valued expression; the value escapes upward.
+            return ("consumed", None)
+        if t.kind == PUNCT and t.text == "=":
+            nxt = at(toks, j + 1)
+            prv = at(toks, j - 1)
+            if tok_is(nxt, PUNCT, ">") or (
+                prv is not None
+                and prv.kind == PUNCT
+                and prv.text in "=!<>+-*/&|^%"
+            ):
+                j -= 1  # `=>` tail / comparison / compound op
+                continue
+            # `let VAR =` or a plain reassignment `VAR =`.
+            k = j - 1
+            if (
+                tok_is(at(toks, k), PUNCT, ")")
+                and tok_is(at(toks, k - 2), PUNCT, "(")
+                and tok_is(at(toks, k - 3), ID, "Some")
+                and tok_is(at(toks, k - 4), ID, "let")
+                and at(toks, k - 1) is not None
+                and at(toks, k - 1).kind == ID
+            ):
+                # `[if|while] let Some ( VAR ) =`
+                return ("iflet", toks[k - 1].text)
+            if at(toks, k) is not None and at(toks, k).kind == ID:
+                # `let VAR =` or a reassignment: same audit either way.
+                var = toks[k].text
+                if match_idx is not None:
+                    return ("letmatch", (var, match_idx))
+                return ("let", var)
+            break
+        if t.kind == ID:
+            if t.text == "match":
+                if match_idx is None:
+                    match_idx = j
+                j -= 1
+                continue
+            if t.text == "return":
+                return ("consumed", None)
+            j -= 1
+            continue
+        if t.kind == PUNCT and t.text == "{":
+            j -= 1  # value-position block: continue into its header
+            continue
+        if t.kind == PUNCT and t.text in ",(":
+            # Argument / field value: moved into the enclosing call.
+            return ("consumed", None)
+        if t.kind == PUNCT:
+            j -= 1  # `.` `::` `&` `?` `!` operators: expression glue
+            continue
+        j -= 1
+    if match_idx is not None:
+        return ("match", match_idx)
+    return ("dropped", None)
+
+
+def parse_match_arms(toks, lbrace):
+    """Split the `{...}` of a match starting at lbrace into arms:
+    list of (pat_lo, pat_hi, body_lo, body_hi) token index ranges
+    (Rust: flow::match_arms)."""
+    close = match_brace(toks, lbrace)
+    arms = []
+    i = lbrace + 1
+    while i < close:
+        # Pattern: up to `=>` at depth 0.
+        pat_lo = i
+        depth = 0
+        while i < close:
+            t = toks[i]
+            if t.kind == PUNCT and t.text in "([{":
+                depth += 1
+            elif t.kind == PUNCT and t.text in ")]}":
+                depth -= 1
+            elif (
+                depth == 0
+                and t.kind == PUNCT
+                and t.text == "="
+                and tok_is(at(toks, i + 1), PUNCT, ">")
+            ):
+                break
+            i += 1
+        if i >= close:
+            break
+        pat_hi = i
+        i += 2  # past =>
+        body_lo = i
+        if tok_is(at(toks, i), PUNCT, "{"):
+            body_hi = match_brace(toks, i) + 1
+            i = body_hi
+            if tok_is(at(toks, i), PUNCT, ","):
+                i += 1
+        else:
+            depth = 0
+            while i < close:
+                t = toks[i]
+                if t.kind == PUNCT and t.text in "([{":
+                    depth += 1
+                elif t.kind == PUNCT and t.text in ")]}":
+                    depth -= 1
+                elif depth == 0 and t.kind == PUNCT and t.text == ",":
+                    break
+                i += 1
+            body_hi = i
+            if i < close:
+                i += 1  # past ,
+        arms.append((pat_lo, pat_hi, body_lo, body_hi))
+    return arms
+
+
+def some_binding(toks, pat_lo, pat_hi):
+    """`Some ( ident )` pattern -> ident, else None."""
+    if (
+        pat_hi - pat_lo == 4
+        and tok_is(at(toks, pat_lo), ID, "Some")
+        and tok_is(at(toks, pat_lo + 1), PUNCT, "(")
+        and at(toks, pat_lo + 2) is not None
+        and at(toks, pat_lo + 2).kind == ID
+        and tok_is(at(toks, pat_lo + 3), PUNCT, ")")
+    ):
+        return toks[pat_lo + 2].text
+    return None
+
+
+def diverges(toks, lo, hi):
+    """Arm/branch escapes the enclosing scope (Rust: flow::diverges)."""
+    i = lo
+    while i < hi:
+        t = toks[i]
+        if t.kind == ID and t.text in ("break", "continue", "return"):
+            return True
+        if (
+            t.kind == ID
+            and t.text in ("bail", "panic", "unreachable", "todo")
+            and tok_is(at(toks, i + 1), PUNCT, "!")
+        ):
+            return True
+        i += 1
+    return False
+
+
+def consuming_position(toks, i):
+    """Token i (the tracked ident) sits in a consuming position
+    (Rust: flow::consuming_position):
+      * first argument of `.release(` / `.set_release(`
+      * wrapped: `Some( X`
+      * moved into a literal/call: preceded by `{ , : (` AND followed
+        by `, } )` (field value, field shorthand, argument)
+      * returned: `return` within the same statement prefix
+    """
+    prev = at(toks, i - 1)
+    nxt = at(toks, i + 1)
+    if tok_is(prev, PUNCT, "(") and at(toks, i - 2) is not None:
+        t2 = at(toks, i - 2)
+        if t2.kind == ID and t2.text in ("release", "set_release"):
+            return True
+        if t2.kind == ID and t2.text == "Some":
+            return True
+    if (
+        prev is not None
+        and prev.kind == PUNCT
+        and prev.text in "{,:("
+        and nxt is not None
+        and nxt.kind == PUNCT
+        and nxt.text in ",})"
+    ):
+        return True
+    # `return ... X`: scan back a short window to the statement edge.
+    j = i - 1
+    while j >= 0 and j >= i - 12:
+        t = toks[j]
+        if t.kind == PUNCT and t.text in ";{}":
+            break
+        if t.kind == ID and t.text == "return":
+            return True
+        j -= 1
+    return False
+
+
+def consumed(toks, lo, hi, var):
+    """Must-consume analysis of `var` over the straight-line region
+    [lo, hi) with branch awareness (Rust: flow::consumed).
+    Returns (consumed_on_all_paths, partial)."""
+    partial = False
+    i = lo
+    while i < hi:
+        t = toks[i]
+        # `if let Some ( Y ) = var {` — Some-arm discharges the whole
+        # obligation (the None side carries nothing).
+        if (
+            tok_is(t, ID, "if")
+            and tok_is(at(toks, i + 1), ID, "let")
+            and tok_is(at(toks, i + 2), ID, "Some")
+            and tok_is(at(toks, i + 3), PUNCT, "(")
+            and at(toks, i + 4) is not None
+            and at(toks, i + 4).kind == ID
+            and tok_is(at(toks, i + 5), PUNCT, ")")
+            and tok_is(at(toks, i + 6), PUNCT, "=")
+            and tok_is(at(toks, i + 7), ID, var)
+            and tok_is(at(toks, i + 8), PUNCT, "{")
+        ):
+            inner = at(toks, i + 4).text
+            close = match_brace(toks, i + 8)
+            ok, _ = consumed(toks, i + 9, close, inner)
+            if ok:
+                return (True, partial)
+            i = close + 1
+            continue
+        # `match var {` with Some-arms.
+        if tok_is(t, ID, "match") and tok_is(at(toks, i + 1), ID, var) and tok_is(
+            at(toks, i + 2), PUNCT, "{"
+        ):
+            arms = parse_match_arms(toks, i + 2)
+            for (pl, ph, bl, bh) in arms:
+                y = some_binding(toks, pl, ph)
+                if y is not None:
+                    ok, _ = consumed(toks, bl, bh, y)
+                    if ok:
+                        return (True, partial)
+            i = match_brace(toks, i + 2) + 1
+            continue
+        # Plain `if cond { A } [else { B }]` / `match other { ... }`.
+        if tok_is(t, ID, "if") and not tok_is(at(toks, i + 1), ID, "let"):
+            j = i + 1
+            depth = 0
+            while j < hi:
+                tt = toks[j]
+                if tt.kind == PUNCT and tt.text in "([":
+                    depth += 1
+                elif tt.kind == PUNCT and tt.text in ")]":
+                    depth -= 1
+                elif depth == 0 and tt.kind == PUNCT and tt.text == "{":
+                    break
+                j += 1
+            if j >= hi:
+                break
+            a_close = match_brace(toks, j)
+            ca, pa = consumed(toks, j + 1, a_close, var)
+            ca = ca or diverges(toks, j + 1, a_close)
+            partial = partial or pa
+            k = a_close + 1
+            if tok_is(at(toks, k), ID, "else") and tok_is(at(toks, k + 1), PUNCT, "{"):
+                b_close = match_brace(toks, k + 1)
+                cb, pb = consumed(toks, k + 2, b_close, var)
+                cb = cb or diverges(toks, k + 2, b_close)
+                partial = partial or pb
+                if ca and cb:
+                    return (True, partial)
+                if ca or cb:
+                    partial = True
+                i = b_close + 1
+                continue
+            if ca:
+                partial = True
+            i = k
+            continue
+        if tok_is(t, ID, "match") and not tok_is(at(toks, i + 1), ID, var):
+            # Find the match `{` at depth 0.
+            j = i + 1
+            depth = 0
+            while j < hi:
+                tt = toks[j]
+                if tt.kind == PUNCT and tt.text in "([":
+                    depth += 1
+                elif tt.kind == PUNCT and tt.text in ")]":
+                    depth -= 1
+                elif depth == 0 and tt.kind == PUNCT and tt.text == "{":
+                    break
+                j += 1
+            if j >= hi:
+                break
+            arms = parse_match_arms(toks, j)
+            results = []
+            for (pl, ph, bl, bh) in arms:
+                ok, pb = consumed(toks, bl, bh, var)
+                partial = partial or pb
+                results.append(ok or diverges(toks, bl, bh))
+            if arms and all(results):
+                return (True, partial)
+            if any(results):
+                partial = True
+            i = match_brace(toks, j) + 1
+            continue
+        if t.kind == ID and t.text == var and consuming_position(toks, i):
+            return (True, partial)
+        i += 1
+    return (False, partial)
+
+
+def enclosing_block(toks, body_lo, body_hi, i):
+    """Innermost `{...}` span (exclusive of braces) within the function
+    body containing token index i; the body itself if none
+    (Rust: flow::enclosing_block)."""
+    best = (body_lo, body_hi)
+    j = body_lo
+    while j < body_hi:
+        t = toks[j]
+        if t.kind == PUNCT and t.text == "{":
+            close = match_brace(toks, j)
+            if j < i < close:
+                best = (j + 1, close)
+                j += 1
+                continue
+            j = close + 1
+            continue
+        j += 1
+    return best
+
+
+def flow_pass(rel, src):
+    """Lease-balance audit over one file (Rust: flow::flow_pass)."""
+    if rel not in FLOW_SCOPE:
+        return []
+    toks = lex(src)
+    cutoff_line, _ = cfg_cutoff(toks)
+    if cutoff_line is not None:
+        toks = [t for t in toks if t.line < cutoff_line]
+    raw_lines = src.split("\n")
+    findings = []
+
+    def leak(line, why):
+        idx = line - 1
+        raw = raw_lines[idx] if idx < len(raw_lines) else ""
+        f = finding(rel, line, "lease-flow", excerpt_of(raw))
+        f["why"] = why
+        findings.append(f)
+
+    for (_name, body_lo, body_hi) in flow_functions(toks):
+        i = body_lo
+        while i < body_hi:
+            if not (
+                tok_is(at(toks, i), PUNCT, ".")
+                and tok_is(at(toks, i + 1), ID, "try_acquire")
+                and tok_is(at(toks, i + 2), PUNCT, "(")
+            ):
+                i += 1
+                continue
+            call_line = toks[i + 1].line
+            call_close = match_paren(toks, i + 2)
+            shape, info = classify_site(toks, body_lo, i)
+            if shape == "let":
+                # Obligation on the binding over the rest of the
+                # enclosing block, starting after the statement's `;`
+                # (scan forward from the call; depth may go negative
+                # while closing value-position blocks).
+                var = info
+                j = call_close + 1
+                depth = 0
+                while j < body_hi:
+                    tt = toks[j]
+                    if tt.kind == PUNCT and tt.text in "([{":
+                        depth += 1
+                    elif tt.kind == PUNCT and tt.text in ")]}":
+                        depth -= 1
+                    elif depth <= 0 and tt.kind == PUNCT and tt.text == ";":
+                        break
+                    j += 1
+                _, blk_hi = enclosing_block(toks, body_lo, body_hi, j)
+                ok, partial = consumed(toks, j + 1, blk_hi, var)
+                if not ok:
+                    leak(
+                        call_line,
+                        "on some path" if partial else "on any path",
+                    )
+                i = call_close + 1
+                continue
+            if shape == "iflet":
+                # Obligation inside the then-block.
+                var = info
+                j = call_close + 1
+                while j < body_hi and not tok_is(at(toks, j), PUNCT, "{"):
+                    j += 1
+                close = match_brace(toks, j)
+                ok, partial = consumed(toks, j + 1, close, var)
+                if not ok:
+                    leak(
+                        call_line,
+                        "on some path" if partial else "on any path",
+                    )
+                i = call_close + 1
+                continue
+            if shape in ("match", "letmatch"):
+                # Scrutinee: every Some-arm must consume, diverge, or
+                # (letmatch only) pass the lease through as the match
+                # value `Some(y)` — then the obligation moves to the
+                # let binding over the rest of its block.
+                var = info[0] if shape == "letmatch" else None
+                j = call_close + 1
+                while j < body_hi and not tok_is(at(toks, j), PUNCT, "{"):
+                    j += 1
+                arms = parse_match_arms(toks, j)
+                bad = False
+                saw_some = False
+                passed_through = False
+                for (pl, ph, bl, bh) in arms:
+                    y = some_binding(toks, pl, ph)
+                    if y is None:
+                        continue
+                    saw_some = True
+                    if shape == "letmatch" and some_binding(toks, bl, bh) == y:
+                        # Arm body is exactly `Some(y)`: pass-through.
+                        passed_through = True
+                        continue
+                    ok, _ = consumed(toks, bl, bh, y)
+                    if not (ok or diverges(toks, bl, bh)):
+                        bad = True
+                if bad or not saw_some:
+                    leak(call_line, "in a Some arm")
+                elif passed_through:
+                    # Downstream obligation on the let binding, from
+                    # after the statement's `;` to its block end.
+                    k = match_brace(toks, j) + 1
+                    depth = 0
+                    while k < body_hi:
+                        tt = toks[k]
+                        if tt.kind == PUNCT and tt.text in "([{":
+                            depth += 1
+                        elif tt.kind == PUNCT and tt.text in ")]}":
+                            depth -= 1
+                        elif depth <= 0 and tt.kind == PUNCT and tt.text == ";":
+                            break
+                        k += 1
+                    _, blk_hi = enclosing_block(toks, body_lo, body_hi, k)
+                    ok, partial = consumed(toks, k + 1, blk_hi, var)
+                    if not ok:
+                        leak(
+                            call_line,
+                            "on some path" if partial else "on any path",
+                        )
+                i = match_brace(toks, j) + 1
+                continue
+            if shape == "consumed":
+                i = call_close + 1
+                continue
+            # Statement-level call: the Option result is dropped.
+            leak(call_line, "result dropped")
+            i = call_close + 1
+        # next function
+    return findings
+
+
+# --------------------------------------------------------------------------
+# State-machine spec check (Rust: lint::spec)
+# --------------------------------------------------------------------------
+
+
+def parse_spec_table(doc):
+    """Declared (from, to) -> line from the marker-delimited markdown
+    table (Rust: spec::parse_table).  Returns (edges, errors) where
+    errors are (line0, excerpt) pairs for malformed rows, or None if
+    the markers are missing."""
+    lines = doc.split("\n")
+    lo = hi = None
+    for i, l in enumerate(lines):
+        if SPEC_BEGIN in l and lo is None:
+            lo = i
+        elif SPEC_END in l and lo is not None:
+            hi = i
+            break
+    if lo is None or hi is None:
+        return None
+    edges = {}
+    errors = []
+    for i in range(lo + 1, hi):
+        l = lines[i].strip()
+        if not l.startswith("|"):
+            continue
+        cells = [c.strip() for c in l.strip("|").split("|")]
+        if len(cells) < 2:
+            continue
+        frm, to = cells[0], cells[1]
+        if frm in ("From", "") or set(frm) <= set("-: "):
+            continue  # header / separator
+        if frm not in STATES or to not in STATES:
+            errors.append((i, lines[i]))
+            continue
+        edges.setdefault((frm, to), i)
+    return (edges, errors)
+
+
+def extract_allowed_edges(toks):
+    """(from, to) -> line pairs inside `fn transition_allowed`
+    (Rust: spec::allowed_edges)."""
+    edges = {}
+    for (name, lo, hi) in flow_functions(toks):
+        if name != "transition_allowed":
+            continue
+        i = lo
+        while i < hi:
+            if (
+                tok_is(at(toks, i), PUNCT, "(")
+                and at(toks, i + 1) is not None
+                and at(toks, i + 1).kind == ID
+                and at(toks, i + 1).text in STATES
+                and tok_is(at(toks, i + 2), PUNCT, ",")
+                and at(toks, i + 3) is not None
+                and at(toks, i + 3).kind == ID
+                and at(toks, i + 3).text in STATES
+                and tok_is(at(toks, i + 4), PUNCT, ")")
+            ):
+                key = (toks[i + 1].text, toks[i + 3].text)
+                edges.setdefault(key, toks[i + 1].line)
+                i += 5
+                continue
+            i += 1
+    return edges
+
+
+def extract_retag_pairs(toks):
+    """(from, to, line) triples from `retag_tensors(..)` call sites
+    (Rust: spec::retag_pairs)."""
+    pairs = []
+    i = 0
+    while i < len(toks):
+        if tok_is(at(toks, i), ID, "retag_tensors") and tok_is(
+            at(toks, i + 1), PUNCT, "("
+        ):
+            close = match_paren(toks, i + 1)
+            states = []
+            j = i + 2
+            while j < close:
+                if (
+                    tok_is(at(toks, j), ID, "TensorState")
+                    and is_path_sep(toks, j + 1)
+                    and at(toks, j + 3) is not None
+                    and at(toks, j + 3).kind == ID
+                    and at(toks, j + 3).text in STATES
+                ):
+                    states.append((toks[j + 3].text, toks[j].line))
+                    j += 4
+                    continue
+                j += 1
+            if len(states) >= 2:
+                pairs.append((states[0][0], states[1][0], states[0][1]))
+            i = close + 1
+            continue
+        i += 1
+    return pairs
+
+
+def spec_pass(files, doc):
+    """files: {rel: src}.  doc: INVARIANTS.md text or None
+    (Rust: spec::spec_pass)."""
+    findings = []
+    tensor_src = files.get("tensor/mod.rs")
+    if doc is None:
+        findings.append(
+            finding(SPEC_DOC, 1, "state-spec", "missing docs/INVARIANTS.md")
+        )
+        return findings
+    table = parse_spec_table(doc)
+    doc_lines = doc.split("\n")
+    if table is None:
+        findings.append(
+            finding(
+                SPEC_DOC,
+                1,
+                "state-spec",
+                "missing transition-spec markers",
+            )
+        )
+        return findings
+    declared, errors = table
+    for (idx, raw) in errors:
+        findings.append(finding(SPEC_DOC, idx + 1, "state-spec", excerpt_of(raw)))
+    if tensor_src is None:
+        findings.append(
+            finding("tensor/mod.rs", 1, "state-spec", "missing tensor/mod.rs")
+        )
+        return findings
+
+    ttoks = lex(tensor_src)
+    tcut, _ = cfg_cutoff(ttoks)
+    if tcut is not None:
+        ttoks = [t for t in ttoks if t.line < tcut]
+    allowed = extract_allowed_edges(ttoks)
+    tensor_lines = tensor_src.split("\n")
+
+    # Implemented-but-undeclared (the fixture direction: delete a row
+    # from the doc table and this fires).
+    for (edge, line) in sorted(allowed.items(), key=lambda e: e[1]):
+        if edge not in declared:
+            raw = tensor_lines[line - 1] if line - 1 < len(tensor_lines) else ""
+            f = finding("tensor/mod.rs", line, "state-spec", excerpt_of(raw))
+            f["why"] = "undeclared {} -> {}".format(*edge)
+            findings.append(f)
+    # Declared-but-absent.
+    for (edge, idx) in sorted(declared.items(), key=lambda e: e[1]):
+        if edge not in allowed:
+            raw = doc_lines[idx] if idx < len(doc_lines) else ""
+            f = finding(SPEC_DOC, idx + 1, "state-spec", excerpt_of(raw))
+            f["why"] = "absent {} -> {}".format(*edge)
+            findings.append(f)
+    # Every literal retag site must use a declared edge.
+    for rel in sorted(files):
+        toks = lex(files[rel])
+        cut, _ = cfg_cutoff(toks)
+        if cut is not None:
+            toks = [t for t in toks if t.line < cut]
+        src_lines = files[rel].split("\n")
+        for (frm, to, line) in extract_retag_pairs(toks):
+            if (frm, to) not in declared:
+                raw = src_lines[line - 1] if line - 1 < len(src_lines) else ""
+                f = finding(rel, line, "state-spec", excerpt_of(raw))
+                f["why"] = "undeclared retag {} -> {}".format(frm, to)
+                findings.append(f)
+    return findings
+
+
+# --------------------------------------------------------------------------
+# Tree walk + report (Rust: lint::lint_tree / bin pstar-lint)
+# --------------------------------------------------------------------------
+
+
+def collect_tree(root):
+    """Sorted {rel: src} of `.rs` files under root, skipping lint/."""
+    files = {}
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = sorted(d for d in dirnames if d != "lint")
+        for fn in sorted(filenames):
+            if not fn.endswith(".rs"):
+                continue
+            p = os.path.join(dirpath, fn)
+            rel = os.path.relpath(p, root).replace(os.sep, "/")
+            with open(p, encoding="utf-8") as fh:
+                files[rel] = fh.read()
+    return files
+
+
+def lint_files(files, doc):
+    """The whole pass over an in-memory tree (Rust: lint::lint_files)."""
+    findings = []
+    for rel in sorted(files):
+        findings.extend(lint_source(rel, files[rel]))
+        findings.extend(flow_pass(rel, files[rel]))
+    findings.extend(spec_pass(files, doc))
+    findings.sort(key=sort_key)
+    return findings
+
+
+def lint_tree(root, doc_path):
+    files = collect_tree(root)
+    doc = None
+    if os.path.exists(doc_path):
+        with open(doc_path, encoding="utf-8") as fh:
+            doc = fh.read()
+    return (len(files), lint_files(files, doc))
+
+
+def emit_json(n_files, findings):
+    """Byte-compatible with rust util::json pretty emission."""
+
+    def esc(s):
+        out = ['"']
+        for c in s:
+            if c == '"':
+                out.append('\\"')
+            elif c == "\\":
+                out.append("\\\\")
+            elif c == "\n":
+                out.append("\\n")
+            elif c == "\t":
+                out.append("\\t")
+            elif c == "\r":
+                out.append("\\r")
+            elif ord(c) < 0x20:
+                out.append("\\u%04x" % ord(c))
+            else:
+                out.append(c)
+        out.append('"')
+        return "".join(out)
+
+    def obj(pairs, indent):
+        if not pairs:
+            return "{}"
+        pad = " " * (indent + 1)
+        body = ",\n".join(
+            "{}{}: {}".format(pad, esc(k), v) for (k, v) in pairs
+        )
+        return "{\n" + body + "\n" + " " * indent + "}"
+
+    items = []
+    for f in findings:
+        pairs = [
+            ("excerpt", esc(f["excerpt"])),
+            ("file", esc(f["file"])),
+            ("line", str(f["line"])),
+            ("message", esc(MESSAGES[f["rule"]])),
+            ("rule", esc(f["rule"])),
+        ]
+        items.append(obj(pairs, 2))
+    if items:
+        arr = "[\n" + ",\n".join("  " + x for x in items) + "\n ]"
+    else:
+        arr = "[]"
+    top = [("files", str(n_files)), ("findings", arr)]
+    return "{\n" + ",\n".join(' {}: {}'.format(esc(k), v) for (k, v) in top) + "\n}"
+
+
+# --------------------------------------------------------------------------
+# Self-tests: mirrors of the Rust embedded fixtures
+# --------------------------------------------------------------------------
+
+
+def self_test():
+    import unittest
+
+    def rules_of(found):
+        return [f["rule"] for f in found]
+
+    class Lint(unittest.TestCase):
+        # -- ported legacy fixtures (must stay green on both engines) --
+        def test_unordered_collection_state_modules(self):
+            src = "use std::collections::HashMap;\n"
+            for rel in [
+                "sim/a.rs", "engine/b.rs", "chunk/c.rs", "evict/mod.rs",
+                "dp/group.rs", "mem/device.rs",
+            ]:
+                f = lint_source(rel, src)
+                self.assertEqual(rules_of(f), ["unordered-collection"], rel)
+                self.assertEqual(f[0]["line"], 1)
+            f = lint_source("evict/mod.rs", "let s = HashSet::new();\n")
+            self.assertEqual(rules_of(f), ["unordered-collection"])
+
+        def test_unordered_collection_out_of_scope(self):
+            src = "use std::collections::HashMap;\n"
+            for rel in ["util/mod.rs", "runtime/mod.rs", "main.rs",
+                        "train/trainer.rs"]:
+                self.assertEqual(lint_source(rel, src), [], rel)
+
+        def test_backend_pjrt_half_exempt(self):
+            src = (
+                "use std::collections::BTreeMap;\n"
+                '#[cfg(feature = "pjrt")]\n'
+                "use std::collections::HashMap;\n"
+                "fn measure() { let t0 = std::time::Instant::now(); }\n"
+            )
+            self.assertEqual(lint_source("engine/backend.rs", src), [])
+            f = lint_source("engine/session.rs", src)
+            self.assertEqual(
+                rules_of(f), ["unordered-collection", "wallclock"]
+            )
+            early = (
+                "use std::collections::HashMap;\n"
+                '#[cfg(feature = "pjrt")]\n'
+            )
+            f = lint_source("engine/backend.rs", early)
+            self.assertEqual(rules_of(f), ["unordered-collection"])
+
+        def test_nan_unwrap_everywhere(self):
+            src = "v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n"
+            for rel in ["util/mod.rs", "chunk/search.rs", "main.rs"]:
+                self.assertEqual(rules_of(lint_source(rel, src)),
+                                 ["nan-unwrap"], rel)
+
+        def test_nan_unwrap_ignores_comments_and_strings(self):
+            src = (
+                "// the old partial_cmp().unwrap() panicked here\n"
+                'let msg = "partial_cmp is banned";\n'
+                "/* partial_cmp in a block comment */\n"
+            )
+            self.assertEqual(lint_source("evict/mod.rs", src), [])
+
+        def test_wallclock(self):
+            src = "let t0 = std::time::Instant::now();\n"
+            self.assertEqual(
+                rules_of(lint_source("engine/session.rs", src)),
+                ["wallclock"],
+            )
+            self.assertEqual(
+                rules_of(lint_source("util/mod.rs",
+                                     "let t = SystemTime::now();\n")),
+                ["wallclock"],
+            )
+            self.assertEqual(lint_source("train/trainer.rs", src), [])
+
+        def test_timeline_layering(self):
+            src = "use crate::sim::StreamTimeline;\n"
+            self.assertEqual(
+                rules_of(lint_source("engine/report.rs", src)),
+                ["timeline-layering"],
+            )
+            self.assertEqual(
+                rules_of(lint_source("chunk/manager.rs", src)),
+                ["timeline-layering"],
+            )
+            self.assertEqual(lint_source("sim/stream.rs", src), [])
+            self.assertEqual(lint_source("engine/backend.rs", src), [])
+
+        def test_allow_same_line_and_above(self):
+            same = (
+                "use std::collections::HashMap; "
+                "// lint:allow(unordered-collection): fixture\n"
+            )
+            self.assertEqual(lint_source("evict/mod.rs", same), [])
+            above = (
+                "// lint:allow(wallclock): measuring the linter itself\n"
+                "let t0 = std::time::Instant::now();\n"
+            )
+            self.assertEqual(lint_source("engine/session.rs", above), [])
+
+        def test_allow_per_rule_per_line(self):
+            wrong = (
+                "use std::collections::HashMap; "
+                "// lint:allow(wallclock): wrong rule\n"
+            )
+            f = lint_source("evict/mod.rs", wrong)
+            # The mis-named waiver suppresses nothing: both the original
+            # finding and the stale-waiver finding fire.
+            self.assertEqual(
+                rules_of(f), ["unordered-collection", "unused-waiver"]
+            )
+            far = (
+                "// lint:allow(unordered-collection): too far away\n"
+                "let x = 1;\n"
+                "use std::collections::HashMap;\n"
+            )
+            f = lint_source("evict/mod.rs", far)
+            self.assertEqual(
+                rules_of(f), ["unused-waiver", "unordered-collection"]
+            )
+
+        def test_cfg_test_placement(self):
+            good = "let a = 1;\n#[cfg(test)]\nmod tests {}\n"
+            self.assertEqual(lint_source("evict/mod.rs", good), [])
+            stacked = (
+                "let a = 1;\n"
+                "#[cfg(test)]\n"
+                "#[allow(dead_code)]\n"
+                "pub mod testutil {}\n"
+            )
+            self.assertEqual(lint_source("evict/mod.rs", stacked), [])
+            item = (
+                "#[cfg(test)]\n"
+                "fn helper() {}\n"
+                "use std::collections::HashMap;\n"
+            )
+            f = lint_source("evict/mod.rs", item)
+            self.assertEqual(rules_of(f), ["cfg-test-placement"])
+            self.assertEqual(f[0]["line"], 1)
+
+        def test_second_cfg_test_block(self):
+            src = (
+                "#[cfg(test)]\n"
+                "mod tests {}\n"
+                "fn hidden_from_every_other_rule() {}\n"
+                "#[cfg(test)]\n"
+                "mod more_tests {}\n"
+            )
+            f = lint_source("chunk/c.rs", src)
+            self.assertEqual(rules_of(f), ["cfg-test-placement"])
+            self.assertEqual(f[0]["line"], 4)
+            masked = (
+                "#[cfg(test)]\n"
+                "mod tests {\n"
+                '    const S: &str = "\n'
+                "#[cfg(test)]\n"
+                '";\n'
+                "}\n"
+            )
+            self.assertEqual(lint_source("chunk/c.rs", masked), [])
+
+        def test_trailing_test_module_skipped(self):
+            src = (
+                "let a = 1;\n"
+                "#[cfg(test)]\n"
+                "mod tests {\n"
+                "    use std::collections::HashMap;\n"
+                "    use crate::sim::StreamTimeline;\n"
+                "}\n"
+            )
+            self.assertEqual(lint_source("evict/mod.rs", src), [])
+
+        def test_multiline_and_raw_strings(self):
+            src = (
+                'let s = "multi\n'
+                'line HashMap string";\n'
+                'let r = r#"raw HashMap "quoted" string"#;\n'
+                "let c = '\"';\n"
+                "let still_code = HashMap::new();\n"
+            )
+            f = lint_source("evict/mod.rs", src)
+            self.assertEqual(rules_of(f), ["unordered-collection"])
+            self.assertEqual(f[0]["line"], 5)
+
+        def test_nested_block_comments_and_lifetimes(self):
+            src = (
+                "/* outer /* nested HashMap */ still comment */\n"
+                "fn f<'a>(x: &'a str) -> &'a str { x }\n"
+                "let esc = '\\'';\n"
+                "let m = HashMap::new();\n"
+            )
+            f = lint_source("chunk/c.rs", src)
+            self.assertEqual(rules_of(f), ["unordered-collection"])
+            self.assertEqual(f[0]["line"], 4)
+
+        def test_lint_subtree_skipped(self):
+            self.assertEqual(
+                lint_source("lint/mod.rs",
+                            "use std::collections::HashMap;\n"),
+                [],
+            )
+
+        # ------------------------- lexer torture (tentpole, satellite)
+        def test_lexer_torture_raw_hash_strings(self):
+            src = (
+                'let a = r##"one "# inside HashMap"##;\n'
+                "let b = HashMap::new();\n"
+            )
+            f = lint_source("evict/mod.rs", src)
+            self.assertEqual([(x["line"], x["rule"]) for x in f],
+                             [(2, "unordered-collection")])
+
+        def test_lexer_torture_macro_body_string(self):
+            # A multi-line string inside a macro invocation must not
+            # hide later real code (the masked-line scanner's
+            # false-negative class).
+            src = (
+                "log!(\n"
+                '    "header\n'
+                'partial_cmp in prose\n'
+                'tail",\n'
+                ");\n"
+                "let x = a.partial_cmp(b);\n"
+            )
+            f = lint_source("evict/mod.rs", src)
+            self.assertEqual([(x["line"], x["rule"]) for x in f],
+                             [(6, "nan-unwrap")])
+
+        def test_lexer_torture_lifetimes_vs_chars(self):
+            src = (
+                "fn g<'life>(v: &'life [char]) -> char { v[0] }\n"
+                "let c: char = 'h';\n"
+                "let d = '\\u{1F600}';\n"
+                "let e = HashMap::<char, u8>::new();\n"
+            )
+            f = lint_source("mem/x.rs", src)
+            self.assertEqual([(x["line"], x["rule"]) for x in f],
+                             [(4, "unordered-collection")])
+
+        # ------------------------------------------ three new rules
+        def test_unseeded_entropy(self):
+            for (src, rel) in [
+                ("let r = rand::thread_rng();\n", "util/rng.rs"),
+                ("let x: f64 = rand::random();\n", "main.rs"),
+                ("let h = RandomState::new();\n", "engine/policy.rs"),
+                ("let g = SmallRng::from_entropy();\n", "sim/cost.rs"),
+            ]:
+                f = lint_source(rel, src)
+                self.assertEqual(rules_of(f), ["unseeded-entropy"], src)
+            clean = "let s = SplitMix64::new(seed);\n"
+            self.assertEqual(lint_source("util/rng.rs", clean), [])
+
+        def test_thread_spawn_policy_scope(self):
+            src = "std::thread::spawn(move || work());\n"
+            f = lint_source("engine/session.rs", src)
+            self.assertEqual(rules_of(f), ["thread-spawn"])
+            # Outside the policy modules the rule does not apply.
+            self.assertEqual(lint_source("train/trainer.rs", src), [])
+            use_then_spawn = (
+                "use std::thread;\n"
+                "thread::spawn(|| {});\n"
+            )
+            f = lint_source("dp/group.rs", use_then_spawn)
+            self.assertEqual(
+                [(x["line"], x["rule"]) for x in f],
+                [(1, "thread-spawn"), (2, "thread-spawn")],
+            )
+
+        def test_dev_mut_layering(self):
+            src = "self.mgr.space.dev_mut(Device::Gpu(0)).set_capacity(c);\n"
+            f = lint_source("engine/session.rs", src)
+            self.assertEqual(rules_of(f), ["dev-mut-layering"])
+            # The manager and the space definition itself are the two
+            # sanctioned homes.
+            self.assertEqual(lint_source("chunk/manager.rs", src), [])
+            self.assertEqual(
+                lint_source(
+                    "mem/space.rs",
+                    "pub fn dev_mut(&mut self, d: Device) -> &mut DeviceMem {\n",
+                ),
+                [],
+            )
+
+        # --------------------------------------------- unused waiver
+        def test_unused_waiver_pair(self):
+            used = (
+                "// lint:allow(unordered-collection): fixture pair, used\n"
+                "use std::collections::HashMap;\n"
+            )
+            self.assertEqual(lint_source("evict/mod.rs", used), [])
+            unused = (
+                "// lint:allow(unordered-collection): fixture pair, stale\n"
+                "use std::collections::BTreeMap;\n"
+            )
+            f = lint_source("evict/mod.rs", unused)
+            self.assertEqual(rules_of(f), ["unused-waiver"])
+            self.assertEqual(f[0]["line"], 1)
+
+        def test_unused_waiver_ignores_test_tail(self):
+            src = (
+                "let a = 1;\n"
+                "#[cfg(test)]\n"
+                "mod tests {\n"
+                "    // lint:allow(wallclock): prose in a test module\n"
+                "}\n"
+            )
+            self.assertEqual(lint_source("evict/mod.rs", src), [])
+
+        # ------------------------------------------------ lease flow
+        def test_flow_clean_shapes(self):
+            # Shape 1: let + if-let release.
+            src = (
+                "impl S {\n"
+                "    fn a(&mut self) {\n"
+                "        let lease = self.pool.try_acquire(now, dir);\n"
+                "        if let Some(l) = lease {\n"
+                "            self.pool.set_release(l, done);\n"
+                "        }\n"
+                "    }\n"
+                "}\n"
+            )
+            self.assertEqual(flow_pass("engine/session.rs", src), [])
+            # Shape 3: match scrutinee, Some arm returns.
+            src = (
+                "fn b(&mut self) -> Option<PinnedLease> {\n"
+                "    match self.pool.try_acquire(now, dir) {\n"
+                "        Some(lease) => Some(lease),\n"
+                "        None => None,\n"
+                "    }\n"
+                "}\n"
+            )
+            self.assertEqual(flow_pass("engine/session.rs", src), [])
+            # Struct-field sink (shorthand).
+            src = (
+                "fn c(&mut self) {\n"
+                "    let lease = self.pool.try_acquire(now, dir);\n"
+                "    self.q.push(PendingCopy { done, secs, lease });\n"
+                "}\n"
+            )
+            self.assertEqual(flow_pass("engine/session.rs", src), [])
+            # Out-of-scope file: the pass does not run.
+            leaky = (
+                "fn d(&mut self) {\n"
+                "    let lease = self.pool.try_acquire(now, dir);\n"
+                "}\n"
+            )
+            self.assertEqual(flow_pass("mem/pinned.rs", leaky), [])
+
+        def test_flow_leak_shapes(self):
+            # No sink at all.
+            src = (
+                "fn a(&mut self) {\n"
+                "    let lease = self.pool.try_acquire(now, dir);\n"
+                "    let _ = lease.is_some();\n"
+                "}\n"
+            )
+            f = flow_pass("engine/session.rs", src)
+            self.assertEqual(rules_of(f), ["lease-flow"])
+            self.assertEqual(f[0]["line"], 2)
+            # Sink removed from one match arm.
+            src = (
+                "fn b(&mut self) {\n"
+                "    match self.pool.try_acquire(now, dir) {\n"
+                "        Some(l) => { self.note(); }\n"
+                "        None => {}\n"
+                "    }\n"
+                "}\n"
+            )
+            f = flow_pass("engine/session.rs", src)
+            self.assertEqual(rules_of(f), ["lease-flow"])
+            # Sink on only one side of an if/else.
+            src = (
+                "fn c(&mut self, cond: bool) {\n"
+                "    let lease = self.pool.try_acquire(now, dir);\n"
+                "    if cond {\n"
+                "        if let Some(l) = lease { self.pool.release(l); }\n"
+                "    } else {\n"
+                "        self.note();\n"
+                "    }\n"
+                "}\n"
+            )
+            f = flow_pass("engine/session.rs", src)
+            self.assertEqual(rules_of(f), ["lease-flow"])
+            # Result dropped outright.
+            src = (
+                "fn d(&mut self) {\n"
+                "    self.pool.try_acquire(now, dir);\n"
+                "}\n"
+            )
+            f = flow_pass("engine/session.rs", src)
+            self.assertEqual(rules_of(f), ["lease-flow"])
+
+        def test_flow_passthrough_arm_needs_downstream_sink(self):
+            # `Some(l) => Some(l)` hands the obligation to the let
+            # binding; with no downstream sink the site leaks.
+            src = (
+                "fn a(&mut self) {\n"
+                "    let lease = match self.pool.try_acquire(now, dir) {\n"
+                "        Some(l) => Some(l),\n"
+                "        None => None,\n"
+                "    };\n"
+                "    self.note();\n"
+                "}\n"
+            )
+            f = flow_pass("engine/session.rs", src)
+            self.assertEqual(rules_of(f), ["lease-flow"])
+            self.assertEqual(f[0]["line"], 2)
+            # Same shape with the sink present is clean.
+            ok = src.replace(
+                "    self.note();\n",
+                "    if let Some(l) = lease {\n"
+                "        self.pool.release(l);\n"
+                "    }\n",
+            )
+            self.assertEqual(flow_pass("engine/session.rs", ok), [])
+
+        def test_flow_divergent_arm_ok(self):
+            src = (
+                "fn a(&mut self) {\n"
+                "    loop {\n"
+                "        let lease = match self.pool.try_acquire(now, dir) {\n"
+                "            Some(l) => Some(l),\n"
+                "            None => { self.waits += 1; break; }\n"
+                "        };\n"
+                "        if let Some(l) = lease {\n"
+                "            self.pool.set_release(l, done);\n"
+                "        }\n"
+                "    }\n"
+                "}\n"
+            )
+            self.assertEqual(flow_pass("engine/session.rs", src), [])
+
+        def test_flow_real_tree_shapes(self):
+            # Condensed replicas of the three live session.rs sites.
+            src = (
+                "impl<B: ExecutionBackend> TrainingSession<B> {\n"
+                "    fn issue_group_gathers(&mut self) -> Result<()> {\n"
+                "        loop {\n"
+                "            let lease = if self.pool.enabled() {\n"
+                "                match self.pool.try_acquire(self.backend.now(),\n"
+                "                                            CopyDir::H2D) {\n"
+                "                    Some(l) => Some(l),\n"
+                "                    None => {\n"
+                "                        self.mgr.stats.pinned_waits += 1;\n"
+                "                        break;\n"
+                "                    }\n"
+                "                }\n"
+                "            } else {\n"
+                "                None\n"
+                "            };\n"
+                "            let done = self.backend.issue(op.secs);\n"
+                "            if let Some(l) = lease {\n"
+                "                self.pool.set_release(l, done);\n"
+                "            }\n"
+                "            self.coll.issue_gather(g, InFlightGather {\n"
+                "                done,\n"
+                "                secs: op.secs,\n"
+                "                lease,\n"
+                "            });\n"
+                "        }\n"
+                "        Ok(())\n"
+                "    }\n"
+                "    fn route_async_copy(&mut self, dir: CopyDir, bytes: u64)\n"
+                "        -> (f64, CopyRoute, Option<PinnedLease>) {\n"
+                "        if !self.pool.enabled() {\n"
+                "            return (t, CopyRoute::Pinned, None);\n"
+                "        }\n"
+                "        match self.pool.try_acquire(self.backend.now(), dir) {\n"
+                "            Some(lease) => (\n"
+                "                self.backend.copy_secs(bytes, CopyRoute::Pinned),\n"
+                "                CopyRoute::Pinned,\n"
+                "                Some(lease),\n"
+                "            ),\n"
+                "            None => (t2, CopyRoute::Pageable, None),\n"
+                "        }\n"
+                "    }\n"
+                "    fn stage_real(&mut self) -> Result<StageOutcome> {\n"
+                "        if issued {\n"
+                "            let lease = if self.pool.enabled() {\n"
+                "                self.pool.try_acquire(self.backend.now(), CopyDir::H2D)\n"
+                "            } else {\n"
+                "                None\n"
+                "            };\n"
+                "            let old = self.inflight_done.insert(\n"
+                "                chunk,\n"
+                "                PendingCopy {\n"
+                "                    done: f64::INFINITY,\n"
+                "                    secs: 0.0,\n"
+                "                    lease,\n"
+                "                },\n"
+                "            );\n"
+                "        }\n"
+                "        Ok(StageOutcome::Staged)\n"
+                "    }\n"
+                "}\n"
+            )
+            self.assertEqual(flow_pass("engine/session.rs", src), [])
+
+        # ------------------------------------------------- spec check
+        SPEC_OK = (
+            "x\n" + SPEC_BEGIN + "\n"
+            "| From | To | Driver |\n"
+            "| --- | --- | --- |\n"
+            "| Free | Hold | init |\n"
+            "| Free | Compute | zero-init access |\n"
+            "| Hold | Compute | access |\n"
+            "| Compute | Hold | release |\n"
+            "| Hold | Free | chunk reuse |\n"
+            + SPEC_END + "\n"
+        )
+        TENSOR_OK = (
+            "pub fn transition_allowed(from: TensorState, to: TensorState)"
+            " -> bool {\n"
+            "    use TensorState::*;\n"
+            "    matches!(\n"
+            "        (from, to),\n"
+            "        (Free, Hold) | (Free, Compute)\n"
+            "            | (Hold, Compute)\n"
+            "            | (Compute, Hold)\n"
+            "            | (Hold, Free)\n"
+            "    )\n"
+            "}\n"
+        )
+
+        def test_spec_clean(self):
+            files = {"tensor/mod.rs": self.TENSOR_OK}
+            self.assertEqual(spec_pass(files, self.SPEC_OK), [])
+
+        def test_spec_undeclared_transition(self):
+            doc = self.SPEC_OK.replace("| Hold | Free | chunk reuse |\n", "")
+            files = {"tensor/mod.rs": self.TENSOR_OK}
+            f = spec_pass(files, doc)
+            self.assertEqual(rules_of(f), ["state-spec"])
+            self.assertEqual(f[0]["file"], "tensor/mod.rs")
+
+        def test_spec_declared_but_absent(self):
+            tensor = self.TENSOR_OK.replace("            | (Hold, Free)\n", "")
+            files = {"tensor/mod.rs": tensor}
+            f = spec_pass(files, self.SPEC_OK)
+            self.assertEqual(rules_of(f), ["state-spec"])
+            self.assertEqual(f[0]["file"], SPEC_DOC)
+
+        def test_spec_retag_site_checked(self):
+            files = {
+                "tensor/mod.rs": self.TENSOR_OK,
+                "engine/session.rs": (
+                    "fn f(&mut self) {\n"
+                    "    self.mgr.retag_tensors(\n"
+                    "        c, TensorState::Free, TensorState::Hold)?;\n"
+                    "}\n"
+                ),
+            }
+            self.assertEqual(spec_pass(files, self.SPEC_OK), [])
+            files["engine/session.rs"] = (
+                "fn f(&mut self) {\n"
+                "    self.mgr.retag_tensors(\n"
+                "        c, TensorState::Compute, TensorState::Free)?;\n"
+                "}\n"
+            )
+            f = spec_pass(files, self.SPEC_OK)
+            self.assertEqual(rules_of(f), ["state-spec"])
+            self.assertEqual(f[0]["file"], "engine/session.rs")
+
+        def test_spec_missing_markers(self):
+            files = {"tensor/mod.rs": self.TENSOR_OK}
+            f = spec_pass(files, "no table here\n")
+            self.assertEqual(rules_of(f), ["state-spec"])
+
+        def test_spec_unknown_state_name(self):
+            doc = self.SPEC_OK.replace(
+                "| Free | Hold | init |", "| Free | HOLD | init |"
+            )
+            files = {"tensor/mod.rs": self.TENSOR_OK}
+            f = spec_pass(files, doc)
+            # Malformed row + (Free, Hold) now implemented-but-undeclared.
+            self.assertEqual(
+                sorted(set(rules_of(f))), ["state-spec"]
+            )
+            self.assertTrue(any(x["file"] == SPEC_DOC for x in f))
+
+        # ---------------------------------------------- report format
+        def test_finding_display(self):
+            f = lint_source("evict/mod.rs",
+                            "use std::collections::HashMap;\n")[0]
+            s = render(f)
+            self.assertTrue(
+                s.startswith("evict/mod.rs:1: [unordered-collection]"), s
+            )
+            self.assertIn("BTreeMap", s)
+
+    suite = unittest.defaultTestLoader.loadTestsFromTestCase(Lint)
+    runner = unittest.TextTestRunner(verbosity=1)
+    result = runner.run(suite)
+    return 0 if result.wasSuccessful() else 1
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+
+def main(argv):
+    if "--self-test" in argv:
+        return self_test()
+    here = os.path.dirname(os.path.abspath(__file__))
+    root = os.path.normpath(os.path.join(here, "..", "rust", "src"))
+    as_json = "--json" in argv
+    args = [a for a in argv if a not in ("--json",)]
+    if "--root" in args:
+        root = args[args.index("--root") + 1]
+    doc_path = os.path.normpath(os.path.join(root, "..", "docs", "INVARIANTS.md"))
+    n_files, findings = lint_tree(root, doc_path)
+    if as_json:
+        print(emit_json(n_files, findings))
+        return 1 if findings else 0
+    if not findings:
+        print(
+            "pstar-lint: {} files clean ({})".format(
+                n_files, ", ".join(RULES)
+            )
+        )
+        return 0
+    for f in findings:
+        print(render(f))
+    print(
+        "pstar-lint: {} finding(s) in {} files scanned; waive a line "
+        "with `// lint:allow(<rule>): <reason>` only with a reviewed "
+        "justification".format(len(findings), n_files),
+        file=sys.stderr,
+    )
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
